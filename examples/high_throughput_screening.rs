@@ -1,0 +1,113 @@
+//! End-to-end serving driver (the paper's motivating workload, §1):
+//! a high-throughput screening campaign fires batches of generation
+//! requests at the full serving stack — HTTP server → router → dynamic
+//! batcher → worker engines running speculative decoding — and reports
+//! latency percentiles, throughput and acceptance, for SpecMER vs the
+//! target-only baseline.
+//!
+//!     cargo run --release --example high_throughput_screening [-- --n 40]
+//!
+//! Results from this driver are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use specmer::config::Config;
+use specmer::coordinator::{engine_for_bench, EngineFactory, Metrics, Router, Scheduler};
+use specmer::util::cli::Args;
+use specmer::util::json::Json;
+use specmer::util::stats;
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    out.split("\r\n\r\n")
+        .nth(1)
+        .map(|b| b.to_string())
+        .ok_or_else(|| anyhow::anyhow!("bad http response"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n_per_protein = args.usize_or("n", 20)?;
+    let methods = ["specmer", "speculative", "target"];
+
+    // --- stand up the full serving stack in-process --------------------
+    let metrics = Arc::new(Metrics::new());
+    let factory: EngineFactory = Arc::new(|| Ok(engine_for_bench().0));
+    let sched = Arc::new(Scheduler::start(
+        1, // single-core testbed; bump --workers on real hardware
+        8,
+        std::time::Duration::from_millis(2),
+        factory,
+        Arc::clone(&metrics),
+    ));
+    let router = Arc::new(Router::new(sched));
+    let cfg = Config { port: 0, ..Default::default() };
+    let server = specmer::server::serve(&cfg, Arc::clone(&router), Arc::clone(&metrics))?;
+    println!("serving stack up at http://{}\n", server.addr);
+
+    // protein list from the engine itself (via a throwaway local engine)
+    let proteins: Vec<String> = {
+        let (probe, _) = engine_for_bench();
+        probe.families().iter().map(|f| f.meta.name.clone()).take(3).collect()
+    };
+
+    println!("screening campaign: {} proteins x {n_per_protein} seqs x {} methods", proteins.len(), methods.len());
+    println!("{:-<72}", "");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "method", "seqs", "tok/s", "accept", "p50 (s)", "wall (s)"
+    );
+
+    for method in methods {
+        let t0 = Instant::now();
+        let mut tokens = 0f64;
+        let mut decode_s = 0f64;
+        let mut accepts = Vec::new();
+        let mut p50s = Vec::new();
+        let mut n_seqs = 0usize;
+        for protein in &proteins {
+            let body = format!(
+                r#"{{"protein":"{protein}","method":"{method}","n":{n_per_protein},"c":3,"gamma":5,"seed":11}}"#
+            );
+            let resp = http_post(server.addr, "/generate", &body)?;
+            let j = Json::parse(&resp).map_err(|e| anyhow::anyhow!("{e}: {resp}"))?;
+            if let Some(err) = j.get("error") {
+                anyhow::bail!("server error: {err}");
+            }
+            n_seqs += j.get("sequences").unwrap().as_arr().unwrap().len();
+            tokens += j.get("tokens").unwrap().as_f64().unwrap();
+            let tps = j.get("tokens_per_second").unwrap().as_f64().unwrap();
+            if tps > 0.0 {
+                decode_s += j.get("tokens").unwrap().as_f64().unwrap() / tps;
+            }
+            accepts.push(j.get("acceptance_ratio").unwrap().as_f64().unwrap());
+            p50s.push(j.get("latency_p50").unwrap().as_f64().unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} {:>10} {:>10.1} {:>10.3} {:>9.3} {:>9.1}",
+            method,
+            n_seqs,
+            if decode_s > 0.0 { tokens / decode_s } else { 0.0 },
+            stats::mean(&accepts),
+            stats::mean(&p50s),
+            wall
+        );
+    }
+
+    println!("{:-<72}", "");
+    println!("\nserver metrics after the campaign:\n");
+    println!("{}", metrics.text_dump());
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Anatomy of the speedup: measures each phase of a SpecMER round (draft
+//! dispatch, k-mer scoring, verify dispatch, coupling) and compares the
+//! observed end-to-end speedup against the paper's analytic bounds
+//! (Eq. 1 and Appendix-A Eq. 9) evaluated with the measured α and c_e.
+//!
+//!     cargo run --release --example speedup_anatomy -- [--n 10]
+
+use specmer::config::Method;
+use specmer::coordinator::engine_for_bench;
+use specmer::decode::GenConfig;
+use specmer::kmer::{score_block, KmerSet};
+use specmer::theory;
+use specmer::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.usize_or("n", 10)?;
+    let (engine, _real) = engine_for_bench();
+    let protein = engine.families()[0].meta.name.clone();
+    let kset = KmerSet::new(true, true, false);
+
+    // --- per-method throughput -----------------------------------------
+    let mut tps = std::collections::BTreeMap::new();
+    let mut alpha = 0.0;
+    for (label, method, c) in [
+        ("draft", Method::DraftOnly, 1usize),
+        ("target", Method::TargetOnly, 1),
+        ("spec c=1", Method::Speculative, 1),
+        ("specmer c=3", Method::SpecMer, 3),
+    ] {
+        let mut tokens = 0usize;
+        let mut accepts = Vec::new();
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            let cfg = GenConfig {
+                gamma: 5,
+                c,
+                kset,
+                max_len: 10_000,
+                seed: 100 + i as u64,
+                ..Default::default()
+            };
+            let out = engine.generate(&protein, method, &cfg)?;
+            tokens += out.new_tokens();
+            if method == Method::Speculative {
+                accepts.push(out.acceptance_ratio());
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        tps.insert(label, tokens as f64 / dt);
+        if method == Method::Speculative {
+            alpha = specmer::util::stats::mean(&accepts);
+        }
+        println!("{label:<12} {:>8.1} tok/s", tokens as f64 / dt);
+    }
+
+    // --- k-mer scoring really is near-zero cost (paper §3.2) ------------
+    let table = &engine.family(&protein)?.table;
+    let cand: Vec<u8> = specmer::tokenizer::encode("MKTAYIAKQRVLKGE");
+    let t0 = std::time::Instant::now();
+    let iters = 200_000;
+    let mut acc = 0f32;
+    for _ in 0..iters {
+        acc += score_block(table, &cand[..5], kset);
+    }
+    let kmer_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("\nk-mer score of a γ=5 block: {kmer_ns:.0} ns (sum={acc:.1})");
+
+    // --- bounds ----------------------------------------------------------
+    let c_e = tps["target"] / tps["draft"]; // M_p/M_q as a time ratio
+    let measured = tps["spec c=1"] / tps["target"];
+    println!("\nmeasured: α={alpha:.3}  c_e={c_e:.3}  speedup={measured:.2}x");
+    for gamma in [5usize, 10, 15] {
+        let eq1 = theory::speedup_eq1(alpha, gamma, c_e);
+        let eq9 = theory::speedup_eq9(alpha, gamma, theory::c_draft(c_e * gamma as f64, kmer_ns * 1e-9, 1.0));
+        println!("  γ={gamma:<3} Eq.1 bound={eq1:.2}x  Eq.9 (batched)={eq9:.2}x");
+    }
+    println!("\n(measured speedup should sit at or below the bounds; see EXPERIMENTS.md)");
+    Ok(())
+}

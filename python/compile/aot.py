@@ -1,0 +1,212 @@
+"""AOT artifact builder: data -> train -> HLO text + params + manifest.
+
+This is the ONLY place Python runs; everything it emits under artifacts/
+is consumed by the Rust serving binary.  Interchange is HLO *text* (not
+serialized HloModuleProto): jax >= 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Idempotence: a content stamp over the compile-path sources + config makes
+`make artifacts` a no-op when nothing changed.  `--fast` trains tiny
+checkpoints (CI/smoke); `--stage` allows partial rebuilds.
+
+Exported programs (see DESIGN.md §2 for the full table):
+  {m}_prefill                       m in {draft, target, xl}
+  {m}_generate_c{C}_g{G}            draft: C in C_LIST, G in G_LIST;
+                                    target/xl: C=1 only (AR baseline chunks)
+  {m}_verify_g{G}                   target, xl
+  target_score, target_embed, draft_score
+  kmer_score_c8_g{G}                Pallas k-mer scorer
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, train, vocab
+from .kernels.kmer_score import HSZ, V as KV
+from .model import CONFIGS, DRAFT, MAXLEN, TARGET, XL, ModelCfg
+from . import model as M
+
+C_LIST = [1, 2, 3, 5, 8]
+G_LIST = [5, 10, 15]
+AR_CHUNK = 16  # target-only baseline generates in chunks of this many tokens
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, path):
+    # keep_unused: the Rust side passes every declared argument (e.g.
+    # prefill's n_ctx, which exists for interface clarity only) — without
+    # this, XLA drops unused params and arity no longer matches.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def f32():
+    return jnp.float32
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def content_stamp(cfg_note: str) -> str:
+    h = hashlib.sha256()
+    for fn in ("vocab.py", "data.py", "model.py", "train.py", "aot.py",
+               "kernels/attention.py", "kernels/kmer_score.py", "kernels/ref.py"):
+        with open(os.path.join(HERE, fn), "rb") as f:
+            h.update(f.read())
+    h.update(cfg_note.encode())
+    return h.hexdigest()[:16]
+
+
+def build_data(out: str):
+    print("[aot] generating family MSAs")
+    return data.build_all(out)
+
+
+def build_models(out: str, fast: bool):
+    steps_t, steps_d, steps_x = (60, 40, 40) if fast else (1200, 800, 300)
+    tr, hold = data.training_corpus(out)
+    print(f"[aot] corpus: {len(tr)} train / {len(hold)} holdout sequences")
+    params = {}
+    print("[aot] training target", TARGET.n_params(), "params")
+    params["target"] = train.train_model(TARGET, tr, hold, steps=steps_t, seed=7)
+    print("[aot] training draft (distilled)", DRAFT.n_params(), "params")
+    params["draft"] = train.train_model(
+        DRAFT, tr, hold, steps=steps_d, seed=8,
+        teacher=(TARGET, jnp.asarray(params["target"])))
+    print("[aot] training xl", XL.n_params(), "params")
+    params["xl"] = train.train_model(XL, tr, hold, steps=steps_x, seed=9)
+
+    manifest = {"maxlen": MAXLEN, "vocab": vocab.VOCAB, "models": {}}
+    for name, flat in params.items():
+        cfg = CONFIGS[name]
+        flat.tofile(os.path.join(out, f"params_{name}.bin"))
+        offs, off = [], 0
+        for pname, shape in cfg.param_specs():
+            n = int(np.prod(shape))
+            offs.append({"name": pname, "shape": list(shape), "offset": off})
+            off += n
+        manifest["models"][name] = {
+            "n_layer": cfg.n_layer, "d_model": cfg.d_model,
+            "n_head": cfg.n_head, "d_ff": cfg.d_ff,
+            "n_params": cfg.n_params(), "tensors": offs,
+            "cache_shape": list(cfg.cache_shape()),
+        }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return params
+
+
+def export_programs(out: str, use_pallas: bool = True):
+    os.makedirs(os.path.join(out, "hlo"), exist_ok=True)
+    total = 0
+
+    def ex(name, fn, args):
+        nonlocal total
+        t0 = time.time()
+        n = export(fn, args, os.path.join(out, "hlo", f"{name}.hlo.txt"))
+        total += n
+        print(f"  hlo {name}: {n//1024} KiB ({time.time()-t0:.1f}s)")
+
+    i32 = jnp.int32
+    for cfg in (DRAFT, TARGET, XL):
+        P = spec((cfg.n_params(),))
+        CSH = spec(cfg.cache_shape())
+        S = cfg.maxlen
+        ex(f"{cfg.name}_prefill",
+           lambda fl, t, n, cfg=cfg: M.prefill(cfg, use_pallas, fl, t, n),
+           (P, spec((S,), i32), spec((), i32)))
+
+        # target/xl also export g1: the paper-faithful stepwise AR baseline
+        # (one dispatch per token, like HF sampling with a KV cache) next to
+        # the scan-fused g16 chunk variant.
+        gen_cs = C_LIST if cfg.name == "draft" else [1]
+        gen_gs = G_LIST if cfg.name == "draft" else [1, AR_CHUNK]
+        for c in gen_cs:
+            for g in gen_gs:
+                ex(f"{cfg.name}_generate_c{c}_g{g}",
+                   lambda fl, ca, fe, nf, po, u, T, tp, cfg=cfg, c=c, g=g:
+                       M.generate_block(cfg, c, g, use_pallas, fl, ca, fe, nf, po, u, T, tp),
+                   (P, CSH, spec((g + 1,), i32), spec((), i32), spec((), i32),
+                    spec((c, g)), spec(()), spec(())))
+
+        if cfg.name in ("target", "xl"):
+            for g in G_LIST:
+                ex(f"{cfg.name}_verify_g{g}",
+                   lambda fl, ca, t, po, T, tp, cfg=cfg, g=g:
+                       M.verify_block(cfg, g, use_pallas, fl, ca, t, po, T, tp),
+                   (P, CSH, spec((g + 1,), i32), spec((), i32), spec(()), spec(())))
+
+    for name in ("target", "draft"):
+        cfg = CONFIGS[name]
+        P = spec((cfg.n_params(),))
+        ex(f"{name}_score",
+           lambda fl, t, n, cfg=cfg: M.score_seq(cfg, fl, t, n),
+           (P, spec((cfg.maxlen,), i32), spec((), i32)))
+    ex("target_embed",
+       lambda fl, t, n: M.embed_seq(TARGET, fl, t, n),
+       (spec((TARGET.n_params(),)), spec((TARGET.maxlen,), i32), spec((), i32)))
+
+    from .kernels.kmer_score import kmer_score
+    for g in G_LIST:
+        ex(f"kmer_score_c8_g{g}",
+           lambda ca, p1, p3, p5, km: (kmer_score(ca, p1, p3, p5, km),),
+           (spec((8, g), i32), spec((KV,)), spec((KV ** 3,)), spec((HSZ,)),
+            spec((3,))))
+    print(f"[aot] exported {total//1024} KiB of HLO text")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(HERE, "..", "..", "artifacts"))
+    ap.add_argument("--fast", action="store_true", help="tiny training run (smoke)")
+    ap.add_argument("--stage", choices=["all", "data", "train", "export"], default="all")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    stamp = content_stamp(f"fast={args.fast}")
+    stamp_file = os.path.join(out, ".stamp")
+    if (not args.force and args.stage == "all" and os.path.exists(stamp_file)
+            and open(stamp_file).read() == stamp):
+        print("[aot] artifacts up to date (stamp match); nothing to do")
+        return
+
+    t0 = time.time()
+    if args.stage in ("all", "data"):
+        build_data(out)
+    if args.stage in ("all", "train"):
+        build_models(out, args.fast)
+    if args.stage in ("all", "export"):
+        export_programs(out)
+    if args.stage == "all":
+        with open(stamp_file, "w") as f:
+            f.write(stamp)
+    print(f"[aot] done in {time.time()-t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

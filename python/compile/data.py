@@ -1,0 +1,173 @@
+"""Synthetic protein-family generator — the ProteinGym-MSA stand-in.
+
+The paper draws seven wild-type proteins and their multiple sequence
+alignments (MSAs) from ProteinGym.  We cannot ship those, so we build a
+profile-HMM-style simulator that produces, per family:
+
+  * a wild-type sequence composed of conserved *motif blocks* separated by
+    variable linker regions (this is what makes k-mers informative: motif
+    columns have low substitution rates, so the family's k-mer spectrum is
+    sharply peaked on motif k-mers);
+  * an MSA of homologs sampled from the profile (per-column substitution
+    rates, occasional gap characters so the A2M parser is exercised);
+  * family metadata mirroring the paper's Table 1 (length, context length,
+    MSA depth — lengths capped at MAXLEN-6 and depths scaled down, see
+    DESIGN.md §3).
+
+The same files are the canonical corpus for training the draft/target
+models and, on the Rust side, for building k-mer tables — so "MSA-derived
+k-mers describe what the target model likes" holds by construction, which
+is the property SpecMER exploits.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from . import vocab
+
+MAXLEN = 192  # model max sequence length (BOS + seq + EOS must fit)
+
+# name, paper_len, our_len, context_len, paper_depth, our_depth, function
+# Lengths are capped at MAXLEN-12 and contexts kept at ~10% of our length
+# (the paper's rule); depths scaled per DESIGN.md §3, GB1 kept shallow.
+# Long-family cap of 168 leaves room for BOS/EOS plus a full final draft
+# block (gamma <= 15) inside MAXLEN=192 KV slots.
+FAMILIES = [
+    ("GFP",   238, 168, 17, 396,    396,  "Fluorescence"),
+    ("RBP1",   52,  52, 10, 135922, 3000, "Stability"),
+    ("ParD3",  93,  93, 15, 38613,  3000, "Growth enrichment"),
+    ("GB1",    56,  56, 10, 44,     44,   "Binding"),
+    ("Bgl3",  501, 168, 17, 105913, 3000, "Enzyme function"),
+    ("ADRB2", 413, 168, 17, 204722, 3000, "Receptor activity"),
+    ("CBS",   551, 168, 17, 19563,  2000, "Growth"),
+]
+
+N_AA = 20
+
+# Rough natural amino-acid background frequencies (Swiss-Prot order matched
+# to vocab.AA = "ACDEFGHIKLMNPQRSTVWY").
+BACKGROUND = np.array([
+    0.0826, 0.0137, 0.0546, 0.0672, 0.0386, 0.0708, 0.0227, 0.0593, 0.0581,
+    0.0965, 0.0241, 0.0406, 0.0474, 0.0393, 0.0553, 0.0660, 0.0535, 0.0686,
+    0.0110, 0.0292,
+])
+BACKGROUND = BACKGROUND / BACKGROUND.sum()
+
+
+def family_seed(name: str) -> int:
+    return sum(ord(c) * 131 ** i for i, c in enumerate(name)) % (2**31)
+
+
+def make_profile(rng: np.random.RandomState, length: int):
+    """Per-column categorical distributions over the 20 AAs.
+
+    Columns alternate between conserved motif blocks (a dominant residue
+    holding 60–95% of the mass, biased toward helix/sheet formers) and
+    variable linkers (Dirichlet-smeared background).  Returns
+    (profile [length, 20], conservation [length]).
+    """
+    profile = np.zeros((length, N_AA))
+    conservation = np.zeros(length)
+    pos = 0
+    motif = rng.rand() < 0.5  # start state
+    while pos < length:
+        block = int(rng.randint(4, 12) if motif else rng.randint(3, 10))
+        block = min(block, length - pos)
+        if motif:
+            for i in range(pos, pos + block):
+                dom = rng.randint(N_AA)
+                w = 0.60 + 0.35 * rng.rand()
+                p = (1 - w) * rng.dirichlet(np.ones(N_AA) * 0.5) + w * np.eye(N_AA)[dom]
+                profile[i] = p
+                conservation[i] = w
+        else:
+            for i in range(pos, pos + block):
+                p = rng.dirichlet(BACKGROUND * 15.0)
+                profile[i] = p
+                conservation[i] = 0.1 + 0.2 * rng.rand()
+        pos += block
+        motif = not motif
+    profile /= profile.sum(axis=1, keepdims=True)
+    return profile, conservation
+
+
+def sample_from_profile(rng, profile):
+    """One homolog: per-column draw from the profile."""
+    length = profile.shape[0]
+    u = rng.rand(length, 1)
+    cdf = np.cumsum(profile, axis=1)
+    idx = (u > cdf).sum(axis=1)
+    return np.minimum(idx, N_AA - 1)
+
+
+def make_msa(name: str, length: int, depth: int, gap_rate: float = 0.02):
+    """Build (wild_type, msa_rows) as index arrays in 0..19, gaps as -1."""
+    rng = np.random.RandomState(family_seed(name))
+    profile, cons = make_profile(rng, length)
+    wt = profile.argmax(axis=1)  # consensus = wild type
+    rows = []
+    for _ in range(depth):
+        row = sample_from_profile(rng, profile)
+        gaps = rng.rand(length) < gap_rate * (1.0 - cons)  # gaps avoid motifs
+        row = np.where(gaps, -1, row)
+        rows.append(row)
+    return wt, np.stack(rows), profile, cons
+
+
+def idx_to_str(idx_row) -> str:
+    return "".join("-" if i < 0 else vocab.AA[i] for i in idx_row)
+
+
+def write_a2m(path: str, name: str, wt, rows):
+    with open(path, "w") as f:
+        f.write(f">{name}_WT\n{idx_to_str(wt)}\n")
+        for j, row in enumerate(rows):
+            f.write(f">{name}_{j}\n{idx_to_str(row)}\n")
+
+
+def build_all(out_dir: str, verbose: bool = True):
+    """Generate every family MSA + families.json manifest into out_dir/msa."""
+    msa_dir = os.path.join(out_dir, "msa")
+    os.makedirs(msa_dir, exist_ok=True)
+    meta = []
+    for name, paper_len, length, ctx, paper_depth, depth, func in FAMILIES:
+        wt, rows, _, _ = make_msa(name, length, depth)
+        write_a2m(os.path.join(msa_dir, f"{name}.a2m"), name, wt, rows)
+        meta.append({
+            "name": name, "paper_length": paper_len, "length": length,
+            "context": ctx, "paper_msa_depth": paper_depth, "msa_depth": depth,
+            "function": func, "wild_type": idx_to_str(wt),
+        })
+        if verbose:
+            print(f"  msa {name}: len={length} depth={depth}")
+    with open(os.path.join(out_dir, "families.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def training_corpus(out_dir: str, max_per_family: int = 1500, holdout: int = 32):
+    """Tokenized training/holdout sequences from the generated MSAs.
+
+    Every row is BOS + ungapped(seq) + EOS, as a python list of ids.
+    The first `holdout` rows of each family are reserved for eval.
+    """
+    train, hold = [], []
+    for name, _, length, _, _, depth, _ in FAMILIES:
+        rng = np.random.RandomState(family_seed(name))
+        _prof, _cons = make_profile(rng, length)  # consume same stream as make_msa
+        # regenerate rows identically to make_msa
+        wt, rows, _, _ = make_msa(name, length, depth)
+        take = min(depth, max_per_family + holdout)
+        sel = np.random.RandomState(family_seed(name) ^ 0x5EED).permutation(depth)[:take]
+        for i, ri in enumerate(sel):
+            row = rows[ri]
+            toks = [vocab.BOS] + [vocab.AA_OFFSET + int(a) for a in row if a >= 0] + [vocab.EOS]
+            (hold if i < holdout else train).append(toks)
+    return train, hold
+
+
+if __name__ == "__main__":
+    import sys
+    build_all(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")

@@ -1,0 +1,78 @@
+"""Pallas fused causal attention over a KV cache — the L1 hot-spot kernel.
+
+The paper's compute hot spot is transformer decode on an A6000 GPU.  The
+TPU-style rethink (DESIGN.md §7): one fused kernel computes QKᵀ → masked,
+numerically-stable softmax → PV without leaving VMEM, with the grid laid
+out over (batch, heads) and the KV cache staged HBM→VMEM per head.  With
+our S ≤ 256 the whole per-head KV slab (S×Dh×4B ≤ 32 KiB) fits in a single
+VMEM block, so no cross-block flash accumulation is needed; the BlockSpec
+still expresses the HBM→VMEM schedule a longer-sequence variant would tile.
+
+Masking is positional: query g (absolute position qpos[g]) may attend keys
+at cache slots ≤ qpos[g].  Slots past the write frontier contain stale data
+by design (see model.py) and are always masked or overwritten first.
+
+Kernels MUST run with interpret=True here (CPU PJRT cannot execute Mosaic
+custom-calls); `force_interpret` exists so tests can assert both paths
+trace identically.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(qpos_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch, head) tile: q [G,Dh] against the full KV slab [S,Dh]."""
+    q = q_ref[0, 0]  # [G, Dh] — VMEM block
+    k = k_ref[0, 0]  # [S, Dh]
+    v = v_ref[0, 0]  # [S, Dh]
+    qpos = qpos_ref[:]  # [G] absolute positions of the queries
+
+    # MXU-shaped contraction; f32 accumulate (bf16 inputs on real TPU).
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G,S]
+    kidx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kidx <= qpos[:, None], s, -1e30)
+
+    # Numerically-stable softmax, fused in-register.
+    m = jnp.max(s, axis=1, keepdims=True)
+    e = jnp.exp(s - m)
+    z = jnp.sum(e, axis=1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(e, v, preferred_element_type=jnp.float32) / z
+
+
+def cached_attention(q, k, v, qpos, *, force_interpret: bool = True):
+    """Fused causal attention over a KV cache.
+
+    Args:
+      q:    [B, H, G, Dh] queries for G new positions.
+      k, v: [B, H, S, Dh] full cache slabs (S = model max length).
+      qpos: [G] int32 absolute positions of the G queries.
+    Returns:
+      [B, H, G, Dh] attention outputs.
+    """
+    b, h, g, dh = q.shape
+    s = k.shape[2]
+    kern = functools.partial(_attn_kernel, scale=1.0 / math.sqrt(dh))
+    return pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((g,), lambda bi, hi: (0,)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, g, dh), jnp.float32),
+        interpret=force_interpret,
+    )(qpos, q, k, v)
+
+
+def vmem_bytes(g: int, s: int, dh: int) -> int:
+    """Estimated VMEM footprint of one grid step (see EXPERIMENTS.md §Perf)."""
+    f = 4  # f32; 2 on real TPU with bf16 inputs
+    return f * (g * dh + 2 * s * dh + g * s + g * dh)  # q + kv + scores + out

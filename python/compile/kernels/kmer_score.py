@@ -1,0 +1,88 @@
+"""Pallas k-mer scoring kernel (Eq. 2 of the paper).
+
+Scores C candidate draft blocks of length G against MSA-derived k-mer
+frequency tables:
+
+    Score(s) = (1/G) * sum_{k in K} sum_i  P_k( s[i : i+k] )
+
+Tables are dense for k=1 (V) and k=3 (V^3 = 32768 floats) and
+open-addressed-hashed for k=5 (HSZ = 2^18 slots; V^5 would be 33M entries).
+The hash is plain base-33 rolling * Knuth multiplier in wrapping uint32
+arithmetic and MUST match `rust/src/kmer/table.rs` bit-for-bit — both sides
+fold colliding 5-mers into the same slot, so scores agree exactly.
+
+Grid is over candidates; all tables live in VMEM for the duration of the
+block (k3 table = 128 KiB, k5 table = 1 MiB — the dominant VMEM tenant,
+recorded in EXPERIMENTS.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+V = 32
+HSZ = 1 << 18  # k=5 hash table slots
+HASH_MUL = np.uint32(2654435761)  # numpy scalar: inlined, not captured
+
+
+def hash5(t0, t1, t2, t3, t4):
+    """Wrapping-u32 hash of a 5-mer; identical to the Rust implementation."""
+    h = t0.astype(jnp.uint32)
+    for t in (t1, t2, t3, t4):
+        h = h * np.uint32(33) + t.astype(jnp.uint32)
+    return (h * HASH_MUL) & np.uint32(HSZ - 1)
+
+
+def _kmer_kernel(cand_ref, p1_ref, p3_ref, p5_ref, kmask_ref, o_ref):
+    t = cand_ref[0]  # [G] int32 tokens of this candidate
+    g = t.shape[0]
+    p1 = p1_ref[:]
+    p3 = p3_ref[:]
+    p5 = p5_ref[:]
+    kmask = kmask_ref[:]  # [3] f32 — which k's are active (1.0/0.0)
+
+    s1 = jnp.sum(p1[t])
+
+    if g >= 3:
+        idx3 = (t[:-2] * V + t[1:-1]) * V + t[2:]
+        s3 = jnp.sum(p3[idx3])
+    else:
+        s3 = jnp.float32(0.0)
+
+    if g >= 5:
+        h = hash5(t[: g - 4], t[1 : g - 3], t[2 : g - 2], t[3 : g - 1], t[4:g])
+        s5 = jnp.sum(p5[h])
+    else:
+        s5 = jnp.float32(0.0)
+
+    o_ref[0] = (kmask[0] * s1 + kmask[1] * s3 + kmask[2] * s5) / g
+
+
+def kmer_score(cands, p1, p3, p5, kmask, *, force_interpret: bool = True):
+    """Score candidate blocks.
+
+    Args:
+      cands: [C, G] int32 candidate tokens.
+      p1:    [V]    f32 normalized 1-mer probabilities.
+      p3:    [V^3]  f32 flattened 3-mer probabilities.
+      p5:    [HSZ]  f32 hashed 5-mer probabilities.
+      kmask: [3]    f32 per-k on/off weights.
+    Returns:
+      [C] f32 scores.
+    """
+    c, g = cands.shape
+    return pl.pallas_call(
+        _kmer_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, g), lambda ci: (ci, 0)),
+            pl.BlockSpec((V,), lambda ci: (0,)),
+            pl.BlockSpec((V * V * V,), lambda ci: (0,)),
+            pl.BlockSpec((HSZ,), lambda ci: (0,)),
+            pl.BlockSpec((3,), lambda ci: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda ci: (ci,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=force_interpret,
+    )(cands, p1, p3, p5, kmask)

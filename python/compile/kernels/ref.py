@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+the most obvious way possible; pytest (python/tests/) sweeps shapes/dtypes
+with hypothesis and asserts allclose between kernel and oracle.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kmer_score import HSZ, V, hash5
+
+
+def ref_cached_attention(q, k, v, qpos):
+    """Oracle for attention.cached_attention.
+
+    q: [B,H,G,Dh], k/v: [B,H,S,Dh], qpos: [G] int32 -> [B,H,G,Dh]
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("bhgd,bhsd->bhgs", q, k) / math.sqrt(dh)
+    kidx = jnp.arange(k.shape[2])[None, None, None, :]
+    mask = kidx <= qpos[None, None, :, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", w, v)
+
+
+def ref_kmer_score(cands, p1, p3, p5, kmask):
+    """Oracle for kmer_score.kmer_score. cands: [C,G] -> [C]."""
+    c, g = cands.shape
+    out = []
+    for ci in range(c):
+        t = cands[ci]
+        s1 = jnp.sum(p1[t])
+        s3 = jnp.float32(0.0)
+        if g >= 3:
+            for i in range(g - 2):
+                idx = (t[i] * V + t[i + 1]) * V + t[i + 2]
+                s3 = s3 + p3[idx]
+        s5 = jnp.float32(0.0)
+        if g >= 5:
+            for i in range(g - 4):
+                h = hash5(jnp.asarray(t[i]), jnp.asarray(t[i + 1]),
+                          jnp.asarray(t[i + 2]), jnp.asarray(t[i + 3]),
+                          jnp.asarray(t[i + 4]))
+                s5 = s5 + p5[h]
+        out.append((kmask[0] * s1 + kmask[1] * s3 + kmask[2] * s5) / g)
+    return jnp.stack(out)

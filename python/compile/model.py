@@ -1,0 +1,336 @@
+"""Layer-2: ProGen2-like decoder-only transformer in JAX.
+
+Two checkpoints play the paper's ProGen2-S (draft) and ProGen2-M (target)
+roles (plus an "xl" config for the Table-5 ProGen2-XL experiment).  The
+model is deliberately classic: learned token+position embeddings, pre-LN
+blocks, causal MHA, GELU MLP, weight-tied head.
+
+The file defines two families of functions:
+
+  * full-sequence forward (`forward`) used for training, scoring and
+    embeddings — plain jnp attention (fast on CPU, differentiable);
+  * cached incremental functions used by the exported serving programs —
+    attention runs through the Pallas kernel (kernels/attention.py) when
+    `use_pallas=True`, which is how aot.py lowers them.
+
+Position/write-frontier convention (mirrored by rust/src/decode/*):
+  the KV cache has one slot per absolute position; `prefill` feeds the
+  first n-1 context tokens; thereafter every committed token is fed exactly
+  once (as `feed` in `generate_block`, or inside `verify`) before any
+  sampling continues.  Slots past the frontier may hold stale values; the
+  attention mask (key_pos <= query_pos) plus strictly sequential rewrites
+  make them unobservable.
+
+Parameters travel as ONE flat f32 vector (arg 0 of every exported
+program); `unflatten` carves it with static offsets. `manifest.json`
+records the layout for the Rust side.
+"""
+
+import dataclasses
+import functools
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import vocab
+from .kernels.attention import cached_attention
+
+MAXLEN = 192  # max sequence length incl. BOS/EOS (families capped to fit)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    vocab: int = vocab.VOCAB
+    maxlen: int = MAXLEN
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+    # ---- flat parameter layout ------------------------------------------
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        d, f, s, v = self.d_model, self.d_ff, self.maxlen, self.vocab
+        specs = [("tok_emb", (v, d)), ("pos_emb", (s, d))]
+        for l in range(self.n_layer):
+            p = f"l{l}."
+            specs += [
+                (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+                (p + "wq", (d, d)), (p + "wk", (d, d)),
+                (p + "wv", (d, d)), (p + "wo", (d, d)),
+                (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+                (p + "w1", (d, f)), (p + "b1", (f,)),
+                (p + "w2", (f, d)), (p + "b2", (d,)),
+            ]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in self.param_specs())
+
+    def cache_shape(self) -> Tuple[int, ...]:
+        # [layer, k/v, head, position, d_head]
+        return (self.n_layer, 2, self.n_head, self.maxlen, self.d_head)
+
+
+# Sizes chosen for the single-core CPU testbed: what matters for the
+# paper's dynamics is the draft/target quality gap and the ~5x cost ratio
+# (ProGen2-S:M is 151M:764M ≈ 1:5), not absolute scale. draft:target here
+# is 67k:356k ≈ 1:5.3; xl is the Table-5 ProGen2-XL stand-in.
+DRAFT = ModelCfg("draft", n_layer=2, d_model=48, n_head=2, d_ff=192)
+TARGET = ModelCfg("target", n_layer=3, d_model=96, n_head=3, d_ff=384)
+XL = ModelCfg("xl", n_layer=5, d_model=128, n_head=4, d_ff=512)
+CONFIGS = {c.name: c for c in (DRAFT, TARGET, XL)}
+
+
+def init_params(cfg: ModelCfg, key) -> jnp.ndarray:
+    """Flat f32 parameter vector, GPT-2-style init."""
+    chunks = []
+    scale_out = 0.02 / math.sqrt(2 * cfg.n_layer)
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            w = jnp.ones(shape)
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            w = jnp.zeros(shape)
+        elif base in ("wo", "w2"):
+            w = jax.random.normal(sub, shape) * scale_out
+        else:
+            w = jax.random.normal(sub, shape) * 0.02
+        chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+def unflatten(cfg: ModelCfg, flat: jnp.ndarray) -> dict:
+    out, off = {}, 0
+    for name, shape in cfg.param_specs():
+        n = int(math.prod(shape))
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return out
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_head):  # [..., T, D] -> [..., H, T, Dh]
+    *lead, t, d = x.shape
+    return x.reshape(*lead, t, n_head, d // n_head).swapaxes(-3, -2)
+
+
+def _merge_heads(x):  # [..., H, T, Dh] -> [..., T, D]
+    *lead, h, t, dh = x.shape
+    return x.swapaxes(-3, -2).reshape(*lead, t, h * dh)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (training / scoring / embedding).
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelCfg, flat, tokens):
+    """tokens [B,T] int32 -> (logits [B,T,V], final hidden [B,T,D])."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][:t][None]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for l in range(cfg.n_layer):
+        q = f"l{l}."
+        h = _ln(x, p[q + "ln1_g"], p[q + "ln1_b"])
+        qh = _split_heads(h @ p[q + "wq"], cfg.n_head)
+        kh = _split_heads(h @ p[q + "wk"], cfg.n_head)
+        vh = _split_heads(h @ p[q + "wv"], cfg.n_head)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(cfg.d_head)
+        s = jnp.where(mask[None, None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        x = x + _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", a, vh)) @ p[q + "wo"]
+        h = _ln(x, p[q + "ln2_g"], p[q + "ln2_b"])
+        x = x + (jax.nn.gelu(h @ p[q + "w1"] + p[q + "b1"])) @ p[q + "w2"] + p[q + "b2"]
+    x = _ln(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["tok_emb"].T  # weight-tied head
+    return logits, x
+
+
+# --------------------------------------------------------------------------
+# Cached incremental forward (exported serving programs).
+# --------------------------------------------------------------------------
+
+def _cached_block(cfg, p, l, x, cache, pos0, qpos, use_pallas):
+    """One transformer block over G new tokens with KV-cache update.
+
+    x [B,G,D]; cache [B,L,2,H,S,Dh]; writes K/V at absolute positions
+    pos0..pos0+G-1; queries attend with key_pos <= qpos[g].
+    Returns (x', cache').
+    """
+    q = f"l{l}."
+    h = _ln(x, p[q + "ln1_g"], p[q + "ln1_b"])
+    qh = _split_heads(h @ p[q + "wq"], cfg.n_head)  # [B,H,G,Dh]
+    kh = _split_heads(h @ p[q + "wk"], cfg.n_head)
+    vh = _split_heads(h @ p[q + "wv"], cfg.n_head)
+    # write the new K/V rows at the frontier
+    kv = jnp.stack([kh, vh], axis=1)[:, None]  # [B,1,2,H,G,Dh]
+    cache = jax.lax.dynamic_update_slice(cache, kv, (0, l, 0, 0, pos0, 0))
+    k_all = cache[:, l, 0]  # [B,H,S,Dh]
+    v_all = cache[:, l, 1]
+    if use_pallas:
+        att = cached_attention(qh, k_all, v_all, qpos)
+    else:
+        from .kernels.ref import ref_cached_attention
+        att = ref_cached_attention(qh, k_all, v_all, qpos)
+    x = x + _merge_heads(att) @ p[q + "wo"]
+    h = _ln(x, p[q + "ln2_g"], p[q + "ln2_b"])
+    x = x + (jax.nn.gelu(h @ p[q + "w1"] + p[q + "b1"])) @ p[q + "w2"] + p[q + "b2"]
+    return x, cache
+
+
+def _cached_forward(cfg, p, tokens, cache, pos0, qpos, use_pallas):
+    """tokens [B,G] at positions pos0..pos0+G-1 -> (logits [B,G,V], cache')."""
+    g = tokens.shape[1]
+    pos_ids = pos0 + jnp.arange(g)
+    x = p["tok_emb"][tokens] + p["pos_emb"][pos_ids][None]
+    for l in range(cfg.n_layer):
+        x, cache = _cached_block(cfg, p, l, x, cache, pos0, qpos, use_pallas)
+    x = _ln(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T, cache
+
+
+def adjust_dist(logits, temp, top_p):
+    """Temperature + nucleus truncation -> full renormalized dist [.., V].
+
+    Keeps the smallest prefix of the descending-sorted probabilities whose
+    exclusive cumulative sum is < top_p (the first token always survives).
+    Mirrors rust/src/sampling.rs exactly.
+    """
+    probs = jax.nn.softmax(logits / temp, axis=-1)
+    sp = jnp.sort(probs, axis=-1)[..., ::-1]
+    cum = jnp.cumsum(sp, axis=-1)
+    # threshold = probability of the last kept token
+    keep_sorted = (cum - sp) < top_p
+    # a prob is kept iff it is >= the smallest kept sorted prob
+    thresh = jnp.min(jnp.where(keep_sorted, sp, jnp.inf), axis=-1, keepdims=True)
+    kept = probs >= thresh
+    probs = jnp.where(kept, probs, 0.0)
+    return probs / probs.sum(-1, keepdims=True)
+
+
+def sample_from_dist(dist, u):
+    """Inverse-CDF draw. dist [..,V], u [..] in [0,1) -> int32 token [..]."""
+    cum = jnp.cumsum(dist, axis=-1)
+    idx = jnp.sum((cum < u[..., None]).astype(jnp.int32), axis=-1)
+    return jnp.minimum(idx, dist.shape[-1] - 1)
+
+
+# ---- exported programs ----------------------------------------------------
+
+def prefill(cfg: ModelCfg, use_pallas: bool, flat, tokens, n_ctx):
+    """Feed the first n_ctx-1 context tokens; return the cache.
+
+    tokens [S] int32 (padded), n_ctx scalar int32.  All S positions are
+    processed (cheap, one dispatch); slots >= n_ctx-1 hold garbage that the
+    frontier convention keeps unobservable.
+    """
+    p = unflatten(cfg, flat)
+    s = cfg.maxlen
+    cache = jnp.zeros((1,) + cfg.cache_shape(), jnp.float32)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    _logits, cache = _cached_forward(cfg, p, tokens[None], cache, 0, qpos, use_pallas)
+    del n_ctx  # layout is position-indexed; n_ctx kept for interface clarity
+    return (cache[0],)
+
+
+def generate_block(cfg: ModelCfg, n_cand: int, gamma: int, use_pallas: bool,
+                   flat, cache, feed, n_feed, pos, u, temp, top_p):
+    """Feed committed tokens, then draft `gamma` tokens for `n_cand` candidates.
+
+    Args:
+      cache: [L,2,H,S,Dh] committed cache (batch dim dropped).
+      feed:  [gamma+1] int32 — tokens committed since the last call, padded.
+      n_feed: scalar int32 in [1, gamma+1].
+      pos:   scalar int32 — absolute position of feed[0] (= #tokens fed so far).
+      u:     [n_cand, gamma] f32 uniforms (Rust-supplied randomness).
+      temp, top_p: scalar f32 sampling knobs.
+    Returns:
+      toks  [n_cand, gamma] int32 sampled candidate tokens,
+      dists [n_cand, gamma, V] the adjusted distributions each token was
+            sampled from (the `p_i` of Algorithm 1),
+      cache' [L,2,H,S,Dh] — committed cache after the feed (candidate KV is
+            deliberately NOT returned; accepted tokens are re-fed next call).
+    """
+    p = unflatten(cfg, flat)
+    f = gamma + 1
+    # ---- phase 1: teacher-force the committed-but-unfed tokens -----------
+    qpos = pos + jnp.arange(f, dtype=jnp.int32)
+    logits_f, cache1 = _cached_forward(cfg, p, feed[None], cache[None], pos, qpos, use_pallas)
+    last_logits = jnp.take_along_axis(
+        logits_f[0], (n_feed - 1)[None, None], axis=0)[0]  # [V]
+    # ---- phase 2: branch into candidates, scan gamma sampling steps ------
+    ccache = jnp.broadcast_to(cache1, (n_cand,) + cache1.shape[1:])
+    start = pos + n_feed  # first sampled position
+
+    def step(carry, g_u):
+        cache_c, logits = carry
+        g, u_g = g_u
+        dist = adjust_dist(logits, temp, top_p)          # [C,V]
+        tok = sample_from_dist(dist, u_g)                # [C]
+        qp = (start + g)[None].astype(jnp.int32)
+        logits_n, cache_c = _cached_forward(
+            cfg, p, tok[:, None], cache_c, start + g, qp, use_pallas)
+        return (cache_c, logits_n[:, 0]), (tok, dist)
+
+    init_logits = jnp.broadcast_to(last_logits, (n_cand, cfg.vocab))
+    (_, _), (toks, dists) = jax.lax.scan(
+        step, (ccache, init_logits),
+        (jnp.arange(gamma, dtype=jnp.int32), u.T))
+    return toks.T, dists.swapaxes(0, 1), cache1[0]
+
+
+def verify_block(cfg: ModelCfg, gamma: int, use_pallas: bool,
+                 flat, cache, toks, pos, temp, top_p):
+    """Teacher-forced verification over gamma draft tokens + bonus position.
+
+    toks [gamma+1]: toks[0] is the last committed-but-unfed token, toks[1:]
+    the selected candidate's draft tokens.  Returns the adjusted target
+    distributions q_i at every one of the gamma+1 prediction positions
+    (dists[i] predicts the token after toks[i]; dists[gamma] is the bonus
+    distribution) and the updated cache.
+    """
+    p = unflatten(cfg, flat)
+    f = gamma + 1
+    qpos = pos + jnp.arange(f, dtype=jnp.int32)
+    logits, cache1 = _cached_forward(cfg, p, toks[None], cache[None], pos, qpos, use_pallas)
+    dists = adjust_dist(logits[0], temp, top_p)  # [gamma+1, V]
+    return dists, cache1[0]
+
+
+def score_seq(cfg: ModelCfg, flat, tokens, n):
+    """Per-position NLL of tokens[1..n-1] under the model (no temp/top-p).
+
+    Returns nll [S] with nll[i] = -log softmax(logits[i-1])[tokens[i]] for
+    1 <= i < n and 0 elsewhere — the paper's length-normalized NLL is
+    sum(nll)/(n-1) on the Rust side.
+    """
+    logits, _ = forward(cfg, flat, tokens[None])
+    logp = jax.nn.log_softmax(logits[0], axis=-1)  # [S,V]
+    s = tokens.shape[0]
+    tgt = tokens[1:]
+    nll_body = -jnp.take_along_axis(logp[:-1], tgt[:, None], axis=1)[:, 0]
+    nll = jnp.concatenate([jnp.zeros((1,)), nll_body])
+    idx = jnp.arange(s)
+    return (jnp.where((idx >= 1) & (idx < n), nll, 0.0),)
+
+
+def embed_seq(cfg: ModelCfg, flat, tokens, n):
+    """Mean-pooled final hidden state over the first n positions [D]."""
+    _, hid = forward(cfg, flat, tokens[None])
+    s = tokens.shape[0]
+    m = (jnp.arange(s) < n).astype(jnp.float32)[:, None]
+    return ((hid[0] * m).sum(0) / jnp.maximum(m.sum(), 1.0),)

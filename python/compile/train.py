@@ -1,0 +1,105 @@
+"""Build-time training of the draft/target checkpoints (manual Adam).
+
+The paper uses pretrained ProGen2-S/M; we train our stand-ins on the
+synthetic family corpus (data.py).  Both models see the same data, the
+bigger one fits it better — reproducing the draft≈target relation that
+speculative decoding exploits.  The draft additionally gets a distillation
+term toward the (frozen) target logits, mirroring how small/large ProGen2
+checkpoints share a training distribution.
+
+optax is unavailable in this image, so Adam is implemented inline.
+"""
+
+import math
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import vocab
+from .model import ModelCfg, forward, init_params
+
+
+def pad_batch(seqs: List[List[int]], maxlen: int) -> np.ndarray:
+    out = np.full((len(seqs), maxlen), vocab.PAD, np.int32)
+    for i, s in enumerate(seqs):
+        s = s[:maxlen]
+        out[i, : len(s)] = s
+    return out
+
+
+def lm_loss(cfg: ModelCfg, flat, tokens):
+    """Causal LM cross-entropy, PAD positions masked out."""
+    logits, _ = forward(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp[:, :-1], tgt[:, :, None], axis=2)[:, :, 0]
+    mask = (tgt != vocab.PAD).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def distill_loss(cfg_s: ModelCfg, flat_s, tokens, teacher_logits):
+    """CE of the student against the teacher's softmax (plus data CE)."""
+    logits, _ = forward(cfg_s, flat_s, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    soft = jax.nn.softmax(teacher_logits, axis=-1)
+    mask = (tokens != vocab.PAD).astype(jnp.float32)[:, :, None]
+    kd = -(soft * logp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return lm_loss(cfg_s, flat_s, tokens) + kd
+
+
+def adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    return -lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def train_model(cfg: ModelCfg, train_seqs, hold_seqs, *, steps: int,
+                batch: int = 16, lr: float = 1e-3, seed: int = 0,
+                teacher=None, log_every: int = 100, maxlen: int = None):
+    """Train one checkpoint; returns the flat param vector (numpy f32)."""
+    maxlen = maxlen or cfg.maxlen
+    key = jax.random.PRNGKey(seed)
+    flat = init_params(cfg, key)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    rng = np.random.RandomState(seed + 1)
+
+    if teacher is None:
+        loss_fn = lambda f, toks, tl: lm_loss(cfg, f, toks)
+    else:
+        t_cfg, t_flat = teacher
+        loss_fn = lambda f, toks, tl: distill_loss(cfg, f, toks, tl)
+
+        @jax.jit
+        def teacher_logits(toks):
+            return forward(t_cfg, t_flat, toks)[0]
+
+    @jax.jit
+    def step_fn(flat, m, v, t, toks, tlogits):
+        loss, g = jax.value_and_grad(loss_fn)(flat, toks, tlogits)
+        upd, m, v = adam_update(g, m, v, t, lr)
+        return flat + upd, m, v, loss
+
+    @jax.jit
+    def eval_fn(flat, toks):
+        return lm_loss(cfg, flat, toks)
+
+    hold = jnp.asarray(pad_batch(hold_seqs[:64], maxlen))
+    dummy_tl = jnp.zeros((batch, maxlen, cfg.vocab), jnp.float32)
+    t0 = time.time()
+    for t in range(1, steps + 1):
+        idx = rng.randint(0, len(train_seqs), size=batch)
+        toks = jnp.asarray(pad_batch([train_seqs[i] for i in idx], maxlen))
+        tl = teacher_logits(toks) if teacher is not None else dummy_tl
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(t), toks, tl)
+        if t % log_every == 0 or t == steps:
+            hl = eval_fn(flat, hold)
+            print(f"  [{cfg.name}] step {t}/{steps} loss={float(loss):.4f} "
+                  f"holdout={float(hl):.4f} ppl={math.exp(float(hl)):.2f} "
+                  f"({time.time()-t0:.0f}s)")
+    return np.asarray(flat, np.float32)

@@ -1,0 +1,34 @@
+"""Shared token vocabulary for the SpecMER reproduction.
+
+Mirrors `rust/src/tokenizer.rs` exactly — both sides must agree on ids.
+
+Layout (V = 32, padded so gathers/one-hots stay power-of-two sized):
+  0  PAD
+  1  BOS   (ProGen2 uses "1" as the N-terminus token; we call it BOS)
+  2  EOS   (ProGen2's stop token is literally "2" — see paper App. B.3)
+  3..22    the 20 canonical amino acids, alphabetical by letter
+  23 X     unknown / any
+  24..31   unused (reserved)
+"""
+
+PAD = 0
+BOS = 1
+EOS = 2
+AA = "ACDEFGHIKLMNPQRSTVWY"  # 20 canonical amino acids
+X = 23
+VOCAB = 32
+AA_OFFSET = 3
+
+TOK_OF = {a: AA_OFFSET + i for i, a in enumerate(AA)}
+TOK_OF["X"] = X
+CHR_OF = {v: k for k, v in TOK_OF.items()}
+
+
+def encode(seq: str) -> list:
+    """Amino-acid string -> token ids (no BOS/EOS added)."""
+    return [TOK_OF.get(ch, X) for ch in seq.upper() if ch != "-" and ch != "."]
+
+
+def decode(toks) -> str:
+    """Token ids -> amino-acid string. Skips special tokens."""
+    return "".join(CHR_OF.get(int(t), "") for t in toks if int(t) >= AA_OFFSET)

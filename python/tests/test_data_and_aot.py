@@ -1,0 +1,83 @@
+"""Data generator and AOT export plumbing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, vocab
+from compile.model import ModelCfg, init_params
+from compile import model as M
+
+
+def test_families_fit_model():
+    for name, _plen, length, ctx, _pd, _d, _f in data.FAMILIES:
+        assert length + 2 + 15 <= M.MAXLEN, f"{name} too long for maxlen+gamma"
+        assert 1 <= ctx < length
+
+
+def test_msa_generation_deterministic():
+    wt1, rows1, _, _ = data.make_msa("GB1", 56, 44)
+    wt2, rows2, _, _ = data.make_msa("GB1", 56, 44)
+    np.testing.assert_array_equal(wt1, wt2)
+    np.testing.assert_array_equal(rows1, rows2)
+    assert rows1.shape == (44, 56)
+
+
+def test_msa_conservation_structure():
+    """Motif columns should dominate: many columns nearly unanimous."""
+    _wt, rows, profile, cons = data.make_msa("GFP", 168, 200)
+    col_match = (rows == profile.argmax(1)[None, :]).mean(0)
+    # conserved columns (cons>0.8) agree with consensus far more often
+    hi = col_match[cons > 0.85].mean()
+    lo = col_match[cons < 0.4].mean()
+    assert hi > lo + 0.2, (hi, lo)
+
+
+def test_write_and_tokenize_roundtrip(tmp_path):
+    wt, rows, _, _ = data.make_msa("GB1", 56, 10)
+    p = tmp_path / "t.a2m"
+    data.write_a2m(str(p), "GB1", wt, rows)
+    text = p.read_text()
+    assert text.count(">") == 11
+    first = text.splitlines()[1]
+    assert len(first) == 56
+    toks = vocab.encode(first)
+    assert all(3 <= t <= 23 for t in toks)
+
+
+def test_training_corpus_shapes():
+    train, hold = data.training_corpus("/tmp/unused", max_per_family=5, holdout=2)
+    assert len(train) == 7 * 5
+    assert len(hold) == 7 * 2
+    for seq in train[:10]:
+        assert seq[0] == vocab.BOS and seq[-1] == vocab.EOS
+        assert len(seq) <= M.MAXLEN
+
+
+def test_hlo_text_exports_and_parses(tmp_path):
+    """Smoke the full export path for one tiny program."""
+    tiny = ModelCfg("tiny", n_layer=1, d_model=16, n_head=2, d_ff=32, maxlen=32)
+    out = tmp_path / "prog.hlo.txt"
+    n = aot.export(
+        lambda fl, t, nn: M.score_seq(tiny, fl, t, nn),
+        (aot.spec((tiny.n_params(),)), aot.spec((32,), jnp.int32), aot.spec((), jnp.int32)),
+        str(out),
+    )
+    assert n > 1000
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_content_stamp_changes_with_config():
+    a = aot.content_stamp("fast=True")
+    b = aot.content_stamp("fast=False")
+    assert a != b and len(a) == 16
+
+
+def test_export_list_covers_paper_grid():
+    assert set(aot.G_LIST) == {5, 10, 15}
+    assert set(aot.C_LIST) >= {1, 2, 3, 5}

@@ -1,0 +1,118 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py is the
+core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import cached_attention, vmem_bytes
+from compile.kernels.kmer_score import HSZ, V, hash5, kmer_score
+from compile.kernels.ref import ref_cached_attention, ref_kmer_score
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 3),
+    g=st.integers(1, 8),
+    s=st.integers(8, 48),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, g, s, dh, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(b, h, g, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, dh), jnp.float32)
+    # positions strictly increasing within [0, s)
+    base = rng.randint(0, max(1, s - g))
+    qpos = jnp.asarray(base + np.arange(g), jnp.int32)
+    out = cached_attention(q, k, v, qpos)
+    ref = ref_cached_attention(q, k, v, qpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_masks_future_positions():
+    """Garbage beyond the query position must not leak into the output."""
+    rng = np.random.RandomState(0)
+    b, h, g, s, dh = 1, 1, 2, 16, 8
+    q = jnp.asarray(rng.randn(b, h, g, dh), jnp.float32)
+    k = np.asarray(rng.randn(b, h, s, dh), np.float32)
+    v = np.asarray(rng.randn(b, h, s, dh), np.float32)
+    qpos = jnp.asarray([4, 5], jnp.int32)
+    out1 = cached_attention(q, jnp.asarray(k), jnp.asarray(v), qpos)
+    # trash the masked region
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 6:] = 1e6
+    v2[:, :, 6:] = -1e6
+    out2 = cached_attention(q, jnp.asarray(k2), jnp.asarray(v2), qpos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+def test_attention_under_jit_and_grad_path():
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(2, 2, 3, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 2, 16, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 2, 16, 8), jnp.float32)
+    qpos = jnp.asarray([3, 4, 5], jnp.int32)
+    jitted = jax.jit(lambda *a: cached_attention(*a))
+    np.testing.assert_allclose(
+        np.asarray(jitted(q, k, v, qpos)),
+        np.asarray(cached_attention(q, k, v, qpos)),
+        rtol=1e-6,
+    )
+
+
+def test_vmem_estimate_monotone():
+    assert vmem_bytes(16, 256, 32) > vmem_bytes(8, 128, 32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    g=st.sampled_from([5, 10, 15]),
+    seed=st.integers(0, 2**31 - 1),
+    k1=st.booleans(),
+    k3=st.booleans(),
+    k5=st.booleans(),
+)
+def test_kmer_kernel_matches_ref(c, g, seed, k1, k3, k5):
+    rng = np.random.RandomState(seed)
+    cands = jnp.asarray(rng.randint(0, V, (c, g)), jnp.int32)
+    p1 = jnp.asarray(rng.rand(V), jnp.float32)
+    p3 = jnp.asarray(rng.rand(V**3), jnp.float32)
+    p5 = jnp.asarray(rng.rand(HSZ), jnp.float32)
+    km = jnp.asarray([float(k1), float(k3), float(k5)], jnp.float32)
+    out = kmer_score(cands, p1, p3, p5, km)
+    ref = ref_kmer_score(np.asarray(cands), p1, p3, p5, km)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_hash5_contract_values():
+    """Anchor values for the Rust-side hash (kmer/table.rs mirrors these)."""
+    def py_hash(ts):
+        h = np.uint32(ts[0])
+        for t in ts[1:]:
+            h = np.uint32((int(h) * 33 + t) & 0xFFFFFFFF)
+        return (int(h) * 2654435761 & 0xFFFFFFFF) & (HSZ - 1)
+
+    for ts in [(3, 4, 5, 6, 3), (0, 0, 0, 0, 0), (31, 31, 31, 31, 31), (7, 1, 2, 9, 30)]:
+        got = int(hash5(*[jnp.asarray(t, jnp.int32) for t in ts]))
+        assert got == py_hash(ts), ts
+
+
+def test_kmer_zero_mask_gives_zero():
+    cands = jnp.zeros((2, 5), jnp.int32)
+    z = kmer_score(
+        cands,
+        jnp.ones(V, jnp.float32),
+        jnp.ones(V**3, jnp.float32),
+        jnp.ones(HSZ, jnp.float32),
+        jnp.zeros(3, jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(z), 0.0)

@@ -1,0 +1,137 @@
+"""L2 model semantics: causality, cached-vs-full consistency, sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import vocab
+from compile.model import (
+    DRAFT, TARGET, ModelCfg, adjust_dist, forward, generate_block,
+    init_params, prefill, sample_from_dist, score_seq, verify_block, embed_seq,
+)
+
+TINY = ModelCfg("tiny", n_layer=2, d_model=32, n_head=2, d_ff=64, maxlen=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(TINY, jax.random.PRNGKey(0))
+
+
+def rand_tokens(n, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randint(3, 23, (n,)), jnp.int32)
+
+
+def test_param_count_matches_spec(params):
+    assert params.shape[0] == TINY.n_params()
+
+
+def test_forward_shapes(params):
+    toks = rand_tokens(10)[None]
+    logits, hidden = forward(TINY, params, toks)
+    assert logits.shape == (1, 10, TINY.vocab)
+    assert hidden.shape == (1, 10, TINY.d_model)
+
+
+def test_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    toks = np.asarray(rand_tokens(12, 1))
+    a, _ = forward(TINY, params, jnp.asarray(toks)[None])
+    toks2 = toks.copy()
+    toks2[8] = (toks2[8] - 3 + 1) % 20 + 3
+    b, _ = forward(TINY, params, jnp.asarray(toks2)[None])
+    np.testing.assert_allclose(np.asarray(a[0, :8]), np.asarray(b[0, :8]), rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(a[0, 8:]), np.asarray(b[0, 8:]))
+
+
+def test_prefill_then_verify_matches_full(params):
+    seq = rand_tokens(30, 2)
+    padded = jnp.zeros((TINY.maxlen,), jnp.int32).at[:30].set(seq)
+    (cache,) = jax.jit(lambda f, t, n: prefill(TINY, True, f, t, n))(
+        params, padded, jnp.int32(20))
+    g = 5
+    toks = seq[19:25]
+    dists, _ = jax.jit(lambda *a: verify_block(TINY, g, True, *a))(
+        params, cache, toks, jnp.int32(19), jnp.float32(1.0), jnp.float32(1.0))
+    full, _ = forward(TINY, params, seq[None, :25])
+    for i in range(g + 1):
+        ref = adjust_dist(full[0, 19 + i], 1.0, 1.0)
+        np.testing.assert_allclose(np.asarray(dists[i]), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(temp=st.sampled_from([0.7, 1.0, 1.4]), p=st.sampled_from([0.5, 0.9, 0.95, 1.0]),
+       seed=st.integers(0, 1000))
+def test_adjust_dist_is_distribution(temp, p, seed):
+    logits = jnp.asarray(np.random.RandomState(seed).randn(vocab.VOCAB), jnp.float32)
+    d = adjust_dist(logits, temp, p)
+    total = float(jnp.sum(d))
+    assert abs(total - 1.0) < 1e-5
+    assert float(jnp.min(d)) >= 0.0
+    # argmax survives any p
+    assert float(d[int(jnp.argmax(logits))]) > 0.0
+
+
+def test_adjust_dist_truncates_tail():
+    logits = jnp.asarray([10.0, 9.0, 0.0, -5.0] + [-10.0] * 28, jnp.float32)
+    d = adjust_dist(logits, 1.0, 0.9)
+    assert float(jnp.sum(d > 0)) <= 3
+
+
+def test_sample_from_dist_inverse_cdf():
+    d = jnp.asarray([0.25, 0.25, 0.5], jnp.float32)
+    assert int(sample_from_dist(d, jnp.float32(0.1))) == 0
+    assert int(sample_from_dist(d, jnp.float32(0.3))) == 1
+    assert int(sample_from_dist(d, jnp.float32(0.99))) == 2
+
+
+def test_generate_block_candidates_and_dists(params):
+    seq = rand_tokens(10, 3)
+    padded = jnp.zeros((TINY.maxlen,), jnp.int32).at[:10].set(seq)
+    (cache,) = jax.jit(lambda f, t, n: prefill(TINY, True, f, t, n))(
+        params, padded, jnp.int32(10))
+    c, g = 3, 5
+    feed = jnp.zeros((g + 1,), jnp.int32).at[0].set(seq[9])
+    u = jnp.asarray(np.random.RandomState(4).rand(c, g), jnp.float32)
+    toks, dists, cache2 = jax.jit(lambda *a: generate_block(TINY, c, g, True, *a))(
+        params, cache, feed, jnp.int32(1), jnp.int32(9), u,
+        jnp.float32(1.0), jnp.float32(0.95))
+    assert toks.shape == (c, g)
+    assert dists.shape == (c, g, TINY.vocab)
+    sums = np.asarray(dists.sum(-1))
+    np.testing.assert_allclose(sums, 1.0, atol=1e-4)
+    # each sampled token has nonzero prob in its own dist
+    for ci in range(c):
+        for gi in range(g):
+            assert float(dists[ci, gi, int(toks[ci, gi])]) > 0.0
+    assert cache2.shape == cache.shape
+
+
+def test_score_seq_matches_forward(params):
+    seq = rand_tokens(16, 5)
+    padded = jnp.zeros((TINY.maxlen,), jnp.int32).at[:16].set(seq)
+    (nll,) = jax.jit(lambda f, t, n: score_seq(TINY, f, t, n))(params, padded, jnp.int32(16))
+    full, _ = forward(TINY, params, seq[None])
+    lp = jax.nn.log_softmax(full[0], -1)
+    ref = -np.asarray(lp)[np.arange(15), np.asarray(seq)[1:]]
+    np.testing.assert_allclose(np.asarray(nll[1:16]), ref, rtol=1e-4, atol=1e-5)
+    assert float(nll[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(nll[16:]), 0.0)
+
+
+def test_embed_masks_padding(params):
+    seq = rand_tokens(8, 6)
+    padded = jnp.zeros((TINY.maxlen,), jnp.int32).at[:8].set(seq)
+    (e1,) = jax.jit(lambda f, t, n: embed_seq(TINY, f, t, n))(params, padded, jnp.int32(8))
+    # changing padding content must not change the embedding
+    padded2 = padded.at[20].set(7)
+    (e2,) = jax.jit(lambda f, t, n: embed_seq(TINY, f, t, n))(params, padded2, jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-6)
+
+
+def test_draft_target_configs_build():
+    for cfg in (DRAFT, TARGET):
+        p = init_params(cfg, jax.random.PRNGKey(1))
+        assert p.shape[0] == cfg.n_params()

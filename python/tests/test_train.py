@@ -1,0 +1,75 @@
+"""Training loop sanity: loss decreases, Adam updates finite, distill runs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import vocab
+from compile.model import ModelCfg, forward, init_params
+from compile.train import adam_update, lm_loss, pad_batch, train_model
+
+TINY = ModelCfg("tiny", n_layer=1, d_model=16, n_head=2, d_ff=32, maxlen=32)
+TEACHER = ModelCfg("teach", n_layer=1, d_model=24, n_head=2, d_ff=48, maxlen=32)
+
+
+def toy_corpus(n=64, length=20, seed=0):
+    """Highly regular sequences: BOS + repeated motif + EOS."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n):
+        motif = [3, 4, 5, 6]
+        seq = [vocab.BOS] + (motif * 8)[: length - 2] + [vocab.EOS]
+        if rng.rand() < 0.3:
+            seq[3] = 7  # slight variation
+        out.append(seq)
+    return out
+
+
+def test_pad_batch():
+    b = pad_batch([[1, 2], [1, 2, 3, 4]], 6)
+    assert b.shape == (2, 6)
+    assert b[0, 2] == vocab.PAD
+    assert b[1, 3] == 4
+
+
+def test_lm_loss_masks_pad():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    toks = jnp.asarray(pad_batch([[1, 5, 6, 2]], 8))
+    l1 = lm_loss(TINY, params, toks)
+    # adding more padding must not change the loss
+    toks2 = jnp.asarray(pad_batch([[1, 5, 6, 2]], 12)[:, :8])
+    l2 = lm_loss(TINY, params, toks2)
+    assert abs(float(l1) - float(l2)) < 1e-6
+    assert float(l1) > 0
+
+
+def test_adam_update_direction():
+    g = jnp.asarray([1.0, -2.0, 0.0])
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    upd, m2, v2 = adam_update(g, m, v, jnp.float32(1.0), 0.1)
+    assert float(upd[0]) < 0 and float(upd[1]) > 0 and abs(float(upd[2])) < 1e-9
+    assert jnp.all(jnp.isfinite(m2)) and jnp.all(jnp.isfinite(v2))
+
+
+def test_training_reduces_loss():
+    corpus = toy_corpus()
+    flat = train_model(TINY, corpus, corpus[:8], steps=30, batch=8, lr=3e-3,
+                       seed=1, log_every=1000, maxlen=24)
+    init = init_params(TINY, jax.random.PRNGKey(1))
+    toks = jnp.asarray(pad_batch(corpus[:16], 24))
+    before = float(lm_loss(TINY, init, toks))
+    after = float(lm_loss(TINY, jnp.asarray(flat), toks))
+    assert after < before - 0.3, (before, after)
+
+
+def test_distillation_runs_and_learns():
+    corpus = toy_corpus()
+    teacher_flat = train_model(TEACHER, corpus, corpus[:8], steps=25, batch=8,
+                               lr=3e-3, seed=2, log_every=1000, maxlen=24)
+    student = train_model(TINY, corpus, corpus[:8], steps=20, batch=8, lr=3e-3,
+                          seed=3, teacher=(TEACHER, jnp.asarray(teacher_flat)),
+                          log_every=1000, maxlen=24)
+    toks = jnp.asarray(pad_batch(corpus[:16], 24))
+    init = init_params(TINY, jax.random.PRNGKey(3))
+    assert float(lm_loss(TINY, jnp.asarray(student), toks)) < float(lm_loss(TINY, init, toks))

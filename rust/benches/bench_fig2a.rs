@@ -1,0 +1,6 @@
+//! Regenerates the paper's fig2a (cargo bench target, harness = false).
+//! Env: SPECMER_BENCH_N (seqs/cell), SPECMER_BENCH_FULL (paper grid),
+//! SPECMER_BENCH_PROTEINS (subset). Output: results/fig2a.{md,csv}.
+fn main() {
+    specmer::experiments::bench_main(&["fig2a"]);
+}

@@ -1,0 +1,70 @@
+//! Micro-benchmarks of the L3 hot paths (criterion is unavailable offline;
+//! this is a minimal warmup+measure harness with median-of-runs output).
+//! These feed EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use specmer::kmer::{score_block, KmerSet, KmerTable};
+use specmer::msa::simulate::generate_family;
+use specmer::sampling;
+use specmer::util::rng::Pcg64;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let mut runs = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        runs.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("{name:<40} {:>12.1} ns/iter (median of 5)", runs[2]);
+}
+
+fn main() {
+    let (_prof, msa) = generate_family("bench", 120, 200, 1);
+    let table = KmerTable::build(&msa);
+    let mut rng = Pcg64::new(7);
+    let block5: Vec<u8> = (0..5).map(|_| 3 + rng.below(20) as u8).collect();
+    let block15: Vec<u8> = (0..15).map(|_| 3 + rng.below(20) as u8).collect();
+    let ks = KmerSet::new(true, true, true);
+
+    println!("== L3 hot-path micro-benchmarks ==");
+    bench("kmer score_block gamma=5 k=1,3,5", 200_000, || {
+        std::hint::black_box(score_block(&table, &block5, ks));
+    });
+    bench("kmer score_block gamma=15 k=1,3,5", 200_000, || {
+        std::hint::black_box(score_block(&table, &block15, ks));
+    });
+
+    let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+    bench("adjust_dist (softmax+nucleus) V=32", 100_000, || {
+        std::hint::black_box(sampling::adjust_dist(&logits, 0.9, 0.95));
+    });
+
+    let p = sampling::adjust_dist(&logits, 1.0, 1.0);
+    let q = sampling::adjust_dist(&logits, 0.8, 0.95);
+    let mut crng = Pcg64::new(3);
+    bench("maximal coupling step", 100_000, || {
+        let x = sampling::sample(&p, crng.next_f32());
+        std::hint::black_box(sampling::couple(&p, &q, x, &mut crng));
+    });
+
+    bench("residual distribution V=32", 100_000, || {
+        std::hint::black_box(sampling::residual(&p, &q));
+    });
+
+    let mut trng = Pcg64::new(9);
+    bench("pcg64 next_f32", 1_000_000, || {
+        std::hint::black_box(trng.next_f32());
+    });
+
+    bench("kmer table build (120x200 MSA)", 20, || {
+        std::hint::black_box(KmerTable::build(&msa));
+    });
+}

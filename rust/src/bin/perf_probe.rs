@@ -1,0 +1,46 @@
+use std::rc::Rc;
+use specmer::runtime::*;
+use specmer::tokenizer::BOS;
+use std::time::Instant;
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let target = HloModel::load(Rc::clone(&rt), &dir, "target").unwrap();
+    let mut ctx = vec![BOS];
+    ctx.extend(specmer::tokenizer::encode("MKTAYIAKQR"));
+    // prefill timing
+    let t0 = Instant::now();
+    let mut tc = target.prefill(&ctx).unwrap();
+    println!("target prefill (compile excl?) first: {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..20 { let _ = target.prefill(&ctx).unwrap(); }
+    println!("target prefill: {:.2} ms", t0.elapsed().as_secs_f64()*50.0);
+    let mut dc = draft.prefill(&ctx).unwrap();
+    // verify timing
+    let toks: Vec<u8> = vec![ctx[10], 5,6,7,8,9];
+    let _ = target.verify(&mut tc, &toks, 10, 1.0, 0.95).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..50 { let _ = target.verify(&mut tc, &toks, 10, 1.0, 0.95).unwrap(); }
+    println!("target verify g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    // draft generate timing c=3 g=5
+    let u: Vec<f32> = (0..15).map(|i| (i as f32*0.3)%1.0).collect();
+    let feed = vec![ctx[10]];
+    let _ = draft.generate(&mut dc, &feed, 10, 3, 5, &u, 1.0, 0.95).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..50 { let _ = draft.generate(&mut dc, &feed, 10, 3, 5, &u, 1.0, 0.95).unwrap(); }
+    println!("draft generate c3 g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    let _ = draft.generate(&mut dc, &feed, 10, 1, 5, &u[..5], 1.0, 0.95).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..50 { let _ = draft.generate(&mut dc, &feed, 10, 1, 5, &u[..5], 1.0, 0.95).unwrap(); }
+    println!("draft generate c1 g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    // target generate chunk16
+    let t0 = Instant::now();
+    let u16: Vec<f32> = (0..16).map(|i| (i as f32*0.17)%1.0).collect();
+    for _ in 0..50 { let _ = target.generate(&mut tc, &feed, 10, 1, 16, &u16, 1.0, 0.95).unwrap(); }
+    println!("target generate c1 g16 (baseline chunk): {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    // score
+    let t0 = Instant::now();
+    for _ in 0..20 { let _ = target.score(&ctx).unwrap(); }
+    println!("target score (full 192): {:.2} ms", t0.elapsed().as_secs_f64()*50.0);
+}

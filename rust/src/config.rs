@@ -1,0 +1,147 @@
+//! System configuration: artifact locations, model pair, serving knobs.
+
+use crate::decode::GenConfig;
+use crate::kmer::KmerSet;
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+/// Which decoding method a request uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Plain nucleus sampling from the target model.
+    TargetOnly,
+    /// Plain nucleus sampling from the draft model (Table 5's "Draft" row).
+    DraftOnly,
+    /// Vanilla speculative decoding (c = 1).
+    Speculative,
+    /// SpecMER with c candidates and k-mer guidance.
+    SpecMer,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "target" | "target-only" | "ar" => Some(Method::TargetOnly),
+            "draft" | "draft-only" => Some(Method::DraftOnly),
+            "spec" | "speculative" | "specdec" => Some(Method::Speculative),
+            "specmer" => Some(Method::SpecMer),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::TargetOnly => "target",
+            Method::DraftOnly => "draft",
+            Method::Speculative => "speculative",
+            Method::SpecMer => "specmer",
+        }
+    }
+}
+
+/// Global configuration (CLI > defaults).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub artifacts: PathBuf,
+    pub results_dir: PathBuf,
+    pub draft_model: String,
+    pub target_model: String,
+    /// Use the pure-Rust reference backend instead of PJRT.
+    pub cpu_ref: bool,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub port: u16,
+    pub gen: GenConfig,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            artifacts: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            draft_model: "draft".into(),
+            target_model: "target".into(),
+            cpu_ref: false,
+            workers: 1,
+            max_batch: 8,
+            max_wait_ms: 5,
+            port: 7878,
+            gen: GenConfig::default(),
+        }
+    }
+}
+
+impl Config {
+    /// Apply CLI overrides on top of defaults.
+    pub fn from_args(args: &Args) -> anyhow::Result<Config> {
+        let mut c = Config::default();
+        if let Some(a) = args.get("artifacts") {
+            c.artifacts = PathBuf::from(a);
+        } else if let Ok(env) = std::env::var("SPECMER_ARTIFACTS") {
+            c.artifacts = PathBuf::from(env);
+        }
+        if let Some(r) = args.get("results") {
+            c.results_dir = PathBuf::from(r);
+        }
+        c.draft_model = args.str_or("draft-model", &c.draft_model);
+        c.target_model = args.str_or("target-model", &c.target_model);
+        c.cpu_ref = args.flag("cpu-ref");
+        c.workers = args.usize_or("workers", c.workers)?;
+        c.max_batch = args.usize_or("max-batch", c.max_batch)?;
+        c.max_wait_ms = args.u64_or("max-wait-ms", c.max_wait_ms)?;
+        c.port = args.usize_or("port", c.port as usize)? as u16;
+        c.gen.gamma = args.usize_or("gamma", c.gen.gamma)?;
+        c.gen.c = args.usize_or("c", c.gen.c)?;
+        c.gen.temp = args.f64_or("temp", c.gen.temp as f64)? as f32;
+        c.gen.top_p = args.f64_or("top-p", c.gen.top_p as f64)? as f32;
+        c.gen.seed = args.u64_or("seed", c.gen.seed)?;
+        c.gen.kmer_boundary = args.flag("boundary");
+        if let Some(k) = args.get("k") {
+            c.gen.kset = KmerSet::parse(k)
+                .ok_or_else(|| anyhow::anyhow!("bad --k '{k}' (expected e.g. 1,3,5)"))?;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Config {
+        Config::from_args(&Args::parse(s.split_whitespace().map(String::from)).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.gen.top_p, 0.95);
+        assert_eq!(c.gen.c, 3);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = parse("--gamma 10 --c 5 --temp 0.7 --k 1,3 --workers 2 --cpu-ref");
+        assert_eq!(c.gen.gamma, 10);
+        assert_eq!(c.gen.c, 5);
+        assert!((c.gen.temp - 0.7).abs() < 1e-6);
+        assert!(c.gen.kset.k1 && c.gen.kset.k3 && !c.gen.kset.k5);
+        assert_eq!(c.workers, 2);
+        assert!(c.cpu_ref);
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("SpecMER"), Some(Method::SpecMer));
+        assert_eq!(Method::parse("target"), Some(Method::TargetOnly));
+        assert_eq!(Method::parse("spec"), Some(Method::Speculative));
+        assert_eq!(Method::parse("???"), None);
+    }
+
+    #[test]
+    fn bad_k_rejected() {
+        let args = Args::parse("--k 2,7".split_whitespace().map(String::from)).unwrap();
+        assert!(Config::from_args(&args).is_err());
+    }
+}

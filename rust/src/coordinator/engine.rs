@@ -1,0 +1,267 @@
+//! The per-worker generation engine: backends + family registry + k-mer
+//! tables behind one object the scheduler and examples drive directly.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Config, Method};
+use crate::decode::{self, GenConfig, GenOutput};
+use crate::eval::PlddtScorer;
+use crate::kmer::KmerTable;
+use crate::msa::{self, FamilyMeta, Msa};
+use crate::runtime::prefill_cache::PrefillCached;
+use crate::runtime::{CpuModel, HloModel, ModelBackend, Runtime};
+use crate::tokenizer::{self, BOS};
+
+/// Per-family state: metadata, MSA-derived k-mer table, context tokens.
+pub struct Family {
+    pub meta: FamilyMeta,
+    pub table: KmerTable,
+    pub context: Vec<u8>,
+    pub wt_tokens: Vec<u8>,
+    pub msa: Msa,
+}
+
+impl Family {
+    pub fn from_msa(meta: FamilyMeta, msa: Msa) -> Family {
+        let wt_tokens = tokenizer::encode(&meta.wild_type);
+        let mut context = vec![BOS];
+        context.extend(&wt_tokens[..meta.context.min(wt_tokens.len())]);
+        Family { table: KmerTable::build(&msa), context, wt_tokens, meta, msa }
+    }
+
+    /// Max total token length for generation: BOS + wild-type + EOS.
+    pub fn max_len(&self) -> usize {
+        self.wt_tokens.len() + 2
+    }
+
+    pub fn plddt_scorer(&self) -> PlddtScorer {
+        PlddtScorer::from_msa(&self.msa)
+    }
+}
+
+/// Load every family from artifacts (families.json + msa/*.a2m).
+pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
+    let metas = msa::load_families(&artifacts.join("families.json"))
+        .with_context(|| format!("loading families.json from {}", artifacts.display()))?;
+    metas
+        .into_iter()
+        .map(|meta| {
+            let m = Msa::load(&artifacts.join("msa").join(format!("{}.a2m", meta.name)), &meta.name)?;
+            Ok(Family::from_msa(meta, m))
+        })
+        .collect()
+}
+
+/// Object-safe engine interface used by the scheduler, server and benches.
+pub trait GenEngine {
+    /// Generate one sequence for `protein` with `method`.
+    fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput>;
+    /// Length-normalized NLL of a token sequence under the target model.
+    fn score_nll(&self, tokens: &[u8]) -> Result<f64>;
+    /// Target-model embedding of a token sequence.
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>>;
+    /// Family registry.
+    fn families(&self) -> &[Family];
+    fn family(&self, name: &str) -> Result<&Family> {
+        self.families()
+            .iter()
+            .find(|f| f.meta.name == name)
+            .ok_or_else(|| anyhow!("unknown protein {name}"))
+    }
+    /// Override the k-mer table used for a protein (App. C ablations).
+    fn set_table_override(&mut self, protein: &str, table: Option<KmerTable>);
+}
+
+/// Generic engine over any backend pair.
+pub struct Engine<D: ModelBackend, T: ModelBackend> {
+    pub draft: PrefillCached<D>,
+    pub target: PrefillCached<T>,
+    families: Vec<Family>,
+    overrides: HashMap<String, KmerTable>,
+}
+
+impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
+    pub fn new(draft: D, target: T, families: Vec<Family>) -> Engine<D, T> {
+        Engine {
+            draft: PrefillCached::new(draft),
+            target: PrefillCached::new(target),
+            families,
+            overrides: HashMap::new(),
+        }
+    }
+}
+
+impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
+    fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput> {
+        let fam = self.family(protein)?;
+        let mut cfg = cfg.clone();
+        cfg.max_len = cfg.max_len.min(fam.max_len());
+        match method {
+            Method::TargetOnly => decode::target_only_generate(&self.target, &fam.context, &cfg),
+            Method::DraftOnly => decode::target_only_generate(&self.draft, &fam.context, &cfg),
+            Method::Speculative => {
+                cfg.c = 1;
+                decode::speculative_generate(&self.draft, &self.target, None, &fam.context, &cfg)
+            }
+            Method::SpecMer => {
+                let table = self.overrides.get(protein).unwrap_or(&fam.table);
+                decode::speculative_generate(
+                    &self.draft,
+                    &self.target,
+                    Some(table),
+                    &fam.context,
+                    &cfg,
+                )
+            }
+        }
+    }
+
+    fn score_nll(&self, tokens: &[u8]) -> Result<f64> {
+        crate::eval::sequence_nll(&self.target, tokens)
+    }
+
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        self.target.embed(tokens)
+    }
+
+    fn families(&self) -> &[Family] {
+        &self.families
+    }
+
+    fn set_table_override(&mut self, protein: &str, table: Option<KmerTable>) {
+        match table {
+            Some(t) => {
+                self.overrides.insert(protein.to_string(), t);
+            }
+            None => {
+                self.overrides.remove(protein);
+            }
+        }
+    }
+}
+
+/// Build the engine described by `Config` (HLO unless `--cpu-ref`).
+pub fn build_engine(cfg: &Config) -> Result<Box<dyn GenEngine>> {
+    let families = load_families(&cfg.artifacts)?;
+    if cfg.cpu_ref {
+        let manifest = crate::params::load_manifest(&cfg.artifacts)?;
+        let d = crate::params::load_model(&cfg.artifacts, &cfg.draft_model)?;
+        let t = crate::params::load_model(&cfg.artifacts, &cfg.target_model)?;
+        let draft = CpuModel::from_params(&d, manifest.vocab)?;
+        let target = CpuModel::from_params(&t, manifest.vocab)?;
+        Ok(Box::new(Engine::new(draft, target, families)))
+    } else {
+        let rt = Rc::new(Runtime::new(&cfg.artifacts)?);
+        let draft = HloModel::load(Rc::clone(&rt), &cfg.artifacts, &cfg.draft_model)?;
+        let target = HloModel::load(rt, &cfg.artifacts, &cfg.target_model)?;
+        Ok(Box::new(Engine::new(draft, target, families)))
+    }
+}
+
+/// Engine for benches/examples: real artifacts when present (default
+/// `artifacts/` or `$SPECMER_ARTIFACTS`), otherwise the synthetic fallback
+/// so every bench runs on a fresh checkout.
+pub fn engine_for_bench() -> (Box<dyn GenEngine>, bool) {
+    let mut cfg = Config::default();
+    if let Ok(env) = std::env::var("SPECMER_ARTIFACTS") {
+        cfg.artifacts = env.into();
+    } else {
+        // examples/benches run from the workspace root or rust/
+        for cand in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(cand).join("manifest.json").exists() {
+                cfg.artifacts = cand.into();
+                break;
+            }
+        }
+    }
+    match build_engine(&cfg) {
+        Ok(e) => (e, true),
+        Err(e) => {
+            eprintln!("[bench] no artifacts ({e}); using synthetic engine");
+            (Box::new(synthetic_engine(3)), false)
+        }
+    }
+}
+
+/// A fully synthetic engine (no artifacts) for tests and CI smoke runs.
+pub fn synthetic_engine(seed: u64) -> Engine<CpuModel, CpuModel> {
+    let mut fams = Vec::new();
+    for (i, (name, len, depth)) in
+        [("SynA", 48usize, 40usize), ("SynB", 64, 40)].iter().enumerate()
+    {
+        let (_p, msa) = crate::msa::simulate::generate_family(name, *len, *depth, seed + i as u64);
+        let meta = FamilyMeta {
+            name: name.to_string(),
+            paper_length: *len,
+            length: *len,
+            context: 6,
+            paper_msa_depth: *depth,
+            msa_depth: *depth,
+            function: "synthetic".into(),
+            wild_type: msa.wild_type.clone(),
+        };
+        fams.push(Family::from_msa(meta, msa));
+    }
+    let draft = CpuModel::synthetic(2, 16, 2, 96, seed ^ 1);
+    let target = CpuModel::synthetic(2, 24, 2, 96, seed ^ 2);
+    Engine::new(draft, target, fams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_engine_generates_all_methods() {
+        let eng = synthetic_engine(3);
+        let cfg = GenConfig { max_len: 30, gamma: 5, c: 3, seed: 1, ..Default::default() };
+        for method in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
+            let out = eng.generate("SynA", method, &cfg).unwrap();
+            assert!(out.tokens.len() > out.context_len, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_protein_errors() {
+        let eng = synthetic_engine(3);
+        assert!(eng.generate("Nope", Method::SpecMer, &GenConfig::default()).is_err());
+    }
+
+    #[test]
+    fn table_override_changes_selection() {
+        let mut eng = synthetic_engine(5);
+        let cfg = GenConfig { max_len: 40, gamma: 5, c: 5, seed: 9, ..Default::default() };
+        let a = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        // override SynA's table with SynB's (cross-protein ablation)
+        let other = eng.family("SynB").unwrap().table.clone();
+        eng.set_table_override("SynA", Some(other));
+        let b = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        eng.set_table_override("SynA", None);
+        let c = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        assert_eq!(a.tokens, c.tokens, "override removal restores behaviour");
+        // with same seed, the only difference is candidate selection; the
+        // draws are identical so outputs differ only if selection differed
+        // at least once — extremely likely across a full sequence.
+        let _ = b;
+    }
+
+    #[test]
+    fn max_len_clamped_to_family() {
+        let eng = synthetic_engine(7);
+        let cfg = GenConfig { max_len: 10_000, gamma: 5, c: 1, seed: 2, ..Default::default() };
+        let out = eng.generate("SynA", Method::Speculative, &cfg).unwrap();
+        assert!(out.tokens.len() <= eng.family("SynA").unwrap().max_len());
+    }
+
+    #[test]
+    fn score_and_embed_work() {
+        let eng = synthetic_engine(11);
+        let toks = eng.family("SynA").unwrap().context.clone();
+        assert!(eng.score_nll(&toks).unwrap() > 0.0);
+        assert_eq!(eng.embed(&toks).unwrap().len(), 24);
+    }
+}

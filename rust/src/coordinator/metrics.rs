@@ -1,0 +1,152 @@
+//! Serving metrics: counters, token throughput, latency percentiles.
+//! Thread-safe; `text_dump` renders a Prometheus-style exposition used by
+//! GET /metrics and the experiment harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub bonus: AtomicU64,
+    pub draft_calls: AtomicU64,
+    pub target_calls: AtomicU64,
+    pub prefill_hits: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+    decode_seconds: Mutex<f64>,
+    started: Mutex<Option<Instant>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Mutex::new(Some(Instant::now())), ..Default::default() }
+    }
+
+    pub fn record(&self, out: &crate::decode::GenOutput, latency: f64, decode_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_out
+            .fetch_add(out.new_tokens() as u64, Ordering::Relaxed);
+        self.accepted.fetch_add(out.accepted, Ordering::Relaxed);
+        self.rejected.fetch_add(out.rejected, Ordering::Relaxed);
+        self.bonus.fetch_add(out.bonus, Ordering::Relaxed);
+        self.draft_calls.fetch_add(out.draft_calls, Ordering::Relaxed);
+        self.target_calls.fetch_add(out.target_calls, Ordering::Relaxed);
+        self.latencies.lock().unwrap().push(latency);
+        *self.decode_seconds.lock().unwrap() += decode_s;
+    }
+
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Overall acceptance ratio (Eq. 6) across all completed requests.
+    pub fn acceptance_ratio(&self) -> f64 {
+        let a = self.accepted.load(Ordering::Relaxed) as f64;
+        let r = self.rejected.load(Ordering::Relaxed) as f64;
+        if a + r == 0.0 {
+            0.0
+        } else {
+            a / (a + r)
+        }
+    }
+
+    /// Committed tokens per decode-second (the paper's toks/sec).
+    pub fn tokens_per_second(&self) -> f64 {
+        let secs = *self.decode_seconds.lock().unwrap();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.tokens_out.load(Ordering::Relaxed) as f64 / secs
+        }
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.latencies.lock().unwrap(), q)
+    }
+
+    pub fn text_dump(&self) -> String {
+        let lat = self.latencies.lock().unwrap();
+        let p50 = crate::util::stats::percentile(&lat, 50.0);
+        let p99 = crate::util::stats::percentile(&lat, 99.0);
+        drop(lat);
+        let uptime = self
+            .started
+            .lock()
+            .unwrap()
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        format!(
+            "specmer_uptime_seconds {uptime:.1}\n\
+             specmer_requests_total {}\n\
+             specmer_completed_total {}\n\
+             specmer_failed_total {}\n\
+             specmer_tokens_out_total {}\n\
+             specmer_accepted_total {}\n\
+             specmer_rejected_total {}\n\
+             specmer_bonus_total {}\n\
+             specmer_acceptance_ratio {:.4}\n\
+             specmer_tokens_per_second {:.2}\n\
+             specmer_draft_calls_total {}\n\
+             specmer_target_calls_total {}\n\
+             specmer_prefill_cache_hits_total {}\n\
+             specmer_latency_p50_seconds {p50:.4}\n\
+             specmer_latency_p99_seconds {p99:.4}\n",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.bonus.load(Ordering::Relaxed),
+            self.acceptance_ratio(),
+            self.tokens_per_second(),
+            self.draft_calls.load(Ordering::Relaxed),
+            self.target_calls.load(Ordering::Relaxed),
+            self.prefill_hits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::GenOutput;
+
+    fn out(accepted: u64, rejected: u64, n_tokens: usize) -> GenOutput {
+        GenOutput {
+            tokens: vec![1; n_tokens + 2],
+            context_len: 2,
+            accepted,
+            rejected,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn records_and_aggregates() {
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record(&out(9, 1, 10), 0.5, 0.4);
+        m.record(&out(8, 2, 10), 0.7, 0.6);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert!((m.acceptance_ratio() - 0.85).abs() < 1e-12);
+        assert!((m.tokens_per_second() - 20.0).abs() < 1e-9);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_tokens_out_total 20"));
+        assert!(dump.contains("specmer_acceptance_ratio 0.85"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.acceptance_ratio(), 0.0);
+        assert_eq!(m.tokens_per_second(), 0.0);
+        assert!(m.text_dump().contains("specmer_requests_total 0"));
+    }
+}

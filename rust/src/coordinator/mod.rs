@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving system around the decode engines —
+//! per-worker engines, dynamic batching, protein-affinity routing,
+//! metrics. See DESIGN.md §5 for the request path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{build_engine, engine_for_bench, load_families, synthetic_engine, Engine, Family, GenEngine};
+pub use metrics::Metrics;
+pub use request::{GenRequest, GenResponse};
+pub use router::Router;
+pub use scheduler::{EngineFactory, Scheduler};

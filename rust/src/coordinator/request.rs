@@ -1,0 +1,40 @@
+//! Request/response types flowing through the serving stack.
+
+use crate::config::Method;
+use crate::decode::{GenConfig, GenOutput};
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A single generation request (one sequence). Clients wanting N sequences
+/// submit N requests — the batcher groups them.
+pub struct GenRequest {
+    pub id: u64,
+    pub protein: String,
+    pub method: Method,
+    pub cfg: GenConfig,
+    /// Where to deliver the result.
+    pub reply: Sender<GenResponse>,
+    pub submitted: Instant,
+}
+
+/// Result of one request.
+pub struct GenResponse {
+    pub id: u64,
+    pub protein: String,
+    pub method: Method,
+    pub result: anyhow::Result<GenOutput>,
+    /// End-to-end latency in seconds (queue + decode).
+    pub latency: f64,
+    /// Decode-only seconds (inside the worker).
+    pub decode_seconds: f64,
+}
+
+impl GenResponse {
+    /// Decoded amino-acid string (empty on error).
+    pub fn sequence(&self) -> String {
+        match &self.result {
+            Ok(out) => crate::tokenizer::decode(&out.tokens),
+            Err(_) => String::new(),
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Request router: protein-affinity placement with least-loaded fallback.
+//!
+//! Affinity keeps a protein's requests on the same worker so its k-mer
+//! table stays hot and the prefill memo hits (vLLM-router's cache-aware
+//! routing, adapted to per-family state). When the affinity target is
+//! overloaded relative to the least-loaded worker, the router spills.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Method;
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::scheduler::Scheduler;
+use crate::decode::GenConfig;
+
+pub struct Router {
+    pub scheduler: Arc<Scheduler>,
+    next_id: AtomicU64,
+    /// Spill when affinity worker has this many more queued than the min.
+    pub spill_threshold: usize,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Router {
+    pub fn new(scheduler: Arc<Scheduler>) -> Router {
+        Router { scheduler, next_id: AtomicU64::new(1), spill_threshold: 4 }
+    }
+
+    /// Pick a worker for `protein` (exposed for tests).
+    pub fn place(&self, protein: &str) -> usize {
+        let n = self.scheduler.n_workers();
+        if n == 1 {
+            return 0;
+        }
+        let affinity = (fnv1a(protein) % n as u64) as usize;
+        let loads = self.scheduler.loads();
+        let (min_w, min_load) = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, &l)| (i, l))
+            .unwrap_or((0, 0));
+        if loads[affinity] > min_load + self.spill_threshold {
+            min_w
+        } else {
+            affinity
+        }
+    }
+
+    /// Submit one request; returns its id.
+    pub fn submit(
+        &self,
+        protein: &str,
+        method: Method,
+        cfg: GenConfig,
+        reply: std::sync::mpsc::Sender<crate::coordinator::request::GenResponse>,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let w = self.place(protein);
+        self.scheduler.submit_to(
+            w,
+            GenRequest {
+                id,
+                protein: protein.to_string(),
+                method,
+                cfg,
+                reply,
+                submitted: Instant::now(),
+            },
+        );
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{synthetic_engine, GenEngine};
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::scheduler::EngineFactory;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn router(workers: usize) -> Router {
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let sched = Arc::new(Scheduler::start(
+            workers,
+            4,
+            Duration::from_millis(1),
+            factory,
+            Arc::new(Metrics::new()),
+        ));
+        Router::new(sched)
+    }
+
+    #[test]
+    fn affinity_is_stable() {
+        let r = router(4);
+        let w1 = r.place("GFP");
+        let w2 = r.place("GFP");
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn single_worker_always_zero() {
+        let r = router(1);
+        assert_eq!(r.place("anything"), 0);
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let r = router(2);
+        let (tx, rx) = channel();
+        let mut ids = Vec::new();
+        for seed in 0..4u64 {
+            ids.push(r.submit(
+                "SynA",
+                Method::SpecMer,
+                GenConfig { max_len: 20, seed, ..Default::default() },
+                tx.clone(),
+            ));
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "ids unique");
+        for _ in 0..4 {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(resp.result.is_ok());
+        }
+    }
+
+    /// Property: placement spills away from a hot worker.
+    #[test]
+    fn spills_when_overloaded() {
+        // emulate load imbalance by submitting many requests to the
+        // affinity worker without waiting
+        let r = router(3);
+        let (tx, rx) = channel();
+        let affinity = r.place("SynA");
+        // flood that worker directly
+        for seed in 0..12u64 {
+            r.scheduler.submit_to(
+                affinity,
+                GenRequest {
+                    id: 1000 + seed,
+                    protein: "SynA".into(),
+                    method: Method::SpecMer,
+                    cfg: GenConfig { max_len: 30, seed, ..Default::default() },
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        // placement may now pick a different worker (can't assert strictly:
+        // the worker might drain fast; just exercise the code path)
+        let _ = r.place("SynA");
+        for _ in 0..12 {
+            let _ = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Worker scheduler: N worker threads, each owning a [`GenEngine`]
+//! (engines hold PJRT handles and are deliberately !Send — they are built
+//! *inside* their worker thread from a Send factory), fed by per-worker
+//! batchers behind a mutex+condvar.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::engine::GenEngine;
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse};
+
+/// Send-able engine constructor run inside each worker thread.
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn GenEngine>> + Send + Sync>;
+
+struct WorkerShared {
+    batcher: Mutex<Batcher>,
+    cv: Condvar,
+    stop: AtomicBool,
+    queued: AtomicUsize,
+}
+
+pub struct Worker {
+    shared: Arc<WorkerShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct Scheduler {
+    workers: Vec<Worker>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    pub fn start(
+        n_workers: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        factory: EngineFactory,
+        metrics: Arc<Metrics>,
+    ) -> Scheduler {
+        let workers = (0..n_workers.max(1))
+            .map(|wid| {
+                let shared = Arc::new(WorkerShared {
+                    batcher: Mutex::new(Batcher::new(max_batch, max_wait)),
+                    cv: Condvar::new(),
+                    stop: AtomicBool::new(false),
+                    queued: AtomicUsize::new(0),
+                });
+                let s2 = Arc::clone(&shared);
+                let f = Arc::clone(&factory);
+                let m = Arc::clone(&metrics);
+                let handle = std::thread::Builder::new()
+                    .name(format!("specmer-worker-{wid}"))
+                    .spawn(move || worker_loop(s2, f, m))
+                    .expect("spawn worker");
+                Worker { shared, handle: Some(handle) }
+            })
+            .collect();
+        Scheduler { workers, metrics }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue depth of each worker (for the router's least-loaded policy).
+    pub fn loads(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .map(|w| w.shared.queued.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Submit a request to a specific worker.
+    pub fn submit_to(&self, worker: usize, req: GenRequest) {
+        let w = &self.workers[worker % self.workers.len()];
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        w.shared.queued.fetch_add(1, Ordering::Relaxed);
+        w.shared.batcher.lock().unwrap().push(req);
+        w.shared.cv.notify_one();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.shared.stop.store(true, Ordering::SeqCst);
+            w.shared.cv.notify_all();
+        }
+        for w in self.workers.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<Metrics>) {
+    let engine = match factory() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[specmer] worker failed to build engine: {e:#}");
+            return;
+        }
+    };
+    loop {
+        // wait for work or shutdown
+        let batch = {
+            let mut b = shared.batcher.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) && b.is_empty() {
+                    return;
+                }
+                let flush = shared.stop.load(Ordering::SeqCst);
+                if let Some(batch) = b.next_batch(Instant::now(), flush) {
+                    break batch;
+                }
+                if b.is_empty() {
+                    b = shared.cv.wait(b).unwrap();
+                } else {
+                    // oldest request hasn't aged out yet; sleep until it will
+                    let (nb, _t) = shared
+                        .cv
+                        .wait_timeout(b, Duration::from_millis(1))
+                        .unwrap();
+                    b = nb;
+                }
+            }
+        };
+        shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+        for req in batch {
+            let t0 = Instant::now();
+            let result = engine.generate(&req.protein, req.method, &req.cfg);
+            let decode_seconds = t0.elapsed().as_secs_f64();
+            let latency = req.submitted.elapsed().as_secs_f64();
+            match &result {
+                Ok(out) => metrics.record(out, latency, decode_seconds),
+                Err(_) => metrics.record_failure(),
+            }
+            let _ = req.reply.send(GenResponse {
+                id: req.id,
+                protein: req.protein,
+                method: req.method,
+                result,
+                latency,
+                decode_seconds,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::coordinator::engine::synthetic_engine;
+    use crate::decode::GenConfig;
+    use std::sync::mpsc::channel;
+
+    fn sched(workers: usize) -> Scheduler {
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        Scheduler::start(
+            workers,
+            4,
+            Duration::from_millis(1),
+            factory,
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    #[test]
+    fn processes_requests_and_replies() {
+        let s = sched(1);
+        let (tx, rx) = channel();
+        for id in 0..4u64 {
+            s.submit_to(
+                0,
+                GenRequest {
+                    id,
+                    protein: "SynA".into(),
+                    method: Method::SpecMer,
+                    cfg: GenConfig { max_len: 20, seed: id, ..Default::default() },
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        let mut got: Vec<u64> = (0..4).map(|_| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+            .map(|r| {
+                assert!(r.result.is_ok());
+                r.id
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(s.metrics.completed.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn multiple_workers_share_load() {
+        let s = sched(2);
+        let (tx, rx) = channel();
+        for id in 0..6u64 {
+            s.submit_to(
+                (id % 2) as usize,
+                GenRequest {
+                    id,
+                    protein: "SynA".into(),
+                    method: Method::Speculative,
+                    cfg: GenConfig { max_len: 16, seed: id, ..Default::default() },
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        for _ in 0..6 {
+            assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().result.is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_protein_reports_error() {
+        let s = sched(1);
+        let (tx, rx) = channel();
+        s.submit_to(
+            0,
+            GenRequest {
+                id: 1,
+                protein: "Nope".into(),
+                method: Method::SpecMer,
+                cfg: GenConfig::default(),
+                reply: tx,
+                submitted: Instant::now(),
+            },
+        );
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.result.is_err());
+        assert_eq!(s.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let s = sched(2);
+        drop(s); // must not hang
+    }
+}

@@ -1,0 +1,124 @@
+//! Decoding engines: target-only autoregressive baseline, vanilla
+//! speculative decoding (Algorithm 1), and SpecMER batch-and-select.
+
+pub mod spec;
+pub mod target_only;
+
+pub use spec::{speculative_generate, SpecOptions};
+pub use target_only::target_only_generate;
+
+use crate::kmer::KmerSet;
+
+/// One generation request's decoding configuration.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// Draft block length γ ∈ {5, 10, 15}.
+    pub gamma: usize,
+    /// Number of batch-drafted candidates c (1 = vanilla speculative).
+    pub c: usize,
+    pub temp: f32,
+    pub top_p: f32,
+    /// K-mer guidance set; ignored when c == 1 or no table is given.
+    pub kset: KmerSet,
+    /// Maximum total sequence length (BOS + residues + EOS), capped at the
+    /// model maxlen by the engines.
+    pub max_len: usize,
+    pub seed: u64,
+    /// Score candidate k-mers across the context/block boundary (extension,
+    /// off = paper-faithful).
+    pub kmer_boundary: bool,
+    /// Probability of running a misranking probe on a round (Fig. 3's ε).
+    pub probe_rate: f64,
+    /// Target-only baseline chunk: 0 = largest exported scan-fused chunk;
+    /// 1 = paper-faithful stepwise AR (one dispatch per token).
+    pub ar_chunk: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> GenConfig {
+        GenConfig {
+            gamma: 5,
+            c: 3,
+            temp: 1.0,
+            top_p: 0.95,
+            kset: KmerSet::new(true, true, false),
+            max_len: 192,
+            seed: 0,
+            kmer_boundary: false,
+            probe_rate: 0.0,
+            ar_chunk: 0,
+        }
+    }
+}
+
+/// Outcome of one generated sequence plus decoding statistics.
+#[derive(Clone, Debug, Default)]
+pub struct GenOutput {
+    /// Full token sequence including the context (BOS..., possibly EOS).
+    pub tokens: Vec<u8>,
+    /// Context length that was supplied (tokens[..context_len] is the prompt).
+    pub context_len: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Bonus tokens sampled when a whole block was accepted.
+    pub bonus: u64,
+    pub rounds: u64,
+    /// Online NLL of each committed token under the *adjusted* target dist
+    /// (diagnostic; the paper's reported NLL is re-scored by eval::nll).
+    pub online_nll_sum: f64,
+    /// Misranking probe outcomes: (E occurred, A* accepted) pairs.
+    pub probes: Vec<(bool, bool)>,
+    /// Target-model forward passes (≈ cost driver).
+    pub target_calls: u64,
+    pub draft_calls: u64,
+}
+
+impl GenOutput {
+    /// Acceptance ratio α̂ = accepted / (accepted + rejected)   (Eq. 6).
+    pub fn acceptance_ratio(&self) -> f64 {
+        let d = (self.accepted + self.rejected) as f64;
+        if d == 0.0 {
+            0.0
+        } else {
+            self.accepted as f64 / d
+        }
+    }
+
+    /// Generated residues (excluding context and specials).
+    pub fn generated_residues(&self) -> usize {
+        self.tokens[self.context_len..]
+            .iter()
+            .filter(|&&t| crate::tokenizer::is_residue(t))
+            .count()
+    }
+
+    /// All committed tokens past the context.
+    pub fn new_tokens(&self) -> usize {
+        self.tokens.len() - self.context_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceptance_ratio_edge_cases() {
+        let mut o = GenOutput::default();
+        assert_eq!(o.acceptance_ratio(), 0.0);
+        o.accepted = 9;
+        o.rejected = 1;
+        assert!((o.acceptance_ratio() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generated_residue_count_skips_specials() {
+        let o = GenOutput {
+            tokens: vec![1, 5, 6, 7, 2],
+            context_len: 2,
+            ..Default::default()
+        };
+        assert_eq!(o.generated_residues(), 2); // 6,7 (2 is EOS)
+        assert_eq!(o.new_tokens(), 3);
+    }
+}

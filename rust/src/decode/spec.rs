@@ -1,0 +1,343 @@
+//! Speculative decoding (Algorithm 1) and SpecMER batch-and-select.
+//!
+//! One engine implements both: with `c == 1` (or no k-mer table) the
+//! candidate-selection step degenerates and this is exactly vanilla
+//! speculative decoding; with `c > 1` and a table it is SpecMER (paper
+//! §3.1): draft `c` candidate blocks in one batched call, pick the block
+//! with the highest Eq.-2 k-mer score, verify only that block with the
+//! target, and accept/correct tokens by token-level maximal coupling.
+
+use anyhow::Result;
+
+use super::{GenConfig, GenOutput};
+use crate::kmer::{score, KmerTable};
+use crate::runtime::ModelBackend;
+use crate::sampling;
+use crate::tokenizer::EOS;
+use crate::util::rng::Pcg64;
+
+/// Extra knobs for speculative generation.
+#[derive(Clone, Default)]
+pub struct SpecOptions {
+    /// Use the exported Pallas k-mer kernel instead of the Rust scorer
+    /// (requires HLO runtime; for TPU-deployment parity runs).
+    pub hlo_kmer: Option<std::rc::Rc<crate::runtime::Runtime>>,
+}
+
+/// Generate one sequence with speculative decoding / SpecMER.
+///
+/// `table` enables k-mer guidance; pass `None` for pure Algorithm 1.
+pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    table: Option<&KmerTable>,
+    context: &[u8],
+    cfg: &GenConfig,
+) -> Result<GenOutput> {
+    let max_len = cfg.max_len.min(target.maxlen()).min(draft.maxlen());
+    assert!(!context.is_empty() && context.len() < max_len);
+    assert!(cfg.c >= 1);
+    let gamma = cfg.gamma;
+
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut out = GenOutput {
+        tokens: context.to_vec(),
+        context_len: context.len(),
+        ..Default::default()
+    };
+
+    let mut dcache = draft.prefill(context)?;
+    let mut tcache = target.prefill(context)?;
+    let mut draft_fed = context.len() - 1; // draft convention: all committed-but-unfed
+    // target convention: exactly one unfed committed token before verify
+
+    // KV slots are written through committed+gamma each round (draft feed +
+    // block, verify block); stop while a full block still fits.
+    let hard_cap = target.maxlen().min(draft.maxlen()) - gamma;
+    while out.tokens.len() < max_len.min(hard_cap) && *out.tokens.last().unwrap() != EOS {
+        out.rounds += 1;
+        let committed = out.tokens.len();
+
+        // ---- 1. candidate construction (one batched draft dispatch) -----
+        let feed = out.tokens[draft_fed..].to_vec();
+        let u: Vec<f32> = (0..cfg.c * gamma).map(|_| rng.next_f32()).collect();
+        let block = draft.generate(
+            &mut dcache,
+            &feed,
+            draft_fed,
+            cfg.c,
+            gamma,
+            &u,
+            cfg.temp,
+            cfg.top_p,
+        )?;
+        out.draft_calls += 1;
+        draft_fed = committed;
+
+        // ---- 2. k-mer scoring & selection ------------------------------
+        let sel = match (table, cfg.c) {
+            (Some(t), c) if c > 1 => {
+                if cfg.kmer_boundary {
+                    let tail = &out.tokens[committed.saturating_sub(4)..];
+                    let mut best = 0;
+                    let mut best_s = f32::NEG_INFINITY;
+                    for (i, cand) in block.tokens.iter().enumerate() {
+                        let s = score::score_block_with_context(t, tail, cand, cfg.kset);
+                        if s > best_s {
+                            best_s = s;
+                            best = i;
+                        }
+                    }
+                    best
+                } else {
+                    score::select_best(t, &block.tokens, cfg.kset)
+                }
+            }
+            _ => 0,
+        };
+        let cand = &block.tokens[sel];
+        let p_dists = &block.dists[sel];
+
+        // ---- 3. conditional probability computation (target verify) ----
+        let mut vtoks = Vec::with_capacity(gamma + 1);
+        vtoks.push(out.tokens[committed - 1]);
+        vtoks.extend_from_slice(cand);
+        let verify = target.verify(&mut tcache, &vtoks, committed - 1, cfg.temp, cfg.top_p)?;
+        out.target_calls += 1;
+
+        // ---- optional misranking probe (Fig. 3's ε) ---------------------
+        if cfg.probe_rate > 0.0 && rng.next_f64() < cfg.probe_rate && cfg.c > 1 {
+            let probe = probe_misranking(
+                target, &mut tcache, &mut out.target_calls, &out.tokens, &block.tokens,
+                &block.dists, sel, &verify.dists, cfg, &mut rng,
+            )?;
+            out.probes.push(probe);
+        }
+
+        // ---- 4. draft selection: token-level maximal coupling -----------
+        let mut all_accepted = true;
+        for i in 0..gamma {
+            let x = cand[i] as usize;
+            let (acc, tok) = sampling::couple(&p_dists[i], &verify.dists[i], x, &mut rng);
+            out.online_nll_sum += sampling::nll_of(&verify.dists[i], tok);
+            out.tokens.push(tok as u8);
+            if acc {
+                out.accepted += 1;
+            } else {
+                out.rejected += 1;
+                all_accepted = false;
+            }
+            if !acc || tok as u8 == EOS || out.tokens.len() >= max_len {
+                if !acc {
+                    // corrected token replaces the draft token; stop block
+                }
+                all_accepted = acc && tok as u8 != EOS && out.tokens.len() < max_len;
+                break;
+            }
+        }
+
+        // ---- bonus token when the whole block was accepted ---------------
+        if all_accepted && out.tokens.len() < max_len {
+            let bonus_dist = &verify.dists[gamma];
+            let tok = sampling::sample(bonus_dist, rng.next_f32());
+            out.online_nll_sum += sampling::nll_of(bonus_dist, tok);
+            out.tokens.push(tok as u8);
+            out.bonus += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// Estimate a misranking event: did *any* candidate pass a sequence-level
+/// acceptance check (the M(s) of Prop. 4.4), and did the selected one? A
+/// common uniform couples the comparison across candidates.
+///
+/// Implementation note: `verify` only rewrites cache slots >= pos, and the
+/// frontier convention makes those slots unobservable until rewritten, so
+/// we may probe the non-selected candidates against the live cache and then
+/// re-verify the selected block to restore its KV — no cache cloning
+/// needed. Costs c extra target calls per probed round; off by default.
+#[allow(clippy::too_many_arguments)]
+fn probe_misranking<T: ModelBackend>(
+    target: &T,
+    tcache: &mut T::Cache,
+    target_calls: &mut u64,
+    tokens: &[u8],
+    cands: &[Vec<u8>],
+    dists: &[Vec<Vec<f32>>],
+    sel: usize,
+    sel_q: &[Vec<f32>],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+) -> Result<(bool, bool)> {
+    let committed = tokens.len();
+    let eta = rng.next_f64();
+    let seq_ratio = |p: &[Vec<f32>], q: &[Vec<f32>], cand: &[u8]| -> f64 {
+        let mut lr = 0.0f64;
+        for i in 0..cand.len() {
+            let x = cand[i] as usize;
+            lr += (q[i][x].max(1e-12) as f64).ln() - (p[i][x].max(1e-12) as f64).ln();
+        }
+        lr.exp().min(1.0)
+    };
+    let mut any = false;
+    let mut sel_ok = false;
+    for (i, cand) in cands.iter().enumerate() {
+        let r = if i == sel {
+            seq_ratio(&dists[i], sel_q, cand)
+        } else {
+            let mut vtoks = vec![tokens[committed - 1]];
+            vtoks.extend_from_slice(cand);
+            let vb = target.verify(tcache, &vtoks, committed - 1, cfg.temp, cfg.top_p)?;
+            *target_calls += 1;
+            seq_ratio(&dists[i], &vb.dists, cand)
+        };
+        let ok = eta <= r;
+        any |= ok;
+        if i == sel {
+            sel_ok = ok;
+        }
+    }
+    // restore the selected block's KV in the live cache
+    let mut vtoks = vec![tokens[committed - 1]];
+    vtoks.extend_from_slice(&cands[sel]);
+    let _ = target.verify(tcache, &vtoks, committed - 1, cfg.temp, cfg.top_p)?;
+    *target_calls += 1;
+    Ok((any, sel_ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmer::KmerSet;
+    use crate::msa::simulate::generate_family;
+    use crate::runtime::cpu_ref::CpuModel;
+    use crate::tokenizer::BOS;
+
+    fn models() -> (CpuModel, CpuModel) {
+        // identical seeds -> draft == target (alpha should be ~1)
+        (
+            CpuModel::synthetic(2, 16, 2, 64, 7),
+            CpuModel::synthetic(2, 16, 2, 64, 7),
+        )
+    }
+
+    fn cfg(c: usize, gamma: usize, seed: u64) -> GenConfig {
+        GenConfig {
+            c,
+            gamma,
+            max_len: 48,
+            seed,
+            kset: KmerSet::new(true, true, true),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn identical_models_accept_everything() {
+        let (d, t) = models();
+        let out = speculative_generate(&d, &t, None, &[BOS, 5, 9], &cfg(1, 5, 3)).unwrap();
+        assert_eq!(out.rejected, 0, "p == q must always accept");
+        assert!(out.acceptance_ratio() > 0.999);
+        assert!(out.tokens.len() > 3);
+    }
+
+    #[test]
+    fn different_models_reject_sometimes() {
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let mut total_rej = 0;
+        for seed in 0..5 {
+            let out = speculative_generate(&d, &t, None, &[BOS, 5, 9], &cfg(1, 5, seed)).unwrap();
+            total_rej += out.rejected;
+        }
+        assert!(total_rej > 0, "independent models should disagree sometimes");
+    }
+
+    #[test]
+    fn specmer_runs_with_table() {
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let (d, t) = models();
+        let out =
+            speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &cfg(3, 5, 11)).unwrap();
+        assert!(out.tokens.len() > 3);
+        assert!(out.rounds > 0);
+        assert_eq!(out.draft_calls, out.rounds);
+        assert_eq!(out.target_calls, out.rounds);
+    }
+
+    #[test]
+    fn c1_with_table_equals_plain_speculative() {
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let (d, t) = models();
+        let a = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &cfg(1, 5, 13)).unwrap();
+        let b = speculative_generate(&d, &t, None, &[BOS, 5, 9], &cfg(1, 5, 13)).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (d, t) = models();
+        let a = speculative_generate(&d, &t, None, &[BOS, 5], &cfg(2, 5, 21)).unwrap();
+        let b = speculative_generate(&d, &t, None, &[BOS, 5], &cfg(2, 5, 21)).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.accepted, b.accepted);
+    }
+
+    #[test]
+    fn respects_max_len() {
+        let (d, t) = models();
+        let mut c = cfg(2, 10, 2);
+        c.max_len = 20;
+        let out = speculative_generate(&d, &t, None, &[BOS, 5], &c).unwrap();
+        assert!(out.tokens.len() <= 20);
+    }
+
+    #[test]
+    fn token_accounting_consistent() {
+        let (d, t) = models();
+        for seed in 0..4 {
+            let out = speculative_generate(&d, &t, None, &[BOS, 5, 9], &cfg(2, 5, seed)).unwrap();
+            // every committed token past context is accepted, rejected(corrected), or bonus
+            let committed = (out.tokens.len() - out.context_len) as u64;
+            assert_eq!(
+                committed,
+                out.accepted + out.rejected + out.bonus,
+                "accounting: {out:?}"
+            );
+        }
+    }
+
+    /// The lossless-ness property of speculative decoding: with identical
+    /// draft and target and the same seed structure, outputs are target-
+    /// distributed. We verify a weaker invariant that every committed token
+    /// lies in the target's nucleus at its position.
+    #[test]
+    fn committed_tokens_lie_in_target_nucleus() {
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 9);
+        let out = speculative_generate(&d, &t, None, &[BOS, 5, 9], &cfg(2, 5, 33)).unwrap();
+        let logits = t.forward_logits(&out.tokens);
+        for i in out.context_len..out.tokens.len() {
+            let dist = sampling::adjust_dist(&logits[i - 1], 1.0, 0.95);
+            assert!(
+                dist[out.tokens[i] as usize] > 0.0,
+                "token at {i} outside target nucleus"
+            );
+        }
+    }
+
+    #[test]
+    fn probe_records_events() {
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let mut c = cfg(3, 5, 17);
+        c.probe_rate = 1.0;
+        let out = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
+        assert!(!out.probes.is_empty());
+    }
+}

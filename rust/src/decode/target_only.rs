@@ -1,0 +1,184 @@
+//! Target-only autoregressive baseline (the paper's "Target" rows).
+//!
+//! Implemented with the same `generate` program as drafting, but on the
+//! target model with c = 1 and chunked blocks — every sampled token is a
+//! committed token, so this is exact nucleus sampling from the target.
+
+use anyhow::Result;
+
+use super::{GenConfig, GenOutput};
+use crate::runtime::ModelBackend;
+use crate::sampling;
+use crate::tokenizer::EOS;
+use crate::util::rng::Pcg64;
+
+/// Generate one sequence by plain nucleus sampling from `target`.
+pub fn target_only_generate<T: ModelBackend>(
+    target: &T,
+    context: &[u8],
+    cfg: &GenConfig,
+) -> Result<GenOutput> {
+    let max_len = cfg.max_len.min(target.maxlen());
+    assert!(!context.is_empty() && context.len() < max_len);
+    let supported = target.supported_gamma();
+    // ar_chunk = 1 is the paper-faithful stepwise baseline (one dispatch
+    // per token); 0 picks the largest exported scan-fused chunk.
+    let chunk = if cfg.ar_chunk > 0 {
+        *supported
+            .iter()
+            .filter(|&&g| g <= cfg.ar_chunk)
+            .max()
+            .or_else(|| supported.iter().min())
+            .expect("backend supports some gamma")
+    } else {
+        *supported.iter().max().expect("backend supports some gamma")
+    };
+
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut out = GenOutput {
+        tokens: context.to_vec(),
+        context_len: context.len(),
+        ..Default::default()
+    };
+
+    let mut cache = target.prefill(context)?;
+    let mut fed = context.len() - 1; // tokens fed so far (prefill feeds n-1)
+
+    // the generate program always samples a full chunk, writing KV through
+    // fed + feed + chunk; stop while that still fits in the cache.
+    'outer: while out.tokens.len() < max_len && out.tokens.len() + chunk <= target.maxlen() {
+        let feed = out.tokens[fed..].to_vec();
+        let gamma = chunk.min(max_len - out.tokens.len());
+        // the backend's program has fixed gamma; generate a full block and
+        // use only what fits.
+        let u: Vec<f32> = (0..chunk).map(|_| rng.next_f32()).collect();
+        let block = target.generate(&mut cache, &feed, fed, 1, chunk, &u, cfg.temp, cfg.top_p)?;
+        out.draft_calls += 1; // cost accounting: one target-model dispatch
+        out.target_calls += 1;
+        fed += feed.len();
+        for g in 0..gamma {
+            let tok = block.tokens[0][g];
+            out.online_nll_sum += sampling::nll_of(&block.dists[0][g], tok as usize);
+            out.tokens.push(tok);
+            out.accepted += 1; // every sampled token is committed
+            if tok == EOS || out.tokens.len() >= max_len {
+                // tokens beyond g were speculatively computed by the block
+                // but are simply dropped; the cache frontier convention
+                // makes their KV slots unobservable.
+                break 'outer;
+            }
+        }
+        // The sampled tokens' KV lives only inside the program's candidate
+        // scan — the committed cache holds KV through the *feed* phase
+        // only. `fed` therefore advances by feed.len() (done above), and
+        // the whole previous chunk is re-fed teacher-forced on the next
+        // call (it fits: chunk <= gamma+1 feed slots). Advancing `fed`
+        // past unfed tokens would leave silent KV holes.
+        out.rounds += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::cpu_ref::CpuModel;
+    use crate::tokenizer::BOS;
+
+    fn cfg(max_len: usize, seed: u64) -> GenConfig {
+        GenConfig { max_len, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn generates_up_to_max_len() {
+        let m = CpuModel::synthetic(2, 16, 2, 48, 3);
+        let ctx = vec![BOS, 5, 9, 13];
+        let out = target_only_generate(&m, &ctx, &cfg(24, 1)).unwrap();
+        assert!(out.tokens.len() <= 24);
+        assert!(out.tokens.len() > 4);
+        assert_eq!(&out.tokens[..4], &ctx[..]);
+        assert_eq!(out.acceptance_ratio(), 1.0);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let m = CpuModel::synthetic(2, 16, 2, 48, 3);
+        let ctx = vec![BOS, 5, 9];
+        let a = target_only_generate(&m, &ctx, &cfg(30, 7)).unwrap();
+        let b = target_only_generate(&m, &ctx, &cfg(30, 7)).unwrap();
+        let c = target_only_generate(&m, &ctx, &cfg(30, 8)).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert!(a.tokens != c.tokens || a.online_nll_sum == c.online_nll_sum);
+    }
+
+    #[test]
+    fn stops_at_eos() {
+        let m = CpuModel::synthetic(2, 16, 2, 64, 5);
+        for seed in 0..8 {
+            let out = target_only_generate(&m, &[BOS, 5], &cfg(64, seed)).unwrap();
+            if let Some(pos) = out.tokens.iter().position(|&t| t == EOS) {
+                assert_eq!(pos, out.tokens.len() - 1, "EOS must terminate");
+            }
+        }
+    }
+
+    /// Regression (missing-KV bug): the full token stream must be exactly
+    /// what step-by-step nucleus sampling with fresh full forwards and the
+    /// same uniform stream produces. Catches any committed-cache KV hole.
+    #[test]
+    fn matches_stepwise_manual_sampling_exactly() {
+        let m = CpuModel::synthetic(2, 16, 2, 96, 21);
+        let ctx = vec![BOS, 5, 9];
+        let chunk = 16; // CpuModel supports gamma 1..=16 -> chunk = 16
+        for seed in 0..3u64 {
+            let cfg = cfg(60, seed);
+            let out = target_only_generate(&m, &ctx, &cfg).unwrap();
+            // replay: same RNG stream, chunk uniforms drawn per round
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            let mut toks = ctx.clone();
+            'outer: while toks.len() < 60 && toks.len() + chunk <= 96 {
+                let u: Vec<f32> = (0..chunk).map(|_| rng.next_f32()).collect();
+                for &ug in u.iter() {
+                    let logits = m.forward_logits(&toks);
+                    let dist =
+                        crate::sampling::adjust_dist(logits.last().unwrap(), cfg.temp, cfg.top_p);
+                    let tok = crate::sampling::sample(&dist, ug) as u8;
+                    toks.push(tok);
+                    if tok == EOS || toks.len() >= 60 {
+                        break 'outer;
+                    }
+                }
+            }
+            assert_eq!(out.tokens, toks, "seed {seed}: cached path diverged from manual");
+        }
+    }
+
+    /// Sampled continuation matches a hand-rolled nucleus sampler driven by
+    /// the same model — the "is this really sampling from the target" check.
+    #[test]
+    fn matches_manual_sampling_distributionally() {
+        let m = CpuModel::synthetic(1, 16, 2, 32, 11);
+        let ctx = vec![BOS, 5, 9];
+        let n = 60;
+        let mut firsts = std::collections::HashMap::new();
+        for seed in 0..n {
+            let out = target_only_generate(&m, &ctx, &cfg(5, seed)).unwrap();
+            *firsts.entry(out.tokens[3]).or_insert(0usize) += 1;
+        }
+        // manual distribution of the first generated token
+        let logits = m.forward_logits(&ctx);
+        let dist = crate::sampling::adjust_dist(logits.last().unwrap(), 1.0, 0.95);
+        // every observed token must be inside the nucleus
+        for (&tok, _) in firsts.iter() {
+            assert!(dist[tok as usize] > 0.0, "token {tok} outside nucleus");
+        }
+        // and the argmax token should be observed
+        let argmax = dist
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u8;
+        assert!(firsts.contains_key(&argmax));
+    }
+}

@@ -1,0 +1,90 @@
+//! Sequence-diversity metrics (paper Appendix D.1, Table 9):
+//! wild-type Hamming distance and inter-sequence Hamming distance.
+
+/// Hamming distance with length-difference counted as mismatches (the
+//  natural extension for unaligned generated sequences).
+pub fn hamming(a: &[u8], b: &[u8]) -> usize {
+    let n = a.len().min(b.len());
+    let mut d = a.len().max(b.len()) - n;
+    for i in 0..n {
+        if a[i] != b[i] {
+            d += 1;
+        }
+    }
+    d
+}
+
+/// Mean Hamming distance of each sequence to the wild type.
+pub fn wt_distances(wt: &[u8], seqs: &[Vec<u8>]) -> Vec<f64> {
+    seqs.iter().map(|s| hamming(wt, s) as f64).collect()
+}
+
+/// All-pairs inter-sequence distances (upper triangle), subsampled to at
+/// most `max_pairs` for large sets.
+pub fn inter_seq_distances(seqs: &[Vec<u8>], max_pairs: usize, seed: u64) -> Vec<f64> {
+    let n = seqs.len();
+    if n < 2 {
+        return vec![];
+    }
+    let total = n * (n - 1) / 2;
+    let mut out = Vec::new();
+    if total <= max_pairs {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                out.push(hamming(&seqs[i], &seqs[j]) as f64);
+            }
+        }
+    } else {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        for _ in 0..max_pairs {
+            let i = rng.below(n);
+            let mut j = rng.below(n);
+            while j == i {
+                j = rng.below(n);
+            }
+            out.push(hamming(&seqs[i], &seqs[j]) as f64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(b"ACDE", b"ACDE"), 0);
+        assert_eq!(hamming(b"ACDE", b"ACDF"), 1);
+        assert_eq!(hamming(b"ACDE", b"AC"), 2); // length diff
+        assert_eq!(hamming(b"", b"ACD"), 3);
+    }
+
+    #[test]
+    fn wt_distance_vector() {
+        let d = wt_distances(b"AAAA", &[b"AAAA".to_vec(), b"AAAB".to_vec()]);
+        assert_eq!(d, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn inter_seq_full_enumeration() {
+        let seqs = vec![b"AA".to_vec(), b"AB".to_vec(), b"BB".to_vec()];
+        let mut d = inter_seq_distances(&seqs, 100, 0);
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(d, vec![1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn inter_seq_subsamples() {
+        let seqs: Vec<Vec<u8>> = (0..100).map(|i| vec![i as u8, (i * 7) as u8]).collect();
+        let d = inter_seq_distances(&seqs, 50, 1);
+        assert_eq!(d.len(), 50);
+        let d2 = inter_seq_distances(&seqs, 50, 1);
+        assert_eq!(d, d2, "deterministic");
+    }
+
+    #[test]
+    fn singleton_has_no_pairs() {
+        assert!(inter_seq_distances(&[b"AA".to_vec()], 10, 0).is_empty());
+    }
+}

@@ -1,0 +1,197 @@
+//! Sequence embeddings + PCA (the ESM2-embedding / Fig. 2a stand-in).
+//!
+//! Embeddings come from the target model's mean-pooled final hidden state
+//! (`target_embed.hlo.txt` or the cpu_ref backend); this module owns the
+//! PCA used to project MSA and generated-sequence embeddings to 2D. The
+//! eigensolver is a cyclic Jacobi on the covariance matrix — dimensions
+//! here are <= 128, where Jacobi is simple and robust.
+
+/// PCA model: mean vector + top-k principal axes (rows).
+pub struct Pca {
+    pub mean: Vec<f64>,
+    pub components: Vec<Vec<f64>>,
+    pub explained: Vec<f64>,
+}
+
+/// Symmetric-matrix eigendecomposition by cyclic Jacobi rotations.
+/// Returns (eigenvalues, eigenvectors as rows), sorted descending.
+pub fn jacobi_eigh(mut a: Vec<Vec<f64>>, iters: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = a.len();
+    let mut v = vec![vec![0.0; n]; n];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..iters {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p][q] * a[p][q];
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if a[p][q].abs() < 1e-18 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| a[j][j].partial_cmp(&a[i][i]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| a[i][i]).collect();
+    let vecs: Vec<Vec<f64>> = idx.iter().map(|&i| (0..n).map(|k| v[k][i]).collect()).collect();
+    (vals, vecs)
+}
+
+impl Pca {
+    /// Fit a k-component PCA on row vectors `data`.
+    pub fn fit(data: &[Vec<f32>], k: usize) -> Pca {
+        assert!(!data.is_empty());
+        let d = data[0].len();
+        let n = data.len() as f64;
+        let mut mean = vec![0.0f64; d];
+        for row in data {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n);
+        // covariance (upper triangle mirrored)
+        let mut cov = vec![vec![0.0f64; d]; d];
+        for row in data {
+            let c: Vec<f64> = row.iter().zip(&mean).map(|(&x, m)| x as f64 - m).collect();
+            for i in 0..d {
+                for j in i..d {
+                    cov[i][j] += c[i] * c[j];
+                }
+            }
+        }
+        let denom = (data.len().max(2) - 1) as f64;
+        for i in 0..d {
+            for j in i..d {
+                cov[i][j] /= denom;
+                cov[j][i] = cov[i][j];
+            }
+        }
+        let total: f64 = (0..d).map(|i| cov[i][i]).sum();
+        let (vals, vecs) = jacobi_eigh(cov, 30);
+        Pca {
+            mean,
+            components: vecs.into_iter().take(k).collect(),
+            explained: vals.iter().take(k).map(|&l| l / total.max(1e-12)).collect(),
+        }
+    }
+
+    /// Project one vector onto the principal axes.
+    pub fn transform(&self, x: &[f32]) -> Vec<f64> {
+        self.components
+            .iter()
+            .map(|axis| {
+                x.iter()
+                    .zip(&self.mean)
+                    .zip(axis)
+                    .map(|((&xi, m), a)| (xi as f64 - m) * a)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let (vals, vecs) = jacobi_eigh(vec![vec![2.0, 1.0], vec![1.0, 2.0]], 20);
+        assert!((vals[0] - 3.0).abs() < 1e-9);
+        assert!((vals[1] - 1.0).abs() < 1e-9);
+        // eigenvector for 3 is (1,1)/sqrt2 up to sign
+        let v = &vecs[0];
+        assert!((v[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-6);
+        assert!((v[0] - v[1]).abs() < 1e-6 || (v[0] + v[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // points along (1, 2, 0) + small noise
+        let mut rng = Pcg64::new(3);
+        let data: Vec<Vec<f32>> = (0..200)
+            .map(|_| {
+                let t = rng.gaussian() as f32 * 5.0;
+                vec![
+                    t + rng.gaussian() as f32 * 0.05,
+                    2.0 * t + rng.gaussian() as f32 * 0.05,
+                    rng.gaussian() as f32 * 0.05,
+                ]
+            })
+            .collect();
+        let pca = Pca::fit(&data, 2);
+        let c = &pca.components[0];
+        let norm = (c[0] * c[0] + c[1] * c[1] + c[2] * c[2]).sqrt();
+        let dir: Vec<f64> = c.iter().map(|x| x / norm).collect();
+        let expect = [1.0 / 5.0f64.sqrt(), 2.0 / 5.0f64.sqrt(), 0.0];
+        let dot: f64 = dir.iter().zip(&expect).map(|(a, b)| a * b).sum();
+        assert!(dot.abs() > 0.999, "dot {dot}");
+        assert!(pca.explained[0] > 0.99);
+    }
+
+    #[test]
+    fn transform_centers_data() {
+        let data = vec![vec![1.0f32, 0.0], vec![3.0, 0.0]];
+        let pca = Pca::fit(&data, 1);
+        let p1 = pca.transform(&[1.0, 0.0])[0];
+        let p2 = pca.transform(&[3.0, 0.0])[0];
+        assert!((p1 + p2).abs() < 1e-9, "projections symmetric around mean");
+        assert!((p1 - p2).abs() > 1.0);
+    }
+
+    #[test]
+    fn clustered_families_separate_in_pca() {
+        let mut rng = Pcg64::new(8);
+        let mut data = Vec::new();
+        for fam in 0..2 {
+            let center: Vec<f64> = (0..8).map(|i| if i == fam { 10.0 } else { 0.0 }).collect();
+            for _ in 0..50 {
+                data.push(
+                    center
+                        .iter()
+                        .map(|&c| (c + rng.gaussian() * 0.3) as f32)
+                        .collect::<Vec<f32>>(),
+                );
+            }
+        }
+        let pca = Pca::fit(&data, 2);
+        let a = pca.transform(&data[10]);
+        let b = pca.transform(&data[60]);
+        let dist = ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt();
+        assert!(dist > 5.0, "families must separate: {dist}");
+    }
+}

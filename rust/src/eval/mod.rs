@@ -1,0 +1,52 @@
+//! Evaluation metrics: NLL under the target model, the pLDDT foldability
+//! proxy, embeddings + PCA, and sequence-diversity measures.
+
+pub mod diversity;
+pub mod embed;
+pub mod plddt;
+
+pub use embed::Pca;
+pub use plddt::PlddtScorer;
+
+use crate::runtime::ModelBackend;
+use anyhow::Result;
+
+/// Length-normalized NLL of a full token sequence under `model` (the
+/// paper's post-hoc "NLL" metric: total NLL of tokens[1..] divided by the
+/// number of predicted tokens).
+pub fn sequence_nll<B: ModelBackend>(model: &B, tokens: &[u8]) -> Result<f64> {
+    if tokens.len() < 2 {
+        return Ok(0.0);
+    }
+    let per_pos = model.score(tokens)?;
+    let n = (tokens.len() - 1) as f64;
+    Ok(per_pos.iter().map(|&x| x as f64).sum::<f64>() / n)
+}
+
+/// NLL for many sequences.
+pub fn batch_nll<B: ModelBackend>(model: &B, seqs: &[Vec<u8>]) -> Result<Vec<f64>> {
+    seqs.iter().map(|s| sequence_nll(model, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::cpu_ref::CpuModel;
+
+    #[test]
+    fn nll_positive_and_length_normalized() {
+        let m = CpuModel::synthetic(1, 16, 2, 32, 2);
+        let short = sequence_nll(&m, &[1, 5, 9]).unwrap();
+        let long = sequence_nll(&m, &[1, 5, 9, 5, 9, 5, 9]).unwrap();
+        assert!(short > 0.0 && long > 0.0);
+        // normalization keeps them on the same scale
+        assert!((short - long).abs() < short.max(long));
+    }
+
+    #[test]
+    fn nll_trivial_sequences() {
+        let m = CpuModel::synthetic(1, 16, 2, 32, 2);
+        assert_eq!(sequence_nll(&m, &[1]).unwrap(), 0.0);
+        assert_eq!(sequence_nll(&m, &[]).unwrap(), 0.0);
+    }
+}

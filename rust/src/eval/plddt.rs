@@ -1,0 +1,214 @@
+//! Foldability proxy — the ESMFold-pLDDT stand-in (DESIGN.md §3).
+//!
+//! The paper uses mean per-residue pLDDT from ESMFold purely as a *ranking*
+//! signal: sequences that look like stable family members score high,
+//! degenerate or off-family sequences score low. We reproduce that ordering
+//! pressure with three ingredients, each normalized to [0,1]:
+//!
+//!   1. family profile log-odds (positional match to the held-out MSA
+//!      column profile — the dominant term, like ESMFold's implicit
+//!      evolutionary prior);
+//!   2. secondary-structure propensity smoothness: Chou–Fasman helix/sheet
+//!      propensities averaged over a window; real folds have contiguous
+//!      runs of structure-former residues;
+//!   3. degeneracy penalties: single-residue repeats and low-complexity
+//!      windows (the classic failure mode of AR protein LMs — paper §1).
+//!
+//! Calibration anchors: a wild-type scores ≈0.8, uniform-random sequences
+//! ≈0.3–0.45 — matching the paper's Table 7 spread.
+
+use crate::msa::Msa;
+use crate::tokenizer::{AA_OFFSET, N_AA};
+
+/// Chou–Fasman alpha-helix propensities (order = vocab.AA letters).
+const HELIX: [f64; N_AA] = [
+    1.42, 0.70, 1.01, 1.51, 1.13, 0.57, 1.00, 1.08, 1.16, 1.21, 1.45, 0.67,
+    0.57, 1.11, 0.98, 0.77, 0.83, 1.06, 1.08, 0.69,
+];
+/// Chou–Fasman beta-sheet propensities.
+const SHEET: [f64; N_AA] = [
+    0.83, 1.19, 0.54, 0.37, 1.38, 0.75, 0.87, 1.60, 0.74, 1.30, 1.05, 0.89,
+    0.55, 1.10, 0.93, 0.75, 1.19, 1.70, 1.37, 1.47,
+];
+
+/// Per-column profile with background-relative log-odds, prebuilt from the
+/// family MSA (the expensive part; build once, reuse across sequences).
+pub struct PlddtScorer {
+    profile: Vec<[f64; N_AA]>,
+    /// log-odds dynamic range used for normalization
+    lo_scale: f64,
+}
+
+impl PlddtScorer {
+    pub fn from_msa(msa: &Msa) -> PlddtScorer {
+        PlddtScorer { profile: msa.column_profile(), lo_scale: 3.0 }
+    }
+
+    /// Mean "pLDDT" in [0,1] for a residue-token sequence (specials should
+    /// be stripped by the caller; extra/missing length is tolerated —
+    /// sequences are scored over the overlapping prefix, with a length-
+    /// mismatch penalty, since truncated chains don't fold).
+    pub fn score(&self, residues: &[u8]) -> f64 {
+        if residues.is_empty() {
+            return 0.0;
+        }
+        let n = residues.len();
+        let w = self.per_residue(residues);
+        let mean = w.iter().sum::<f64>() / w.len() as f64;
+        // length mismatch penalty: fraction of the family length covered
+        let cover = (n.min(self.profile.len()) as f64 / self.profile.len() as f64).min(1.0);
+        (mean * (0.5 + 0.5 * cover)).clamp(0.0, 1.0)
+    }
+
+    /// Per-residue scores (the "per-position pLDDT" analogue).
+    pub fn per_residue(&self, residues: &[u8]) -> Vec<f64> {
+        let n = residues.len();
+        let aa: Vec<Option<usize>> = residues
+            .iter()
+            .map(|&t| {
+                let i = t.wrapping_sub(AA_OFFSET) as usize;
+                if i < N_AA {
+                    Some(i)
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        let bg = &crate::msa::simulate::BACKGROUND;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let Some(a) = aa[i] else {
+                out.push(0.0);
+                continue;
+            };
+            // 1. profile log-odds, squashed to [0,1]
+            let prof = if i < self.profile.len() {
+                let p = self.profile[i][a].max(1e-4);
+                let lo = (p / bg[a]).ln();
+                (0.5 + lo / (2.0 * self.lo_scale)).clamp(0.0, 1.0)
+            } else {
+                0.3 // residues beyond the family length are suspicious
+            };
+            // 2. structure propensity over a +/-3 window: max of mean helix
+            //    and mean sheet propensity, mapped so 1.0 propensity -> 0.5
+            let lo_w = i.saturating_sub(3);
+            let hi_w = (i + 4).min(n);
+            let (mut h, mut s, mut cnt) = (0.0, 0.0, 0.0);
+            for j in lo_w..hi_w {
+                if let Some(b) = aa[j] {
+                    h += HELIX[b];
+                    s += SHEET[b];
+                    cnt += 1.0;
+                }
+            }
+            let prop = if cnt > 0.0 {
+                ((h / cnt).max(s / cnt) - 0.5).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            // 3. degeneracy: repeats and low window complexity
+            let mut penalty: f64 = 0.0;
+            if i >= 2 && aa[i] == aa[i - 1] && aa[i - 1] == aa[i - 2] {
+                penalty += 0.35;
+            }
+            let distinct = {
+                let mut seen = [false; N_AA];
+                let mut c = 0;
+                for j in lo_w..hi_w {
+                    if let Some(b) = aa[j] {
+                        if !seen[b] {
+                            seen[b] = true;
+                            c += 1;
+                        }
+                    }
+                }
+                c as f64 / (hi_w - lo_w) as f64
+            };
+            if distinct < 0.5 {
+                penalty += 0.3 * (0.5 - distinct) * 2.0;
+            }
+            out.push((0.65 * prof + 0.35 * prop - penalty).clamp(0.0, 1.0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msa::simulate::generate_family;
+    use crate::tokenizer::{encode, AA_OFFSET};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (PlddtScorer, Vec<u8>, usize) {
+        let (_prof, msa) = generate_family("T", 80, 60, 9);
+        let wt = encode(&msa.wild_type);
+        let n = wt.len();
+        (PlddtScorer::from_msa(&msa), wt, n)
+    }
+
+    #[test]
+    fn wild_type_scores_high() {
+        let (sc, wt, _) = setup();
+        let s = sc.score(&wt);
+        assert!(s > 0.6, "wild-type proxy pLDDT {s}");
+    }
+
+    #[test]
+    fn random_scores_lower_than_wt() {
+        let (sc, wt, n) = setup();
+        let mut rng = Pcg64::new(4);
+        let mut rand_scores = Vec::new();
+        for _ in 0..10 {
+            let r: Vec<u8> = (0..n).map(|_| AA_OFFSET + rng.below(20) as u8).collect();
+            rand_scores.push(sc.score(&r));
+        }
+        let rand_mean = rand_scores.iter().sum::<f64>() / 10.0;
+        assert!(sc.score(&wt) > rand_mean + 0.1, "wt {} rand {rand_mean}", sc.score(&wt));
+    }
+
+    #[test]
+    fn homopolymer_penalized() {
+        let (sc, _wt, n) = setup();
+        let poly: Vec<u8> = vec![AA_OFFSET; n]; // poly-alanine
+        let mut rng = Pcg64::new(5);
+        let rand: Vec<u8> = (0..n).map(|_| AA_OFFSET + rng.below(20) as u8).collect();
+        assert!(sc.score(&poly) < sc.score(&rand), "repeats must rank below diverse junk");
+    }
+
+    #[test]
+    fn truncation_penalized() {
+        let (sc, wt, n) = setup();
+        let half = sc.score(&wt[..n / 2]);
+        let full = sc.score(&wt);
+        assert!(half < full, "half {half} full {full}");
+    }
+
+    #[test]
+    fn scores_bounded() {
+        let (sc, wt, _) = setup();
+        for len in [1usize, 5, 40, 80] {
+            let s = sc.score(&wt[..len.min(wt.len())]);
+            assert!((0.0..=1.0).contains(&s));
+        }
+        assert_eq!(sc.score(&[]), 0.0);
+    }
+
+    #[test]
+    fn homolog_beats_shuffled_homolog() {
+        let (_p, msa) = generate_family("T", 80, 60, 19);
+        let sc = PlddtScorer::from_msa(&msa);
+        let mut rng = Pcg64::new(77);
+        let mut wins = 0;
+        let rows: Vec<_> = msa.tokenized_rows().into_iter().filter(|r| r.len() == 80).take(10).collect();
+        for row in &rows {
+            let mut shuf = row.clone();
+            rng.shuffle(&mut shuf);
+            if sc.score(row) > sc.score(&shuf) {
+                wins += 1;
+            }
+        }
+        assert!(wins * 10 >= rows.len() * 8, "homolog should usually beat its shuffle");
+    }
+}

@@ -1,0 +1,247 @@
+//! Regeneration of the paper's figures as data series (CSV + ASCII
+//! histograms): Fig. 1c, Fig. 2a/2b, Fig. 3 and the per-protein sweep
+//! figures 4–27.
+
+use anyhow::Result;
+
+use super::runner::{run_cell, ExpOpts, Sink};
+use crate::config::Method;
+use crate::coordinator::GenEngine;
+use crate::decode::GenConfig;
+use crate::eval::Pca;
+use crate::kmer::KmerSet;
+use crate::theory;
+use crate::util::stats;
+
+fn cfg(gamma: usize, temp: f32, kset: KmerSet, c: usize) -> GenConfig {
+    GenConfig { gamma, c, temp, kset, top_p: 0.95, max_len: 10_000, ..Default::default() }
+}
+
+fn ascii_hist(sink: &mut Sink, label: &str, xs: &[f64], lo: f64, hi: f64, bins: usize) {
+    let h = stats::histogram(xs, lo, hi, bins);
+    let max = *h.iter().max().unwrap_or(&1) as f64;
+    sink.line(&format!("\n{label}  (n={}, range [{lo:.2},{hi:.2}])", xs.len()));
+    for (i, &c) in h.iter().enumerate() {
+        let x0 = lo + (hi - lo) * i as f64 / bins as f64;
+        let bar = "#".repeat(((c as f64 / max.max(1.0)) * 40.0).round() as usize);
+        sink.line(&format!("  {x0:6.2} | {bar} {c}"));
+    }
+}
+
+/// Fig. 1c: likelihood distribution of generated sequences — target-only
+/// vs speculative (c=1) vs SpecMER (c=3,5).
+pub fn fig1c(engine: &dyn GenEngine, opts: &ExpOpts) -> Result<()> {
+    let mut sink = Sink::new(&opts.out_dir, "fig1c", "Fig 1c: likelihood distributions");
+    let protein = pick_protein(engine, opts, &["ParD3", "SynA"]);
+    let kset = KmerSet::new(true, true, true);
+    sink.csv_row(&["method,seq_idx,nll".into()]);
+    let mut all: Vec<(String, Vec<f64>)> = Vec::new();
+    for (label, method, c) in [
+        ("target", Method::TargetOnly, 1usize),
+        ("specdec_c1", Method::Speculative, 1),
+        ("specmer_c3", Method::SpecMer, 3),
+        ("specmer_c5", Method::SpecMer, 5),
+    ] {
+        let cell = run_cell(engine, &protein, method, &cfg(5, 1.0, kset, c), opts.n_seqs, opts.seed)?;
+        for (i, &nll) in cell.nlls.iter().enumerate() {
+            sink.csv_row(&[format!("{label},{i},{nll}")]);
+        }
+        all.push((label.to_string(), cell.nlls));
+    }
+    let lo = all.iter().flat_map(|(_, v)| v).cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().flat_map(|(_, v)| v).cloned().fold(f64::NEG_INFINITY, f64::max);
+    for (label, nlls) in &all {
+        ascii_hist(&mut sink, label, nlls, lo, hi, 12);
+        sink.line(&format!("  mean NLL = {:.3}", stats::mean(nlls)));
+    }
+    sink.finish()
+}
+
+/// Fig. 2a (and Figs 8/13/18/23): PCA of embeddings — MSA vs generated
+/// sequences per c, shaded by likelihood (CSV columns: set, pc1, pc2, nll).
+pub fn fig2a(engine: &dyn GenEngine, opts: &ExpOpts) -> Result<()> {
+    let mut sink = Sink::new(&opts.out_dir, "fig2a", "Fig 2a: embedding PCA (MSA vs generated)");
+    let protein = pick_protein(engine, opts, &["RBP1", "SynA"]);
+    let fam = engine.family(&protein)?;
+    let kset = KmerSet::new(true, true, true);
+
+    // MSA embeddings (subsample)
+    let rows = fam.msa.tokenized_rows();
+    let take = rows.len().min(opts.n_seqs.max(30));
+    let mut embs: Vec<Vec<f32>> = Vec::new();
+    let mut tags: Vec<(String, f64)> = Vec::new();
+    for row in rows.iter().take(take) {
+        let mut toks = vec![crate::tokenizer::BOS];
+        toks.extend(row.iter());
+        toks.truncate(engine.families()[0].meta.length.min(190));
+        embs.push(engine.embed(&toks)?);
+        tags.push(("msa".into(), engine.score_nll(&toks)?));
+    }
+    for &c in &[1usize, 5] {
+        let method = if c == 1 { Method::Speculative } else { Method::SpecMer };
+        let cell = run_cell(engine, &protein, method, &cfg(5, 1.0, kset, c), opts.n_seqs, opts.seed)?;
+        for (o, &nll) in cell.outputs.iter().zip(&cell.nlls) {
+            embs.push(engine.embed(&o.tokens)?);
+            tags.push((format!("c{c}"), nll));
+        }
+    }
+    let pca = Pca::fit(&embs, 2);
+    sink.line(&format!(
+        "protein={protein}; PCA explained variance: {:.2} / {:.2}",
+        pca.explained[0], pca.explained.get(1).copied().unwrap_or(0.0)
+    ));
+    sink.csv_row(&["set,pc1,pc2,nll".into()]);
+    // centroid distances: SpecMER should sit closer to the MSA centroid
+    let mut centroids: std::collections::BTreeMap<String, (f64, f64, usize)> = Default::default();
+    for (e, (tag, nll)) in embs.iter().zip(&tags) {
+        let p = pca.transform(e);
+        sink.csv_row(&[format!("{tag},{},{},{nll}", p[0], p[1])]);
+        let ent = centroids.entry(tag.clone()).or_insert((0.0, 0.0, 0));
+        ent.0 += p[0];
+        ent.1 += p[1];
+        ent.2 += 1;
+    }
+    let get = |k: &str| {
+        centroids
+            .get(k)
+            .map(|(x, y, n)| (x / *n as f64, y / *n as f64))
+            .unwrap_or((0.0, 0.0))
+    };
+    let msa_c = get("msa");
+    for k in ["c1", "c5"] {
+        let p = get(k);
+        let d = ((p.0 - msa_c.0).powi(2) + (p.1 - msa_c.1).powi(2)).sqrt();
+        sink.line(&format!("centroid distance to MSA [{k}]: {d:.3}"));
+    }
+    sink.finish()
+}
+
+/// Fig. 2b: pLDDT-proxy distributions per c (RBP1 in the paper).
+pub fn fig2b(engine: &dyn GenEngine, opts: &ExpOpts) -> Result<()> {
+    let mut sink = Sink::new(&opts.out_dir, "fig2b", "Fig 2b: pLDDT-proxy distribution per c");
+    let protein = pick_protein(engine, opts, &["RBP1", "SynA"]);
+    let scorer = engine.family(&protein)?.plddt_scorer();
+    let kset = KmerSet::new(true, true, true);
+    sink.csv_row(&["c,seq_idx,plddt".into()]);
+    for &c in &[1usize, 2, 3, 5] {
+        let method = if c == 1 { Method::Speculative } else { Method::SpecMer };
+        let cell = run_cell(engine, &protein, method, &cfg(5, 1.0, kset, c), opts.n_seqs, opts.seed)?;
+        let scores: Vec<f64> = cell.residue_seqs().iter().map(|s| scorer.score(s)).collect();
+        for (i, &s) in scores.iter().enumerate() {
+            sink.csv_row(&[format!("{c},{i},{s}")]);
+        }
+        ascii_hist(&mut sink, &format!("c={c}"), &scores, 0.0, 1.0, 10);
+        sink.line(&format!("  mean = {:.3}", stats::mean(&scores)));
+    }
+    sink.finish()
+}
+
+/// Fig. 3: trade-off between candidates c, tokens/sec, NLL and misranking ε.
+pub fn fig3(engine: &dyn GenEngine, opts: &ExpOpts) -> Result<()> {
+    let mut sink = Sink::new(&opts.out_dir, "fig3", "Fig 3: c vs toks/sec, NLL, misranking ε");
+    let protein = pick_protein(engine, opts, &["ParD3", "SynA"]);
+    let kset = KmerSet::new(true, true, true);
+    sink.line("| c | toks/sec | mean NLL | accept α | ε (probe) | ε (Prop 4.4) |");
+    sink.line("|---|---|---|---|---|---|");
+    sink.csv_row(&["c,toks_per_sec,nll,alpha,eps_probe,eps_prop44".into()]);
+    let mut alpha1 = 0.0;
+    for &c in &[1usize, 2, 3, 5] {
+        let method = if c == 1 { Method::Speculative } else { Method::SpecMer };
+        let mut g = cfg(5, 1.0, kset, c);
+        g.probe_rate = if c > 1 { 0.25 } else { 0.0 };
+        let cell = run_cell(engine, &protein, method, &g, opts.n_seqs, opts.seed)?;
+        let alpha = cell.mean_accept();
+        if c == 1 {
+            alpha1 = alpha;
+        }
+        // probe-based ε: P(E ∧ ¬A*)
+        let probes: Vec<(bool, bool)> =
+            cell.outputs.iter().flat_map(|o| o.probes.clone()).collect();
+        let eps_probe = if probes.is_empty() {
+            0.0
+        } else {
+            probes.iter().filter(|(e, a)| *e && !*a).count() as f64 / probes.len() as f64
+        };
+        let eps_p44 = theory::epsilon_from_acceptance(alpha1, c, alpha).max(0.0);
+        sink.line(&format!(
+            "| {c} | {:.2} | {:.3} | {alpha:.3} | {eps_probe:.3} | {eps_p44:.3} |",
+            cell.toks_per_sec(),
+            cell.mean_nll()
+        ));
+        sink.csv_row(&[format!(
+            "{c},{},{},{alpha},{eps_probe},{eps_p44}",
+            cell.toks_per_sec(),
+            cell.mean_nll()
+        )]);
+    }
+    sink.finish()
+}
+
+/// Figures 4–27: per-protein sweep slices — NLL vs k, vs c, vs T, plus the
+/// generated-vs-MSA likelihood distributions.
+pub fn figs_sweep(engine: &dyn GenEngine, opts: &ExpOpts) -> Result<()> {
+    let mut sink = Sink::new(&opts.out_dir, "figs_sweep", "Figs 4-27: sweep slices per protein");
+    sink.csv_row(&["protein,axis,value,nll_mean,nll_std".into()]);
+    for protein in opts.protein_list(engine) {
+        sink.line(&format!("\n## {protein}"));
+        // NLL vs k (Figs 4, 9, 14, 19, 24)
+        sink.line("| k | mean NLL |");
+        sink.line("|---|---|");
+        for kset in KmerSet::SWEEP {
+            let cell = run_cell(engine, &protein, Method::SpecMer, &cfg(5, 1.0, kset, 5), opts.n_seqs, opts.seed)?;
+            sink.line(&format!("| {} | {:.3} |", kset.label(), cell.mean_nll()));
+            sink.csv_row(&[format!(
+                "{protein},k,\"{}\",{},{}",
+                kset.label(),
+                cell.mean_nll(),
+                stats::std(&cell.nlls)
+            )]);
+        }
+        // NLL vs c (Figs 5, 10, 15, 20, 25)
+        sink.line("| c | mean NLL |");
+        sink.line("|---|---|");
+        for &c in &[1usize, 2, 3, 5] {
+            let method = if c == 1 { Method::Speculative } else { Method::SpecMer };
+            let cell = run_cell(engine, &protein, method, &cfg(5, 1.0, KmerSet::new(true, true, true), c), opts.n_seqs, opts.seed)?;
+            sink.line(&format!("| {c} | {:.3} |", cell.mean_nll()));
+            sink.csv_row(&[format!("{protein},c,{c},{},{}", cell.mean_nll(), stats::std(&cell.nlls))]);
+        }
+        // NLL vs T (Figs 6, 11, 16, 21, 26)
+        sink.line("| T | mean NLL |");
+        sink.line("|---|---|");
+        for &t in &[0.7f32, 1.0, 1.4] {
+            let cell = run_cell(engine, &protein, Method::SpecMer, &cfg(5, t, KmerSet::new(true, true, true), 5), opts.n_seqs, opts.seed)?;
+            sink.line(&format!("| {t} | {:.3} |", cell.mean_nll()));
+            sink.csv_row(&[format!("{protein},T,{t},{},{}", cell.mean_nll(), stats::std(&cell.nlls))]);
+        }
+        // generated vs MSA likelihood distribution (Figs 7, 12, 17, 22, 27)
+        let fam = engine.family(&protein)?;
+        let mut msa_nlls = Vec::new();
+        for row in fam.msa.tokenized_rows().iter().take(opts.n_seqs) {
+            let mut toks = vec![crate::tokenizer::BOS];
+            toks.extend(row.iter());
+            toks.truncate(190);
+            msa_nlls.push(engine.score_nll(&toks)?);
+        }
+        let cell = run_cell(engine, &protein, Method::SpecMer, &cfg(5, 1.0, KmerSet::new(true, true, true), 5), opts.n_seqs, opts.seed)?;
+        ascii_hist(&mut sink, &format!("{protein} MSA NLL"), &msa_nlls, 0.0, 4.0, 10);
+        ascii_hist(&mut sink, &format!("{protein} SpecMER NLL"), &cell.nlls, 0.0, 4.0, 10);
+        for &v in &msa_nlls {
+            sink.csv_row(&[format!("{protein},msa_nll,{v},,")]);
+        }
+        for &v in &cell.nlls {
+            sink.csv_row(&[format!("{protein},gen_nll,{v},,")]);
+        }
+    }
+    sink.finish()
+}
+
+fn pick_protein(engine: &dyn GenEngine, opts: &ExpOpts, prefs: &[&str]) -> String {
+    let avail = opts.protein_list(engine);
+    for p in prefs {
+        if avail.contains(&p.to_string()) {
+            return p.to_string();
+        }
+    }
+    avail.first().cloned().unwrap_or_default()
+}

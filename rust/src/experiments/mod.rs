@@ -1,0 +1,124 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §6 maps ids to functions). Invoked by `specmer exp <id>` and
+//! the cargo bench targets.
+
+pub mod figures;
+pub mod runner;
+pub mod tables;
+
+pub use runner::{ExpOpts, Sink};
+
+use anyhow::Result;
+
+use crate::coordinator::GenEngine;
+
+/// All experiment ids in run order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+    "table8", "table9", "fig1c", "fig2a", "fig2b", "fig3", "figs_sweep",
+    "bounds",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, engine: &mut Box<dyn GenEngine>, opts: &ExpOpts) -> Result<()> {
+    eprintln!("[exp] running {id} (n={}, full={})", opts.n_seqs, opts.full);
+    let t0 = std::time::Instant::now();
+    match id {
+        "table1" => tables::table1(engine.as_ref(), opts)?,
+        "table2" => tables::table2(engine.as_ref(), opts)?,
+        "table3" | "table10" => tables::table3_10(engine.as_ref(), opts)?,
+        "table4" => tables::table4(engine.as_ref(), opts)?,
+        "table5" => tables::table5(engine.as_ref(), opts)?,
+        "table6" => tables::table6(engine.as_ref(), opts)?,
+        "table7" => tables::table7(engine.as_ref(), opts)?,
+        "table8" | "msadepth" => tables::table8(engine, opts)?,
+        "table9" => tables::table9(engine.as_ref(), opts)?,
+        "fig1c" => figures::fig1c(engine.as_ref(), opts)?,
+        "fig2a" => figures::fig2a(engine.as_ref(), opts)?,
+        "fig2b" => figures::fig2b(engine.as_ref(), opts)?,
+        "fig3" => figures::fig3(engine.as_ref(), opts)?,
+        "figs_sweep" => figures::figs_sweep(engine.as_ref(), opts)?,
+        "bounds" => tables::bounds(engine.as_ref(), opts)?,
+        "all" => {
+            for id in ALL {
+                run(id, engine, opts)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (known: {ALL:?} or 'all')"),
+    }
+    eprintln!("[exp] {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Entry point shared by the `cargo bench` targets (rust/benches/*.rs,
+/// `harness = false`): runs the given experiments against the artifacts
+/// engine (or the synthetic fallback), honoring SPECMER_BENCH_N /
+/// SPECMER_BENCH_FULL / SPECMER_BENCH_PROTEINS env overrides.
+pub fn bench_main(ids: &[&str]) {
+    let n = std::env::var("SPECMER_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let full = std::env::var("SPECMER_BENCH_FULL").is_ok();
+    let proteins: Vec<String> = std::env::var("SPECMER_BENCH_PROTEINS")
+        .map(|p| p.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
+    let (mut engine, real) = crate::coordinator::engine_for_bench();
+    let opts = ExpOpts {
+        n_seqs: n,
+        proteins,
+        full,
+        out_dir: if std::path::Path::new("results").exists()
+            || std::path::Path::new("rust").exists()
+        {
+            "results".into()
+        } else {
+            "../results".into()
+        },
+        seed: 42,
+    };
+    eprintln!(
+        "[bench] engine={} n={} full={}",
+        if real { "artifacts" } else { "synthetic" },
+        opts.n_seqs,
+        opts.full
+    );
+    for id in ids {
+        if let Err(e) = run(id, &mut engine, &opts) {
+            eprintln!("[bench] {id} FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::synthetic_engine;
+
+    fn opts() -> ExpOpts {
+        ExpOpts {
+            n_seqs: 3,
+            out_dir: std::env::temp_dir().join(format!("specmer_exp_{}", std::process::id())),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_experiment_runs_on_synthetic_engine() {
+        let mut engine: Box<dyn GenEngine> = Box::new(synthetic_engine(3));
+        let o = opts();
+        for id in ALL {
+            run(id, &mut engine, &o).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        }
+        // spot-check artifacts were written
+        assert!(o.out_dir.join("table2.md").exists());
+        assert!(o.out_dir.join("fig3.csv").exists());
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        let mut engine: Box<dyn GenEngine> = Box::new(synthetic_engine(3));
+        assert!(run("table99", &mut engine, &opts()).is_err());
+    }
+}

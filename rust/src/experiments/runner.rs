@@ -1,0 +1,239 @@
+//! Shared experiment plumbing: run a (protein, method, config) cell,
+//! collect sequences + metrics, and write results as markdown/CSV.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Method;
+use crate::coordinator::GenEngine;
+use crate::decode::{GenConfig, GenOutput};
+use crate::kmer::KmerSet;
+use crate::util::stats;
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Sequences per configuration cell (paper: 200; default reduced).
+    pub n_seqs: usize,
+    /// Restrict to these proteins (empty = all).
+    pub proteins: Vec<String>,
+    /// Full paper-sized hyperparameter grid instead of the reduced one.
+    pub full: bool,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> ExpOpts {
+        ExpOpts {
+            n_seqs: 20,
+            proteins: vec![],
+            full: false,
+            out_dir: PathBuf::from("results"),
+            seed: 42,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn protein_list(&self, engine: &dyn GenEngine) -> Vec<String> {
+        let all: Vec<String> = engine.families().iter().map(|f| f.meta.name.clone()).collect();
+        if self.proteins.is_empty() {
+            all
+        } else {
+            all.into_iter().filter(|p| self.proteins.contains(p)).collect()
+        }
+    }
+
+    /// Hyperparameter grid (paper App. B.3; reduced by default for the
+    /// single-core testbed — the full grid is 36 cells per protein/method).
+    pub fn grid(&self) -> Vec<(usize, f32, KmerSet)> {
+        let gammas: &[usize] = if self.full { &[5, 10, 15] } else { &[5, 10] };
+        let temps: &[f32] = if self.full { &[0.7, 1.0, 1.4] } else { &[0.7, 1.0] };
+        let ksets: Vec<KmerSet> = if self.full {
+            KmerSet::SWEEP.to_vec()
+        } else {
+            vec![KmerSet::new(true, true, false), KmerSet::new(true, true, true)]
+        };
+        let mut out = Vec::new();
+        for &g in gammas {
+            for &t in temps {
+                for &k in &ksets {
+                    out.push((g, t, k));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Everything measured for one configuration cell.
+pub struct CellStats {
+    pub outputs: Vec<GenOutput>,
+    /// Post-hoc length-normalized NLL under the target model per sequence.
+    pub nlls: Vec<f64>,
+    pub accepts: Vec<f64>,
+    pub decode_seconds: f64,
+    pub tokens: usize,
+}
+
+impl CellStats {
+    pub fn toks_per_sec(&self) -> f64 {
+        if self.decode_seconds == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.decode_seconds
+        }
+    }
+    pub fn mean_accept(&self) -> f64 {
+        stats::mean(&self.accepts)
+    }
+    pub fn mean_nll(&self) -> f64 {
+        stats::mean(&self.nlls)
+    }
+    /// Residue sequences (specials stripped) for diversity/pLDDT analysis.
+    pub fn residue_seqs(&self) -> Vec<Vec<u8>> {
+        self.outputs
+            .iter()
+            .map(|o| {
+                o.tokens
+                    .iter()
+                    .copied()
+                    .filter(|&t| crate::tokenizer::is_residue(t))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Generate `n` sequences for one cell and score them.
+pub fn run_cell(
+    engine: &dyn GenEngine,
+    protein: &str,
+    method: Method,
+    cfg: &GenConfig,
+    n: usize,
+    base_seed: u64,
+) -> Result<CellStats> {
+    let mut outputs = Vec::with_capacity(n);
+    let mut accepts = Vec::with_capacity(n);
+    let mut decode_seconds = 0.0;
+    let mut tokens = 0usize;
+    // warmup: first use of a (c, gamma) program pair compiles it (~1s);
+    // keep that out of the timed region so toks/sec reflects steady state.
+    {
+        let mut w = cfg.clone();
+        w.seed = base_seed ^ 0xDEAD_BEEF;
+        w.max_len = w.max_len.min(40);
+        let _ = engine.generate(protein, method, &w)?;
+    }
+    for i in 0..n {
+        let mut c = cfg.clone();
+        c.seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(i as u64);
+        let t0 = Instant::now();
+        let out = engine.generate(protein, method, &c)?;
+        decode_seconds += t0.elapsed().as_secs_f64();
+        tokens += out.new_tokens();
+        if method != Method::TargetOnly {
+            accepts.push(out.acceptance_ratio());
+        }
+        outputs.push(out);
+    }
+    let nlls = outputs
+        .iter()
+        .map(|o| engine.score_nll(&o.tokens))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CellStats { outputs, nlls, accepts, decode_seconds, tokens })
+}
+
+/// Markdown + CSV sink under `results/`.
+pub struct Sink {
+    pub name: String,
+    md: String,
+    csv: String,
+    out_dir: PathBuf,
+}
+
+impl Sink {
+    pub fn new(out_dir: &PathBuf, name: &str, title: &str) -> Sink {
+        let mut md = String::new();
+        let _ = writeln!(md, "# {title}\n");
+        Sink { name: name.to_string(), md, csv: String::new(), out_dir: out_dir.clone() }
+    }
+
+    pub fn line(&mut self, s: &str) {
+        println!("{s}");
+        self.md.push_str(s);
+        self.md.push('\n');
+    }
+
+    pub fn csv_row(&mut self, fields: &[String]) {
+        self.csv.push_str(&fields.join(","));
+        self.csv.push('\n');
+    }
+
+    pub fn finish(self) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        std::fs::write(self.out_dir.join(format!("{}.md", self.name)), &self.md)?;
+        if !self.csv.is_empty() {
+            std::fs::write(self.out_dir.join(format!("{}.csv", self.name)), &self.csv)?;
+        }
+        Ok(())
+    }
+}
+
+/// `a ± b` with fixed precision (paper table style).
+pub fn pm(mean: f64, std: f64, prec: usize) -> String {
+    format!("{mean:.p$} ± {std:.p$}", p = prec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::synthetic_engine;
+
+    #[test]
+    fn run_cell_collects_everything() {
+        let eng = synthetic_engine(3);
+        let cfg = GenConfig { max_len: 24, gamma: 5, c: 2, ..Default::default() };
+        let cell = run_cell(&eng, "SynA", Method::SpecMer, &cfg, 3, 1).unwrap();
+        assert_eq!(cell.outputs.len(), 3);
+        assert_eq!(cell.nlls.len(), 3);
+        assert_eq!(cell.accepts.len(), 3);
+        assert!(cell.tokens > 0);
+        assert!(cell.toks_per_sec() > 0.0);
+        assert!(cell.nlls.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn seeds_vary_across_cell() {
+        let eng = synthetic_engine(3);
+        let cfg = GenConfig { max_len: 24, gamma: 5, c: 1, ..Default::default() };
+        let cell = run_cell(&eng, "SynA", Method::Speculative, &cfg, 4, 7).unwrap();
+        let distinct: std::collections::HashSet<_> =
+            cell.outputs.iter().map(|o| o.tokens.clone()).collect();
+        assert!(distinct.len() > 1, "different seeds should give different seqs");
+    }
+
+    #[test]
+    fn grid_sizes() {
+        let mut o = ExpOpts::default();
+        assert_eq!(o.grid().len(), 8);
+        o.full = true;
+        assert_eq!(o.grid().len(), 36);
+    }
+
+    #[test]
+    fn sink_writes_files() {
+        let dir = std::env::temp_dir().join(format!("specmer_sink_{}", std::process::id()));
+        let mut s = Sink::new(&dir, "test_table", "Test");
+        s.line("| a | b |");
+        s.csv_row(&["1".into(), "2".into()]);
+        s.finish().unwrap();
+        assert!(dir.join("test_table.md").exists());
+        assert!(dir.join("test_table.csv").exists());
+    }
+}

@@ -1,0 +1,8 @@
+//! K-mer statistics: table construction from MSAs and candidate scoring
+//! (the paper's §3.2, Eq. 2).
+
+pub mod score;
+pub mod table;
+
+pub use score::{score_block, score_block_with_context, select_best, KmerSet};
+pub use table::KmerTable;

@@ -1,0 +1,225 @@
+//! Candidate scoring — Eq. 2 of the paper.
+//!
+//!   Score(s) = (1/L) Σ_{k∈K} Σ_{i=0}^{L-k} P_k( s[i:i+k] )
+//!
+//! Additive (not multiplicative) so unseen k-mers don't zero the score and
+//! partially-formed motifs still earn credit (paper §3.2). The hot-path
+//! implementation lives here in Rust (a table lookup per window — the
+//! paper's "near-zero cost"); `kmer_score_c8_g*.hlo.txt` carries the same
+//! computation as a Pallas kernel for TPU deployments, checked equal in
+//! tests.
+
+use super::table::KmerTable;
+
+/// Which k values are active (paper sweeps {1}, {3}, {1,3}, {1,3,5}).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KmerSet {
+    pub k1: bool,
+    pub k3: bool,
+    pub k5: bool,
+}
+
+impl KmerSet {
+    pub const fn new(k1: bool, k3: bool, k5: bool) -> KmerSet {
+        KmerSet { k1, k3, k5 }
+    }
+
+    /// Parse "1,3,5"-style strings.
+    pub fn parse(s: &str) -> Option<KmerSet> {
+        let mut set = KmerSet::new(false, false, false);
+        for part in s.split(',') {
+            match part.trim() {
+                "1" => set.k1 = true,
+                "3" => set.k3 = true,
+                "5" => set.k5 = true,
+                "" => {}
+                _ => return None,
+            }
+        }
+        if set.k1 || set.k3 || set.k5 {
+            Some(set)
+        } else {
+            None
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.k1 {
+            parts.push("1");
+        }
+        if self.k3 {
+            parts.push("3");
+        }
+        if self.k5 {
+            parts.push("5");
+        }
+        parts.join(",")
+    }
+
+    /// The paper's four swept configurations.
+    pub const SWEEP: [KmerSet; 4] = [
+        KmerSet::new(true, false, false),
+        KmerSet::new(false, true, false),
+        KmerSet::new(true, true, false),
+        KmerSet::new(true, true, true),
+    ];
+}
+
+/// Score one candidate block (paper-faithful: windows within the block).
+pub fn score_block(table: &KmerTable, block: &[u8], ks: KmerSet) -> f32 {
+    if block.is_empty() {
+        return 0.0;
+    }
+    let mut s = 0.0f32;
+    if ks.k1 {
+        for &t in block {
+            s += table.p1[t as usize];
+        }
+    }
+    if ks.k3 && block.len() >= 3 {
+        for w in block.windows(3) {
+            s += table.p3[super::table::idx3(w)];
+        }
+    }
+    if ks.k5 && block.len() >= 5 {
+        for w in block.windows(5) {
+            s += table.p5[super::table::hash5(w.try_into().unwrap())];
+        }
+    }
+    s / block.len() as f32
+}
+
+/// Extension: also count windows spanning the context/block boundary by
+/// prepending the last (k_max - 1) context tokens. Off by default
+/// (`Config::kmer_context_boundary`); exercised by the ablation bench.
+pub fn score_block_with_context(
+    table: &KmerTable,
+    context_tail: &[u8],
+    block: &[u8],
+    ks: KmerSet,
+) -> f32 {
+    if block.is_empty() {
+        return 0.0;
+    }
+    let kmax = if ks.k5 { 5 } else if ks.k3 { 3 } else { 1 };
+    let tail_n = (kmax - 1).min(context_tail.len());
+    let mut ext = Vec::with_capacity(tail_n + block.len());
+    ext.extend_from_slice(&context_tail[context_tail.len() - tail_n..]);
+    ext.extend_from_slice(block);
+    let mut s = 0.0f32;
+    if ks.k1 {
+        for &t in block {
+            s += table.p1[t as usize];
+        }
+    }
+    if ks.k3 && ext.len() >= 3 {
+        for w in ext.windows(3) {
+            s += table.p3[super::table::idx3(w)];
+        }
+    }
+    if ks.k5 && ext.len() >= 5 {
+        for w in ext.windows(5) {
+            s += table.p5[super::table::hash5(w.try_into().unwrap())];
+        }
+    }
+    s / block.len() as f32
+}
+
+/// Index of the best-scoring candidate (ties → lowest index, so c=1
+/// degenerates to vanilla speculative decoding exactly).
+pub fn select_best(table: &KmerTable, candidates: &[Vec<u8>], ks: KmerSet) -> usize {
+    let mut best = 0usize;
+    let mut best_s = f32::NEG_INFINITY;
+    for (i, c) in candidates.iter().enumerate() {
+        let s = score_block(table, c, ks);
+        if s > best_s {
+            best_s = s;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmer::table::KmerTable;
+    use crate::msa::Msa;
+    use crate::tokenizer::encode;
+    use crate::util::proptest::check;
+
+    fn table() -> KmerTable {
+        KmerTable::build(&Msa {
+            name: "t".into(),
+            wild_type: "ACDEFG".into(),
+            rows: vec!["ACDEFG".into(); 10],
+        })
+    }
+
+    #[test]
+    fn motif_block_beats_random() {
+        let t = table();
+        let ks = KmerSet::new(true, true, true);
+        let motif = score_block(&t, &encode("ACDEF"), ks);
+        let junk = score_block(&t, &encode("WWYYW"), ks);
+        assert!(motif > junk, "{motif} vs {junk}");
+    }
+
+    #[test]
+    fn kset_parse_and_label() {
+        let ks = KmerSet::parse("1,3,5").unwrap();
+        assert_eq!(ks, KmerSet::new(true, true, true));
+        assert_eq!(ks.label(), "1,3,5");
+        assert_eq!(KmerSet::parse("3").unwrap(), KmerSet::new(false, true, false));
+        assert!(KmerSet::parse("2").is_none());
+        assert!(KmerSet::parse("").is_none());
+    }
+
+    #[test]
+    fn select_best_prefers_motif() {
+        let t = table();
+        let cands = vec![encode("WWYYW"), encode("ACDEF"), encode("KLKLK")];
+        assert_eq!(select_best(&t, &cands, KmerSet::new(true, true, true)), 1);
+    }
+
+    #[test]
+    fn empty_block_scores_zero() {
+        let t = table();
+        assert_eq!(score_block(&t, &[], KmerSet::new(true, true, true)), 0.0);
+    }
+
+    #[test]
+    fn context_boundary_adds_windows() {
+        let t = table();
+        let ks = KmerSet::new(false, true, false);
+        // block "EF" alone has no 3-mer windows; with context tail "CD" the
+        // windows CDE and DEF appear.
+        let plain = score_block(&t, &encode("EF"), ks);
+        let ctx = score_block_with_context(&t, &encode("ACD"), &encode("EF"), ks);
+        assert_eq!(plain, 0.0);
+        assert!(ctx > 0.0);
+    }
+
+    #[test]
+    fn prop_score_bounded() {
+        // additive score of L windows each <= 1, normalized by L => <= kmax
+        check("score within [0, 3]", 50, |g| {
+            let seed = g.u64();
+            let (_p, msa) = crate::msa::simulate::generate_family("T", 30, 6, seed);
+            let t = KmerTable::build(&msa);
+            let block: Vec<u8> = (0..g.usize_in(1..16))
+                .map(|_| 3 + g.rng().below(20) as u8)
+                .collect();
+            let s = score_block(&t, &block, KmerSet::new(true, true, true));
+            assert!((0.0..=3.0).contains(&s), "score {s}");
+        });
+    }
+
+    #[test]
+    fn ties_resolve_to_first() {
+        let t = table();
+        let cands = vec![encode("ACDEF"), encode("ACDEF")];
+        assert_eq!(select_best(&t, &cands, KmerSet::new(true, true, true)), 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! K-mer frequency tables built from an MSA (paper §3.2, App. E).
+//!
+//! K-mers are extracted with a sliding window over the *ungapped* rows of
+//! the alignment (gap characters are ignored, App. E), counted, and
+//! normalized into a probability distribution per k.  Storage:
+//!
+//!   k=1  dense  [V]        (V = 32 token ids)
+//!   k=3  dense  [V^3]      (32768 f32, 128 KiB)
+//!   k=5  hashed [HSZ=2^18] open-addressing-free: colliding 5-mers simply
+//!        share a slot (probability mass merges). The hash is wrapping-u32
+//!        base-33 + Knuth multiplier and matches
+//!        python/compile/kernels/kmer_score.py bit-for-bit, so the Pallas
+//!        scoring kernel and this module agree exactly.
+//!
+//! The paper caps k at 5 because dense tables grow as V^k; the hashed k=5
+//! table is our TPU-friendly equivalent (1 MiB, VMEM-resident).
+
+use crate::msa::Msa;
+use crate::tokenizer::VOCAB;
+
+pub const HSZ: usize = 1 << 18;
+const HASH_MUL: u32 = 2654435761;
+
+/// Wrapping-u32 hash of a 5-mer of token ids. MUST match kmer_score.py.
+#[inline]
+pub fn hash5(t: &[u8; 5]) -> usize {
+    let mut h: u32 = t[0] as u32;
+    for &x in &t[1..] {
+        h = h.wrapping_mul(33).wrapping_add(x as u32);
+    }
+    (h.wrapping_mul(HASH_MUL) & (HSZ as u32 - 1)) as usize
+}
+
+#[inline]
+pub fn idx3(t: &[u8]) -> usize {
+    ((t[0] as usize) * VOCAB + t[1] as usize) * VOCAB + t[2] as usize
+}
+
+/// Normalized k-mer probability tables for one protein family.
+#[derive(Clone)]
+pub struct KmerTable {
+    pub family: String,
+    /// Total k-mer windows counted per k (diagnostics / tests).
+    pub totals: [u64; 3],
+    pub p1: Vec<f32>,
+    pub p3: Vec<f32>,
+    pub p5: Vec<f32>,
+}
+
+impl KmerTable {
+    /// Count k-mers over the ungapped rows of an MSA and normalize.
+    pub fn build(msa: &Msa) -> KmerTable {
+        Self::build_from_rows(&msa.name, &msa.tokenized_rows())
+    }
+
+    pub fn build_from_rows(family: &str, rows: &[Vec<u8>]) -> KmerTable {
+        let mut c1 = vec![0u64; VOCAB];
+        let mut c3 = vec![0u64; VOCAB * VOCAB * VOCAB];
+        let mut c5 = vec![0u64; HSZ];
+        let mut totals = [0u64; 3];
+        for row in rows {
+            for &t in row {
+                c1[t as usize] += 1;
+                totals[0] += 1;
+            }
+            if row.len() >= 3 {
+                for w in row.windows(3) {
+                    c3[idx3(w)] += 1;
+                    totals[1] += 1;
+                }
+            }
+            if row.len() >= 5 {
+                for w in row.windows(5) {
+                    let arr: &[u8; 5] = w.try_into().unwrap();
+                    c5[hash5(arr)] += 1;
+                    totals[2] += 1;
+                }
+            }
+        }
+        let norm = |c: &[u64], total: u64| -> Vec<f32> {
+            if total == 0 {
+                vec![0.0; c.len()]
+            } else {
+                c.iter().map(|&x| (x as f64 / total as f64) as f32).collect()
+            }
+        };
+        KmerTable {
+            family: family.to_string(),
+            totals,
+            p1: norm(&c1, totals[0]),
+            p3: norm(&c3, totals[1]),
+            p5: norm(&c5, totals[2]),
+        }
+    }
+
+    /// Probability of a single k-mer window (k = w.len() ∈ {1,3,5}).
+    #[inline]
+    pub fn prob(&self, w: &[u8]) -> f32 {
+        match w.len() {
+            1 => self.p1[w[0] as usize],
+            3 => self.p3[idx3(w)],
+            5 => self.p5[hash5(w.try_into().unwrap())],
+            _ => 0.0,
+        }
+    }
+
+    /// Rough memory footprint in bytes (perf accounting).
+    pub fn nbytes(&self) -> usize {
+        4 * (self.p1.len() + self.p3.len() + self.p5.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msa::Msa;
+    use crate::tokenizer::encode;
+    use crate::util::proptest::check;
+
+    fn toy() -> Msa {
+        Msa {
+            name: "toy".into(),
+            wild_type: "ACDEA".into(),
+            rows: vec!["ACDEA".into(), "ACD-A".into(), "ACKEA".into()],
+        }
+    }
+
+    #[test]
+    fn normalized_distributions() {
+        let t = KmerTable::build(&toy());
+        let s1: f64 = t.p1.iter().map(|&x| x as f64).sum();
+        let s3: f64 = t.p3.iter().map(|&x| x as f64).sum();
+        let s5: f64 = t.p5.iter().map(|&x| x as f64).sum();
+        assert!((s1 - 1.0).abs() < 1e-5);
+        assert!((s3 - 1.0).abs() < 1e-5);
+        assert!((s5 - 1.0).abs() < 1e-5, "s5={s5}");
+    }
+
+    #[test]
+    fn gaps_ignored_in_windows() {
+        // "ACD-A" contributes 3-mers of the UNGAPPED string ACDA: ACD, CDA
+        let t = KmerTable::build(&toy());
+        let cda = encode("CDA");
+        assert!(t.prob(&cda) > 0.0);
+    }
+
+    #[test]
+    fn frequent_kmer_scores_higher() {
+        let t = KmerTable::build(&toy());
+        let acd = encode("ACD");
+        let www = encode("WWW");
+        assert!(t.prob(&acd) > t.prob(&www));
+    }
+
+    #[test]
+    fn hash5_matches_reference_values() {
+        // Anchors for the Python contract (test_kmer_kernel.py checks the
+        // same tuples): recompute by hand here.
+        let cases: [[u8; 5]; 3] = [[3, 4, 5, 6, 3], [0, 0, 0, 0, 0], [31, 31, 31, 31, 31]];
+        for c in cases {
+            let mut h: u32 = c[0] as u32;
+            for &x in &c[1..] {
+                h = h.wrapping_mul(33).wrapping_add(x as u32);
+            }
+            let expect = (h.wrapping_mul(2654435761) & (HSZ as u32 - 1)) as usize;
+            assert_eq!(hash5(&c), expect);
+        }
+    }
+
+    #[test]
+    fn prop_tables_are_distributions() {
+        check("kmer tables normalized", 15, |g| {
+            let seed = g.u64();
+            let (_p, msa) = crate::msa::simulate::generate_family("T", 40, 8, seed);
+            let t = KmerTable::build(&msa);
+            for (p, total) in [(&t.p1, t.totals[0]), (&t.p3, t.totals[1]), (&t.p5, t.totals[2])] {
+                if total == 0 {
+                    continue;
+                }
+                let s: f64 = p.iter().map(|&x| x as f64).sum();
+                assert!((s - 1.0).abs() < 1e-4, "sum {s}");
+                assert!(p.iter().all(|&x| x >= 0.0));
+            }
+        });
+    }
+}

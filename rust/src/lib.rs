@@ -1,0 +1,27 @@
+//! # SpecMER — k-mer guided speculative decoding for protein generation
+//!
+//! Reproduction of "SpecMER: Fast Protein Generation with K-mer Guided
+//! Speculative Decoding" (CS.LG 2025) as a three-layer Rust + JAX + Pallas
+//! serving system. See DESIGN.md for the architecture and EXPERIMENTS.md
+//! for paper-vs-measured results.
+//!
+//! Layering:
+//!   * L3 (this crate): request router, dynamic batcher, speculative
+//!     scheduler, k-mer guidance, metrics, HTTP server, experiment harness.
+//!   * L2/L1 (python/compile, build-time only): JAX transformer + Pallas
+//!     kernels, AOT-lowered to HLO text consumed by [`runtime`].
+
+pub mod config;
+pub mod coordinator;
+pub mod decode;
+pub mod eval;
+pub mod experiments;
+pub mod kmer;
+pub mod params;
+pub mod runtime;
+pub mod msa;
+pub mod sampling;
+pub mod server;
+pub mod theory;
+pub mod tokenizer;
+pub mod util;

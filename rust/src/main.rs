@@ -1,0 +1,202 @@
+//! specmer — CLI for the SpecMER serving system.
+//!
+//! Subcommands:
+//!   generate  — generate sequences for a protein, print FASTA
+//!   serve     — start the HTTP inference server
+//!   score     — score a FASTA file's sequences under the target model
+//!   exp       — regenerate a paper table/figure (or `all`)
+//!   families  — list the protein families baked into artifacts
+//!   info      — runtime/platform/artifact diagnostics
+//!
+//! Common flags: --artifacts DIR, --cpu-ref, --gamma N, --c N, --temp F,
+//! --top-p F, --k 1,3,5, --seed N, --n N, --workers N.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use specmer::config::{Config, Method};
+use specmer::coordinator::{build_engine, Metrics, Router, Scheduler};
+use specmer::experiments::{self, ExpOpts};
+use specmer::util::cli::Args;
+
+const USAGE: &str = "usage: specmer <generate|serve|score|exp|families|info> [flags]
+  generate --protein GFP [--method specmer] [--n 5] [--c 3] [--gamma 5]
+           [--temp 1.0] [--top-p 0.95] [--k 1,3] [--seed 0] [--out file.fa]
+  serve    [--port 7878] [--workers 1] [--max-batch 8] [--max-wait-ms 5]
+  score    --fasta file.fa
+  exp      <table1..table10|fig1c|fig2a|fig2b|fig3|figs_sweep|bounds|msadepth|all>
+           [--n 20] [--full] [--proteins GFP,GB1] [--results DIR]
+  families | info
+common:  --artifacts DIR (or $SPECMER_ARTIFACTS)  --cpu-ref";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("quiet") {
+        specmer::util::set_log_level(0);
+    }
+    if args.flag("verbose") {
+        specmer::util::set_log_level(2);
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let cfg = Config::from_args(args)?;
+    match cmd {
+        "generate" => cmd_generate(args, &cfg),
+        "serve" => cmd_serve(args, &cfg),
+        "score" => cmd_score(args, &cfg),
+        "exp" => cmd_exp(args, cfg),
+        "families" => cmd_families(&cfg),
+        "info" => cmd_info(&cfg),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_generate(args: &Args, cfg: &Config) -> Result<()> {
+    let protein = args
+        .get("protein")
+        .ok_or_else(|| anyhow!("--protein required"))?
+        .to_string();
+    let method = Method::parse(&args.str_or("method", "specmer"))
+        .ok_or_else(|| anyhow!("bad --method"))?;
+    let n = args.usize_or("n", 5)?;
+    let engine = build_engine(cfg)?;
+    let mut fasta = String::new();
+    let t0 = std::time::Instant::now();
+    let mut tokens = 0usize;
+    for i in 0..n {
+        let mut g = cfg.gen.clone();
+        g.seed = cfg.gen.seed.wrapping_add(i as u64);
+        let out = engine.generate(&protein, method, &g)?;
+        let nll = engine.score_nll(&out.tokens)?;
+        tokens += out.new_tokens();
+        fasta.push_str(&format!(
+            ">{protein}_{i} method={} accept={:.3} nll={nll:.3}\n{}\n",
+            method.label(),
+            out.acceptance_ratio(),
+            specmer::tokenizer::decode(&out.tokens)
+        ));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &fasta)?;
+            eprintln!("wrote {n} sequences to {path}");
+        }
+        None => print!("{fasta}"),
+    }
+    eprintln!(
+        "[specmer] {n} seqs, {tokens} tokens in {dt:.2}s ({:.1} tok/s)",
+        tokens as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let _ = args;
+    let metrics = Arc::new(Metrics::new());
+    let cfg2 = cfg.clone();
+    let factory: specmer::coordinator::EngineFactory = Arc::new(move || build_engine(&cfg2));
+    let sched = Arc::new(Scheduler::start(
+        cfg.workers,
+        cfg.max_batch,
+        std::time::Duration::from_millis(cfg.max_wait_ms),
+        factory,
+        Arc::clone(&metrics),
+    ));
+    let router = Arc::new(Router::new(sched));
+    let handle = specmer::server::serve(cfg, router, metrics)?;
+    println!(
+        "specmer serving on http://{} ({} workers, artifacts={})",
+        handle.addr,
+        cfg.workers,
+        cfg.artifacts.display()
+    );
+    println!("endpoints: POST /generate, GET /metrics, GET /health — ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_score(args: &Args, cfg: &Config) -> Result<()> {
+    let path = args.get("fasta").ok_or_else(|| anyhow!("--fasta required"))?;
+    let recs = specmer::msa::fasta::read_path(std::path::Path::new(path))?;
+    let engine = build_engine(cfg)?;
+    println!("id\tlength\tnll");
+    for r in recs {
+        let toks = specmer::tokenizer::encode_with_specials(&r.ungapped());
+        let nll = engine.score_nll(&toks)?;
+        println!("{}\t{}\t{nll:.4}", r.id, r.ungapped().len());
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args, cfg: Config) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("exp needs an id, e.g. `specmer exp table2`"))?
+        .clone();
+    let opts = ExpOpts {
+        n_seqs: args.usize_or("n", 20)?,
+        proteins: args
+            .get("proteins")
+            .map(|p| p.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default(),
+        full: args.flag("full"),
+        out_dir: cfg.results_dir.clone(),
+        seed: cfg.gen.seed,
+    };
+    let mut engine = build_engine(&cfg)?;
+    experiments::run(&id, &mut engine, &opts)
+}
+
+fn cmd_families(cfg: &Config) -> Result<()> {
+    let engine = build_engine(cfg)?;
+    println!("protein\tfunction\tlength\tcontext\tmsa_depth");
+    for f in engine.families() {
+        let m = &f.meta;
+        println!(
+            "{}\t{}\t{}\t{}\t{}",
+            m.name, m.function, m.length, m.context, m.msa_depth
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    println!("artifacts: {}", cfg.artifacts.display());
+    let manifest = specmer::params::load_manifest(&cfg.artifacts)?;
+    println!("maxlen: {}  vocab: {}", manifest.maxlen, manifest.vocab);
+    for (name, dims) in &manifest.models {
+        println!(
+            "model {name}: {} layers, d={}, heads={}, ff={}, params={}",
+            dims.n_layer, dims.d_model, dims.n_head, dims.d_ff, dims.n_params
+        );
+    }
+    if !cfg.cpu_ref {
+        let rt = specmer::runtime::Runtime::new(&cfg.artifacts)?;
+        println!("pjrt platform: {}", rt.platform());
+        for prog in ["draft_generate_c3_g5", "target_verify_g5", "target_score"] {
+            println!(
+                "  artifact {prog}: {}",
+                if rt.has_program(prog) { "ok" } else { "MISSING" }
+            );
+        }
+    }
+    Ok(())
+}

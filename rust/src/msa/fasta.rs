@@ -1,0 +1,124 @@
+//! FASTA / A2M parsing and writing.
+//!
+//! A2M is FASTA whose sequences may contain gap characters ('-', '.') and
+//! mixed case; we preserve the raw aligned strings so column statistics can
+//! be computed, and expose ungapped views for tokenization.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub id: String,
+    pub seq: String,
+}
+
+impl Record {
+    /// Aligned sequence with gaps removed (upper-cased).
+    pub fn ungapped(&self) -> String {
+        self.seq
+            .chars()
+            .filter(|&c| c != '-' && c != '.')
+            .map(|c| c.to_ascii_uppercase())
+            .collect()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FastaError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("malformed fasta at line {0}: sequence data before first header")]
+    DataBeforeHeader(usize),
+    #[error("empty fasta file")]
+    Empty,
+}
+
+/// Parse FASTA/A2M text into records.
+pub fn parse(text: &str) -> Result<Vec<Record>, FastaError> {
+    let mut out: Vec<Record> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('>') {
+            out.push(Record { id: hdr.split_whitespace().next().unwrap_or("").to_string(), seq: String::new() });
+        } else {
+            match out.last_mut() {
+                Some(rec) => rec.seq.push_str(line.trim()),
+                None => return Err(FastaError::DataBeforeHeader(lineno + 1)),
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(FastaError::Empty);
+    }
+    Ok(out)
+}
+
+pub fn read_path(path: &Path) -> Result<Vec<Record>, FastaError> {
+    let text = fs::read_to_string(path).map_err(|e| FastaError::Io {
+        path: path.display().to_string(),
+        source: e,
+    })?;
+    parse(&text)
+}
+
+/// Write records as FASTA (60-column wrapped).
+pub fn write_path(path: &Path, records: &[Record]) -> std::io::Result<()> {
+    let mut f = fs::File::create(path)?;
+    for r in records {
+        writeln!(f, ">{}", r.id)?;
+        for chunk in r.seq.as_bytes().chunks(60) {
+            f.write_all(chunk)?;
+            writeln!(f)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let recs = parse(">a desc\nACDE\nFGH\n>b\nKL-M\n").unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].id, "a");
+        assert_eq!(recs[0].seq, "ACDEFGH");
+        assert_eq!(recs[1].ungapped(), "KLM");
+    }
+
+    #[test]
+    fn rejects_headerless() {
+        assert!(matches!(parse("ACDE\n"), Err(FastaError::DataBeforeHeader(1))));
+        assert!(matches!(parse(""), Err(FastaError::Empty)));
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("specmer_fasta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.fa");
+        let recs = vec![
+            Record { id: "x".into(), seq: "A".repeat(130) },
+            Record { id: "y".into(), seq: "KLM-NP".into() },
+        ];
+        write_path(&p, &recs).unwrap();
+        let back = read_path(&p).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn lowercase_a2m() {
+        let recs = parse(">a\nacDE.g-\n").unwrap();
+        assert_eq!(recs[0].ungapped(), "ACDEG");
+    }
+}

@@ -1,0 +1,194 @@
+//! Multiple sequence alignments: loading, column statistics, subsampling.
+//!
+//! The canonical MSAs are generated at build time by `python/compile/data.py`
+//! into `artifacts/msa/<family>.a2m` (first record = wild type); this module
+//! also hosts a Rust-native simulator (`simulate`) used by tests and extra
+//! workloads so the Rust side can run without artifacts.
+
+pub mod fasta;
+pub mod simulate;
+
+use crate::tokenizer;
+use crate::util::rng::Pcg64;
+use std::path::Path;
+
+/// An alignment: the wild-type row plus homolog rows (raw aligned strings).
+#[derive(Clone, Debug)]
+pub struct Msa {
+    pub name: String,
+    pub wild_type: String,
+    /// Aligned homolog rows (may contain gaps).
+    pub rows: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MsaError {
+    #[error(transparent)]
+    Fasta(#[from] fasta::FastaError),
+    #[error("msa {0} has no rows")]
+    NoRows(String),
+}
+
+impl Msa {
+    /// Load from an A2M file written by data.py (first record = wild type).
+    pub fn load(path: &Path, name: &str) -> Result<Msa, MsaError> {
+        let recs = fasta::read_path(path)?;
+        if recs.len() < 2 {
+            return Err(MsaError::NoRows(name.to_string()));
+        }
+        Ok(Msa {
+            name: name.to_string(),
+            wild_type: recs[0].ungapped(),
+            rows: recs[1..].iter().map(|r| r.seq.clone()).collect(),
+        })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Alignment length (columns) of the first row.
+    pub fn width(&self) -> usize {
+        self.rows.first().map(|r| r.chars().count()).unwrap_or(0)
+    }
+
+    /// Deterministic subsample of `n` rows (Appendix C MSA-depth ablation).
+    pub fn subsample(&self, n: usize, seed: u64) -> Msa {
+        let mut rng = Pcg64::new(seed);
+        let idx = rng.sample_indices(self.rows.len(), n);
+        Msa {
+            name: format!("{}@{}", self.name, n),
+            wild_type: self.wild_type.clone(),
+            rows: idx.iter().map(|&i| self.rows[i].clone()).collect(),
+        }
+    }
+
+    /// Tokenized ungapped rows (no BOS/EOS).
+    pub fn tokenized_rows(&self) -> Vec<Vec<u8>> {
+        self.rows.iter().map(|r| tokenizer::encode(r)).collect()
+    }
+
+    /// Per-column residue frequency profile [width][20] ignoring gaps.
+    pub fn column_profile(&self) -> Vec<[f64; tokenizer::N_AA]> {
+        let w = self.width();
+        let mut counts = vec![[0f64; tokenizer::N_AA]; w];
+        for row in &self.rows {
+            for (c, ch) in row.bytes().enumerate() {
+                if c >= w {
+                    break;
+                }
+                if let Some(t) = tokenizer::tok_of(ch) {
+                    if tokenizer::is_residue(t) && t != tokenizer::X {
+                        counts[c][(t - tokenizer::AA_OFFSET) as usize] += 1.0;
+                    }
+                }
+            }
+        }
+        for col in counts.iter_mut() {
+            let s: f64 = col.iter().sum();
+            if s > 0.0 {
+                col.iter_mut().for_each(|x| *x /= s);
+            } else {
+                col.iter_mut().for_each(|x| *x = 1.0 / tokenizer::N_AA as f64);
+            }
+        }
+        counts
+    }
+
+    /// Per-column conservation: max residue frequency (1.0 = fully conserved).
+    pub fn conservation(&self) -> Vec<f64> {
+        self.column_profile()
+            .iter()
+            .map(|col| col.iter().cloned().fold(0.0, f64::max))
+            .collect()
+    }
+}
+
+/// Family metadata mirroring the paper's Table 1 (from families.json).
+#[derive(Clone, Debug)]
+pub struct FamilyMeta {
+    pub name: String,
+    pub paper_length: usize,
+    pub length: usize,
+    pub context: usize,
+    pub paper_msa_depth: usize,
+    pub msa_depth: usize,
+    pub function: String,
+    pub wild_type: String,
+}
+
+/// Parse families.json (written by data.py).
+pub fn load_families(path: &Path) -> anyhow::Result<Vec<FamilyMeta>> {
+    let text = std::fs::read_to_string(path)?;
+    let v = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("families.json: {e}"))?;
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("families.json: not an array"))?;
+    let mut out = Vec::new();
+    for f in arr {
+        let s = |k: &str| -> anyhow::Result<String> {
+            Ok(f.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("families.json missing {k}"))?
+                .to_string())
+        };
+        let n = |k: &str| -> anyhow::Result<usize> {
+            f.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("families.json missing {k}"))
+        };
+        out.push(FamilyMeta {
+            name: s("name")?,
+            paper_length: n("paper_length")?,
+            length: n("length")?,
+            context: n("context")?,
+            paper_msa_depth: n("paper_msa_depth")?,
+            msa_depth: n("msa_depth")?,
+            function: s("function")?,
+            wild_type: s("wild_type")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_msa() -> Msa {
+        Msa {
+            name: "toy".into(),
+            wild_type: "ACDE".into(),
+            rows: vec!["ACDE".into(), "ACD-".into(), "AKDE".into(), "AC-E".into()],
+        }
+    }
+
+    #[test]
+    fn profile_and_conservation() {
+        let m = toy_msa();
+        let prof = m.column_profile();
+        assert_eq!(prof.len(), 4);
+        // column 0 is all A
+        assert!((prof[0][0] - 1.0).abs() < 1e-12);
+        let cons = m.conservation();
+        assert_eq!(cons[0], 1.0);
+        assert!(cons[1] < 1.0); // C,C,K,C
+    }
+
+    #[test]
+    fn subsample_depth() {
+        let m = toy_msa();
+        let s = m.subsample(2, 1);
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.wild_type, m.wild_type);
+        // deterministic
+        let s2 = m.subsample(2, 1);
+        assert_eq!(s.rows, s2.rows);
+    }
+
+    #[test]
+    fn tokenized_rows_drop_gaps() {
+        let m = toy_msa();
+        let tok = m.tokenized_rows();
+        assert_eq!(tok[1].len(), 3);
+    }
+}

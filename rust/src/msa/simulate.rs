@@ -1,0 +1,189 @@
+//! Rust-native protein-family simulator.
+//!
+//! Mirrors the structure of `python/compile/data.py` (motif blocks with a
+//! dominant residue + variable linkers) without trying to match its exact
+//! random stream — this generator serves tests, extra workloads, and the
+//! no-artifacts fallback engine; the canonical MSAs used by experiments are
+//! the ones data.py bakes into artifacts/.
+
+use super::Msa;
+use crate::tokenizer::{AA, N_AA};
+use crate::util::rng::Pcg64;
+
+/// Per-column categorical profile over the 20 amino acids.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub cols: Vec<[f64; N_AA]>,
+    pub conservation: Vec<f64>,
+}
+
+/// Rough natural AA background (matches data.py's BACKGROUND).
+pub const BACKGROUND: [f64; N_AA] = [
+    0.0826, 0.0137, 0.0546, 0.0672, 0.0386, 0.0708, 0.0227, 0.0593, 0.0581,
+    0.0965, 0.0241, 0.0406, 0.0474, 0.0393, 0.0553, 0.0660, 0.0535, 0.0686,
+    0.0110, 0.0292,
+];
+
+impl Profile {
+    /// Alternating motif/linker blocks, as in data.py::make_profile.
+    pub fn generate(rng: &mut Pcg64, length: usize) -> Profile {
+        let mut cols = Vec::with_capacity(length);
+        let mut conservation = Vec::with_capacity(length);
+        let mut motif = rng.next_f64() < 0.5;
+        let mut pos = 0;
+        while pos < length {
+            let block = if motif { 4 + rng.below(8) } else { 3 + rng.below(7) };
+            let block = block.min(length - pos);
+            for _ in 0..block {
+                let mut col = [0f64; N_AA];
+                if motif {
+                    let dom = rng.below(N_AA);
+                    let w = 0.60 + 0.35 * rng.next_f64();
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c = (1.0 - w) * (BACKGROUND[i] + 0.02);
+                    }
+                    col[dom] += w;
+                    conservation.push(w);
+                } else {
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c = BACKGROUND[i] * (0.3 + rng.next_f64());
+                    }
+                    conservation.push(0.1 + 0.2 * rng.next_f64());
+                }
+                let s: f64 = col.iter().sum();
+                col.iter_mut().for_each(|x| *x /= s);
+                cols.push(col);
+            }
+            pos += block;
+            motif = !motif;
+        }
+        Profile { cols, conservation }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Consensus (argmax per column) as a protein string.
+    pub fn consensus(&self) -> String {
+        self.cols
+            .iter()
+            .map(|col| {
+                let (i, _) = col
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                AA[i] as char
+            })
+            .collect()
+    }
+
+    /// Sample one homolog (optionally with gap noise away from motifs).
+    pub fn sample(&self, rng: &mut Pcg64, gap_rate: f64) -> String {
+        self.cols
+            .iter()
+            .zip(&self.conservation)
+            .map(|(col, &cons)| {
+                if gap_rate > 0.0 && rng.next_f64() < gap_rate * (1.0 - cons) {
+                    '-'
+                } else {
+                    AA[rng.categorical(col)] as char
+                }
+            })
+            .collect()
+    }
+
+    /// Log-probability of an (ungapped, full-length) sequence under the
+    /// profile with `eps` smoothing — used by the pLDDT proxy.
+    pub fn log_odds(&self, toks: &[u8], eps: f64) -> Vec<f64> {
+        toks.iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                if i >= self.cols.len() {
+                    return 0.0;
+                }
+                let a = t.wrapping_sub(crate::tokenizer::AA_OFFSET) as usize;
+                let p = if a < N_AA { self.cols[i][a] } else { eps };
+                let bg = if a < N_AA { BACKGROUND[a] } else { eps };
+                ((p + eps) / (bg + eps)).ln()
+            })
+            .collect()
+    }
+}
+
+/// Generate a complete synthetic family (profile + MSA).
+pub fn generate_family(name: &str, length: usize, depth: usize, seed: u64) -> (Profile, Msa) {
+    let mut rng = Pcg64::new(seed);
+    let prof = Profile::generate(&mut rng, length);
+    let wt = prof.consensus();
+    let rows = (0..depth).map(|_| prof.sample(&mut rng, 0.02)).collect();
+    (
+        prof,
+        Msa { name: name.to_string(), wild_type: wt, rows },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn profile_columns_normalized() {
+        let mut rng = Pcg64::new(1);
+        let p = Profile::generate(&mut rng, 120);
+        assert_eq!(p.len(), 120);
+        for col in &p.cols {
+            let s: f64 = col.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn family_shapes() {
+        let (prof, msa) = generate_family("T", 80, 50, 3);
+        assert_eq!(prof.len(), 80);
+        assert_eq!(msa.depth(), 50);
+        assert_eq!(msa.wild_type.len(), 80);
+        assert_eq!(msa.width(), 80);
+    }
+
+    #[test]
+    fn consensus_scores_higher_than_random() {
+        let (prof, msa) = generate_family("T", 100, 10, 7);
+        let wt_toks = crate::tokenizer::encode(&msa.wild_type);
+        let wt_lo: f64 = prof.log_odds(&wt_toks, 1e-6).iter().sum();
+        let mut rng = Pcg64::new(99);
+        let rand_seq: Vec<u8> = (0..100)
+            .map(|_| crate::tokenizer::AA_OFFSET + rng.below(N_AA) as u8)
+            .collect();
+        let rand_lo: f64 = prof.log_odds(&rand_seq, 1e-6).iter().sum();
+        assert!(wt_lo > rand_lo, "wt {wt_lo} rand {rand_lo}");
+    }
+
+    #[test]
+    fn homologs_correlate_with_profile() {
+        check("homolog log-odds beats random", 20, |g| {
+            let seed = g.u64();
+            let (prof, msa) = generate_family("T", 60, 5, seed);
+            let mut rng = Pcg64::new(seed ^ 1);
+            for row in &msa.rows {
+                let toks = crate::tokenizer::encode(row);
+                if toks.len() != 60 {
+                    continue; // row had gaps; positions shift — skip
+                }
+                let h: f64 = prof.log_odds(&toks, 1e-6).iter().sum();
+                let rand_seq: Vec<u8> = (0..60)
+                    .map(|_| crate::tokenizer::AA_OFFSET + rng.below(N_AA) as u8)
+                    .collect();
+                let r: f64 = prof.log_odds(&rand_seq, 1e-6).iter().sum();
+                assert!(h > r, "homolog {h} random {r}");
+            }
+        });
+    }
+}

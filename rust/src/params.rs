@@ -1,0 +1,232 @@
+//! Model parameter loading: `manifest.json` + `params_<model>.bin`.
+//!
+//! aot.py serializes each checkpoint as one flat little-endian f32 vector;
+//! the manifest records the model hyperparameters, per-tensor offsets and
+//! the KV-cache shape. The flat vector is argument 0 of every exported HLO
+//! program, so Rust never needs to understand the tensor layout — but the
+//! pure-Rust reference model (runtime::cpu_ref) does, via [`ModelParams::tensor`].
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParamsError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("params_{model}.bin has {got} floats, manifest says {want}")]
+    SizeMismatch { model: String, got: usize, want: usize },
+    #[error("unknown tensor {0}")]
+    UnknownTensor(String),
+}
+
+/// Hyperparameters of one exported checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDims {
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub n_params: usize,
+    /// [layer, k/v, head, position, d_head]
+    pub cache_shape: [usize; 5],
+}
+
+impl ModelDims {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+    pub fn maxlen(&self) -> usize {
+        self.cache_shape[3]
+    }
+    pub fn cache_len(&self) -> usize {
+        self.cache_shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+struct TensorSpec {
+    shape: Vec<usize>,
+    offset: usize,
+}
+
+/// One checkpoint: dims + flat parameter vector + tensor directory.
+pub struct ModelParams {
+    pub name: String,
+    pub dims: ModelDims,
+    pub flat: Vec<f32>,
+    tensors: BTreeMap<String, TensorSpec>,
+}
+
+impl ModelParams {
+    /// View of one named tensor (row-major) with its shape.
+    pub fn tensor(&self, name: &str) -> Result<(&[f32], &[usize]), ParamsError> {
+        let spec = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| ParamsError::UnknownTensor(name.to_string()))?;
+        let n: usize = spec.shape.iter().product();
+        Ok((&self.flat[spec.offset..spec.offset + n], &spec.shape))
+    }
+}
+
+/// Everything manifest.json describes.
+pub struct Manifest {
+    pub maxlen: usize,
+    pub vocab: usize,
+    pub models: BTreeMap<String, ModelDims>,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize, ParamsError> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| ParamsError::Manifest(format!("missing {key}")))
+}
+
+pub fn load_manifest(dir: &Path) -> Result<Manifest, ParamsError> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let v = Json::parse(&text).map_err(|e| ParamsError::Manifest(e.to_string()))?;
+    let mut models = BTreeMap::new();
+    let mobj = v
+        .get("models")
+        .and_then(|m| m.as_obj())
+        .ok_or_else(|| ParamsError::Manifest("missing models".into()))?;
+    for (name, m) in mobj {
+        let cs = m
+            .get("cache_shape")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| ParamsError::Manifest("missing cache_shape".into()))?;
+        let mut cache_shape = [0usize; 5];
+        for (i, c) in cs.iter().enumerate().take(5) {
+            cache_shape[i] = c.as_usize().unwrap_or(0);
+        }
+        models.insert(
+            name.clone(),
+            ModelDims {
+                n_layer: req_usize(m, "n_layer")?,
+                d_model: req_usize(m, "d_model")?,
+                n_head: req_usize(m, "n_head")?,
+                d_ff: req_usize(m, "d_ff")?,
+                n_params: req_usize(m, "n_params")?,
+                cache_shape,
+            },
+        );
+    }
+    Ok(Manifest {
+        maxlen: req_usize(&v, "maxlen")?,
+        vocab: req_usize(&v, "vocab")?,
+        models,
+    })
+}
+
+/// Read `params_<name>.bin` (little-endian f32) and attach tensor specs.
+pub fn load_model(dir: &Path, name: &str) -> Result<ModelParams, ParamsError> {
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let v = Json::parse(&manifest_text).map_err(|e| ParamsError::Manifest(e.to_string()))?;
+    let m = v
+        .get("models")
+        .and_then(|ms| ms.get(name))
+        .ok_or_else(|| ParamsError::Manifest(format!("model {name} not in manifest")))?;
+
+    let manifest = load_manifest(dir)?;
+    let dims = manifest.models[name].clone();
+
+    let bytes = std::fs::read(dir.join(format!("params_{name}.bin")))?;
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    if flat.len() != dims.n_params {
+        return Err(ParamsError::SizeMismatch {
+            model: name.to_string(),
+            got: flat.len(),
+            want: dims.n_params,
+        });
+    }
+
+    let mut tensors = BTreeMap::new();
+    if let Some(list) = m.get("tensors").and_then(|t| t.as_arr()) {
+        for t in list {
+            let tname = t
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| ParamsError::Manifest("tensor missing name".into()))?;
+            let shape: Vec<usize> = t
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_usize()).collect())
+                .unwrap_or_default();
+            let offset = req_usize(t, "offset")?;
+            tensors.insert(tname.to_string(), TensorSpec { shape, offset });
+        }
+    }
+
+    Ok(ModelParams { name: name.to_string(), dims, flat, tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_artifacts(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("specmer_params_{}_{}", std::process::id(), tag));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "maxlen": 8, "vocab": 32,
+          "models": {
+            "tiny": {
+              "n_layer": 1, "d_model": 4, "n_head": 2, "d_ff": 8,
+              "n_params": 6, "cache_shape": [1,2,2,8,2],
+              "tensors": [
+                {"name":"a","shape":[2,2],"offset":0},
+                {"name":"b","shape":[2],"offset":4}
+              ]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut f = std::fs::File::create(dir.join("params_tiny.bin")).unwrap();
+        for v in &vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn loads_manifest_and_params() {
+        let dir = fake_artifacts("load");
+        let man = load_manifest(&dir).unwrap();
+        assert_eq!(man.maxlen, 8);
+        assert_eq!(man.models["tiny"].d_head(), 2);
+        let mp = load_model(&dir, "tiny").unwrap();
+        assert_eq!(mp.flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let (a, shape) = mp.tensor("a").unwrap();
+        assert_eq!(shape, &[2, 2]);
+        assert_eq!(a, &[1.0, 2.0, 3.0, 4.0]);
+        let (b, _) = mp.tensor("b").unwrap();
+        assert_eq!(b, &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn size_mismatch_detected() {
+        let dir = fake_artifacts("mismatch");
+        std::fs::write(dir.join("params_tiny.bin"), [0u8; 8]).unwrap();
+        assert!(matches!(
+            load_model(&dir, "tiny"),
+            Err(ParamsError::SizeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_tensor_errors() {
+        let dir = fake_artifacts("unknown");
+        let mp = load_model(&dir, "tiny");
+        if let Ok(mp) = mp {
+            assert!(mp.tensor("nope").is_err());
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The [`ModelBackend`] abstraction the decode engines run against.
+//!
+//! Two implementations exist:
+//!   * [`super::hlo::HloModel`] — the production path: AOT-compiled HLO
+//!     programs executed via PJRT (Python never runs).
+//!   * [`super::cpu_ref::CpuModel`] — a pure-Rust forward of the identical
+//!     transformer, used as the parity oracle in integration tests and as
+//!     a no-artifacts fallback engine.
+//!
+//! Shared position convention (see python/compile/model.py): `prefill`
+//! feeds the first n-1 context tokens; every later committed token is fed
+//! exactly once (via `generate`'s feed phase or `verify`) before sampling
+//! continues. The opaque `Cache` handle carries the KV state between calls.
+
+use anyhow::Result;
+
+/// Candidate tokens + the adjusted draft distributions they were sampled
+/// from (`p_i` of Algorithm 1): `tokens[c][g]`, `dists[c][g][vocab]`.
+pub struct DraftBlock {
+    pub tokens: Vec<Vec<u8>>,
+    pub dists: Vec<Vec<Vec<f32>>>,
+}
+
+/// Adjusted target distributions at gamma+1 positions: `dists[g][vocab]`
+/// (`dists[gamma]` is the bonus-token distribution).
+pub struct VerifyBlock {
+    pub dists: Vec<Vec<f32>>,
+}
+
+pub trait ModelBackend {
+    /// Opaque KV-cache state.
+    type Cache;
+
+    fn maxlen(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Which candidate counts the backend can draft in one call.
+    fn supported_c(&self) -> Vec<usize>;
+    /// Which draft lengths the backend supports.
+    fn supported_gamma(&self) -> Vec<usize>;
+
+    /// Feed the first `n-1` of `tokens` (n = tokens.len()); fresh cache.
+    fn prefill(&self, tokens: &[u8]) -> Result<Self::Cache>;
+
+    /// Feed `feed` (the committed-but-unfed tokens, at absolute positions
+    /// `pos..pos+feed.len()`), then draft `gamma` tokens for each of `c`
+    /// candidates using uniforms `u` (length c*gamma). Updates the cache
+    /// to the post-feed (committed) state.
+    #[allow(clippy::too_many_arguments)]
+    fn generate(
+        &self,
+        cache: &mut Self::Cache,
+        feed: &[u8],
+        pos: usize,
+        c: usize,
+        gamma: usize,
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftBlock>;
+
+    /// Teacher-forced verification: `toks[0]` is the last committed-but-
+    /// unfed token, `toks[1..]` the selected candidate block; `pos` is the
+    /// absolute position of `toks[0]`. Updates the cache.
+    fn verify(
+        &self,
+        cache: &mut Self::Cache,
+        toks: &[u8],
+        pos: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyBlock>;
+
+    /// Per-position NLL of tokens[1..] under the raw model (no temp/top-p);
+    /// index 0 is 0.0.
+    fn score(&self, tokens: &[u8]) -> Result<Vec<f32>>;
+
+    /// Mean-pooled final-hidden-state embedding (ESM2 stand-in).
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let _ = tokens;
+        Err(anyhow::anyhow!("embed not supported by this backend"))
+    }
+
+    /// Snapshot a cache to host floats (for the scheduler's per-protein
+    /// prefill cache) and restore it. Round-trip must be exact.
+    fn cache_to_host(&self, cache: &Self::Cache) -> Result<Vec<f32>>;
+    fn cache_from_host(&self, data: &[f32]) -> Result<Self::Cache>;
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime wrapper over the `xla` crate.
+//!
+//! Loads HLO *text* artifacts (see aot.py for why text, not protos),
+//! compiles them once on the CPU PJRT client, and exposes a typed
+//! `run(args) -> Vec<Literal>` with helpers for building f32/i32 literals.
+//! Executables are compiled lazily and cached by artifact name.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// An execute argument: either a persistent device buffer (uploaded once,
+/// e.g. model parameters) or a host literal uploaded for this call.
+pub enum Arg<'a> {
+    Buf(&'a PjRtBuffer),
+    Lit(&'a Literal),
+}
+
+/// Lazily-compiling program cache over one PJRT client.
+pub struct Runtime {
+    client: PjRtClient,
+    hlo_dir: PathBuf,
+    programs: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// (name, compile_seconds) log for EXPERIMENTS.md §Perf.
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    /// `artifacts_dir` is the directory produced by `make artifacts`.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let hlo_dir = artifacts_dir.join("hlo");
+        if !hlo_dir.is_dir() {
+            return Err(anyhow!(
+                "{} not found — run `make artifacts` first",
+                hlo_dir.display()
+            ));
+        }
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            hlo_dir,
+            programs: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True if the artifact exists on disk.
+    pub fn has_program(&self, name: &str) -> bool {
+        self.hlo_dir.join(format!("{name}.hlo.txt")).is_file()
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let path = self.hlo_dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((name.to_string(), dt));
+        crate::debug!("compiled {name} in {dt:.2}s");
+        self.programs.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute program `name` with the given literals; returns the
+    /// decomposed output tuple (all exported programs return tuples).
+    pub fn run(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        if !self.programs.borrow().contains_key(name) {
+            self.compile(name)?;
+        }
+        let programs = self.programs.borrow();
+        let exe = programs.get(name).unwrap();
+        let outs = exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Number of compiled programs (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.programs.borrow().len()
+    }
+
+    /// Upload host data to a persistent device buffer (perf: model params
+    /// are uploaded once per process instead of once per dispatch — see
+    /// EXPERIMENTS.md §Perf).
+    pub fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute with mixed buffer/literal arguments (literals are uploaded
+    /// for this call only). Returns the decomposed output tuple.
+    pub fn run_args(&self, name: &str, args: &[Arg]) -> Result<Vec<Literal>> {
+        if !self.programs.borrow().contains_key(name) {
+            self.compile(name)?;
+        }
+        // upload literal args; keep them alive for the call
+        let temps: Vec<Option<PjRtBuffer>> = args
+            .iter()
+            .map(|a| match a {
+                Arg::Buf(_) => Ok(None),
+                Arg::Lit(l) => Ok(Some(self.client.buffer_from_host_literal(None, l)?)),
+            })
+            .collect::<Result<_>>()?;
+        let bufs: Vec<&PjRtBuffer> = args
+            .iter()
+            .zip(&temps)
+            .map(|(a, t)| match a {
+                Arg::Buf(b) => *b,
+                Arg::Lit(_) => t.as_ref().unwrap(),
+            })
+            .collect();
+        let programs = self.programs.borrow();
+        let exe = programs.get(name).unwrap();
+        let outs = exe
+            .execute_b::<&PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {name} (buffers)"))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+// ---- literal helpers -------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    debug_assert_eq!(n as usize, data.len());
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    debug_assert_eq!(n as usize, data.len());
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Tokens (u8) -> padded i32 literal of length `len`.
+pub fn tokens_literal(tokens: &[u8], len: usize) -> Result<Literal> {
+    let mut v = vec![0i32; len];
+    for (i, &t) in tokens.iter().take(len).enumerate() {
+        v[i] = t as i32;
+    }
+    lit_i32(&v, &[len as i64])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = lit_i32(&[5, -7], &[2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -7]);
+    }
+
+    #[test]
+    fn tokens_padded() {
+        let l = tokens_literal(&[3, 4, 5], 6).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3, 4, 5, 0, 0, 0]);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_errors() {
+        assert!(Runtime::new(Path::new("/nonexistent/path")).is_err());
+    }
+}

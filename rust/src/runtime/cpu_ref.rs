@@ -1,0 +1,504 @@
+//! Pure-Rust reference implementation of the exported transformer.
+//!
+//! Same architecture, same parameters (read from params_<m>.bin via the
+//! manifest tensor directory), same position/caching convention as the HLO
+//! programs — integration tests assert the two backends agree to float
+//! tolerance, which validates the whole AOT path end to end. Also usable
+//! as a fallback engine (`--cpu-ref`) when artifacts exist but PJRT is
+//! unavailable, and by unit tests that need a backend without artifacts
+//! (see `CpuModel::synthetic`).
+
+use anyhow::Result;
+
+use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+use crate::params::{ModelDims, ModelParams};
+use crate::sampling;
+use crate::util::rng::Pcg64;
+
+/// One transformer block's weights.
+struct Layer {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+pub struct CpuModel {
+    pub name: String,
+    pub dims: ModelDims,
+    vocab: usize,
+    tok_emb: Vec<f32>, // [V, D]
+    pos_emb: Vec<f32>, // [S, D]
+    layers: Vec<Layer>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+}
+
+/// KV cache: flat [L, 2, H, S, Dh], identical layout to the HLO programs.
+pub struct CpuCache {
+    pub data: Vec<f32>,
+}
+
+fn ln(x: &mut [f32], g: &[f32], b: &[f32]) {
+    let d = x.len();
+    let mu: f32 = x.iter().sum::<f32>() / d as f32;
+    let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..d {
+        x[i] = (x[i] - mu) * inv * g[i] + b[i];
+    }
+}
+
+/// tanh-approximated GELU (matches jax.nn.gelu's default approximate=True).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// y[j] += Σ_i x[i] * w[i*cols + j]  (row-major [rows, cols])
+fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
+    let cols = y.len();
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+fn matvec(x: &[f32], w: &[f32], cols: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; cols];
+    matvec_acc(x, w, &mut y);
+    y
+}
+
+impl CpuModel {
+    pub fn from_params(mp: &ModelParams, vocab: usize) -> Result<CpuModel> {
+        let t = |name: &str| -> Result<Vec<f32>> { Ok(mp.tensor(name)?.0.to_vec()) };
+        let mut layers = Vec::new();
+        for l in 0..mp.dims.n_layer {
+            let p = |s: &str| format!("l{l}.{s}");
+            layers.push(Layer {
+                ln1_g: t(&p("ln1_g"))?,
+                ln1_b: t(&p("ln1_b"))?,
+                wq: t(&p("wq"))?,
+                wk: t(&p("wk"))?,
+                wv: t(&p("wv"))?,
+                wo: t(&p("wo"))?,
+                ln2_g: t(&p("ln2_g"))?,
+                ln2_b: t(&p("ln2_b"))?,
+                w1: t(&p("w1"))?,
+                b1: t(&p("b1"))?,
+                w2: t(&p("w2"))?,
+                b2: t(&p("b2"))?,
+            });
+        }
+        Ok(CpuModel {
+            name: mp.name.clone(),
+            dims: mp.dims.clone(),
+            vocab,
+            tok_emb: t("tok_emb")?,
+            pos_emb: t("pos_emb")?,
+            layers,
+            lnf_g: t("lnf_g")?,
+            lnf_b: t("lnf_b")?,
+        })
+    }
+
+    /// Randomly-initialized model for tests that need a backend without
+    /// artifacts (deterministic in `seed`).
+    pub fn synthetic(n_layer: usize, d_model: usize, n_head: usize, maxlen: usize, seed: u64) -> CpuModel {
+        let vocab = crate::tokenizer::VOCAB;
+        let d_ff = d_model * 4;
+        let mut rng = Pcg64::new(seed);
+        let mut w = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.gaussian() * scale) as f32).collect()
+        };
+        let layers = (0..n_layer)
+            .map(|_| Layer {
+                ln1_g: vec![1.0; d_model],
+                ln1_b: vec![0.0; d_model],
+                wq: w(d_model * d_model, 0.05),
+                wk: w(d_model * d_model, 0.05),
+                wv: w(d_model * d_model, 0.05),
+                wo: w(d_model * d_model, 0.05),
+                ln2_g: vec![1.0; d_model],
+                ln2_b: vec![0.0; d_model],
+                w1: w(d_model * d_ff, 0.05),
+                b1: vec![0.0; d_ff],
+                w2: w(d_ff * d_model, 0.05),
+                b2: vec![0.0; d_model],
+            })
+            .collect();
+        CpuModel {
+            name: "synthetic".into(),
+            dims: ModelDims {
+                n_layer,
+                d_model,
+                n_head,
+                d_ff,
+                n_params: 0,
+                cache_shape: [n_layer, 2, n_head, maxlen, d_model / n_head],
+            },
+            vocab,
+            tok_emb: w(vocab * d_model, 0.3),
+            pos_emb: w(maxlen * d_model, 0.05),
+            layers,
+            lnf_g: vec![1.0; d_model],
+            lnf_b: vec![0.0; d_model],
+        }
+    }
+
+    pub fn empty_cache(&self) -> CpuCache {
+        CpuCache { data: vec![0.0; self.dims.cache_len()] }
+    }
+
+    #[inline]
+    fn cache_idx(&self, l: usize, kv: usize, h: usize, s: usize) -> usize {
+        let [_, _, nh, sm, dh] = self.dims.cache_shape;
+        (((l * 2 + kv) * nh + h) * sm + s) * dh
+    }
+
+    /// Teacher-forced forward of `toks` at absolute positions
+    /// `pos..pos+toks.len()`, reading/writing the KV cache. Returns the
+    /// final hidden state per input position [G][D].
+    fn cached_forward(&self, cache: &mut CpuCache, toks: &[u8], pos: usize) -> Vec<Vec<f32>> {
+        assert!(
+            pos + toks.len() <= self.dims.maxlen(),
+            "cached_forward past maxlen: pos {pos} + {} > {} (engines must \
+             leave a full block of slack — see decode::spec)",
+            toks.len(),
+            self.dims.maxlen()
+        );
+        let d = self.dims.d_model;
+        let nh = self.dims.n_head;
+        let dh = self.dims.d_head();
+        let g = toks.len();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embed
+        let mut xs: Vec<Vec<f32>> = toks
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
+                let pe = &self.pos_emb[(pos + i) * d..(pos + i + 1) * d];
+                te.iter().zip(pe).map(|(a, b)| a + b).collect()
+            })
+            .collect();
+
+        for (l, lay) in self.layers.iter().enumerate() {
+            // pre-LN + qkv for all G positions, write K/V into the cache
+            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(g);
+            for (i, x) in xs.iter().enumerate() {
+                let mut h = x.clone();
+                ln(&mut h, &lay.ln1_g, &lay.ln1_b);
+                let q = matvec(&h, &lay.wq, d);
+                let k = matvec(&h, &lay.wk, d);
+                let v = matvec(&h, &lay.wv, d);
+                for hh in 0..nh {
+                    let kslot = self.cache_idx(l, 0, hh, pos + i);
+                    let vslot = self.cache_idx(l, 1, hh, pos + i);
+                    cache.data[kslot..kslot + dh].copy_from_slice(&k[hh * dh..(hh + 1) * dh]);
+                    cache.data[vslot..vslot + dh].copy_from_slice(&v[hh * dh..(hh + 1) * dh]);
+                }
+                qs.push(q);
+            }
+            // attention per position over cache slots <= qpos
+            for (i, x) in xs.iter_mut().enumerate() {
+                let qpos = pos + i;
+                let mut att_out = vec![0.0f32; d];
+                for hh in 0..nh {
+                    let qh = &qs[i][hh * dh..(hh + 1) * dh];
+                    // scores over 0..=qpos
+                    let mut scores = Vec::with_capacity(qpos + 1);
+                    let mut max = f32::NEG_INFINITY;
+                    for s in 0..=qpos {
+                        let kslot = self.cache_idx(l, 0, hh, s);
+                        let kv = &cache.data[kslot..kslot + dh];
+                        let dot: f32 = qh.iter().zip(kv).map(|(a, b)| a * b).sum();
+                        let sc = dot * scale;
+                        max = max.max(sc);
+                        scores.push(sc);
+                    }
+                    let mut z = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - max).exp();
+                        z += *sc;
+                    }
+                    let out = &mut att_out[hh * dh..(hh + 1) * dh];
+                    for (s, &w) in scores.iter().enumerate() {
+                        let vslot = self.cache_idx(l, 1, hh, s);
+                        let vv = &cache.data[vslot..vslot + dh];
+                        let wz = w / z;
+                        for j in 0..dh {
+                            out[j] += wz * vv[j];
+                        }
+                    }
+                }
+                // out projection + residual
+                let proj = matvec(&att_out, &lay.wo, d);
+                for j in 0..d {
+                    x[j] += proj[j];
+                }
+                // MLP
+                let mut h = x.clone();
+                ln(&mut h, &lay.ln2_g, &lay.ln2_b);
+                let mut ff = matvec(&h, &lay.w1, self.dims.d_ff);
+                for (j, f) in ff.iter_mut().enumerate() {
+                    *f = gelu(*f + lay.b1[j]);
+                }
+                let mut out2 = matvec(&ff, &lay.w2, d);
+                for j in 0..d {
+                    out2[j] += lay.b2[j];
+                    x[j] += out2[j];
+                }
+            }
+        }
+        // final LN
+        for x in xs.iter_mut() {
+            ln(x, &self.lnf_g, &self.lnf_b);
+        }
+        xs
+    }
+
+    /// Logits from a final hidden state (weight-tied head).
+    fn logits(&self, h: &[f32]) -> Vec<f32> {
+        let d = self.dims.d_model;
+        (0..self.vocab)
+            .map(|t| {
+                let te = &self.tok_emb[t * d..(t + 1) * d];
+                h.iter().zip(te).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Full-sequence forward from scratch: per-position logits.
+    pub fn forward_logits(&self, tokens: &[u8]) -> Vec<Vec<f32>> {
+        let mut cache = self.empty_cache();
+        let hidden = self.cached_forward(&mut cache, tokens, 0);
+        hidden.iter().map(|h| self.logits(h)).collect()
+    }
+}
+
+impl ModelBackend for CpuModel {
+    type Cache = CpuCache;
+
+    fn maxlen(&self) -> usize {
+        self.dims.maxlen()
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn supported_c(&self) -> Vec<usize> {
+        (1..=8).collect()
+    }
+    fn supported_gamma(&self) -> Vec<usize> {
+        (1..=16).collect()
+    }
+
+    fn prefill(&self, tokens: &[u8]) -> Result<CpuCache> {
+        let mut cache = self.empty_cache();
+        if tokens.len() > 1 {
+            self.cached_forward(&mut cache, &tokens[..tokens.len() - 1], 0);
+        }
+        Ok(cache)
+    }
+
+    fn generate(
+        &self,
+        cache: &mut CpuCache,
+        feed: &[u8],
+        pos: usize,
+        c: usize,
+        gamma: usize,
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftBlock> {
+        let hidden = self.cached_forward(cache, feed, pos);
+        let last_logits = self.logits(hidden.last().unwrap());
+        let start = pos + feed.len();
+
+        let mut tokens = vec![vec![0u8; gamma]; c];
+        let mut dists = vec![Vec::with_capacity(gamma); c];
+        for ci in 0..c {
+            // each candidate branches from the committed cache
+            let mut cc = CpuCache { data: cache.data.clone() };
+            let mut logits = last_logits.clone();
+            for gi in 0..gamma {
+                let dist = sampling::adjust_dist(&logits, temp, top_p);
+                let tok = sampling::sample(&dist, u[ci * gamma + gi]) as u8;
+                tokens[ci][gi] = tok;
+                dists[ci].push(dist);
+                let h = self.cached_forward(&mut cc, &[tok], start + gi);
+                logits = self.logits(&h[0]);
+            }
+        }
+        Ok(DraftBlock { tokens, dists })
+    }
+
+    fn verify(
+        &self,
+        cache: &mut CpuCache,
+        toks: &[u8],
+        pos: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyBlock> {
+        let hidden = self.cached_forward(cache, toks, pos);
+        let dists = hidden
+            .iter()
+            .map(|h| sampling::adjust_dist(&self.logits(h), temp, top_p))
+            .collect();
+        Ok(VerifyBlock { dists })
+    }
+
+    fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let logits = self.forward_logits(tokens);
+        let mut nll = vec![0.0f32; tokens.len()];
+        for i in 1..tokens.len() {
+            let p = sampling::softmax(&logits[i - 1], 1.0);
+            nll[i] = -(p[tokens[i] as usize].max(1e-12)).ln();
+        }
+        Ok(nll)
+    }
+
+    fn cache_to_host(&self, cache: &CpuCache) -> Result<Vec<f32>> {
+        Ok(cache.data.clone())
+    }
+
+    fn cache_from_host(&self, data: &[f32]) -> Result<CpuCache> {
+        Ok(CpuCache { data: data.to_vec() })
+    }
+
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let mut cache = self.empty_cache();
+        let hidden = self.cached_forward(&mut cache, tokens, 0);
+        let d = self.dims.d_model;
+        let mut out = vec![0.0f32; d];
+        for h in &hidden {
+            for j in 0..d {
+                out[j] += h[j];
+            }
+        }
+        let n = hidden.len().max(1) as f32;
+        out.iter_mut().for_each(|x| *x /= n);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CpuModel {
+        CpuModel::synthetic(2, 16, 2, 32, 42)
+    }
+
+    #[test]
+    fn cached_equals_fresh_forward() {
+        let m = tiny();
+        let seq: Vec<u8> = vec![1, 5, 9, 13, 7, 4, 20];
+        let full = m.forward_logits(&seq);
+        // incremental: prefill 4 (feeds 3), then feed the rest one by one
+        let mut cache = m.prefill(&seq[..4]).unwrap();
+        let mut got = Vec::new();
+        for i in 3..seq.len() {
+            let h = m.cached_forward(&mut cache, &seq[i..i + 1], i);
+            got.push(m.logits(&h[0]));
+        }
+        for (i, g) in got.iter().enumerate() {
+            let f = &full[3 + i];
+            for (a, b) in g.iter().zip(f) {
+                assert!((a - b).abs() < 1e-4, "pos {} mismatch {a} vs {b}", 3 + i);
+            }
+        }
+    }
+
+    #[test]
+    fn verify_dists_are_normalized() {
+        let m = tiny();
+        let mut cache = m.prefill(&[1, 5, 9]).unwrap();
+        let vb = m.verify(&mut cache, &[9, 4, 6, 8], 2, 1.0, 0.95).unwrap();
+        assert_eq!(vb.dists.len(), 4);
+        for d in &vb.dists {
+            let s: f32 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn generate_respects_c_and_gamma() {
+        let m = tiny();
+        let mut cache = m.prefill(&[1, 5, 9]).unwrap();
+        let u: Vec<f32> = (0..3 * 4).map(|i| (i as f32 * 0.37) % 1.0).collect();
+        let db = m.generate(&mut cache, &[9], 2, 3, 4, &u, 1.0, 0.95).unwrap();
+        assert_eq!(db.tokens.len(), 3);
+        assert_eq!(db.tokens[0].len(), 4);
+        assert_eq!(db.dists[0].len(), 4);
+        // sampled token must have nonzero prob in its dist
+        for ci in 0..3 {
+            for gi in 0..4 {
+                assert!(db.dists[ci][gi][db.tokens[ci][gi] as usize] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn same_uniforms_same_candidates() {
+        let m = tiny();
+        let mut c1 = m.prefill(&[1, 5, 9]).unwrap();
+        let mut c2 = m.prefill(&[1, 5, 9]).unwrap();
+        let u: Vec<f32> = (0..10).map(|i| (i as f32 * 0.13) % 1.0).collect();
+        let a = m.generate(&mut c1, &[9], 2, 2, 5, &u, 0.8, 0.9).unwrap();
+        let b = m.generate(&mut c2, &[9], 2, 2, 5, &u, 0.8, 0.9).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn score_zero_at_origin_positive_after() {
+        let m = tiny();
+        let nll = m.score(&[1, 5, 9, 13]).unwrap();
+        assert_eq!(nll[0], 0.0);
+        assert!(nll[1..].iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn embed_shape() {
+        let m = tiny();
+        let e = m.embed(&[1, 5, 9]).unwrap();
+        assert_eq!(e.len(), 16);
+    }
+
+    #[test]
+    fn verify_then_reverify_overlapping_positions() {
+        // stale-slot rewrite: verify 5 tokens, then re-verify from an
+        // earlier position; dists must match a fresh forward.
+        let m = tiny();
+        let seq: Vec<u8> = vec![1, 5, 9, 13, 7, 4, 20, 11, 2, 6];
+        let mut cache = m.prefill(&seq[..4]).unwrap();
+        let _ = m.verify(&mut cache, &seq[3..9], 3, 1.0, 1.0).unwrap();
+        // pretend only 2 of those were accepted: re-verify from pos 5
+        let vb = m.verify(&mut cache, &seq[5..10], 5, 1.0, 1.0).unwrap();
+        let full = m.forward_logits(&seq);
+        for (i, d) in vb.dists.iter().enumerate() {
+            let expect = sampling::adjust_dist(&full[5 + i], 1.0, 1.0);
+            for (a, b) in d.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "pos {} {a} vs {b}", 5 + i);
+            }
+        }
+    }
+}

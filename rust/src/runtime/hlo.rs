@@ -1,0 +1,269 @@
+//! [`ModelBackend`] over AOT-compiled HLO programs (the production path).
+//!
+//! One `HloModel` owns the flat parameter literal for a checkpoint plus a
+//! shared [`Runtime`]; each call builds the small input literals, executes
+//! the corresponding artifact, and unpacks the output tuple.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+use super::client::{lit_f32, lit_i32, scalar_f32, scalar_i32, tokens_literal, Arg, Runtime};
+use crate::params::{load_model, ModelDims};
+
+pub struct HloModel {
+    pub name: String,
+    pub dims: ModelDims,
+    rt: Rc<Runtime>,
+    /// Flat parameter vector, resident on device (uploaded once at load —
+    /// saves a ~1.4 MB host->device copy per dispatch; EXPERIMENTS.md §Perf).
+    params_buf: xla::PjRtBuffer,
+    vocab: usize,
+    supported_c: Vec<usize>,
+    supported_g: Vec<usize>,
+}
+
+impl HloModel {
+    /// Load checkpoint `name` ("draft" / "target" / "xl") from artifacts.
+    pub fn load(rt: Rc<Runtime>, artifacts: &std::path::Path, name: &str) -> Result<HloModel> {
+        let mp = load_model(artifacts, name)?;
+        let manifest = crate::params::load_manifest(artifacts)?;
+        let params_buf = rt.to_device_f32(&mp.flat, &[mp.flat.len()])?;
+        // discover which (c, gamma) variants were exported
+        let mut cs = vec![];
+        let mut gs = vec![];
+        for c in [1usize, 2, 3, 5, 8] {
+            if rt.has_program(&format!("{name}_generate_c{c}_g5"))
+                || rt.has_program(&format!("{name}_generate_c{c}_g16"))
+            {
+                cs.push(c);
+            }
+        }
+        for g in [1usize, 5, 10, 15, 16] {
+            if rt.has_program(&format!("{name}_generate_c1_g{g}")) {
+                gs.push(g);
+            }
+        }
+        Ok(HloModel {
+            name: name.to_string(),
+            dims: mp.dims,
+            rt,
+            params_buf,
+            vocab: manifest.vocab,
+            supported_c: cs,
+            supported_g: gs,
+        })
+    }
+
+    fn cache_dims(&self) -> Vec<i64> {
+        self.dims.cache_shape.iter().map(|&d| d as i64).collect()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl ModelBackend for HloModel {
+    type Cache = Literal;
+
+    fn maxlen(&self) -> usize {
+        self.dims.maxlen()
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn supported_c(&self) -> Vec<usize> {
+        self.supported_c.clone()
+    }
+    fn supported_gamma(&self) -> Vec<usize> {
+        self.supported_g.clone()
+    }
+
+    fn prefill(&self, tokens: &[u8]) -> Result<Literal> {
+        let s = self.maxlen();
+        let toks = tokens_literal(tokens, s)?;
+        let n = scalar_i32(tokens.len() as i32);
+        let mut out = self.rt.run_args(
+            &format!("{}_prefill", self.name),
+            &[Arg::Buf(&self.params_buf), Arg::Lit(&toks), Arg::Lit(&n)],
+        )?;
+        Ok(out.remove(0))
+    }
+
+    fn generate(
+        &self,
+        cache: &mut Literal,
+        feed: &[u8],
+        pos: usize,
+        c: usize,
+        gamma: usize,
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftBlock> {
+        debug_assert_eq!(u.len(), c * gamma);
+        debug_assert!(!feed.is_empty() && feed.len() <= gamma + 1);
+        let prog = format!("{}_generate_c{c}_g{gamma}", self.name);
+        let mut feed_pad = vec![0i32; gamma + 1];
+        for (i, &t) in feed.iter().enumerate() {
+            feed_pad[i] = t as i32;
+        }
+        let feed_lit = lit_i32(&feed_pad, &[(gamma + 1) as i64])?;
+        let n_feed = scalar_i32(feed.len() as i32);
+        let pos_lit = scalar_i32(pos as i32);
+        let u_lit = lit_f32(u, &[c as i64, gamma as i64])?;
+        let temp_l = scalar_f32(temp);
+        let top_p_l = scalar_f32(top_p);
+        let out = self.rt.run_args(
+            &prog,
+            &[
+                Arg::Buf(&self.params_buf),
+                Arg::Lit(cache),
+                Arg::Lit(&feed_lit),
+                Arg::Lit(&n_feed),
+                Arg::Lit(&pos_lit),
+                Arg::Lit(&u_lit),
+                Arg::Lit(&temp_l),
+                Arg::Lit(&top_p_l),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let toks_l = it.next().ok_or_else(|| anyhow!("missing toks output"))?;
+        let dists_l = it.next().ok_or_else(|| anyhow!("missing dists output"))?;
+        let cache_l = it.next().ok_or_else(|| anyhow!("missing cache output"))?;
+        *cache = cache_l;
+
+        let toks_flat = toks_l.to_vec::<i32>()?;
+        let dists_flat = dists_l.to_vec::<f32>()?;
+        let v = self.vocab;
+        let tokens = (0..c)
+            .map(|ci| (0..gamma).map(|g| toks_flat[ci * gamma + g] as u8).collect())
+            .collect();
+        let dists = (0..c)
+            .map(|ci| {
+                (0..gamma)
+                    .map(|g| {
+                        let base = (ci * gamma + g) * v;
+                        dists_flat[base..base + v].to_vec()
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(DraftBlock { tokens, dists })
+    }
+
+    fn verify(
+        &self,
+        cache: &mut Literal,
+        toks: &[u8],
+        pos: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyBlock> {
+        let gamma = toks.len() - 1;
+        let prog = format!("{}_verify_g{gamma}", self.name);
+        let toks_i: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        let toks_lit = lit_i32(&toks_i, &[toks.len() as i64])?;
+        let pos_l = scalar_i32(pos as i32);
+        let temp_l = scalar_f32(temp);
+        let top_p_l = scalar_f32(top_p);
+        let out = self.rt.run_args(
+            &prog,
+            &[
+                Arg::Buf(&self.params_buf),
+                Arg::Lit(cache),
+                Arg::Lit(&toks_lit),
+                Arg::Lit(&pos_l),
+                Arg::Lit(&temp_l),
+                Arg::Lit(&top_p_l),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let dists_l = it.next().ok_or_else(|| anyhow!("missing dists output"))?;
+        let cache_l = it.next().ok_or_else(|| anyhow!("missing cache output"))?;
+        *cache = cache_l;
+        let flat = dists_l.to_vec::<f32>()?;
+        let v = self.vocab;
+        let dists = (0..=gamma).map(|i| flat[i * v..(i + 1) * v].to_vec()).collect();
+        Ok(VerifyBlock { dists })
+    }
+
+    fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let s = self.maxlen();
+        let toks = tokens_literal(tokens, s)?;
+        let n = scalar_i32(tokens.len().min(s) as i32);
+        let out = self.rt.run_args(
+            &format!("{}_score", self.name),
+            &[Arg::Buf(&self.params_buf), Arg::Lit(&toks), Arg::Lit(&n)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[..tokens.len().min(s)].to_vec())
+    }
+
+    fn cache_to_host(&self, cache: &Literal) -> Result<Vec<f32>> {
+        Ok(cache.to_vec::<f32>()?)
+    }
+
+    fn cache_from_host(&self, data: &[f32]) -> Result<Literal> {
+        lit_f32(data, &self.cache_dims())
+    }
+
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        let s = self.maxlen();
+        let toks = tokens_literal(tokens, s)?;
+        let n = scalar_i32(tokens.len().min(s) as i32);
+        let out = self.rt.run_args(
+            &format!("{}_embed", self.name),
+            &[Arg::Buf(&self.params_buf), Arg::Lit(&toks), Arg::Lit(&n)],
+        )?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// The exported k-mer Pallas kernel (TPU deployment path; the Rust-native
+/// scorer in `kmer::score` is the CPU hot path — tests assert equality).
+pub struct HloKmerScorer {
+    rt: Rc<Runtime>,
+}
+
+impl HloKmerScorer {
+    pub fn new(rt: Rc<Runtime>) -> HloKmerScorer {
+        HloKmerScorer { rt }
+    }
+
+    /// Score up to 8 candidate blocks of length gamma (5/10/15).
+    pub fn score(
+        &self,
+        table: &crate::kmer::KmerTable,
+        cands: &[Vec<u8>],
+        gamma: usize,
+        ks: crate::kmer::KmerSet,
+    ) -> Result<Vec<f32>> {
+        let c_max = 8usize;
+        let mut flat = vec![0i32; c_max * gamma];
+        for (i, cand) in cands.iter().enumerate().take(c_max) {
+            for (j, &t) in cand.iter().enumerate().take(gamma) {
+                flat[i * gamma + j] = t as i32;
+            }
+        }
+        let cands_l = lit_i32(&flat, &[c_max as i64, gamma as i64])?;
+        let p1 = lit_f32(&table.p1, &[table.p1.len() as i64])?;
+        let p3 = lit_f32(&table.p3, &[table.p3.len() as i64])?;
+        let p5 = lit_f32(&table.p5, &[table.p5.len() as i64])?;
+        let kmask = lit_f32(
+            &[
+                if ks.k1 { 1.0 } else { 0.0 },
+                if ks.k3 { 1.0 } else { 0.0 },
+                if ks.k5 { 1.0 } else { 0.0 },
+            ],
+            &[3],
+        )?;
+        let out = self.rt.run(
+            &format!("kmer_score_c8_g{gamma}"),
+            &[&cands_l, &p1, &p3, &p5, &kmask],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[..cands.len().min(c_max)].to_vec())
+    }
+}

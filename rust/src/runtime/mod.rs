@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper, HLO-backed and pure-Rust model
+//! backends. See DESIGN.md §2.
+
+pub mod backend;
+pub mod client;
+pub mod cpu_ref;
+pub mod hlo;
+pub mod prefill_cache;
+
+pub use backend::{DraftBlock, ModelBackend, VerifyBlock};
+pub use client::Runtime;
+pub use cpu_ref::CpuModel;
+pub use hlo::{HloKmerScorer, HloModel};

@@ -1,0 +1,142 @@
+//! Prefill memoization adapter.
+//!
+//! Protein-screening workloads issue many requests with the *same* context
+//! (Table 1: one fixed wild-type prefix per protein), and prefill is a
+//! full-maxlen forward — by far the most expensive single dispatch of a
+//! request. This adapter wraps any [`ModelBackend`] and memoizes prefill
+//! results by context, restoring snapshots via the cache host round-trip.
+//! Everything else delegates.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+
+pub struct PrefillCached<B: ModelBackend> {
+    inner: B,
+    memo: RefCell<HashMap<Vec<u8>, Vec<f32>>>,
+    pub hits: RefCell<u64>,
+    pub misses: RefCell<u64>,
+}
+
+impl<B: ModelBackend> PrefillCached<B> {
+    pub fn new(inner: B) -> Self {
+        PrefillCached {
+            inner,
+            memo: RefCell::new(HashMap::new()),
+            hits: RefCell::new(0),
+            misses: RefCell::new(0),
+        }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
+    type Cache = B::Cache;
+
+    fn maxlen(&self) -> usize {
+        self.inner.maxlen()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn supported_c(&self) -> Vec<usize> {
+        self.inner.supported_c()
+    }
+    fn supported_gamma(&self) -> Vec<usize> {
+        self.inner.supported_gamma()
+    }
+
+    fn prefill(&self, tokens: &[u8]) -> Result<Self::Cache> {
+        if let Some(host) = self.memo.borrow().get(tokens) {
+            *self.hits.borrow_mut() += 1;
+            return self.inner.cache_from_host(host);
+        }
+        *self.misses.borrow_mut() += 1;
+        let cache = self.inner.prefill(tokens)?;
+        let host = self.inner.cache_to_host(&cache)?;
+        self.memo.borrow_mut().insert(tokens.to_vec(), host);
+        Ok(cache)
+    }
+
+    fn generate(
+        &self,
+        cache: &mut Self::Cache,
+        feed: &[u8],
+        pos: usize,
+        c: usize,
+        gamma: usize,
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftBlock> {
+        self.inner.generate(cache, feed, pos, c, gamma, u, temp, top_p)
+    }
+
+    fn verify(
+        &self,
+        cache: &mut Self::Cache,
+        toks: &[u8],
+        pos: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyBlock> {
+        self.inner.verify(cache, toks, pos, temp, top_p)
+    }
+
+    fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        self.inner.score(tokens)
+    }
+
+    fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+        self.inner.embed(tokens)
+    }
+
+    fn cache_to_host(&self, cache: &Self::Cache) -> Result<Vec<f32>> {
+        self.inner.cache_to_host(cache)
+    }
+
+    fn cache_from_host(&self, data: &[f32]) -> Result<Self::Cache> {
+        self.inner.cache_from_host(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::cpu_ref::CpuModel;
+
+    #[test]
+    fn prefill_memoized_and_exact() {
+        let m = PrefillCached::new(CpuModel::synthetic(2, 16, 2, 32, 3));
+        let ctx = vec![1u8, 5, 9, 13];
+        let a = m.prefill(&ctx).unwrap();
+        let b = m.prefill(&ctx).unwrap();
+        assert_eq!(*m.hits.borrow(), 1);
+        assert_eq!(*m.misses.borrow(), 1);
+        assert_eq!(a.data, b.data, "memoized prefill must be bit-identical");
+        // different context misses
+        let _ = m.prefill(&[1u8, 5]).unwrap();
+        assert_eq!(*m.misses.borrow(), 2);
+    }
+
+    #[test]
+    fn decode_through_adapter_matches_plain() {
+        use crate::decode::{speculative_generate, GenConfig};
+        let d_plain = CpuModel::synthetic(2, 16, 2, 48, 7);
+        let t_plain = CpuModel::synthetic(2, 16, 2, 48, 8);
+        let d_cached = PrefillCached::new(CpuModel::synthetic(2, 16, 2, 48, 7));
+        let t_cached = PrefillCached::new(CpuModel::synthetic(2, 16, 2, 48, 8));
+        let cfg = GenConfig { max_len: 40, seed: 5, c: 2, ..Default::default() };
+        let a = speculative_generate(&d_plain, &t_plain, None, &[1, 5, 9], &cfg).unwrap();
+        let b = speculative_generate(&d_cached, &t_cached, None, &[1, 5, 9], &cfg).unwrap();
+        let c = speculative_generate(&d_cached, &t_cached, None, &[1, 5, 9], &cfg).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(b.tokens, c.tokens, "second run hits the memo and must agree");
+    }
+}

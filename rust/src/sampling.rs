@@ -1,0 +1,246 @@
+//! Sampling primitives: temperature, nucleus (top-p), categorical draws,
+//! and the token-level maximal coupling of Algorithm 1 (SpecTr).
+//!
+//! `adjust_dist` mirrors `python/compile/model.py::adjust_dist` exactly —
+//! the integration tests check HLO-vs-Rust agreement — but on the serving
+//! hot path the adjusted distributions come back from the HLO programs;
+//! this module is used for residual sampling, the accept test, evaluation,
+//! and the pure-Rust fallback engine.
+
+use crate::util::rng::Pcg64;
+
+/// Softmax with temperature into a fresh Vec.
+pub fn softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    let t = temp.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    let s: f32 = out.iter().sum();
+    out.iter_mut().for_each(|x| *x /= s);
+    out
+}
+
+/// Nucleus truncation: keep the smallest descending-prob prefix whose
+/// exclusive cumulative sum is < top_p (first token always kept), zero the
+/// rest, renormalize. Mirrors model.py::adjust_dist.
+pub fn nucleus(probs: &mut [f32], top_p: f32) {
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut cum = 0.0f32;
+    let mut thresh = f32::INFINITY;
+    for &i in &order {
+        if cum < top_p {
+            thresh = probs[i];
+        }
+        cum += probs[i];
+    }
+    let mut total = 0.0f32;
+    for p in probs.iter_mut() {
+        if *p < thresh {
+            *p = 0.0;
+        }
+        total += *p;
+    }
+    if total > 0.0 {
+        probs.iter_mut().for_each(|p| *p /= total);
+    }
+}
+
+/// Temperature + nucleus in one step: logits -> adjusted distribution.
+pub fn adjust_dist(logits: &[f32], temp: f32, top_p: f32) -> Vec<f32> {
+    let mut p = softmax(logits, temp);
+    nucleus(&mut p, top_p);
+    p
+}
+
+/// Inverse-CDF categorical draw (matches model.py::sample_from_dist:
+/// first index whose inclusive cumsum >= u).
+pub fn sample(dist: &[f32], u: f32) -> usize {
+    let mut cum = 0.0f32;
+    for (i, &p) in dist.iter().enumerate() {
+        cum += p;
+        if cum >= u {
+            return i;
+        }
+    }
+    dist.len() - 1
+}
+
+/// Residual distribution of Algorithm 1:
+///   p_res(x) = (q(x) - min(p(x), q(x))) / (1 - Σ min(p, q))
+/// Returns None when p == q (no residual mass; accept was certain).
+pub fn residual(p: &[f32], q: &[f32]) -> Option<Vec<f32>> {
+    debug_assert_eq!(p.len(), q.len());
+    let mut res: Vec<f32> = p
+        .iter()
+        .zip(q)
+        .map(|(&pi, &qi)| (qi - pi.min(qi)).max(0.0))
+        .collect();
+    let z: f32 = res.iter().sum();
+    if z <= 1e-12 {
+        return None;
+    }
+    res.iter_mut().for_each(|x| *x /= z);
+    Some(res)
+}
+
+/// One step of token-level maximal coupling (Algorithm 1).
+///
+/// `x` was sampled from `p` (draft); `q` is the target distribution at the
+/// same position. Returns `(accepted, token)`: the draft token if accepted,
+/// otherwise a corrected token drawn from the residual distribution.
+pub fn couple(p: &[f32], q: &[f32], x: usize, rng: &mut Pcg64) -> (bool, usize) {
+    let px = p[x].max(1e-12);
+    let ratio = (q[x] / px).min(1.0);
+    let eta = rng.next_f32();
+    if eta <= ratio {
+        return (true, x);
+    }
+    match residual(p, q) {
+        Some(res) => (false, sample(&res, rng.next_f32())),
+        // p==q exactly: acceptance probability was 1, the branch above
+        // can only be missed by floating-point edge; accept.
+        None => (true, x),
+    }
+}
+
+/// -log q(token) under an adjusted distribution (clamped for zeros).
+pub fn nll_of(dist: &[f32], token: usize) -> f64 {
+    -(dist[token].max(1e-12) as f64).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn low_temp_sharpens() {
+        let hot = softmax(&[1.0, 2.0], 2.0);
+        let cold = softmax(&[1.0, 2.0], 0.5);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn nucleus_keeps_top_mass() {
+        let mut p = vec![0.5, 0.3, 0.15, 0.05];
+        nucleus(&mut p, 0.8);
+        // exclusive cumsums: 0, .5, .8, .95 -> keep first two
+        assert!(p[2] == 0.0 && p[3] == 0.0);
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-6);
+        assert!((p[0] - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nucleus_p1_keeps_everything() {
+        let mut p = vec![0.25f32; 4];
+        nucleus(&mut p, 1.0);
+        assert!(p.iter().all(|&x| (x - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn nucleus_always_keeps_argmax() {
+        let mut p = vec![0.9, 0.05, 0.05];
+        nucleus(&mut p, 0.01);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sample_boundaries() {
+        let d = [0.25f32, 0.25, 0.5];
+        assert_eq!(sample(&d, 0.0), 0);
+        assert_eq!(sample(&d, 0.25), 0); // inclusive cum >= u
+        assert_eq!(sample(&d, 0.2500001), 1);
+        assert_eq!(sample(&d, 0.9999), 2);
+    }
+
+    #[test]
+    fn residual_matches_hand_calc() {
+        let p = [0.6f32, 0.4, 0.0];
+        let q = [0.2f32, 0.4, 0.4];
+        let r = residual(&p, &q).unwrap();
+        // min(p,q) = [.2,.4,0], 1-sum = .4 ; residual = [0,0,.4]/.4
+        assert!((r[2] - 1.0).abs() < 1e-6);
+        assert_eq!(r[0], 0.0);
+        assert_eq!(r[1], 0.0);
+    }
+
+    #[test]
+    fn residual_none_when_equal() {
+        let p = [0.5f32, 0.5];
+        assert!(residual(&p, &p).is_none());
+    }
+
+    /// The defining property of maximal coupling: the *output* of
+    /// accept/correct is distributed exactly as q, regardless of p.
+    #[test]
+    fn coupling_output_is_q_distributed() {
+        check("coupling marginals equal q", 20, |g| {
+            let v = 8;
+            let p: Vec<f32> = g.sparse_dist(v).iter().map(|&x| x as f32).collect();
+            let q: Vec<f32> = g.sparse_dist(v).iter().map(|&x| x as f32).collect();
+            let mut rng = Pcg64::new(g.u64());
+            let n = 40_000;
+            let mut counts = vec![0f64; v];
+            for _ in 0..n {
+                let x = sample(&p, rng.next_f32());
+                let (_acc, y) = couple(&p, &q, x, &mut rng);
+                counts[y] += 1.0;
+            }
+            for i in 0..v {
+                let emp = counts[i] / n as f64;
+                assert!(
+                    (emp - q[i] as f64).abs() < 0.02,
+                    "token {i}: empirical {emp:.4} vs q {:.4}",
+                    q[i]
+                );
+            }
+        });
+    }
+
+    /// Expected acceptance = 1 - TV(p, q).
+    #[test]
+    fn acceptance_rate_is_one_minus_tv() {
+        let mut g = crate::util::proptest::Gen::new(42);
+        for _ in 0..10 {
+            let v = 6;
+            let p: Vec<f32> = g.dist(v).iter().map(|&x| x as f32).collect();
+            let q: Vec<f32> = g.dist(v).iter().map(|&x| x as f32).collect();
+            let tv: f64 = p
+                .iter()
+                .zip(&q)
+                .map(|(&a, &b)| ((a - b) as f64).abs())
+                .sum::<f64>()
+                / 2.0;
+            let mut rng = Pcg64::new(g.u64());
+            let n = 60_000;
+            let mut acc = 0u64;
+            for _ in 0..n {
+                let x = sample(&p, rng.next_f32());
+                if couple(&p, &q, x, &mut rng).0 {
+                    acc += 1;
+                }
+            }
+            let rate = acc as f64 / n as f64;
+            assert!(
+                (rate - (1.0 - tv)).abs() < 0.015,
+                "rate {rate:.4} vs 1-TV {:.4}",
+                1.0 - tv
+            );
+        }
+    }
+
+    #[test]
+    fn nll_clamps_zero() {
+        assert!(nll_of(&[0.0, 1.0], 0).is_finite());
+        assert!((nll_of(&[0.5, 0.5], 0) - 0.5f64.ln().abs()).abs() < 1e-6);
+    }
+}

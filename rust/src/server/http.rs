@@ -1,0 +1,297 @@
+//! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`.
+//!
+//! Request path (DESIGN.md §5):
+//!   client → POST /generate → Router (affinity) → Batcher → worker engine
+//!   → maximal-coupling decode → JSON response.
+//!
+//! The protocol subset is deliberately small: one request per connection
+//! (`Connection: close`), Content-Length bodies only — enough for any HTTP
+//! client and for the screening example's load generator.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Config, Method};
+use crate::coordinator::{Metrics, Router};
+use crate::decode::GenConfig;
+use crate::kmer::KmerSet;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the acceptor loose
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the HTTP server on `cfg.port` (0 = ephemeral). Non-blocking:
+/// returns a handle; the acceptor runs on its own thread.
+pub fn serve(cfg: &Config, router: Arc<Router>, metrics: Arc<Metrics>) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let defaults = cfg.gen.clone();
+    let thread = std::thread::Builder::new()
+        .name("specmer-http".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(4);
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let router = Arc::clone(&router);
+                let metrics = Arc::clone(&metrics);
+                let defaults = defaults.clone();
+                pool.execute(move || {
+                    let _ = handle_conn(stream, &router, &metrics, &defaults);
+                });
+            }
+        })?;
+    Ok(ServerHandle { addr, stop, thread: Some(thread) })
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    router: &Router,
+    metrics: &Metrics,
+    defaults: &GenConfig,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).to_string();
+
+    let (status, response) = match (method.as_str(), path.as_str()) {
+        ("GET", "/health") => ("200 OK", Json::obj(vec![("status", Json::str("ok"))]).to_string()),
+        ("GET", "/metrics") => ("200 OK", metrics.text_dump()),
+        ("POST", "/generate") => match handle_generate(&body, router, defaults) {
+            Ok(j) => ("200 OK", j.to_string()),
+            Err(e) => (
+                "400 Bad Request",
+                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
+            ),
+        },
+        _ => ("404 Not Found", Json::obj(vec![("error", Json::str("not found"))]).to_string()),
+    };
+
+    let content_type = if path == "/metrics" { "text/plain" } else { "application/json" };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{response}",
+        response.len()
+    )?;
+    Ok(())
+}
+
+/// POST /generate body:
+/// {"protein":"GFP","method":"specmer","n":2,"c":3,"gamma":5,
+///  "temp":1.0,"top_p":0.95,"k":"1,3","seed":0}
+fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<Json> {
+    let req = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
+    let protein = req
+        .get("protein")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| anyhow!("missing 'protein'"))?
+        .to_string();
+    let method = Method::parse(req.get("method").and_then(|m| m.as_str()).unwrap_or("specmer"))
+        .ok_or_else(|| anyhow!("bad 'method'"))?;
+    let n = req.get("n").and_then(|v| v.as_usize()).unwrap_or(1).clamp(1, 512);
+
+    let mut cfg = defaults.clone();
+    if let Some(v) = req.get("c").and_then(|v| v.as_usize()) {
+        cfg.c = v;
+    }
+    if let Some(v) = req.get("gamma").and_then(|v| v.as_usize()) {
+        cfg.gamma = v;
+    }
+    if let Some(v) = req.get("temp").and_then(|v| v.as_f64()) {
+        cfg.temp = v as f32;
+    }
+    if let Some(v) = req.get("top_p").and_then(|v| v.as_f64()) {
+        cfg.top_p = v as f32;
+    }
+    if let Some(v) = req.get("seed").and_then(|v| v.as_f64()) {
+        cfg.seed = v as u64;
+    }
+    if let Some(k) = req.get("k").and_then(|v| v.as_str()) {
+        cfg.kset = KmerSet::parse(k).ok_or_else(|| anyhow!("bad 'k'"))?;
+    }
+
+    let (tx, rx) = channel();
+    for i in 0..n {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64);
+        router.submit(&protein, method, c, tx.clone());
+    }
+    drop(tx);
+
+    let mut seqs = Vec::new();
+    let mut accept = Vec::new();
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    let mut decode_s = 0.0f64;
+    for resp in rx.iter() {
+        match resp.result {
+            Ok(out) => {
+                seqs.push(Json::str(&crate::tokenizer::decode(&out.tokens)));
+                accept.push(out.acceptance_ratio());
+                tokens += out.new_tokens();
+                decode_s += resp.decode_seconds;
+                latencies.push(resp.latency);
+            }
+            Err(e) => return Err(anyhow!("generation failed: {e:#}")),
+        }
+    }
+    Ok(Json::obj(vec![
+        ("protein", Json::str(&protein)),
+        ("method", Json::str(method.label())),
+        ("sequences", Json::Arr(seqs)),
+        ("acceptance_ratio", Json::num(crate::util::stats::mean(&accept))),
+        ("tokens", Json::num(tokens as f64)),
+        (
+            "tokens_per_second",
+            Json::num(if decode_s > 0.0 { tokens as f64 / decode_s } else { 0.0 }),
+        ),
+        ("latency_p50", Json::num(crate::util::stats::percentile(&latencies, 50.0))),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{synthetic_engine, GenEngine};
+    use crate::coordinator::Scheduler;
+    use crate::coordinator::scheduler::EngineFactory;
+
+    fn start() -> (ServerHandle, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let sched = Arc::new(Scheduler::start(
+            1,
+            4,
+            Duration::from_millis(1),
+            factory,
+            Arc::clone(&metrics),
+        ));
+        let router = Arc::new(Router::new(sched));
+        let cfg = Config { port: 0, ..Default::default() };
+        let h = serve(&cfg, router, Arc::clone(&metrics)).unwrap();
+        (h, metrics)
+    }
+
+    fn request(addr: std::net::SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+        request(
+            addr,
+            &format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    #[test]
+    fn health_and_metrics() {
+        let (h, _m) = start();
+        let r = request(h.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK") && r.contains("\"ok\""));
+        let r = request(h.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("specmer_requests_total"));
+        h.stop();
+    }
+
+    #[test]
+    fn generate_endpoint_end_to_end() {
+        let (h, m) = start();
+        let r = post(
+            h.addr,
+            "/generate",
+            r#"{"protein":"SynA","method":"specmer","n":2,"c":3,"gamma":5,"seed":1}"#,
+        );
+        assert!(r.contains("200 OK"), "{r}");
+        let body = r.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.get("sequences").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("tokens").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        h.stop();
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let (h, _m) = start();
+        let r = post(h.addr, "/generate", "{notjson");
+        assert!(r.contains("400"));
+        let r = post(h.addr, "/generate", r#"{"method":"specmer"}"#);
+        assert!(r.contains("400") && r.contains("protein"));
+        let r = request(h.addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("404"));
+        h.stop();
+    }
+
+    #[test]
+    fn unknown_protein_is_400() {
+        let (h, _m) = start();
+        let r = post(h.addr, "/generate", r#"{"protein":"Zzz","n":1}"#);
+        assert!(r.contains("400"), "{r}");
+        h.stop();
+    }
+}

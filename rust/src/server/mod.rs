@@ -1,0 +1,6 @@
+//! Minimal HTTP/1.1 server (std::net + thread pool) exposing the
+//! coordinator: POST /generate, GET /metrics, GET /health, GET /families.
+
+pub mod http;
+
+pub use http::{serve, ServerHandle};

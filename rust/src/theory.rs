@@ -1,0 +1,156 @@
+//! Analytic results from the paper: Eq. 1 wall-time speedup, Prop. 4.4
+//! batch-and-select acceptance, and the Appendix-A bounds (Eq. 7–12).
+//! The `bounds` experiment compares these curves against measured values.
+
+/// Eq. 1: expected wall-time speedup of speculative decoding with draft
+/// length γ, acceptance ratio α and cost coefficient c_e = M_p / M_q.
+///
+///   S(γ) = (1 - α^{γ+1}) / ((1 - α)(γ c_e + 1))
+pub fn speedup_eq1(alpha: f64, gamma: usize, c_e: f64) -> f64 {
+    if (1.0 - alpha).abs() < 1e-12 {
+        // limit α -> 1: numerator -> γ+1
+        return (gamma as f64 + 1.0) / (gamma as f64 * c_e + 1.0);
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / ((1.0 - alpha) * (gamma as f64 * c_e + 1.0))
+}
+
+/// Prop. 4.4: expected batch-and-select acceptance
+///   E[A*] = 1 - (1-α)^m - ε
+pub fn batch_acceptance(alpha: f64, m: usize, epsilon: f64) -> f64 {
+    (1.0 - (1.0 - alpha).powi(m as i32) - epsilon).clamp(0.0, 1.0)
+}
+
+/// Invert Prop. 4.4: misranking loss ε from measured acceptances.
+///   ε = 1 - (1-α)^m - E[A*]
+pub fn epsilon_from_acceptance(alpha_vanilla: f64, m: usize, measured: f64) -> f64 {
+    1.0 - (1.0 - alpha_vanilla).powi(m as i32) - measured
+}
+
+/// Definition A.1 / Eq. 8: batched cost coefficient c_e = ξ·M_p / M_q,
+/// with ξ ∈ [1, c) the batch-generation overhead factor.
+pub fn cost_coefficient(m_p: f64, m_q: f64, xi: f64) -> f64 {
+    xi * m_p / m_q
+}
+
+/// Eq. 9 (Prop. A.2): expected batched wall-time speedup
+///   S(γ) ≈ (1 - α^{γ+1}) / ((1-α)(c_e + 1))
+///
+/// NOTE: the c_e here absorbs the whole draft phase (ξ·γ drafting steps +
+/// k-mer scoring) relative to one verify; see `c_draft`.
+pub fn speedup_eq9(alpha: f64, gamma: usize, c_draft: f64) -> f64 {
+    if (1.0 - alpha).abs() < 1e-12 {
+        return (gamma as f64 + 1.0) / (c_draft + 1.0);
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / ((1.0 - alpha) * (c_draft + 1.0))
+}
+
+/// Eq. 12 (Cor. A.3): serial-drafting wall-time speedup — candidates drawn
+/// one at a time instead of batched:
+///   S(γ) ≈ (1 - α^{γ+1}) / ((1-α)((c/ξ)·c_e + 1))
+pub fn speedup_eq12(alpha: f64, gamma: usize, c: usize, xi: f64, c_e: f64) -> f64 {
+    let denom_cost = (c as f64 / xi) * c_e + 1.0;
+    if (1.0 - alpha).abs() < 1e-12 {
+        return (gamma as f64 + 1.0) / denom_cost;
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / ((1.0 - alpha) * denom_cost)
+}
+
+/// c_draft(γ) = (ξ·T_p(γ) + T_k) / T_q(γ) — the measured-time form used to
+/// evaluate Eq. 9 from profiled per-phase timings.
+pub fn c_draft(t_draft_batched: f64, t_kmer: f64, t_verify: f64) -> f64 {
+    (t_draft_batched + t_kmer) / t_verify
+}
+
+/// Expected committed tokens per round: accepted prefix length + 1
+/// (correction or bonus) for i.i.d. per-token acceptance α.
+///   E[L'] = (1 - α^{γ+1}) / (1 - α)
+pub fn expected_block_progress(alpha: f64, gamma: usize) -> f64 {
+    if (1.0 - alpha).abs() < 1e-12 {
+        return gamma as f64 + 1.0;
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn eq1_known_values() {
+        // α=0, draft never helps: S = 1/(γ c_e + 1) < 1
+        assert!((speedup_eq1(0.0, 5, 0.2) - 0.5).abs() < 1e-12);
+        // α=1 limit: S = (γ+1)/(γ c_e + 1)
+        assert!((speedup_eq1(1.0, 5, 0.2) - 3.0).abs() < 1e-9);
+        // paper-ish regime: α=0.9, γ=5, c_e=0.2 -> ≈ 2.34x
+        let s = speedup_eq1(0.9, 5, 0.2);
+        assert!(s > 2.0 && s < 2.5, "{s}");
+    }
+
+    #[test]
+    fn eq1_monotone_in_alpha() {
+        check("S(γ) increasing in α", 100, |g| {
+            let a = g.f64_in(0.0..0.99);
+            let b = g.f64_in(0.0..0.99);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let gamma = g.usize_in(1..16);
+            let ce = g.f64_in(0.01..1.0);
+            assert!(speedup_eq1(lo, gamma, ce) <= speedup_eq1(hi, gamma, ce) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn prop44_acceptance_increases_with_m() {
+        let a1 = batch_acceptance(0.8, 1, 0.0);
+        let a3 = batch_acceptance(0.8, 3, 0.0);
+        let a5 = batch_acceptance(0.8, 5, 0.0);
+        assert!((a1 - 0.8).abs() < 1e-12);
+        assert!(a3 > a1 && a5 > a3);
+        assert!(a5 <= 1.0);
+    }
+
+    #[test]
+    fn epsilon_inverts_prop44() {
+        check("epsilon roundtrip", 100, |g| {
+            let alpha = g.f64_in(0.1..0.95);
+            let m = g.usize_in(1..9);
+            let eps = g.f64_in(0.0..0.05);
+            let measured = 1.0 - (1.0 - alpha).powi(m as i32) - eps;
+            let back = epsilon_from_acceptance(alpha, m, measured);
+            assert!((back - eps).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn eq9_vs_eq12_serial_is_slower() {
+        // serial drafting of c candidates costs more than batched
+        for &c in &[2usize, 3, 5] {
+            let xi = 1.25;
+            let ce = 0.2;
+            let batched = speedup_eq9(0.85, 5, c_draft(xi * ce * 5.0, 0.0, 1.0));
+            let serial = speedup_eq12(0.85, 5, c, xi, ce * 5.0);
+            assert!(batched > serial, "c={c}: batched {batched} serial {serial}");
+        }
+    }
+
+    #[test]
+    fn block_progress_bounds() {
+        check("1 <= E[L'] <= γ+1", 100, |g| {
+            let alpha = g.f64_in(0.0..1.0);
+            let gamma = g.usize_in(1..16);
+            let e = expected_block_progress(alpha, gamma);
+            assert!(e >= 1.0 - 1e-9 && e <= gamma as f64 + 1.0 + 1e-9, "{e}");
+        });
+    }
+
+    #[test]
+    fn speedup_exceeds_one_in_paper_regime() {
+        // the paper's measured α≈0.85–0.94 with c_e≈0.4 (their S:M ratio
+        // 74:31 tokens/s) and γ=5..15 must predict >1x
+        for &alpha in &[0.85, 0.9, 0.94] {
+            for &gamma in &[5usize, 10, 15] {
+                assert!(speedup_eq1(alpha, gamma, 0.1) > 1.0);
+            }
+        }
+    }
+}

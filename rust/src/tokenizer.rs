@@ -1,0 +1,122 @@
+//! Amino-acid tokenizer — mirrors `python/compile/vocab.py` exactly.
+//!
+//! Layout (V = 32): 0 PAD, 1 BOS, 2 EOS (ProGen2's stop token is literally
+//! "2", see paper App. B.3), 3..=22 the 20 canonical amino acids in
+//! alphabetical letter order, 23 X (unknown), 24..=31 reserved.
+
+pub const PAD: u8 = 0;
+pub const BOS: u8 = 1;
+pub const EOS: u8 = 2;
+pub const AA_OFFSET: u8 = 3;
+pub const X: u8 = 23;
+pub const VOCAB: usize = 32;
+pub const N_AA: usize = 20;
+
+/// Canonical amino-acid letters, index i ↔ token AA_OFFSET + i.
+pub const AA: [u8; N_AA] = *b"ACDEFGHIKLMNPQRSTVWY";
+
+/// Token id of an amino-acid letter ('-'/'.' are alignment gaps → None;
+/// anything unrecognized → X).
+#[inline]
+pub fn tok_of(ch: u8) -> Option<u8> {
+    let up = ch.to_ascii_uppercase();
+    if up == b'-' || up == b'.' {
+        return None;
+    }
+    match AA.iter().position(|&a| a == up) {
+        Some(i) => Some(AA_OFFSET + i as u8),
+        None => Some(X),
+    }
+}
+
+/// Letter of a token id (specials → None).
+#[inline]
+pub fn chr_of(tok: u8) -> Option<u8> {
+    if tok == X {
+        Some(b'X')
+    } else if (AA_OFFSET..AA_OFFSET + N_AA as u8).contains(&tok) {
+        Some(AA[(tok - AA_OFFSET) as usize])
+    } else {
+        None
+    }
+}
+
+/// Is this token an amino acid (incl. X)?
+#[inline]
+pub fn is_residue(tok: u8) -> bool {
+    (AA_OFFSET..=X).contains(&tok)
+}
+
+/// Encode a protein string (gaps dropped) — no BOS/EOS added.
+pub fn encode(seq: &str) -> Vec<u8> {
+    seq.bytes().filter_map(tok_of).collect()
+}
+
+/// Encode with BOS prefix and EOS suffix.
+pub fn encode_with_specials(seq: &str) -> Vec<u8> {
+    let mut v = Vec::with_capacity(seq.len() + 2);
+    v.push(BOS);
+    v.extend(encode(seq));
+    v.push(EOS);
+    v
+}
+
+/// Decode token ids to a protein string (specials skipped).
+pub fn decode(toks: &[u8]) -> String {
+    toks.iter()
+        .filter_map(|&t| chr_of(t))
+        .map(|b| b as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = "MKTAYIAKQRQISFVKSHFSRQLEERLGLIEVQ";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn gaps_dropped() {
+        assert_eq!(decode(&encode("A-C.D")), "ACD");
+    }
+
+    #[test]
+    fn unknown_maps_to_x() {
+        assert_eq!(encode("B")[0], X);
+        assert_eq!(decode(&[X]), "X");
+    }
+
+    #[test]
+    fn specials() {
+        let v = encode_with_specials("AC");
+        assert_eq!(v[0], BOS);
+        assert_eq!(*v.last().unwrap(), EOS);
+        assert_eq!(decode(&v), "AC");
+    }
+
+    #[test]
+    fn vocab_ids_match_python() {
+        // spot-check the contract with python/compile/vocab.py
+        assert_eq!(tok_of(b'A'), Some(3));
+        assert_eq!(tok_of(b'C'), Some(4));
+        assert_eq!(tok_of(b'Y'), Some(22));
+        assert_eq!(tok_of(b'a'), Some(3)); // case-insensitive
+    }
+
+    #[test]
+    fn all_residues_roundtrip() {
+        for (i, &a) in AA.iter().enumerate() {
+            let t = AA_OFFSET + i as u8;
+            assert_eq!(tok_of(a), Some(t));
+            assert_eq!(chr_of(t), Some(a));
+            assert!(is_residue(t));
+        }
+        assert!(!is_residue(PAD));
+        assert!(!is_residue(BOS));
+        assert!(!is_residue(EOS));
+    }
+}

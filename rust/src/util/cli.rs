@@ -1,0 +1,181 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Boolean flags must be declared up front (`KNOWN_FLAGS` or the `flags`
+//! argument of [`Args::parse_with_flags`]) so `--fast out.fa` parses as a
+//! flag plus a positional rather than `fast=out.fa`.
+//! Typed getters parse on access and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("option --{0}: cannot parse '{1}' as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+/// Boolean flags recognized by the specmer CLI and benches.
+pub const KNOWN_FLAGS: &[&str] = &[
+    "fast", "full", "verbose", "quiet", "help", "force", "cpu-ref", "hlo-kmer",
+    "no-kv-cache", "boundary", "fused",
+];
+
+impl Args {
+    /// Parse an iterator of raw arguments (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CliError> {
+        Args::parse_with_flags(raw, KNOWN_FLAGS)
+    }
+
+    /// Parse with an explicit set of boolean flag names.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "u64")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), v.into(), "f64")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--c 1,3,5`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(name.into(), v.into(), "usize list"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError::BadValue(name.into(), v.into(), "f64 list"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("generate --protein GFP --n 20 --fast out.fa");
+        assert_eq!(a.positional, vec!["generate", "out.fa"]);
+        assert_eq!(a.get("protein"), Some("GFP"));
+        assert_eq!(a.usize_or("n", 1).unwrap(), 20);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--temp=0.7 --k=1,3,5");
+        assert_eq!(a.f64_or("temp", 1.0).unwrap(), 0.7);
+        assert_eq!(a.usize_list_or("k", &[]).unwrap(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("gamma", 5).unwrap(), 5);
+        assert_eq!(a.f64_or("p", 0.95).unwrap(), 0.95);
+        assert!(!a.flag("full"));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Infrastructure substrates built in-repo (the offline image has no
+//! tokio/clap/serde/rand/criterion — see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0 quiet, 1 info, 2 debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+/// `info!`-style logging without a logger crate.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(1) {
+            eprintln!("[specmer] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[specmer:debug] {}", format!($($arg)*));
+        }
+    };
+}

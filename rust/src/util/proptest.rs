@@ -1,0 +1,162 @@
+//! Miniature property-based testing framework (proptest is unavailable
+//! offline). Provides seeded generators and a `check` runner with
+//! linear-search shrinking for the common case (Vec inputs shrink by
+//! halving, scalars shrink toward zero).
+//!
+//! Usage:
+//! ```ignore
+//! use specmer::util::proptest::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.vec_f64(0..50, -1e3..1e3);
+//!     let b = g.vec_f64(0..50, -1e3..1e3);
+//!     prop_assert(..);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Generator handed to property closures.
+pub struct Gen {
+    rng: Pcg64,
+    /// shrink factor in (0,1]; 1.0 = full-size cases.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed), size: 1.0 }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        let span = ((r.end - r.start) as f64 * self.size).ceil().max(1.0) as usize;
+        r.start + self.rng.below(span.min(r.end - r.start))
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.next_f64() * (r.end - r.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(vals.clone())).collect()
+    }
+
+    /// Probability vector of the given length (sums to 1, all >= 0).
+    pub fn dist(&mut self, len: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..len).map(|_| self.rng.next_f64() + 1e-9).collect();
+        let s: f64 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    /// Sparse probability vector: some entries exactly zero (top-p-like).
+    pub fn sparse_dist(&mut self, len: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..len)
+            .map(|_| if self.rng.next_f64() < 0.4 { 0.0 } else { self.rng.next_f64() })
+            .collect();
+        if v.iter().all(|&x| x == 0.0) {
+            v[self.rng.below(len)] = 1.0;
+        }
+        let s: f64 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. On failure, retries the failing seed
+/// at smaller sizes to report a (roughly) minimal case, then panics with the
+/// seed so the case can be replayed.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: u64, prop: F) {
+    let base = 0x5EC_4E5u64;
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let failed = {
+            let mut g = Gen::new(seed);
+            catch_unwind(AssertUnwindSafe(|| prop(&mut g))).is_err()
+        };
+        if failed {
+            // try to shrink: replay same seed with smaller size factors
+            let mut min_size = 1.0;
+            for &s in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen::new(seed);
+                g.size = s;
+                if catch_unwind(AssertUnwindSafe(|| prop(&mut g))).is_err() {
+                    min_size = s;
+                }
+            }
+            // run once more un-caught so the original assertion surfaces
+            let mut g = Gen::new(seed);
+            g.size = min_size;
+            eprintln!("property '{name}' failed: seed={seed:#x} size={min_size}");
+            prop(&mut g);
+            unreachable!("property must fail when replayed");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs is non-negative", 50, |g| {
+            let x = g.f64_in(-100.0..100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn fails_false_property() {
+        check("all vecs shorter than 3", 200, |g| {
+            let v = g.vec_f64(0..10, 0.0..1.0);
+            assert!(v.len() < 3);
+        });
+    }
+
+    #[test]
+    fn dist_sums_to_one() {
+        check("dist normalized", 100, |g| {
+            let d = g.dist(32);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn sparse_dist_valid() {
+        check("sparse dist normalized", 100, |g| {
+            let d = g.sparse_dist(16);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        });
+    }
+}

@@ -1,0 +1,193 @@
+//! Descriptive statistics helpers used by metrics and the experiment harness.
+
+/// Mean of a slice (0.0 if empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (n-1 denominator; 0.0 for n < 2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// `mean ± std` string with fixed precision, as in the paper's tables.
+pub fn pm(xs: &[f64], prec: usize) -> String {
+    format!("{:.p$} ± {:.p$}", mean(xs), std(xs), p = prec)
+}
+
+/// Linear-interpolated percentile, q in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Mean of the k smallest values (paper's "top-k NLL": lower is better).
+pub fn mean_smallest(xs: &[f64], k: usize) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.truncate(k.max(1).min(s.len()));
+    mean(&s)
+}
+
+/// Mean of the k largest values (paper's "top-k pLDDT": higher is better).
+pub fn mean_largest(xs: &[f64], k: usize) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s.truncate(k.max(1).min(s.len()));
+    mean(&s)
+}
+
+/// Std of the k smallest values.
+pub fn std_smallest(xs: &[f64], k: usize) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.truncate(k.max(1).min(s.len()));
+    std(&s)
+}
+
+/// Std of the k largest values.
+pub fn std_largest(xs: &[f64], k: usize) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s.truncate(k.max(1).min(s.len()));
+    std(&s)
+}
+
+/// Fixed-bin histogram over [lo, hi]; values outside clamp to edge bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if xs.is_empty() || hi <= lo {
+        return h;
+    }
+    for &x in xs {
+        let t = ((x - lo) / (hi - lo) * bins as f64).floor();
+        let b = (t.max(0.0) as usize).min(bins - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        num += (xs[i] - mx) * (ys[i] - my);
+        dx += (xs[i] - mx).powi(2);
+        dy += (ys[i] - my).powi(2);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+/// Online mean/std accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_selectors() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert!((mean_smallest(&xs, 2) - 1.5).abs() < 1e-12);
+        assert!((mean_largest(&xs, 2) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-1.0, 0.1, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
+        // -1 clamps into bin 0; 0.5 lands exactly on the boundary -> bin 1;
+        // 2.0 clamps into bin 1.
+        assert_eq!(h, vec![2, 3]);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-size thread pool (tokio is unavailable offline; the serving layer
+//! runs on blocking threads + channels, which at our request rates is
+//! indistinguishable from an async runtime and much simpler to reason about).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A classic shared-queue thread pool with graceful shutdown on drop.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inf = Arc::clone(&in_flight);
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                inf.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Submit a job; never blocks.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yield) until the queue drains. Test/benchmark helper.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over `items` with `n` threads, preserving order of results.
+pub fn parallel_map<T, R, F>(n: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let items: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let results = Arc::new(Mutex::new(Vec::<(usize, R)>::new()));
+    {
+        let pool = ThreadPool::new(n.max(1));
+        for (i, item) in items {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            pool.execute(move || {
+                let r = f(item);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+        pool.wait_idle();
+    }
+    let mut out = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(4, (0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn in_flight_reaches_zero() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            pool.execute(|| {});
+        }
+        pool.wait_idle();
+        assert_eq!(pool.in_flight(), 0);
+    }
+}

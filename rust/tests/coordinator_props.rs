@@ -1,0 +1,179 @@
+//! Property-based tests on coordinator and decode invariants (run with the
+//! in-repo mini-proptest; no artifacts needed — synthetic backends).
+
+use specmer::config::Method;
+use specmer::coordinator::engine::synthetic_engine;
+use specmer::coordinator::GenEngine;
+use specmer::decode::{speculative_generate, target_only_generate, GenConfig};
+use specmer::kmer::{score_block, select_best, KmerSet, KmerTable};
+use specmer::msa::simulate::generate_family;
+use specmer::runtime::cpu_ref::CpuModel;
+use specmer::runtime::ModelBackend;
+use specmer::sampling;
+use specmer::tokenizer::{BOS, EOS};
+use specmer::util::proptest::{check, Gen};
+
+fn rand_cfg(g: &mut Gen) -> GenConfig {
+    GenConfig {
+        gamma: *g.choose(&[2usize, 5, 8]),
+        c: *g.choose(&[1usize, 2, 3, 5]),
+        temp: *g.choose(&[0.7f32, 1.0, 1.4]),
+        top_p: *g.choose(&[0.8f32, 0.95, 1.0]),
+        kset: KmerSet::new(g.bool(), g.bool(), true),
+        max_len: g.usize_in(16..64),
+        seed: g.u64(),
+        kmer_boundary: g.bool(),
+        probe_rate: 0.0,
+        ar_chunk: *g.choose(&[0usize, 1, 4]),
+    }
+}
+
+/// Token accounting holds for every configuration: committed tokens =
+/// accepted + rejected + bonus, and the context is preserved verbatim.
+#[test]
+fn prop_spec_decode_accounting() {
+    let d = CpuModel::synthetic(2, 16, 2, 96, 71);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 72);
+    let (_p, msa) = generate_family("P", 40, 20, 5);
+    let table = KmerTable::build(&msa);
+    check("spec decode accounting", 25, |g| {
+        let cfg = rand_cfg(g);
+        let ctx = vec![BOS, 5, 9, 13];
+        let out = speculative_generate(&d, &t, Some(&table), &ctx, &cfg).unwrap();
+        assert_eq!(&out.tokens[..4], &ctx[..]);
+        assert_eq!(
+            (out.tokens.len() - 4) as u64,
+            out.accepted + out.rejected + out.bonus
+        );
+        assert!(out.tokens.len() <= cfg.max_len.min(96 - cfg.gamma));
+        // EOS, if present, terminates the sequence
+        if let Some(p) = out.tokens.iter().position(|&x| x == EOS) {
+            assert_eq!(p, out.tokens.len() - 1);
+        }
+        // at most one rejection per round
+        assert!(out.rejected <= out.rounds);
+        // draft/target dispatch accounting
+        assert_eq!(out.draft_calls, out.rounds);
+        assert_eq!(out.target_calls, out.rounds);
+    });
+}
+
+/// Every committed token lies in the target's adjusted support — the
+/// correctness core of maximal coupling (accepted, corrected and bonus
+/// tokens are all target-nucleus members).
+#[test]
+fn prop_committed_tokens_in_target_support() {
+    let d = CpuModel::synthetic(2, 16, 2, 96, 81);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 82);
+    check("tokens in target nucleus", 12, |g| {
+        let cfg = rand_cfg(g);
+        let ctx = vec![BOS, 7, 11];
+        let out = speculative_generate(&d, &t, None, &ctx, &cfg).unwrap();
+        let logits = t.forward_logits(&out.tokens);
+        for i in ctx.len()..out.tokens.len() {
+            let dist = sampling::adjust_dist(&logits[i - 1], cfg.temp, cfg.top_p);
+            assert!(
+                dist[out.tokens[i] as usize] > 0.0,
+                "position {i} token outside nucleus (T={} p={})",
+                cfg.temp,
+                cfg.top_p
+            );
+        }
+    });
+}
+
+/// Target-only generation always accepts and never calls a draft.
+#[test]
+fn prop_target_only_pure() {
+    let t = CpuModel::synthetic(2, 16, 2, 96, 91);
+    check("target-only accepts everything", 20, |g| {
+        let cfg = rand_cfg(g);
+        let out = target_only_generate(&t, &[BOS, 5], &cfg).unwrap();
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.acceptance_ratio(), 1.0);
+        assert!(out.tokens.len() <= cfg.max_len.max(2));
+    });
+}
+
+/// select_best is consistent with score_block and invariant to candidate
+/// duplication (first index wins ties).
+#[test]
+fn prop_selection_consistent() {
+    check("selection argmax consistent", 30, |g| {
+        let (_p, msa) = generate_family("P", 30, 10, g.u64());
+        let table = KmerTable::build(&msa);
+        let ks = KmerSet::new(g.bool(), g.bool(), g.bool());
+        let ks = if !(ks.k1 || ks.k3 || ks.k5) { KmerSet::new(true, false, false) } else { ks };
+        let n = g.usize_in(1..6);
+        let cands: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                (0..g.usize_in(1..10))
+                    .map(|_| 3 + g.rng().below(20) as u8)
+                    .collect()
+            })
+            .collect();
+        let sel = select_best(&table, &cands, ks);
+        let best = score_block(&table, &cands[sel], ks);
+        for c in &cands {
+            assert!(score_block(&table, c, ks) <= best + 1e-6);
+        }
+        // duplicating the winner later must not change the selection
+        let mut dup = cands.clone();
+        dup.push(cands[sel].clone());
+        assert_eq!(select_best(&table, &dup, ks), sel);
+    });
+}
+
+/// The engine's generate is deterministic in seed for every method, and
+/// different seeds explore (at least sometimes) different sequences.
+#[test]
+fn prop_engine_determinism() {
+    let eng = synthetic_engine(33);
+    check("engine determinism", 8, |g| {
+        let cfg = rand_cfg(g);
+        for m in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
+            let a = eng.generate("SynA", m, &cfg).unwrap();
+            let b = eng.generate("SynA", m, &cfg).unwrap();
+            assert_eq!(a.tokens, b.tokens, "{m:?} nondeterministic");
+        }
+    });
+}
+
+/// Prefill cache adapter: memoized prefill must be bit-identical for
+/// arbitrary contexts.
+#[test]
+fn prop_prefill_memo_exact() {
+    use specmer::runtime::prefill_cache::PrefillCached;
+    let m = PrefillCached::new(CpuModel::synthetic(2, 16, 2, 64, 44));
+    check("prefill memo exact", 20, |g| {
+        let n = g.usize_in(2..20);
+        let ctx: Vec<u8> = std::iter::once(BOS)
+            .chain((0..n).map(|_| 3 + g.rng().below(20) as u8))
+            .collect();
+        let a = m.prefill(&ctx).unwrap();
+        let b = m.prefill(&ctx).unwrap();
+        assert_eq!(a.data, b.data);
+    });
+}
+
+/// Acceptance ratio responds to model agreement: a draft equal to the
+/// target accepts everything; an independent draft accepts less.
+#[test]
+fn prop_alpha_orders_with_agreement() {
+    let t = CpuModel::synthetic(2, 16, 2, 96, 55);
+    let same = CpuModel::synthetic(2, 16, 2, 96, 55);
+    let other = CpuModel::synthetic(2, 16, 2, 96, 56);
+    let mut same_acc = 0.0;
+    let mut other_acc = 0.0;
+    for seed in 0..6 {
+        let cfg = GenConfig { gamma: 5, c: 1, max_len: 60, seed, ..Default::default() };
+        same_acc += speculative_generate(&same, &t, None, &[BOS, 5], &cfg)
+            .unwrap()
+            .acceptance_ratio();
+        other_acc += speculative_generate(&other, &t, None, &[BOS, 5], &cfg)
+            .unwrap()
+            .acceptance_ratio();
+    }
+    assert!(same_acc > other_acc, "agreement must raise acceptance");
+    assert!((same_acc / 6.0) > 0.999);
+}

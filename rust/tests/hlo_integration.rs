@@ -1,0 +1,204 @@
+//! Integration tests over the AOT artifacts: HLO programs loaded through
+//! PJRT must agree with the pure-Rust reference model and compose into
+//! working decode engines.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (pass
+//! trivially with a notice) when artifacts are missing so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use specmer::config::Method;
+use specmer::coordinator::{load_families, Engine, GenEngine};
+use specmer::decode::{speculative_generate, target_only_generate, GenConfig};
+use specmer::kmer::{KmerSet, KmerTable};
+use specmer::params;
+use specmer::runtime::{CpuModel, HloKmerScorer, HloModel, ModelBackend, Runtime};
+use specmer::tokenizer::BOS;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var("SPECMER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts"));
+    if dir.join("manifest.json").exists() && dir.join("hlo").is_dir() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn load(name: &str, dir: &PathBuf) -> (Rc<Runtime>, HloModel, CpuModel) {
+    let rt = Rc::new(Runtime::new(dir).expect("runtime"));
+    let manifest = params::load_manifest(dir).unwrap();
+    let hlo = HloModel::load(Rc::clone(&rt), dir, name).expect("hlo model");
+    let mp = params::load_model(dir, name).unwrap();
+    let cpu = CpuModel::from_params(&mp, manifest.vocab).unwrap();
+    (rt, hlo, cpu)
+}
+
+fn ctx() -> Vec<u8> {
+    let mut c = vec![BOS];
+    c.extend(specmer::tokenizer::encode("MKTAYIAKQR"));
+    c
+}
+
+#[test]
+fn hlo_score_matches_cpu_ref() {
+    let Some(dir) = artifacts() else { return };
+    let (_rt, hlo, cpu) = load("target", &dir);
+    let toks = ctx();
+    let a = hlo.score(&toks).unwrap();
+    let b = cpu.score(&toks).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() < 2e-3 * (1.0 + y.abs()),
+            "nll mismatch at {i}: hlo={x} cpu={y}"
+        );
+    }
+}
+
+#[test]
+fn hlo_verify_matches_cpu_ref() {
+    let Some(dir) = artifacts() else { return };
+    let (_rt, hlo, cpu) = load("target", &dir);
+    let toks = ctx();
+    let mut hc = hlo.prefill(&toks).unwrap();
+    let mut cc = cpu.prefill(&toks).unwrap();
+    let block: Vec<u8> = {
+        let mut v = vec![*toks.last().unwrap()];
+        v.extend(specmer::tokenizer::encode("VLLKA"));
+        v
+    };
+    let hv = hlo.verify(&mut hc, &block, toks.len() - 1, 1.0, 0.95).unwrap();
+    let cv = cpu.verify(&mut cc, &block, toks.len() - 1, 1.0, 0.95).unwrap();
+    assert_eq!(hv.dists.len(), cv.dists.len());
+    for (i, (dh, dc)) in hv.dists.iter().zip(&cv.dists).enumerate() {
+        for (t, (x, y)) in dh.iter().zip(dc).enumerate() {
+            assert!((x - y).abs() < 5e-3, "pos {i} tok {t}: hlo={x} cpu={y}");
+        }
+    }
+}
+
+#[test]
+fn hlo_generate_matches_cpu_ref_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let (_rt, hlo, cpu) = load("draft", &dir);
+    let toks = ctx();
+    let mut hc = hlo.prefill(&toks).unwrap();
+    let mut cc = cpu.prefill(&toks).unwrap();
+    let u: Vec<f32> = (0..3 * 5).map(|i| ((i * 37 + 11) % 100) as f32 / 100.0).collect();
+    let feed = vec![*toks.last().unwrap()];
+    let hb = hlo
+        .generate(&mut hc, &feed, toks.len() - 1, 3, 5, &u, 1.0, 0.95)
+        .unwrap();
+    let cb = cpu
+        .generate(&mut cc, &feed, toks.len() - 1, 3, 5, &u, 1.0, 0.95)
+        .unwrap();
+    // identical uniforms + (near-)identical dists => identical token paths
+    assert_eq!(hb.tokens, cb.tokens, "sampled candidate tokens diverged");
+    for (ci, (dh, dc)) in hb.dists.iter().zip(&cb.dists).enumerate() {
+        for (gi, (ph, pc)) in dh.iter().zip(dc).enumerate() {
+            for t in 0..ph.len() {
+                assert!(
+                    (ph[t] - pc[t]).abs() < 5e-3,
+                    "cand {ci} step {gi} tok {t}: {} vs {}",
+                    ph[t],
+                    pc[t]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_kmer_kernel_matches_rust_scorer() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let fams = load_families(&dir).unwrap();
+    let table = &fams[0].table;
+    let scorer = HloKmerScorer::new(rt);
+    let cands: Vec<Vec<u8>> = vec![
+        specmer::tokenizer::encode("MKTAY"),
+        specmer::tokenizer::encode("AAAAA"),
+        specmer::tokenizer::encode("VLKGE"),
+    ];
+    let ks = KmerSet::new(true, true, true);
+    let hlo_scores = scorer.score(table, &cands, 5, ks).unwrap();
+    for (i, cand) in cands.iter().enumerate() {
+        let rust = specmer::kmer::score_block(table, cand, ks);
+        assert!(
+            (hlo_scores[i] - rust).abs() < 1e-5,
+            "cand {i}: pallas={} rust={rust}",
+            hlo_scores[i]
+        );
+    }
+}
+
+#[test]
+fn end_to_end_speculative_decode_on_hlo() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let target = HloModel::load(rt, &dir, "target").unwrap();
+    let fams = load_families(&dir).unwrap();
+    let fam = &fams[0];
+    let cfg = GenConfig { gamma: 5, c: 3, max_len: 60, seed: 7, ..Default::default() };
+    let out = speculative_generate(&draft, &target, Some(&fam.table), &fam.context, &cfg).unwrap();
+    assert!(out.tokens.len() > fam.context.len());
+    assert!(out.accepted > 0, "trained draft/target should agree sometimes: {out:?}");
+    let alpha = out.acceptance_ratio();
+    assert!(alpha > 0.3, "suspiciously low acceptance {alpha}");
+    // accounting invariant
+    assert_eq!(
+        (out.tokens.len() - out.context_len) as u64,
+        out.accepted + out.rejected + out.bonus
+    );
+}
+
+#[test]
+fn end_to_end_target_only_on_hlo() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let target = HloModel::load(rt, &dir, "target").unwrap();
+    let cfg = GenConfig { max_len: 50, seed: 3, ..Default::default() };
+    let out = target_only_generate(&target, &ctx(), &cfg).unwrap();
+    assert!(out.tokens.len() > 11);
+    assert_eq!(out.rejected, 0);
+}
+
+#[test]
+fn full_engine_all_methods_on_artifacts() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let target = HloModel::load(rt, &dir, "target").unwrap();
+    let fams = load_families(&dir).unwrap();
+    let engine = Engine::new(draft, target, fams);
+    let cfg = GenConfig { gamma: 5, c: 3, max_len: 50, seed: 1, ..Default::default() };
+    for m in [Method::TargetOnly, Method::DraftOnly, Method::Speculative, Method::SpecMer] {
+        let protein = engine.families()[0].meta.name.clone();
+        let out = engine.generate(&protein, m, &cfg).unwrap();
+        assert!(out.tokens.len() > out.context_len, "{m:?}");
+    }
+}
+
+#[test]
+fn cross_protein_tables_change_specmer_nll() {
+    // App. C sanity at integration level: using another family's k-mer
+    // table must not crash and (weak check) changes candidate selection.
+    let Some(dir) = artifacts() else { return };
+    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let target = HloModel::load(rt, &dir, "target").unwrap();
+    let fams = load_families(&dir).unwrap();
+    assert!(fams.len() >= 2);
+    let fam = &fams[0];
+    let other: KmerTable = fams[1].table.clone();
+    let cfg = GenConfig { gamma: 5, c: 5, max_len: 50, seed: 21, ..Default::default() };
+    let a = speculative_generate(&draft, &target, Some(&fam.table), &fam.context, &cfg).unwrap();
+    let b = speculative_generate(&draft, &target, Some(&other), &fam.context, &cfg).unwrap();
+    assert!(a.tokens.len() > 2 && b.tokens.len() > 2);
+}

@@ -1,0 +1,194 @@
+//! Integration tests over the full serving stack (scheduler + router +
+//! batcher + HTTP) using the synthetic engine — plus, when artifacts are
+//! present, one end-to-end pass over the real PJRT engine.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specmer::config::{Config, Method};
+use specmer::coordinator::engine::synthetic_engine;
+use specmer::coordinator::{EngineFactory, GenEngine, Metrics, Router, Scheduler};
+use specmer::decode::GenConfig;
+use specmer::util::json::Json;
+
+fn stack(workers: usize) -> (Arc<Router>, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let factory: EngineFactory =
+        Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+    let sched = Arc::new(Scheduler::start(
+        workers,
+        4,
+        Duration::from_millis(1),
+        factory,
+        Arc::clone(&metrics),
+    ));
+    (Arc::new(Router::new(sched)), metrics)
+}
+
+#[test]
+fn burst_of_mixed_requests_completes() {
+    let (router, metrics) = stack(2);
+    let (tx, rx) = channel();
+    let n = 24;
+    for i in 0..n {
+        let protein = if i % 2 == 0 { "SynA" } else { "SynB" };
+        let method = match i % 3 {
+            0 => Method::TargetOnly,
+            1 => Method::Speculative,
+            _ => Method::SpecMer,
+        };
+        router.submit(
+            protein,
+            method,
+            GenConfig { max_len: 24, seed: i as u64, c: 2, ..Default::default() },
+            tx.clone(),
+        );
+    }
+    drop(tx);
+    let mut ok = 0;
+    for resp in rx.iter() {
+        assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+        assert!(resp.latency >= resp.decode_seconds * 0.99);
+        ok += 1;
+    }
+    assert_eq!(ok, n);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), n as u64);
+    assert!(metrics.tokens_per_second() > 0.0);
+    assert!(metrics.latency_percentile(99.0) >= metrics.latency_percentile(50.0));
+}
+
+#[test]
+fn same_seed_same_sequence_across_workers() {
+    // routing must not change results: generation is engine-deterministic
+    let (router, _m) = stack(3);
+    let collect = |router: &Router| -> Vec<String> {
+        let (tx, rx) = channel();
+        for _ in 0..3 {
+            router.submit(
+                "SynA",
+                Method::SpecMer,
+                GenConfig { max_len: 24, seed: 9, c: 3, ..Default::default() },
+                tx.clone(),
+            );
+        }
+        drop(tx);
+        rx.iter().map(|r| r.sequence()).collect()
+    };
+    let seqs = collect(&router);
+    assert!(seqs.iter().all(|s| s == &seqs[0]), "{seqs:?}");
+}
+
+#[test]
+fn http_server_full_roundtrip_with_metrics() {
+    let (router, metrics) = stack(1);
+    let cfg = Config { port: 0, ..Default::default() };
+    let handle = specmer::server::serve(&cfg, router, Arc::clone(&metrics)).unwrap();
+
+    let post = |path: &str, body: &str| -> String {
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        write!(
+            s,
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+    let r = post(
+        "/generate",
+        r#"{"protein":"SynB","method":"speculative","n":3,"gamma":5,"seed":4}"#,
+    );
+    assert!(r.contains("200 OK"), "{r}");
+    let j = Json::parse(r.split("\r\n\r\n").nth(1).unwrap()).unwrap();
+    let seqs = j.get("sequences").unwrap().as_arr().unwrap();
+    assert_eq!(seqs.len(), 3);
+    for s in seqs {
+        assert!(!s.as_str().unwrap().is_empty());
+    }
+    // metrics reflect the traffic
+    let mut s = TcpStream::connect(handle.addr).unwrap();
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert!(out.contains("specmer_completed_total 3"), "{out}");
+    handle.stop();
+}
+
+#[test]
+fn throughput_under_sustained_load() {
+    // smoke the batcher's grouping: many same-protein requests should
+    // complete without starving the odd-protein ones submitted after.
+    let (router, _m) = stack(1);
+    let (tx, rx) = channel();
+    for i in 0..10 {
+        router.submit(
+            "SynA",
+            Method::Speculative,
+            GenConfig { max_len: 20, seed: i, ..Default::default() },
+            tx.clone(),
+        );
+    }
+    router.submit(
+        "SynB",
+        Method::Speculative,
+        GenConfig { max_len: 20, seed: 99, ..Default::default() },
+        tx.clone(),
+    );
+    drop(tx);
+    let t0 = Instant::now();
+    let mut got_b = false;
+    let mut count = 0;
+    for resp in rx.iter() {
+        count += 1;
+        if resp.protein == "SynB" {
+            got_b = true;
+        }
+    }
+    assert_eq!(count, 11);
+    assert!(got_b, "cross-protein request starved");
+    assert!(t0.elapsed() < Duration::from_secs(60));
+}
+
+#[test]
+fn real_artifacts_through_the_stack() {
+    // End-to-end over PJRT when artifacts exist (skips otherwise).
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let metrics = Arc::new(Metrics::new());
+    let cfg = Config { artifacts: dir, ..Default::default() };
+    let cfg2 = cfg.clone();
+    let factory: EngineFactory = Arc::new(move || specmer::coordinator::build_engine(&cfg2));
+    let sched = Arc::new(Scheduler::start(
+        1,
+        4,
+        Duration::from_millis(1),
+        factory,
+        Arc::clone(&metrics),
+    ));
+    let router = Router::new(sched);
+    let (tx, rx) = channel();
+    for i in 0..3u64 {
+        router.submit(
+            "GB1",
+            Method::SpecMer,
+            GenConfig { max_len: 60, seed: i, c: 3, ..Default::default() },
+            tx.clone(),
+        );
+    }
+    drop(tx);
+    for resp in rx.iter() {
+        let out = resp.result.expect("generation over PJRT");
+        assert!(out.new_tokens() > 0);
+        assert!(out.acceptance_ratio() > 0.2);
+    }
+    assert!(metrics.acceptance_ratio() > 0.2);
+}
