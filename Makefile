@@ -1,0 +1,27 @@
+# SpecMER repo verification entry points.
+#
+#   make verify       tier-1 (release build + tests) plus a bench_micro
+#                     smoke run, which writes machine-readable round
+#                     latencies to rust/results/bench_micro.json (cargo
+#                     runs bench binaries from the package root) — perf
+#                     regressions on the draft/verify hot paths show up
+#                     there, not just in prose.
+#   make bench-micro  full (non-smoke) micro benches.
+
+CARGO ?= cargo
+
+.PHONY: verify build test bench-smoke bench-micro
+
+verify: build test bench-smoke
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench-smoke:
+	SPECMER_BENCH_SMOKE=1 $(CARGO) bench --bench bench_micro
+
+bench-micro:
+	$(CARGO) bench --bench bench_micro

@@ -1,16 +1,26 @@
 //! Micro-benchmarks of the L3 hot paths (criterion is unavailable offline;
 //! this is a minimal warmup+measure harness with median-of-runs output).
 //! These feed EXPERIMENTS.md §Perf.
+//!
+//! Besides the scalar kernels, this bench measures a full **draft round**
+//! (`generate` at c=3, γ=5) and a **verify round** on a synthetic model,
+//! both for the batched branched-cache runtime and for the seed
+//! clone-per-candidate implementation (`cpu_ref::reference`), and emits the
+//! numbers machine-readably to `results/bench_micro.json`. Set
+//! `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
 use std::time::Instant;
 
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
+use specmer::runtime::cpu_ref::{reference, CpuModel};
+use specmer::runtime::ModelBackend;
 use specmer::sampling;
+use specmer::util::json::Json;
 use specmer::util::rng::Pcg64;
 
-fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
-    // warmup
+/// Median ns/iter over 5 measured runs (after warmup).
+fn bench_ns<F: FnMut()>(iters: u64, mut f: F) -> f64 {
     for _ in 0..iters / 10 + 1 {
         f();
     }
@@ -23,10 +33,21 @@ fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
         runs.push(t0.elapsed().as_nanos() as f64 / iters as f64);
     }
     runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    println!("{name:<40} {:>12.1} ns/iter (median of 5)", runs[2]);
+    runs[2]
+}
+
+fn bench<F: FnMut()>(name: &str, iters: u64, f: F) -> f64 {
+    let ns = bench_ns(iters, f);
+    println!("{name:<44} {ns:>12.1} ns/iter (median of 5)");
+    ns
 }
 
 fn main() {
+    let smoke = std::env::var("SPECMER_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let scale: u64 = if smoke { 100 } else { 1 };
+
     let (_prof, msa) = generate_family("bench", 120, 200, 1);
     let table = KmerTable::build(&msa);
     let mut rng = Pcg64::new(7);
@@ -35,36 +56,102 @@ fn main() {
     let ks = KmerSet::new(true, true, true);
 
     println!("== L3 hot-path micro-benchmarks ==");
-    bench("kmer score_block gamma=5 k=1,3,5", 200_000, || {
+    bench("kmer score_block gamma=5 k=1,3,5", 200_000 / scale, || {
         std::hint::black_box(score_block(&table, &block5, ks));
     });
-    bench("kmer score_block gamma=15 k=1,3,5", 200_000, || {
+    bench("kmer score_block gamma=15 k=1,3,5", 200_000 / scale, || {
         std::hint::black_box(score_block(&table, &block15, ks));
     });
 
     let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
-    bench("adjust_dist (softmax+nucleus) V=32", 100_000, || {
+    bench("adjust_dist (softmax+nucleus) V=32", 100_000 / scale, || {
         std::hint::black_box(sampling::adjust_dist(&logits, 0.9, 0.95));
     });
 
     let p = sampling::adjust_dist(&logits, 1.0, 1.0);
     let q = sampling::adjust_dist(&logits, 0.8, 0.95);
     let mut crng = Pcg64::new(3);
-    bench("maximal coupling step", 100_000, || {
+    bench("maximal coupling step", 100_000 / scale, || {
         let x = sampling::sample(&p, crng.next_f32());
         std::hint::black_box(sampling::couple(&p, &q, x, &mut crng));
     });
 
-    bench("residual distribution V=32", 100_000, || {
+    bench("residual distribution V=32", 100_000 / scale, || {
         std::hint::black_box(sampling::residual(&p, &q));
     });
 
     let mut trng = Pcg64::new(9);
-    bench("pcg64 next_f32", 1_000_000, || {
+    bench("pcg64 next_f32", 1_000_000 / scale, || {
         std::hint::black_box(trng.next_f32());
     });
 
-    bench("kmer table build (120x200 MSA)", 20, || {
+    bench("kmer table build (120x200 MSA)", (20 / scale).max(2), || {
         std::hint::black_box(KmerTable::build(&msa));
     });
+
+    // ---- draft / verify round benches: batched vs seed implementation ----
+    // Synthetic but non-trivial model: 4 layers, d=64, 4 heads, S=256. The
+    // seed path clones the full [L,2,H,S,Dh] cache (512 KiB) per candidate
+    // per round and runs scalar mat-vecs; the batched path branches the
+    // cache and runs blocked GEMMs.
+    println!("== draft/verify round benches (c=3, γ=5, synthetic d=64) ==");
+    let m = CpuModel::synthetic(4, 64, 4, 256, 42);
+    let ctx: Vec<u8> = {
+        let mut v = vec![1u8];
+        v.extend((0..40).map(|i| 3 + ((i * 11) % 20) as u8));
+        v
+    };
+    let pos = ctx.len() - 1;
+    let feed = vec![ctx[pos]];
+    let (c, gamma) = (3usize, 5usize);
+    let u: Vec<f32> = (0..c * gamma).map(|i| (i as f32 * 0.137) % 1.0).collect();
+    let round_iters: u64 = if smoke { 3 } else { 30 };
+
+    let mut cache_new = m.prefill(&ctx).unwrap();
+    let draft_new = bench("draft round c=3 γ=5 (batched/branched)", round_iters, || {
+        std::hint::black_box(
+            m.generate(&mut cache_new, &feed, pos, c, gamma, &u, 1.0, 0.95).unwrap(),
+        );
+    });
+
+    let mut cache_ref = m.prefill(&ctx).unwrap();
+    let draft_seed = bench("draft round c=3 γ=5 (seed clone-per-cand)", round_iters, || {
+        std::hint::black_box(reference::generate(
+            &m, &mut cache_ref, &feed, pos, c, gamma, &u, 1.0, 0.95,
+        ));
+    });
+
+    let vtoks: Vec<u8> = vec![ctx[pos], 4, 7, 9, 12, 15];
+    let mut cache_v = m.prefill(&ctx).unwrap();
+    let verify_new = bench("verify round γ=5 (batched)", round_iters, || {
+        std::hint::black_box(m.verify(&mut cache_v, &vtoks, pos, 1.0, 0.95).unwrap());
+    });
+
+    let mut cache_vr = m.prefill(&ctx).unwrap();
+    let verify_seed = bench("verify round γ=5 (seed per-position)", round_iters, || {
+        std::hint::black_box(reference::verify(&m, &mut cache_vr, &vtoks, pos, 1.0, 0.95));
+    });
+
+    let draft_speedup = draft_seed / draft_new;
+    let verify_speedup = verify_seed / verify_new;
+    println!("draft-round speedup vs seed:  {draft_speedup:.2}x");
+    println!("verify-round speedup vs seed: {verify_speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("model", Json::str("synthetic L4 d64 h4 S256")),
+        ("c", Json::num(c as f64)),
+        ("gamma", Json::num(gamma as f64)),
+        ("draft_round_ns_batched", Json::num(draft_new)),
+        ("draft_round_ns_seed", Json::num(draft_seed)),
+        ("draft_round_speedup_c3_g5", Json::num(draft_speedup)),
+        ("verify_round_ns_batched", Json::num(verify_new)),
+        ("verify_round_ns_seed", Json::num(verify_seed)),
+        ("verify_round_speedup_g5", Json::num(verify_speedup)),
+        ("smoke", Json::Bool(smoke)),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    match std::fs::write("results/bench_micro.json", format!("{json}\n")) {
+        Ok(()) => println!("[bench_micro] wrote results/bench_micro.json"),
+        Err(e) => eprintln!("[bench_micro] could not write results/bench_micro.json: {e}"),
+    }
 }

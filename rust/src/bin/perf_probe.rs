@@ -1,12 +1,31 @@
+//! Latency probe for the serving hot paths: prefill, verify rounds and
+//! draft rounds. Uses the HLO/PJRT backend when artifacts (and a PJRT
+//! runtime) are available, otherwise probes the pure-Rust batched backend
+//! against the seed reference implementation so the tool always runs.
+
 use std::rc::Rc;
-use specmer::runtime::*;
-use specmer::tokenizer::BOS;
 use std::time::Instant;
+
+use specmer::runtime::cpu_ref::{reference, CpuModel};
+use specmer::runtime::{HloModel, ModelBackend, Runtime};
+use specmer::tokenizer::BOS;
+
 fn main() {
-    let dir = std::path::PathBuf::from("artifacts");
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
-    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
-    let target = HloModel::load(Rc::clone(&rt), &dir, "target").unwrap();
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPECMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    match Runtime::new(&dir) {
+        Ok(rt) => hlo_probe(Rc::new(rt), &dir),
+        Err(e) => {
+            eprintln!("[perf_probe] no PJRT/artifacts ({e}); probing the cpu_ref backend");
+            cpu_probe();
+        }
+    }
+}
+
+fn hlo_probe(rt: Rc<Runtime>, dir: &std::path::Path) {
+    let draft = HloModel::load(Rc::clone(&rt), dir, "draft").unwrap();
+    let target = HloModel::load(Rc::clone(&rt), dir, "target").unwrap();
     let mut ctx = vec![BOS];
     ctx.extend(specmer::tokenizer::encode("MKTAYIAKQR"));
     // prefill timing
@@ -14,33 +33,95 @@ fn main() {
     let mut tc = target.prefill(&ctx).unwrap();
     println!("target prefill (compile excl?) first: {:?}", t0.elapsed());
     let t0 = Instant::now();
-    for _ in 0..20 { let _ = target.prefill(&ctx).unwrap(); }
-    println!("target prefill: {:.2} ms", t0.elapsed().as_secs_f64()*50.0);
+    for _ in 0..20 {
+        let _ = target.prefill(&ctx).unwrap();
+    }
+    println!("target prefill: {:.2} ms", t0.elapsed().as_secs_f64() * 50.0);
     let mut dc = draft.prefill(&ctx).unwrap();
     // verify timing
-    let toks: Vec<u8> = vec![ctx[10], 5,6,7,8,9];
+    let toks: Vec<u8> = vec![ctx[10], 5, 6, 7, 8, 9];
     let _ = target.verify(&mut tc, &toks, 10, 1.0, 0.95).unwrap();
     let t0 = Instant::now();
-    for _ in 0..50 { let _ = target.verify(&mut tc, &toks, 10, 1.0, 0.95).unwrap(); }
-    println!("target verify g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    for _ in 0..50 {
+        let _ = target.verify(&mut tc, &toks, 10, 1.0, 0.95).unwrap();
+    }
+    println!("target verify g5: {:.2} ms", t0.elapsed().as_secs_f64() * 20.0);
     // draft generate timing c=3 g=5
-    let u: Vec<f32> = (0..15).map(|i| (i as f32*0.3)%1.0).collect();
+    let u: Vec<f32> = (0..15).map(|i| (i as f32 * 0.3) % 1.0).collect();
     let feed = vec![ctx[10]];
     let _ = draft.generate(&mut dc, &feed, 10, 3, 5, &u, 1.0, 0.95).unwrap();
     let t0 = Instant::now();
-    for _ in 0..50 { let _ = draft.generate(&mut dc, &feed, 10, 3, 5, &u, 1.0, 0.95).unwrap(); }
-    println!("draft generate c3 g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    for _ in 0..50 {
+        let _ = draft.generate(&mut dc, &feed, 10, 3, 5, &u, 1.0, 0.95).unwrap();
+    }
+    println!("draft generate c3 g5: {:.2} ms", t0.elapsed().as_secs_f64() * 20.0);
     let _ = draft.generate(&mut dc, &feed, 10, 1, 5, &u[..5], 1.0, 0.95).unwrap();
     let t0 = Instant::now();
-    for _ in 0..50 { let _ = draft.generate(&mut dc, &feed, 10, 1, 5, &u[..5], 1.0, 0.95).unwrap(); }
-    println!("draft generate c1 g5: {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    for _ in 0..50 {
+        let _ = draft.generate(&mut dc, &feed, 10, 1, 5, &u[..5], 1.0, 0.95).unwrap();
+    }
+    println!("draft generate c1 g5: {:.2} ms", t0.elapsed().as_secs_f64() * 20.0);
     // target generate chunk16
     let t0 = Instant::now();
-    let u16: Vec<f32> = (0..16).map(|i| (i as f32*0.17)%1.0).collect();
-    for _ in 0..50 { let _ = target.generate(&mut tc, &feed, 10, 1, 16, &u16, 1.0, 0.95).unwrap(); }
-    println!("target generate c1 g16 (baseline chunk): {:.2} ms", t0.elapsed().as_secs_f64()*20.0);
+    let u16: Vec<f32> = (0..16).map(|i| (i as f32 * 0.17) % 1.0).collect();
+    for _ in 0..50 {
+        let _ = target.generate(&mut tc, &feed, 10, 1, 16, &u16, 1.0, 0.95).unwrap();
+    }
+    println!("target generate c1 g16 (baseline chunk): {:.2} ms", t0.elapsed().as_secs_f64() * 20.0);
     // score
     let t0 = Instant::now();
-    for _ in 0..20 { let _ = target.score(&ctx).unwrap(); }
-    println!("target score (full 192): {:.2} ms", t0.elapsed().as_secs_f64()*50.0);
+    for _ in 0..20 {
+        let _ = target.score(&ctx).unwrap();
+    }
+    println!("target score (full 192): {:.2} ms", t0.elapsed().as_secs_f64() * 50.0);
+}
+
+/// Pure-Rust probe: batched/branched runtime vs the seed implementation,
+/// per round, on a synthetic model (L=4, d=64, H=4, S=256).
+fn cpu_probe() {
+    let m = CpuModel::synthetic(4, 64, 4, 256, 42);
+    let mut ctx = vec![BOS];
+    ctx.extend((0..40).map(|i| 3 + ((i * 11) % 20) as u8));
+    let pos = ctx.len() - 1;
+    let feed = vec![ctx[pos]];
+    let u: Vec<f32> = (0..15).map(|i| (i as f32 * 0.3) % 1.0).collect();
+    let n = 20u32;
+
+    // prefill
+    let t0 = Instant::now();
+    let mut cache = m.prefill(&ctx).unwrap();
+    for _ in 1..n {
+        let _ = m.prefill(&ctx).unwrap();
+    }
+    println!("cpu prefill ({} toks):        {:.3} ms", ctx.len() - 1, ms_per(t0, n));
+
+    // draft rounds: batched vs seed
+    let _ = m.generate(&mut cache, &feed, pos, 3, 5, &u, 1.0, 0.95).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _ = m.generate(&mut cache, &feed, pos, 3, 5, &u, 1.0, 0.95).unwrap();
+    }
+    let batched = ms_per(t0, n);
+    println!("cpu draft round c3 γ5:        {batched:.3} ms (batched/branched)");
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _ = reference::generate(&m, &mut cache, &feed, pos, 3, 5, &u, 1.0, 0.95);
+    }
+    let seed = ms_per(t0, n);
+    println!("cpu draft round c3 γ5:        {seed:.3} ms (seed clone-per-cand)");
+    println!("cpu draft round speedup:      {:.2}x", seed / batched);
+
+    // verify round
+    let vtoks: Vec<u8> = vec![ctx[pos], 4, 7, 9, 12, 15];
+    let _ = m.verify(&mut cache, &vtoks, pos, 1.0, 0.95).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _ = m.verify(&mut cache, &vtoks, pos, 1.0, 0.95).unwrap();
+    }
+    println!("cpu verify round γ5:          {:.3} ms", ms_per(t0, n));
+}
+
+fn ms_per(t0: Instant, iters: u32) -> f64 {
+    t0.elapsed().as_secs_f64() * 1000.0 / iters as f64
 }

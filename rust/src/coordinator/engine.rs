@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::{Config, Method};
 use crate::decode::{self, GenConfig, GenOutput};
@@ -46,7 +46,7 @@ impl Family {
 /// Load every family from artifacts (families.json + msa/*.a2m).
 pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
     let metas = msa::load_families(&artifacts.join("families.json"))
-        .with_context(|| format!("loading families.json from {}", artifacts.display()))?;
+        .map_err(|e| anyhow!("loading families.json from {}: {e:#}", artifacts.display()))?;
     metas
         .into_iter()
         .map(|meta| {

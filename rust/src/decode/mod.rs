@@ -34,6 +34,40 @@ pub struct GenConfig {
     pub ar_chunk: usize,
 }
 
+impl GenConfig {
+    /// Validate (gamma, c, max_len) against a context and the backend pair's
+    /// capability (`model_cap` = min of the models' maxlens) before any
+    /// cache is touched. Catches configurations that previously blew up
+    /// deep inside the engines — most notably `gamma >= model_cap`, which
+    /// underflowed the decode hard cap and panicked.
+    pub fn validate(&self, context_len: usize, model_cap: usize) -> anyhow::Result<()> {
+        if self.c < 1 {
+            anyhow::bail!("GenConfig: c must be >= 1 (got {})", self.c);
+        }
+        if self.gamma < 1 {
+            anyhow::bail!("GenConfig: gamma must be >= 1 (got {})", self.gamma);
+        }
+        if self.gamma >= model_cap {
+            anyhow::bail!(
+                "GenConfig: gamma {} leaves no room to draft a block under model maxlen {model_cap}",
+                self.gamma
+            );
+        }
+        if context_len == 0 {
+            anyhow::bail!("GenConfig: context must be non-empty");
+        }
+        let effective = self.max_len.min(model_cap);
+        if context_len >= effective {
+            anyhow::bail!(
+                "GenConfig: context length {context_len} >= effective max_len {effective} \
+                 (max_len {} capped by model maxlen {model_cap})",
+                self.max_len
+            );
+        }
+        Ok(())
+    }
+}
+
 impl Default for GenConfig {
     fn default() -> GenConfig {
         GenConfig {

@@ -34,9 +34,9 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
     context: &[u8],
     cfg: &GenConfig,
 ) -> Result<GenOutput> {
-    let max_len = cfg.max_len.min(target.maxlen()).min(draft.maxlen());
-    assert!(!context.is_empty() && context.len() < max_len);
-    assert!(cfg.c >= 1);
+    let model_cap = target.maxlen().min(draft.maxlen());
+    cfg.validate(context.len(), model_cap)?;
+    let max_len = cfg.max_len.min(model_cap);
     let gamma = cfg.gamma;
 
     let mut rng = Pcg64::new(cfg.seed);
@@ -52,8 +52,9 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
     // target convention: exactly one unfed committed token before verify
 
     // KV slots are written through committed+gamma each round (draft feed +
-    // block, verify block); stop while a full block still fits.
-    let hard_cap = target.maxlen().min(draft.maxlen()) - gamma;
+    // block, verify block); stop while a full block still fits. Cannot
+    // underflow: validate() guarantees gamma < model_cap.
+    let hard_cap = model_cap - gamma;
     while out.tokens.len() < max_len.min(hard_cap) && *out.tokens.last().unwrap() != EOS {
         out.rounds += 1;
         let committed = out.tokens.len();
@@ -78,17 +79,11 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
         let sel = match (table, cfg.c) {
             (Some(t), c) if c > 1 => {
                 if cfg.kmer_boundary {
-                    let tail = &out.tokens[committed.saturating_sub(4)..];
-                    let mut best = 0;
-                    let mut best_s = f32::NEG_INFINITY;
-                    for (i, cand) in block.tokens.iter().enumerate() {
-                        let s = score::score_block_with_context(t, tail, cand, cfg.kset);
-                        if s > best_s {
-                            best_s = s;
-                            best = i;
-                        }
-                    }
-                    best
+                    // context tail sized by the largest active k, not a
+                    // hardcoded constant
+                    let tail_len = cfg.kset.kmax() - 1;
+                    let tail = &out.tokens[committed.saturating_sub(tail_len)..];
+                    score::select_best_with_context(t, tail, &block.tokens, cfg.kset)
                 } else {
                     score::select_best(t, &block.tokens, cfg.kset)
                 }
@@ -327,6 +322,41 @@ mod tests {
                 "token at {i} outside target nucleus"
             );
         }
+    }
+
+    #[test]
+    fn invalid_configs_error_instead_of_panicking() {
+        let (d, t) = models(); // maxlen 64
+        // gamma >= model maxlen used to underflow the hard cap and panic
+        let mut big = cfg(1, 64, 3);
+        big.max_len = 200;
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5, 9], &big).is_err());
+        let mut huge = cfg(1, 100, 3);
+        huge.max_len = 200;
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5, 9], &huge).is_err());
+        // degenerate c / gamma
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &cfg(0, 5, 3)).is_err());
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &cfg(2, 0, 3)).is_err());
+        // empty / oversized context
+        assert!(speculative_generate(&d, &t, None, &[], &cfg(2, 5, 3)).is_err());
+        let mut small = cfg(2, 5, 3);
+        small.max_len = 3;
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5, 9], &small).is_err());
+    }
+
+    #[test]
+    fn boundary_selection_derives_tail_from_kset() {
+        // with only k=3 active the boundary tail is 2 tokens; selection must
+        // agree with scoring every candidate against that exact tail
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let (d, t) = models();
+        let mut c = cfg(3, 5, 19);
+        c.kset = KmerSet::new(false, true, false);
+        c.kmer_boundary = true;
+        let out = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
+        assert!(out.tokens.len() > 3);
+        assert!(out.rounds > 0);
     }
 
     #[test]

@@ -19,7 +19,12 @@ pub fn target_only_generate<T: ModelBackend>(
     cfg: &GenConfig,
 ) -> Result<GenOutput> {
     let max_len = cfg.max_len.min(target.maxlen());
-    assert!(!context.is_empty() && context.len() < max_len);
+    if context.is_empty() || context.len() >= max_len {
+        anyhow::bail!(
+            "target-only: context length {} must be in 1..effective max_len {max_len}",
+            context.len()
+        );
+    }
     let supported = target.supported_gamma();
     // ar_chunk = 1 is the paper-faithful stepwise baseline (one dispatch
     // per token); 0 picks the largest exported scan-fused chunk.

@@ -4,5 +4,7 @@
 pub mod score;
 pub mod table;
 
-pub use score::{score_block, score_block_with_context, select_best, KmerSet};
+pub use score::{
+    score_block, score_block_with_context, select_best, select_best_with_context, KmerSet,
+};
 pub use table::KmerTable;

@@ -57,6 +57,17 @@ impl KmerSet {
         parts.join(",")
     }
 
+    /// Largest active k (context windows need `kmax() - 1` tail tokens).
+    pub fn kmax(&self) -> usize {
+        if self.k5 {
+            5
+        } else if self.k3 {
+            3
+        } else {
+            1
+        }
+    }
+
     /// The paper's four swept configurations.
     pub const SWEEP: [KmerSet; 4] = [
         KmerSet::new(true, false, false),
@@ -102,8 +113,7 @@ pub fn score_block_with_context(
     if block.is_empty() {
         return 0.0;
     }
-    let kmax = if ks.k5 { 5 } else if ks.k3 { 3 } else { 1 };
-    let tail_n = (kmax - 1).min(context_tail.len());
+    let tail_n = (ks.kmax() - 1).min(context_tail.len());
     let mut ext = Vec::with_capacity(tail_n + block.len());
     ext.extend_from_slice(&context_tail[context_tail.len() - tail_n..]);
     ext.extend_from_slice(block);
@@ -127,12 +137,27 @@ pub fn score_block_with_context(
 }
 
 /// Index of the best-scoring candidate (ties → lowest index, so c=1
-/// degenerates to vanilla speculative decoding exactly).
+/// degenerates to vanilla speculative decoding exactly). With an empty
+/// context tail, boundary scoring reduces exactly to [`score_block`], so
+/// this is the boundary-free special case of the selection loop.
 pub fn select_best(table: &KmerTable, candidates: &[Vec<u8>], ks: KmerSet) -> usize {
+    select_best_with_context(table, &[], candidates, ks)
+}
+
+/// [`select_best`] with boundary-spanning windows: each candidate is scored
+/// by [`score_block_with_context`] against the same committed-context tail
+/// (pass at least the last `kmax() - 1` committed tokens; longer tails are
+/// trimmed). Ties → lowest index, matching `select_best`.
+pub fn select_best_with_context(
+    table: &KmerTable,
+    context_tail: &[u8],
+    candidates: &[Vec<u8>],
+    ks: KmerSet,
+) -> usize {
     let mut best = 0usize;
     let mut best_s = f32::NEG_INFINITY;
     for (i, c) in candidates.iter().enumerate() {
-        let s = score_block(table, c, ks);
+        let s = score_block_with_context(table, context_tail, c, ks);
         if s > best_s {
             best_s = s;
             best = i;
@@ -221,5 +246,46 @@ mod tests {
         let t = table();
         let cands = vec![encode("ACDEF"), encode("ACDEF")];
         assert_eq!(select_best(&t, &cands, KmerSet::new(true, true, true)), 0);
+    }
+
+    #[test]
+    fn kmax_reflects_largest_active_k() {
+        assert_eq!(KmerSet::new(true, false, false).kmax(), 1);
+        assert_eq!(KmerSet::new(true, true, false).kmax(), 3);
+        assert_eq!(KmerSet::new(false, true, false).kmax(), 3);
+        assert_eq!(KmerSet::new(true, true, true).kmax(), 5);
+    }
+
+    #[test]
+    fn select_best_with_context_matches_per_candidate_scoring() {
+        let t = table();
+        let ks = KmerSet::new(false, true, false);
+        let tail = encode("ACD");
+        let cands = vec![encode("EF"), encode("WW"), encode("CD")];
+        let sel = select_best_with_context(&t, &tail, &cands, ks);
+        let mut best = 0;
+        let mut best_s = f32::NEG_INFINITY;
+        for (i, c) in cands.iter().enumerate() {
+            let s = score_block_with_context(&t, &tail, c, ks);
+            if s > best_s {
+                best_s = s;
+                best = i;
+            }
+        }
+        assert_eq!(sel, best);
+        // boundary windows make "EF" (completing ACD|EF motifs) win over junk
+        assert_eq!(sel, 0);
+    }
+
+    #[test]
+    fn context_scoring_uses_only_kmax_tail() {
+        // a longer-than-needed tail must score identically to the trimmed
+        // one (the decode engine passes exactly kmax-1 tokens)
+        let t = table();
+        let ks = KmerSet::new(true, true, true);
+        let block = encode("EF");
+        let long = score_block_with_context(&t, &encode("AACDEF")[..], &block, ks);
+        let trimmed = score_block_with_context(&t, &encode("CDEF")[..], &block, ks);
+        assert_eq!(long, trimmed);
     }
 }

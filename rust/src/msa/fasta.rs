@@ -25,18 +25,32 @@ impl Record {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FastaError {
-    #[error("io error reading {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
-    #[error("malformed fasta at line {0}: sequence data before first header")]
+    Io { path: String, source: std::io::Error },
     DataBeforeHeader(usize),
-    #[error("empty fasta file")]
     Empty,
+}
+
+impl std::fmt::Display for FastaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FastaError::Io { path, source } => write!(f, "io error reading {path}: {source}"),
+            FastaError::DataBeforeHeader(line) => {
+                write!(f, "malformed fasta at line {line}: sequence data before first header")
+            }
+            FastaError::Empty => write!(f, "empty fasta file"),
+        }
+    }
+}
+
+impl std::error::Error for FastaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FastaError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// Parse FASTA/A2M text into records.

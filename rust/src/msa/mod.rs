@@ -21,12 +21,34 @@ pub struct Msa {
     pub rows: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MsaError {
-    #[error(transparent)]
-    Fasta(#[from] fasta::FastaError),
-    #[error("msa {0} has no rows")]
+    Fasta(fasta::FastaError),
     NoRows(String),
+}
+
+impl std::fmt::Display for MsaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MsaError::Fasta(e) => write!(f, "{e}"),
+            MsaError::NoRows(name) => write!(f, "msa {name} has no rows"),
+        }
+    }
+}
+
+impl std::error::Error for MsaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MsaError::Fasta(e) => std::error::Error::source(e),
+            MsaError::NoRows(_) => None,
+        }
+    }
+}
+
+impl From<fasta::FastaError> for MsaError {
+    fn from(e: fasta::FastaError) -> MsaError {
+        MsaError::Fasta(e)
+    }
 }
 
 impl Msa {

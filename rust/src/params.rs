@@ -10,16 +10,40 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParamsError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest: {0}")]
+    Io(std::io::Error),
     Manifest(String),
-    #[error("params_{model}.bin has {got} floats, manifest says {want}")]
     SizeMismatch { model: String, got: usize, want: usize },
-    #[error("unknown tensor {0}")]
     UnknownTensor(String),
+}
+
+impl std::fmt::Display for ParamsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamsError::Io(e) => write!(f, "io: {e}"),
+            ParamsError::Manifest(m) => write!(f, "manifest: {m}"),
+            ParamsError::SizeMismatch { model, got, want } => {
+                write!(f, "params_{model}.bin has {got} floats, manifest says {want}")
+            }
+            ParamsError::UnknownTensor(t) => write!(f, "unknown tensor {t}"),
+        }
+    }
+}
+
+impl std::error::Error for ParamsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ParamsError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ParamsError {
+    fn from(e: std::io::Error) -> ParamsError {
+        ParamsError::Io(e)
+    }
 }
 
 /// Hyperparameters of one exported checkpoint.

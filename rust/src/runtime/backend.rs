@@ -11,6 +11,15 @@
 //! feeds the first n-1 context tokens; every later committed token is fed
 //! exactly once (via `generate`'s feed phase or `verify`) before sampling
 //! continues. The opaque `Cache` handle carries the KV state between calls.
+//!
+//! `generate` is the batched draft entry point: one call feeds the pending
+//! committed tokens and drafts all `c` candidate blocks. Implementations
+//! must leave the cache in the post-feed (committed) state — candidate KV
+//! lives in implementation-private branch state (a branched cache on the
+//! CPU backend, the candidate scan inside the HLO program) and must never
+//! leak into the committed cache, so that the subsequent `verify` call
+//! rewrites slots from its own `pos` under the frontier convention. See
+//! the `runtime` module docs for the full cache-branching contract.
 
 use anyhow::Result;
 

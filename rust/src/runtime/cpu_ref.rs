@@ -7,10 +7,29 @@
 //! as a fallback engine (`--cpu-ref`) when artifacts exist but PJRT is
 //! unavailable, and by unit tests that need a backend without artifacts
 //! (see `CpuModel::synthetic`).
+//!
+//! # Batched hot path
+//!
+//! The forward is batched two ways (see `runtime` module docs for the full
+//! conventions):
+//!
+//!   * **Teacher-forced blocks** (`prefill`/`verify`/feed phase of
+//!     `generate`): all `G` positions go through each projection and the
+//!     logits head as one `[G,D]×[D,N]` call into [`super::gemm`].
+//!   * **Candidate drafting** (`generate`): a [`BranchedCache`] shares the
+//!     committed prefix read-only across the `c` candidates and gives each
+//!     one a γ-slot scratch tail, so a draft round performs γ−1 batched
+//!     `[c,D]` steps — no full KV-cache clone, no per-step heap churn.
+//!
+//! The GEMM kernels accumulate bitwise-identically to the scalar mat-vec
+//! path, so the batched forward is *exactly* equal to the seed per-position
+//! implementation, which is preserved under [`reference`] as the
+//! equivalence oracle and bench baseline.
 
 use anyhow::Result;
 
 use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+use super::gemm;
 use crate::params::{ModelDims, ModelParams};
 use crate::sampling;
 use crate::util::rng::Pcg64;
@@ -47,6 +66,63 @@ pub struct CpuCache {
     pub data: Vec<f32>,
 }
 
+/// Branched KV state for one batched draft round: every candidate reads the
+/// committed prefix from `base` (shared, never copied) and owns a γ-slot
+/// scratch tail per layer/head. Tail layout: flat [L, 2, C, H, γ, Dh], so a
+/// candidate's per-head slot run is contiguous exactly like the base cache.
+/// Also carries the round's forward workspaces so the per-step loop does no
+/// heap allocation.
+pub struct BranchedCache<'a> {
+    base: &'a CpuCache,
+    /// Committed positions `0..base_len` are visible to every candidate;
+    /// tail slot `s` holds the KV of absolute position `base_len + s`.
+    base_len: usize,
+    c: usize,
+    gamma: usize,
+    tail: Vec<f32>,
+    // round-lifetime workspaces, all [c, d_model] except `ff` ([c, d_ff])
+    xs: Vec<f32>,
+    hbuf: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl<'a> BranchedCache<'a> {
+    fn new(m: &CpuModel, base: &'a CpuCache, base_len: usize, c: usize, gamma: usize) -> Self {
+        let d = m.dims.d_model;
+        let d_ff = m.dims.d_ff;
+        let nh = m.dims.n_head;
+        let dh = m.dims.d_head();
+        BranchedCache {
+            base,
+            base_len,
+            c,
+            gamma,
+            tail: vec![0.0; m.dims.n_layer * 2 * c * nh * gamma * dh],
+            xs: vec![0.0; c * d],
+            hbuf: vec![0.0; c * d],
+            q: vec![0.0; c * d],
+            k: vec![0.0; c * d],
+            v: vec![0.0; c * d],
+            att: vec![0.0; c * d],
+            proj: vec![0.0; c * d],
+            ff: vec![0.0; c * d_ff],
+            scores: Vec::new(),
+        }
+    }
+
+    /// Start offset of the contiguous slot run for (layer, k/v, cand, head).
+    #[inline]
+    fn tail_base(&self, nh: usize, dh: usize, l: usize, kv: usize, ci: usize, hh: usize) -> usize {
+        ((((l * 2 + kv) * self.c + ci) * nh + hh) * self.gamma) * dh
+    }
+}
+
 fn ln(x: &mut [f32], g: &[f32], b: &[f32]) {
     let d = x.len();
     let mu: f32 = x.iter().sum::<f32>() / d as f32;
@@ -64,24 +140,59 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
 }
 
-/// y[j] += Σ_i x[i] * w[i*cols + j]  (row-major [rows, cols])
-fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
-    let cols = y.len();
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * cols..(i + 1) * cols];
-        for j in 0..cols {
-            y[j] += xi * row[j];
+/// One query head's attention over two contiguous KV segments (committed
+/// prefix + optional branch tail), accumulated into `out` (pre-zeroed).
+/// Score order, running max, and the weighted-V accumulation all match the
+/// scalar reference path operation-for-operation.
+#[allow(clippy::too_many_arguments)]
+fn attend_one(
+    qh: &[f32],
+    scale: f32,
+    dh: usize,
+    k1: &[f32],
+    v1: &[f32],
+    n1: usize,
+    k2: &[f32],
+    v2: &[f32],
+    n2: usize,
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    scores.clear();
+    let mut max = f32::NEG_INFINITY;
+    for s in 0..n1 {
+        let kv = &k1[s * dh..(s + 1) * dh];
+        let dot: f32 = qh.iter().zip(kv).map(|(a, b)| a * b).sum();
+        let sc = dot * scale;
+        max = max.max(sc);
+        scores.push(sc);
+    }
+    for s in 0..n2 {
+        let kv = &k2[s * dh..(s + 1) * dh];
+        let dot: f32 = qh.iter().zip(kv).map(|(a, b)| a * b).sum();
+        let sc = dot * scale;
+        max = max.max(sc);
+        scores.push(sc);
+    }
+    let mut z = 0.0f32;
+    for sc in scores.iter_mut() {
+        *sc = (*sc - max).exp();
+        z += *sc;
+    }
+    for (s, &w) in scores.iter().take(n1).enumerate() {
+        let vv = &v1[s * dh..(s + 1) * dh];
+        let wz = w / z;
+        for j in 0..dh {
+            out[j] += wz * vv[j];
         }
     }
-}
-
-fn matvec(x: &[f32], w: &[f32], cols: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; cols];
-    matvec_acc(x, w, &mut y);
-    y
+    for (s, &w) in scores[n1..].iter().enumerate() {
+        let vv = &v2[s * dh..(s + 1) * dh];
+        let wz = w / z;
+        for j in 0..dh {
+            out[j] += wz * vv[j];
+        }
+    }
 }
 
 impl CpuModel {
@@ -172,9 +283,10 @@ impl CpuModel {
     }
 
     /// Teacher-forced forward of `toks` at absolute positions
-    /// `pos..pos+toks.len()`, reading/writing the KV cache. Returns the
-    /// final hidden state per input position [G][D].
-    fn cached_forward(&self, cache: &mut CpuCache, toks: &[u8], pos: usize) -> Vec<Vec<f32>> {
+    /// `pos..pos+toks.len()`, reading/writing the KV cache. All G positions
+    /// are batched through each projection and the MLP as one GEMM. Returns
+    /// the final hidden states as one flat [G, D] buffer.
+    fn cached_forward(&self, cache: &mut CpuCache, toks: &[u8], pos: usize) -> Vec<f32> {
         assert!(
             pos + toks.len() <= self.dims.maxlen(),
             "cached_forward past maxlen: pos {pos} + {} > {} (engines must \
@@ -183,113 +295,229 @@ impl CpuModel {
             self.dims.maxlen()
         );
         let d = self.dims.d_model;
+        let d_ff = self.dims.d_ff;
         let nh = self.dims.n_head;
         let dh = self.dims.d_head();
         let g = toks.len();
         let scale = 1.0 / (dh as f32).sqrt();
 
         // embed
-        let mut xs: Vec<Vec<f32>> = toks
-            .iter()
-            .enumerate()
-            .map(|(i, &t)| {
-                let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
-                let pe = &self.pos_emb[(pos + i) * d..(pos + i + 1) * d];
-                te.iter().zip(pe).map(|(a, b)| a + b).collect()
-            })
-            .collect();
+        let mut xs = vec![0.0f32; g * d];
+        for (i, &t) in toks.iter().enumerate() {
+            let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
+            let pe = &self.pos_emb[(pos + i) * d..(pos + i + 1) * d];
+            let row = &mut xs[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+
+        let mut hbuf = vec![0.0f32; g * d];
+        let mut q = vec![0.0f32; g * d];
+        let mut kbuf = vec![0.0f32; g * d];
+        let mut vbuf = vec![0.0f32; g * d];
+        let mut att = vec![0.0f32; g * d];
+        let mut proj = vec![0.0f32; g * d];
+        let mut ff = vec![0.0f32; g * d_ff];
+        let mut scores: Vec<f32> = Vec::new();
 
         for (l, lay) in self.layers.iter().enumerate() {
-            // pre-LN + qkv for all G positions, write K/V into the cache
-            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(g);
-            for (i, x) in xs.iter().enumerate() {
-                let mut h = x.clone();
-                ln(&mut h, &lay.ln1_g, &lay.ln1_b);
-                let q = matvec(&h, &lay.wq, d);
-                let k = matvec(&h, &lay.wk, d);
-                let v = matvec(&h, &lay.wv, d);
+            // pre-LN + batched QKV for all G positions, K/V into the cache
+            hbuf.copy_from_slice(&xs);
+            for i in 0..g {
+                ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
+            }
+            gemm::matmul(&hbuf, &lay.wq, g, d, d, &mut q);
+            gemm::matmul(&hbuf, &lay.wk, g, d, d, &mut kbuf);
+            gemm::matmul(&hbuf, &lay.wv, g, d, d, &mut vbuf);
+            for i in 0..g {
                 for hh in 0..nh {
                     let kslot = self.cache_idx(l, 0, hh, pos + i);
                     let vslot = self.cache_idx(l, 1, hh, pos + i);
-                    cache.data[kslot..kslot + dh].copy_from_slice(&k[hh * dh..(hh + 1) * dh]);
-                    cache.data[vslot..vslot + dh].copy_from_slice(&v[hh * dh..(hh + 1) * dh]);
+                    cache.data[kslot..kslot + dh]
+                        .copy_from_slice(&kbuf[i * d + hh * dh..i * d + (hh + 1) * dh]);
+                    cache.data[vslot..vslot + dh]
+                        .copy_from_slice(&vbuf[i * d + hh * dh..i * d + (hh + 1) * dh]);
                 }
-                qs.push(q);
             }
-            // attention per position over cache slots <= qpos
-            for (i, x) in xs.iter_mut().enumerate() {
+            // attention per position over cache slots <= qpos (all K/V for
+            // this block were just written, so rows are independent)
+            att.fill(0.0);
+            for i in 0..g {
                 let qpos = pos + i;
-                let mut att_out = vec![0.0f32; d];
                 for hh in 0..nh {
-                    let qh = &qs[i][hh * dh..(hh + 1) * dh];
-                    // scores over 0..=qpos
-                    let mut scores = Vec::with_capacity(qpos + 1);
-                    let mut max = f32::NEG_INFINITY;
-                    for s in 0..=qpos {
-                        let kslot = self.cache_idx(l, 0, hh, s);
-                        let kv = &cache.data[kslot..kslot + dh];
-                        let dot: f32 = qh.iter().zip(kv).map(|(a, b)| a * b).sum();
-                        let sc = dot * scale;
-                        max = max.max(sc);
-                        scores.push(sc);
-                    }
-                    let mut z = 0.0f32;
-                    for sc in scores.iter_mut() {
-                        *sc = (*sc - max).exp();
-                        z += *sc;
-                    }
-                    let out = &mut att_out[hh * dh..(hh + 1) * dh];
-                    for (s, &w) in scores.iter().enumerate() {
-                        let vslot = self.cache_idx(l, 1, hh, s);
-                        let vv = &cache.data[vslot..vslot + dh];
-                        let wz = w / z;
-                        for j in 0..dh {
-                            out[j] += wz * vv[j];
-                        }
-                    }
+                    let qh = &q[i * d + hh * dh..i * d + (hh + 1) * dh];
+                    let kbase = self.cache_idx(l, 0, hh, 0);
+                    let vbase = self.cache_idx(l, 1, hh, 0);
+                    let n1 = qpos + 1;
+                    attend_one(
+                        qh,
+                        scale,
+                        dh,
+                        &cache.data[kbase..kbase + n1 * dh],
+                        &cache.data[vbase..vbase + n1 * dh],
+                        n1,
+                        &[],
+                        &[],
+                        0,
+                        &mut att[i * d + hh * dh..i * d + (hh + 1) * dh],
+                        &mut scores,
+                    );
                 }
-                // out projection + residual
-                let proj = matvec(&att_out, &lay.wo, d);
-                for j in 0..d {
-                    x[j] += proj[j];
-                }
-                // MLP
-                let mut h = x.clone();
-                ln(&mut h, &lay.ln2_g, &lay.ln2_b);
-                let mut ff = matvec(&h, &lay.w1, self.dims.d_ff);
-                for (j, f) in ff.iter_mut().enumerate() {
+            }
+            // out projection + residual (batched)
+            gemm::matmul(&att, &lay.wo, g, d, d, &mut proj);
+            for (x, p) in xs.iter_mut().zip(&proj) {
+                *x += p;
+            }
+            // MLP (batched)
+            hbuf.copy_from_slice(&xs);
+            for i in 0..g {
+                ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
+            }
+            gemm::matmul(&hbuf, &lay.w1, g, d, d_ff, &mut ff);
+            for i in 0..g {
+                let row = &mut ff[i * d_ff..(i + 1) * d_ff];
+                for (j, f) in row.iter_mut().enumerate() {
                     *f = gelu(*f + lay.b1[j]);
                 }
-                let mut out2 = matvec(&ff, &lay.w2, d);
+            }
+            gemm::matmul(&ff, &lay.w2, g, d_ff, d, &mut proj);
+            for i in 0..g {
+                let xrow = &mut xs[i * d..(i + 1) * d];
+                let prow = &proj[i * d..(i + 1) * d];
                 for j in 0..d {
-                    out2[j] += lay.b2[j];
-                    x[j] += out2[j];
+                    xrow[j] += prow[j] + lay.b2[j];
                 }
             }
         }
         // final LN
-        for x in xs.iter_mut() {
-            ln(x, &self.lnf_g, &self.lnf_b);
+        for i in 0..g {
+            ln(&mut xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b);
         }
         xs
     }
 
-    /// Logits from a final hidden state (weight-tied head).
-    fn logits(&self, h: &[f32]) -> Vec<f32> {
+    /// One batched draft step: forward the `c` candidates' current tokens at
+    /// absolute position `qpos`, writing K/V into tail slot `slot` and
+    /// attending over the shared committed prefix plus each candidate's own
+    /// tail slots `0..=slot`. Returns the next-token logits, flat [c, V].
+    fn branched_step(&self, br: &mut BranchedCache, toks: &[u8], qpos: usize, slot: usize) -> Vec<f32> {
         let d = self.dims.d_model;
-        (0..self.vocab)
-            .map(|t| {
-                let te = &self.tok_emb[t * d..(t + 1) * d];
-                h.iter().zip(te).map(|(a, b)| a * b).sum()
-            })
-            .collect()
+        let d_ff = self.dims.d_ff;
+        let nh = self.dims.n_head;
+        let dh = self.dims.d_head();
+        let b = toks.len();
+        debug_assert_eq!(b, br.c);
+        debug_assert!(slot < br.gamma);
+        debug_assert!(qpos < self.dims.maxlen());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embed: every candidate's token sits at the same absolute position
+        let pe = &self.pos_emb[qpos * d..(qpos + 1) * d];
+        for (ci, &t) in toks.iter().enumerate() {
+            let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
+            let row = &mut br.xs[ci * d..(ci + 1) * d];
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+
+        for (l, lay) in self.layers.iter().enumerate() {
+            br.hbuf.copy_from_slice(&br.xs);
+            for ci in 0..b {
+                ln(&mut br.hbuf[ci * d..(ci + 1) * d], &lay.ln1_g, &lay.ln1_b);
+            }
+            gemm::matmul(&br.hbuf, &lay.wq, b, d, d, &mut br.q);
+            gemm::matmul(&br.hbuf, &lay.wk, b, d, d, &mut br.k);
+            gemm::matmul(&br.hbuf, &lay.wv, b, d, d, &mut br.v);
+            // write K/V into each candidate's private tail slot
+            for ci in 0..b {
+                for hh in 0..nh {
+                    let kb = br.tail_base(nh, dh, l, 0, ci, hh) + slot * dh;
+                    let vb = br.tail_base(nh, dh, l, 1, ci, hh) + slot * dh;
+                    br.tail[kb..kb + dh]
+                        .copy_from_slice(&br.k[ci * d + hh * dh..ci * d + (hh + 1) * dh]);
+                    br.tail[vb..vb + dh]
+                        .copy_from_slice(&br.v[ci * d + hh * dh..ci * d + (hh + 1) * dh]);
+                }
+            }
+            // attention: shared committed prefix + own tail slots 0..=slot
+            br.att.fill(0.0);
+            for ci in 0..b {
+                for hh in 0..nh {
+                    let qh = &br.q[ci * d + hh * dh..ci * d + (hh + 1) * dh];
+                    let kbase = self.cache_idx(l, 0, hh, 0);
+                    let vbase = self.cache_idx(l, 1, hh, 0);
+                    let kt = br.tail_base(nh, dh, l, 0, ci, hh);
+                    let vt = br.tail_base(nh, dh, l, 1, ci, hh);
+                    attend_one(
+                        qh,
+                        scale,
+                        dh,
+                        &br.base.data[kbase..kbase + br.base_len * dh],
+                        &br.base.data[vbase..vbase + br.base_len * dh],
+                        br.base_len,
+                        &br.tail[kt..kt + (slot + 1) * dh],
+                        &br.tail[vt..vt + (slot + 1) * dh],
+                        slot + 1,
+                        &mut br.att[ci * d + hh * dh..ci * d + (hh + 1) * dh],
+                        &mut br.scores,
+                    );
+                }
+            }
+            gemm::matmul(&br.att, &lay.wo, b, d, d, &mut br.proj);
+            for (x, p) in br.xs.iter_mut().zip(&br.proj) {
+                *x += p;
+            }
+            br.hbuf.copy_from_slice(&br.xs);
+            for ci in 0..b {
+                ln(&mut br.hbuf[ci * d..(ci + 1) * d], &lay.ln2_g, &lay.ln2_b);
+            }
+            gemm::matmul(&br.hbuf, &lay.w1, b, d, d_ff, &mut br.ff);
+            for ci in 0..b {
+                let row = &mut br.ff[ci * d_ff..(ci + 1) * d_ff];
+                for (j, f) in row.iter_mut().enumerate() {
+                    *f = gelu(*f + lay.b1[j]);
+                }
+            }
+            gemm::matmul(&br.ff, &lay.w2, b, d_ff, d, &mut br.proj);
+            for ci in 0..b {
+                let xrow = &mut br.xs[ci * d..(ci + 1) * d];
+                let prow = &br.proj[ci * d..(ci + 1) * d];
+                for j in 0..d {
+                    xrow[j] += prow[j] + lay.b2[j];
+                }
+            }
+        }
+        br.hbuf.copy_from_slice(&br.xs);
+        for ci in 0..b {
+            ln(&mut br.hbuf[ci * d..(ci + 1) * d], &self.lnf_g, &self.lnf_b);
+        }
+        self.logits_rows(&br.hbuf, b)
+    }
+
+    /// Logits from one final hidden state (weight-tied head).
+    fn logits(&self, h: &[f32]) -> Vec<f32> {
+        self.logits_rows(h, 1)
+    }
+
+    /// Batched weight-tied logits head: `rows` hidden states (flat [rows, D])
+    /// against the embedding table in one GEMM. Returns flat [rows, V].
+    fn logits_rows(&self, h: &[f32], rows: usize) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let mut out = vec![0.0f32; rows * self.vocab];
+        gemm::matmul_nt(h, &self.tok_emb[..self.vocab * d], rows, d, self.vocab, &mut out);
+        out
     }
 
     /// Full-sequence forward from scratch: per-position logits.
     pub fn forward_logits(&self, tokens: &[u8]) -> Vec<Vec<f32>> {
         let mut cache = self.empty_cache();
         let hidden = self.cached_forward(&mut cache, tokens, 0);
-        hidden.iter().map(|h| self.logits(h)).collect()
+        let flat = self.logits_rows(&hidden, tokens.len());
+        let v = self.vocab;
+        (0..tokens.len()).map(|i| flat[i * v..(i + 1) * v].to_vec()).collect()
     }
 }
 
@@ -328,23 +556,49 @@ impl ModelBackend for CpuModel {
         temp: f32,
         top_p: f32,
     ) -> Result<DraftBlock> {
+        debug_assert_eq!(u.len(), c * gamma);
+        let d = self.dims.d_model;
+        let v = self.vocab;
+        let g = feed.len();
+        // feed phase always runs: the trait contract is that the cache ends
+        // in the post-feed (committed) state even for a degenerate gamma
         let hidden = self.cached_forward(cache, feed, pos);
-        let last_logits = self.logits(hidden.last().unwrap());
-        let start = pos + feed.len();
+        if gamma == 0 {
+            return Ok(DraftBlock { tokens: vec![Vec::new(); c], dists: vec![Vec::new(); c] });
+        }
+        let last_logits = self.logits(&hidden[(g - 1) * d..g * d]);
+        let start = pos + g;
+        assert!(
+            start + gamma <= self.dims.maxlen(),
+            "draft block past maxlen: start {start} + gamma {gamma} > {}",
+            self.dims.maxlen()
+        );
 
         let mut tokens = vec![vec![0u8; gamma]; c];
-        let mut dists = vec![Vec::with_capacity(gamma); c];
+        let mut dists: Vec<Vec<Vec<f32>>> = (0..c).map(|_| Vec::with_capacity(gamma)).collect();
+
+        // step 0: every candidate samples from the same post-feed dist
+        let dist0 = sampling::adjust_dist(&last_logits, temp, top_p);
+        let mut cur = vec![0u8; c];
         for ci in 0..c {
-            // each candidate branches from the committed cache
-            let mut cc = CpuCache { data: cache.data.clone() };
-            let mut logits = last_logits.clone();
-            for gi in 0..gamma {
-                let dist = sampling::adjust_dist(&logits, temp, top_p);
-                let tok = sampling::sample(&dist, u[ci * gamma + gi]) as u8;
-                tokens[ci][gi] = tok;
-                dists[ci].push(dist);
-                let h = self.cached_forward(&mut cc, &[tok], start + gi);
-                logits = self.logits(&h[0]);
+            let tok = sampling::sample(&dist0, u[ci * gamma]) as u8;
+            tokens[ci][0] = tok;
+            cur[ci] = tok;
+            dists[ci].push(dist0.clone());
+        }
+        // steps 1..gamma: one batched [c, D] forward per step over the
+        // branched cache — no full-cache clones, no per-step allocation
+        if gamma > 1 {
+            let mut br = BranchedCache::new(self, cache, start, c, gamma);
+            for gi in 1..gamma {
+                let logits = self.branched_step(&mut br, &cur, start + gi - 1, gi - 1);
+                for ci in 0..c {
+                    let dist = sampling::adjust_dist(&logits[ci * v..(ci + 1) * v], temp, top_p);
+                    let tok = sampling::sample(&dist, u[ci * gamma + gi]) as u8;
+                    tokens[ci][gi] = tok;
+                    cur[ci] = tok;
+                    dists[ci].push(dist);
+                }
             }
         }
         Ok(DraftBlock { tokens, dists })
@@ -359,9 +613,10 @@ impl ModelBackend for CpuModel {
         top_p: f32,
     ) -> Result<VerifyBlock> {
         let hidden = self.cached_forward(cache, toks, pos);
-        let dists = hidden
-            .iter()
-            .map(|h| sampling::adjust_dist(&self.logits(h), temp, top_p))
+        let flat = self.logits_rows(&hidden, toks.len());
+        let v = self.vocab;
+        let dists = (0..toks.len())
+            .map(|i| sampling::adjust_dist(&flat[i * v..(i + 1) * v], temp, top_p))
             .collect();
         Ok(VerifyBlock { dists })
     }
@@ -388,15 +643,207 @@ impl ModelBackend for CpuModel {
         let mut cache = self.empty_cache();
         let hidden = self.cached_forward(&mut cache, tokens, 0);
         let d = self.dims.d_model;
+        let g = tokens.len();
         let mut out = vec![0.0f32; d];
-        for h in &hidden {
+        for i in 0..g {
+            let row = &hidden[i * d..(i + 1) * d];
             for j in 0..d {
-                out[j] += h[j];
+                out[j] += row[j];
             }
         }
-        let n = hidden.len().max(1) as f32;
+        let n = g.max(1) as f32;
         out.iter_mut().for_each(|x| *x /= n);
         Ok(out)
+    }
+}
+
+/// The seed (pre-batching) scalar implementation, kept operation-for-
+/// operation as the equivalence oracle and bench baseline: per-position
+/// mat-vecs through every projection, and candidate drafting that clones
+/// the full KV cache per candidate per round. Never used on a hot path —
+/// `tests/cpu_batched_equivalence.rs` pins the batched forward to it, and
+/// `bench_micro` measures the draft-round speedup against it.
+pub mod reference {
+    use super::*;
+
+    /// y[j] += Σ_i x[i] * w[i*cols + j]  (row-major [rows, cols])
+    fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
+        let cols = y.len();
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * cols..(i + 1) * cols];
+            for j in 0..cols {
+                y[j] += xi * row[j];
+            }
+        }
+    }
+
+    fn matvec(x: &[f32], w: &[f32], cols: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; cols];
+        matvec_acc(x, w, &mut y);
+        y
+    }
+
+    /// Seed teacher-forced forward: per-position scalar mat-vecs. Returns
+    /// the final hidden state per input position [G][D].
+    pub fn cached_forward(m: &CpuModel, cache: &mut CpuCache, toks: &[u8], pos: usize) -> Vec<Vec<f32>> {
+        assert!(pos + toks.len() <= m.dims.maxlen());
+        let d = m.dims.d_model;
+        let nh = m.dims.n_head;
+        let dh = m.dims.d_head();
+        let g = toks.len();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut xs: Vec<Vec<f32>> = toks
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let te = &m.tok_emb[t as usize * d..(t as usize + 1) * d];
+                let pe = &m.pos_emb[(pos + i) * d..(pos + i + 1) * d];
+                te.iter().zip(pe).map(|(a, b)| a + b).collect()
+            })
+            .collect();
+
+        for (l, lay) in m.layers.iter().enumerate() {
+            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(g);
+            for (i, x) in xs.iter().enumerate() {
+                let mut h = x.clone();
+                ln(&mut h, &lay.ln1_g, &lay.ln1_b);
+                let q = matvec(&h, &lay.wq, d);
+                let k = matvec(&h, &lay.wk, d);
+                let v = matvec(&h, &lay.wv, d);
+                for hh in 0..nh {
+                    let kslot = m.cache_idx(l, 0, hh, pos + i);
+                    let vslot = m.cache_idx(l, 1, hh, pos + i);
+                    cache.data[kslot..kslot + dh].copy_from_slice(&k[hh * dh..(hh + 1) * dh]);
+                    cache.data[vslot..vslot + dh].copy_from_slice(&v[hh * dh..(hh + 1) * dh]);
+                }
+                qs.push(q);
+            }
+            for (i, x) in xs.iter_mut().enumerate() {
+                let qpos = pos + i;
+                let mut att_out = vec![0.0f32; d];
+                for hh in 0..nh {
+                    let qh = &qs[i][hh * dh..(hh + 1) * dh];
+                    let mut scores = Vec::with_capacity(qpos + 1);
+                    let mut max = f32::NEG_INFINITY;
+                    for s in 0..=qpos {
+                        let kslot = m.cache_idx(l, 0, hh, s);
+                        let kv = &cache.data[kslot..kslot + dh];
+                        let dot: f32 = qh.iter().zip(kv).map(|(a, b)| a * b).sum();
+                        let sc = dot * scale;
+                        max = max.max(sc);
+                        scores.push(sc);
+                    }
+                    let mut z = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - max).exp();
+                        z += *sc;
+                    }
+                    let out = &mut att_out[hh * dh..(hh + 1) * dh];
+                    for (s, &w) in scores.iter().enumerate() {
+                        let vslot = m.cache_idx(l, 1, hh, s);
+                        let vv = &cache.data[vslot..vslot + dh];
+                        let wz = w / z;
+                        for j in 0..dh {
+                            out[j] += wz * vv[j];
+                        }
+                    }
+                }
+                let proj = matvec(&att_out, &lay.wo, d);
+                for j in 0..d {
+                    x[j] += proj[j];
+                }
+                let mut h = x.clone();
+                ln(&mut h, &lay.ln2_g, &lay.ln2_b);
+                let mut ff = matvec(&h, &lay.w1, m.dims.d_ff);
+                for (j, f) in ff.iter_mut().enumerate() {
+                    *f = gelu(*f + lay.b1[j]);
+                }
+                let mut out2 = matvec(&ff, &lay.w2, d);
+                for j in 0..d {
+                    out2[j] += lay.b2[j];
+                    x[j] += out2[j];
+                }
+            }
+        }
+        for x in xs.iter_mut() {
+            ln(x, &m.lnf_g, &m.lnf_b);
+        }
+        xs
+    }
+
+    /// Seed scalar logits head.
+    pub fn logits(m: &CpuModel, h: &[f32]) -> Vec<f32> {
+        let d = m.dims.d_model;
+        (0..m.vocab)
+            .map(|t| {
+                let te = &m.tok_emb[t * d..(t + 1) * d];
+                h.iter().zip(te).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Seed full-sequence forward.
+    pub fn forward_logits(m: &CpuModel, tokens: &[u8]) -> Vec<Vec<f32>> {
+        let mut cache = m.empty_cache();
+        let hidden = cached_forward(m, &mut cache, tokens, 0);
+        hidden.iter().map(|h| logits(m, h)).collect()
+    }
+
+    /// Seed candidate drafting: one full KV-cache clone per candidate and a
+    /// scalar single-token forward per (candidate, step).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        m: &CpuModel,
+        cache: &mut CpuCache,
+        feed: &[u8],
+        pos: usize,
+        c: usize,
+        gamma: usize,
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> DraftBlock {
+        let hidden = cached_forward(m, cache, feed, pos);
+        let last_logits = logits(m, hidden.last().unwrap());
+        let start = pos + feed.len();
+
+        let mut tokens = vec![vec![0u8; gamma]; c];
+        let mut dists: Vec<Vec<Vec<f32>>> = (0..c).map(|_| Vec::with_capacity(gamma)).collect();
+        for ci in 0..c {
+            // each candidate branches from the committed cache (full clone)
+            let mut cc = CpuCache { data: cache.data.clone() };
+            let mut lg = last_logits.clone();
+            for gi in 0..gamma {
+                let dist = sampling::adjust_dist(&lg, temp, top_p);
+                let tok = sampling::sample(&dist, u[ci * gamma + gi]) as u8;
+                tokens[ci][gi] = tok;
+                dists[ci].push(dist);
+                let h = cached_forward(m, &mut cc, &[tok], start + gi);
+                lg = logits(m, &h[0]);
+            }
+        }
+        DraftBlock { tokens, dists }
+    }
+
+    /// Seed teacher-forced verification.
+    pub fn verify(
+        m: &CpuModel,
+        cache: &mut CpuCache,
+        toks: &[u8],
+        pos: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> VerifyBlock {
+        let hidden = cached_forward(m, cache, toks, pos);
+        let dists = hidden
+            .iter()
+            .map(|h| sampling::adjust_dist(&logits(m, h), temp, top_p))
+            .collect();
+        VerifyBlock { dists }
     }
 }
 
@@ -418,7 +865,7 @@ mod tests {
         let mut got = Vec::new();
         for i in 3..seq.len() {
             let h = m.cached_forward(&mut cache, &seq[i..i + 1], i);
-            got.push(m.logits(&h[0]));
+            got.push(m.logits(&h));
         }
         for (i, g) in got.iter().enumerate() {
             let f = &full[3 + i];
@@ -466,6 +913,26 @@ mod tests {
         let a = m.generate(&mut c1, &[9], 2, 2, 5, &u, 0.8, 0.9).unwrap();
         let b = m.generate(&mut c2, &[9], 2, 2, 5, &u, 0.8, 0.9).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn batched_draft_matches_seed_reference() {
+        // the tentpole invariant at unit level: branched-cache drafting
+        // reproduces the clone-per-candidate seed path exactly
+        let m = tiny();
+        let mut c1 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let mut c2 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let u: Vec<f32> = (0..3 * 5).map(|i| (i as f32 * 0.29) % 1.0).collect();
+        let a = m.generate(&mut c1, &[13], 3, 3, 5, &u, 0.9, 0.95).unwrap();
+        let b = reference::generate(&m, &mut c2, &[13], 3, 3, 5, &u, 0.9, 0.95);
+        assert_eq!(a.tokens, b.tokens);
+        for (da, db) in a.dists.iter().zip(&b.dists) {
+            for (pa, pb) in da.iter().zip(db) {
+                for (x, y) in pa.iter().zip(pb) {
+                    assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Blocked GEMM micro-kernels for the pure-Rust runtime.
+//!
+//! The batched draft/verify paths funnel every projection (`[B,D]×[D,N]`,
+//! weights row-major `[in, out]`) and the weight-tied logits head
+//! (`[B,D]×[V,D]ᵀ`) through these two kernels, so all `c` candidate rows —
+//! or all `G` teacher-forced feed positions — share one streaming pass over
+//! each weight matrix instead of `B` scalar mat-vecs.
+//!
+//! Two properties the rest of the runtime relies on:
+//!
+//!   * **Bitwise-stable accumulation.** Each output element accumulates
+//!     over the shared `k` dimension strictly in index order with a single
+//!     accumulator, exactly like the seed scalar mat-vec (including its
+//!     skip of zero inputs). Column tiling and row partitioning only
+//!     reorder *independent* accumulators, so results are bit-identical to
+//!     the per-position reference path — `tests/cpu_batched_equivalence.rs`
+//!     asserts this.
+//!   * **Bounded threading.** Row-parallelism (via
+//!     [`crate::util::threadpool::parallel_chunks_mut`]) only kicks in past
+//!     a FLOP threshold, so tiny test models never pay thread overhead.
+
+use crate::util::threadpool::parallel_chunks_mut;
+
+/// Column-tile width in f32 lanes (1 KiB per accumulator row): the `B`
+/// panel of one tile stays cache-resident while every row reuses it.
+const COL_BLOCK: usize = 256;
+
+/// 2·m·k·n below this runs single-threaded (thread spawn ≫ work).
+const PAR_FLOPS: usize = 1 << 22;
+
+/// `out[m,n] = a[m,k] × b[k,n]`, `b` row-major `[k,n]` (projection weights).
+/// Overwrites `out`. Rows are partitioned across threads for large shapes.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = if 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n) < PAR_FLOPS {
+        1
+    } else {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(m)
+    };
+    if threads <= 1 {
+        matmul_rows(a, b, k, n, out);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    parallel_chunks_mut(out, rows_per * n, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let rows = chunk.len() / n;
+        matmul_rows(&a[r0 * k..(r0 + rows) * k], b, k, n, chunk);
+    });
+}
+
+/// Serial row-block kernel, column-tiled so the weight panel streams
+/// through cache once while every row of `a` reuses it.
+fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + COL_BLOCK).min(n);
+        for r in 0..rows {
+            out[r * n + jb..r * n + je].fill(0.0);
+        }
+        for i in 0..k {
+            let brow = &b[i * n + jb..i * n + je];
+            for r in 0..rows {
+                let x = a[r * k + i];
+                if x == 0.0 {
+                    continue; // mirror the scalar mat-vec's sparse-input skip
+                }
+                let orow = &mut out[r * n + jb..r * n + je];
+                for (o, &w) in orow.iter_mut().zip(brow) {
+                    *o += x * w;
+                }
+            }
+        }
+        jb = je;
+    }
+}
+
+/// `out[m,n] = a[m,k] × b[n,k]ᵀ` — the weight-tied logits head (`b` is the
+/// token-embedding table, row-major `[vocab, d]`). Contiguous row-row dot
+/// products; `k` accumulates in order (bit-equal to the scalar head).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        for t in 0..n {
+            let brow = &b[t * k..(t + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, w) in arow.iter().zip(brow) {
+                acc += x * w;
+            }
+            out[r * n + t] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randv(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| (rng.gaussian() * 0.5) as f32).collect()
+    }
+
+    /// Same per-element accumulation order as the kernels: i in order.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for i in 0..k {
+                    acc += a[r * k + i] * b[i * n + j];
+                }
+                out[r * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_bitwise_across_shapes() {
+        let mut rng = Pcg64::new(11);
+        for &(m, k, n) in &[(1, 16, 16), (3, 7, 300), (5, 64, 64), (8, 33, 257), (2, 1, 1)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut out = vec![0.0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut out);
+            let want = naive(&a, &b, m, k, n);
+            assert!(
+                out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "({m},{k},{n}) not bitwise equal"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_path_matches_naive() {
+        // 2*m*k*n >= PAR_FLOPS so the row-partitioned path engages.
+        let (m, k, n) = (64, 64, 600);
+        let mut rng = Pcg64::new(3);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut out);
+        let want = naive(&a, &b, m, k, n);
+        assert!(out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn nt_matches_transposed_naive() {
+        let (m, k, n) = (4, 24, 32);
+        let mut rng = Pcg64::new(7);
+        let a = randv(m * k, &mut rng);
+        let bt = randv(n * k, &mut rng); // [n, k]
+        let mut b = vec![0.0f32; k * n]; // [k, n]
+        for t in 0..n {
+            for i in 0..k {
+                b[i * n + t] = bt[t * k + i];
+            }
+        }
+        let mut out = vec![0.0f32; m * n];
+        matmul_nt(&a, &bt, m, k, n, &mut out);
+        let want = naive(&a, &b, m, k, n);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_inputs_are_safe() {
+        let b = [1.0f32, 2.0, 3.0, 4.0];
+        let mut empty: [f32; 0] = [];
+        matmul(&[], &b, 0, 2, 2, &mut empty);
+        let a = [0.0f32, 1.0, 0.0, 2.0];
+        let mut o = vec![0.0f32; 4];
+        // [2,2] x [2,2]: zero inputs exercise the skip branch
+        matmul(&a, &b, 2, 2, 2, &mut o);
+        assert_eq!(o, vec![3.0, 4.0, 6.0, 8.0]);
+    }
+}

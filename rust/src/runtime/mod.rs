@@ -1,9 +1,48 @@
 //! Runtime layer: PJRT client wrapper, HLO-backed and pure-Rust model
-//! backends. See DESIGN.md §2.
+//! backends, and the GEMM kernels the pure-Rust path runs on. See
+//! DESIGN.md §2.
+//!
+//! # Cache and batching conventions
+//!
+//! Every backend shares one position convention (see python/compile/model.py
+//! and [`backend::ModelBackend`]): `prefill` feeds the first n−1 context
+//! tokens; each later committed token is fed exactly once (by `generate`'s
+//! feed phase or by `verify`) before sampling continues. KV caches are flat
+//! `[L, 2, H, S, Dh]`, and slots at positions ≥ the committed frontier are
+//! scratch — unobservable until rewritten — which is what makes the
+//! branching scheme below sound.
+//!
+//! ## Branched drafting (`cpu_ref::BranchedCache`)
+//!
+//! A draft round must explore `c` candidate continuations of the same
+//! committed prefix. The seed implementation cloned the entire cache per
+//! candidate per round; the runtime now branches instead:
+//!
+//!   * the committed prefix (`0..base_len`) is **shared read-only** by all
+//!     candidates — it is physically the committed `CpuCache`;
+//!   * each candidate owns a **γ-slot scratch tail** (flat
+//!     `[L, 2, C, H, γ, Dh]`, slot `s` ↔ absolute position `base_len + s`),
+//!     written as its tokens are drafted and discarded with the round.
+//!
+//! Candidate tails never touch the committed cache, so the verify step sees
+//! exactly the frontier convention it expects, and no KV bytes are copied
+//! to branch.
+//!
+//! ## Batched forward
+//!
+//! All `c` candidate rows of a draft step — and all `G` positions of a
+//! teacher-forced block — go through each projection, the MLP and the
+//! weight-tied logits head as single `[B,D]×[D,N]` calls into [`gemm`],
+//! which tiles columns, streams each weight panel once for all rows, and
+//! row-parallelizes large shapes via `util::threadpool`. The kernels keep
+//! per-element accumulation in index order, so batched results are bitwise
+//! identical to the seed scalar path (kept as `cpu_ref::reference`;
+//! `tests/cpu_batched_equivalence.rs` enforces the equivalence).
 
 pub mod backend;
 pub mod client;
 pub mod cpu_ref;
+pub mod gemm;
 pub mod hlo;
 pub mod prefill_cache;
 

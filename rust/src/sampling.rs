@@ -52,17 +52,27 @@ pub fn adjust_dist(logits: &[f32], temp: f32, top_p: f32) -> Vec<f32> {
     p
 }
 
-/// Inverse-CDF categorical draw (matches model.py::sample_from_dist:
-/// first index whose inclusive cumsum >= u).
+/// Inverse-CDF categorical draw: first *positive-probability* index whose
+/// inclusive cumsum >= u (matches model.py::sample_from_dist on positive
+/// entries). Zero-probability entries are skipped outright — with `u == 0.0`
+/// the plain cumsum test would return index 0 even when `dist[0] == 0.0`,
+/// committing a token outside the nucleus.
 pub fn sample(dist: &[f32], u: f32) -> usize {
     let mut cum = 0.0f32;
+    let mut last_positive = None;
     for (i, &p) in dist.iter().enumerate() {
+        if p <= 0.0 {
+            continue;
+        }
         cum += p;
+        last_positive = Some(i);
         if cum >= u {
             return i;
         }
     }
-    dist.len() - 1
+    // float undershoot (cum < u): fall back to the last positive entry so
+    // the draw still lies in the distribution's support
+    last_positive.unwrap_or(dist.len() - 1)
 }
 
 /// Residual distribution of Algorithm 1:
@@ -89,16 +99,27 @@ pub fn residual(p: &[f32], q: &[f32]) -> Option<Vec<f32>> {
 /// same position. Returns `(accepted, token)`: the draft token if accepted,
 /// otherwise a corrected token drawn from the residual distribution.
 pub fn couple(p: &[f32], q: &[f32], x: usize, rng: &mut Pcg64) -> (bool, usize) {
-    let px = p[x].max(1e-12);
-    let ratio = (q[x] / px).min(1.0);
     let eta = rng.next_f32();
-    if eta <= ratio {
+    couple_with_eta(p, q, x, eta, rng)
+}
+
+/// Deterministic core of [`couple`], split out so the `eta` edge cases are
+/// directly testable. The accept test requires `q[x] > 0`: `rng.next_f32()`
+/// is uniform on [0, 1), so `eta` can be exactly 0.0, and the bare
+/// `eta <= ratio` test would then accept a draft token the target nucleus
+/// assigns zero probability.
+pub fn couple_with_eta(p: &[f32], q: &[f32], x: usize, eta: f32, rng: &mut Pcg64) -> (bool, usize) {
+    let px = p[x].max(1e-12);
+    let qx = q[x];
+    let ratio = (qx / px).min(1.0);
+    if qx > 0.0 && eta <= ratio {
         return (true, x);
     }
     match residual(p, q) {
         Some(res) => (false, sample(&res, rng.next_f32())),
-        // p==q exactly: acceptance probability was 1, the branch above
-        // can only be missed by floating-point edge; accept.
+        // p==q exactly (so q[x] == p[x] > 0 for any sampleable x): the
+        // acceptance probability was 1 and the branch above can only be
+        // missed by floating-point edge; accept.
         None => (true, x),
     }
 }
@@ -160,6 +181,53 @@ mod tests {
         assert_eq!(sample(&d, 0.25), 0); // inclusive cum >= u
         assert_eq!(sample(&d, 0.2500001), 1);
         assert_eq!(sample(&d, 0.9999), 2);
+    }
+
+    #[test]
+    fn sample_skips_zero_probability_entries() {
+        // regression: u == 0.0 must not land on a zero-probability index 0
+        let d = [0.0f32, 0.7, 0.3];
+        assert_eq!(sample(&d, 0.0), 1);
+        assert_eq!(sample(&d, 0.69), 1);
+        assert_eq!(sample(&d, 0.71), 2);
+        // zero hole in the middle is never selected
+        let d2 = [0.5f32, 0.0, 0.5];
+        assert_eq!(sample(&d2, 0.5), 0);
+        assert_eq!(sample(&d2, 0.5000001), 2);
+        // float undershoot falls back to the last positive entry, not the
+        // last index (which may have zero probability)
+        let d3 = [0.4f32, 0.59, 0.0];
+        assert_eq!(sample(&d3, 1.0), 1);
+    }
+
+    #[test]
+    fn couple_rejects_zero_target_prob_even_at_eta_zero() {
+        // regression: eta == 0.0 used to pass `eta <= ratio` with ratio == 0
+        let p = [0.5f32, 0.5, 0.0];
+        let q = [0.0f32, 0.5, 0.5];
+        let mut rng = Pcg64::new(1);
+        let (acc, tok) = couple_with_eta(&p, &q, 0, 0.0, &mut rng);
+        assert!(!acc, "q[x] == 0 must never be accepted");
+        assert!(q[tok] > 0.0, "corrected token must lie in target support");
+    }
+
+    /// Support invariant behind spec.rs's committed_tokens_lie_in_target_
+    /// nucleus test: whatever the draft proposes, the coupled output has
+    /// positive target probability.
+    #[test]
+    fn coupled_output_always_in_target_support() {
+        check("coupled output in q's support", 30, |g| {
+            let v = 8;
+            let p: Vec<f32> = g.sparse_dist(v).iter().map(|&x| x as f32).collect();
+            let q: Vec<f32> = g.sparse_dist(v).iter().map(|&x| x as f32).collect();
+            let mut rng = Pcg64::new(g.u64());
+            for _ in 0..200 {
+                let x = sample(&p, rng.next_f32());
+                assert!(p[x] > 0.0, "draw must lie in draft support");
+                let (_acc, y) = couple(&p, &q, x, &mut rng);
+                assert!(q[y] > 0.0, "token {y} outside target support");
+            }
+        });
     }
 
     #[test]

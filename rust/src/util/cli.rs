@@ -15,13 +15,24 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("option --{0}: cannot parse '{1}' as {2}")]
     BadValue(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue(k, v, ty) => {
+                write!(f, "option --{k}: cannot parse '{v}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Boolean flags recognized by the specmer CLI and benches.
 pub const KNOWN_FLAGS: &[&str] = &[

@@ -75,6 +75,34 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Scoped data-parallel helper for the compute kernels (`runtime::gemm`):
+/// split `data` into `chunk_len`-sized mutable chunks and run `f(i, chunk)`
+/// for each chunk concurrently, returning once all chunks finish. The
+/// shared-queue [`ThreadPool`] requires `'static` jobs, so borrowed-data
+/// compute uses this scoped sibling; both primitives live here so every
+/// form of parallelism in the crate is in one place.
+///
+/// A single chunk (or empty input) runs inline on the caller's thread.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || chunk_len == 0 {
+        return;
+    }
+    if data.len() <= chunk_len {
+        f(0, data);
+        return;
+    }
+    thread::scope(|s| {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, chunk));
+        }
+    });
+}
+
 /// Run `f` over `items` with `n` threads, preserving order of results.
 pub fn parallel_map<T, R, F>(n: usize, items: Vec<T>, f: F) -> Vec<R>
 where
@@ -134,6 +162,26 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(4, (0..50).collect(), |x: i32| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_chunks_mut_covers_all_chunks() {
+        let mut data: Vec<u64> = (0..103).collect();
+        parallel_chunks_mut(&mut data, 10, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x += (i as u64) * 1000;
+            }
+        });
+        for (j, &x) in data.iter().enumerate() {
+            assert_eq!(x, (j / 10) as u64 * 1000 + j as u64);
+        }
+        // single chunk runs inline
+        let mut one = vec![1u64, 2, 3];
+        parallel_chunks_mut(&mut one, 8, |i, chunk| {
+            assert_eq!(i, 0);
+            chunk[0] = 9;
+        });
+        assert_eq!(one, vec![9, 2, 3]);
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Offline stub of the `xla` PJRT bindings used by `specmer::runtime`.
+//!
+//! The build image has no crates.io access and no PJRT plugin, so this crate
+//! keeps the HLO code paths compiling and type-checked while making the
+//! runtime behavior explicit:
+//!
+//!   * [`Literal`] is fully functional on the host (typed storage + dims) —
+//!     cache snapshots, literal builders and round-trip tests work.
+//!   * [`PjRtClient::cpu`] returns an error, so `Runtime::new` fails
+//!     gracefully and every caller falls back to the pure-Rust backend
+//!     (`--cpu-ref` / `CpuModel`); device execution is never reached.
+//!
+//! Swapping in the real `xla` crate requires no source changes elsewhere.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` conversions into
+/// `anyhow::Error` work unchanged).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "xla stub: PJRT is unavailable in this offline build (run with --cpu-ref)";
+
+/// Typed host storage backing a [`Literal`].
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn store(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn unpack(s: &Storage) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn type_name() -> &'static str;
+}
+
+impl NativeType for f32 {
+    fn store(v: Vec<f32>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unpack(s: &Storage) -> Option<Vec<f32>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl NativeType for i32 {
+    fn store(v: Vec<i32>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unpack(s: &Storage) -> Option<Vec<i32>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// A host tensor literal: typed flat storage plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::store(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), storage: T::store(vec![v]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same storage, new dims (must preserve the element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the flat contents out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unpack(&self.storage)
+            .ok_or_else(|| Error::new(format!("to_vec: literal is not {}", T::type_name())))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(Error::new("to_tuple: literal is not a tuple")),
+        }
+    }
+}
+
+/// Stub device handle (never constructed).
+pub struct PjRtDevice;
+
+/// Stub device buffer (never constructed: the client cannot be created).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Stub PJRT client: construction always fails in the offline build.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Stub loaded executable (never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Stub HLO module proto: text parsing is unavailable offline.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error::new(format!(
+            "xla stub: cannot parse HLO text {} (PJRT unavailable offline)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple_errors() {
+        let s = Literal::scalar(5i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![5]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/none.hlo.txt").is_err());
+    }
+}
