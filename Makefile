@@ -1,18 +1,26 @@
 # SpecMER repo verification entry points.
 #
-#   make verify       tier-1 (release build + tests) plus a bench_micro
+#   make verify       hygiene gates (rustfmt check + clippy -D warnings),
+#                     tier-1 (release build + tests), plus a bench_micro
 #                     smoke run, which writes machine-readable round
-#                     latencies to rust/results/bench_micro.json (cargo
-#                     runs bench binaries from the package root) — perf
-#                     regressions on the draft/verify hot paths show up
-#                     there, not just in prose.
+#                     latencies — including the batched-vs-serial B=4
+#                     decode throughput — to rust/results/bench_micro.json
+#                     (cargo runs bench binaries from the package root), so
+#                     perf regressions on the draft/verify/serving hot
+#                     paths show up there, not just in prose.
 #   make bench-micro  full (non-smoke) micro benches.
 
 CARGO ?= cargo
 
-.PHONY: verify build test bench-smoke bench-micro
+.PHONY: verify fmt-check lint build test bench-smoke bench-micro
 
-verify: build test bench-smoke
+verify: fmt-check lint build test bench-smoke
+
+fmt-check:
+	$(CARGO) fmt --check
+
+lint:
+	$(CARGO) clippy -q -- -D warnings
 
 build:
 	$(CARGO) build --release

@@ -5,12 +5,15 @@
 //! Besides the scalar kernels, this bench measures a full **draft round**
 //! (`generate` at c=3, γ=5) and a **verify round** on a synthetic model,
 //! both for the batched branched-cache runtime and for the seed
-//! clone-per-candidate implementation (`cpu_ref::reference`), and emits the
-//! numbers machine-readably to `results/bench_micro.json`. Set
+//! clone-per-candidate implementation (`cpu_ref::reference`), plus the
+//! worker-level question — four full generations dispatched as **lockstep
+//! batched rounds vs a serial request loop** — and emits the numbers
+//! machine-readably to `results/bench_micro.json`. Set
 //! `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
 use std::time::Instant;
 
+use specmer::decode::{speculative_generate, speculative_generate_batch, GenConfig, SpecBatchItem};
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
 use specmer::runtime::cpu_ref::{reference, CpuModel};
@@ -137,6 +140,57 @@ fn main() {
     println!("draft-round speedup vs seed:  {draft_speedup:.2}x");
     println!("verify-round speedup vs seed: {verify_speedup:.2}x");
 
+    // ---- cross-request batching: B=4 lockstep decode vs the serial loop --
+    // Full generations (all rounds to max_len/EOS) for four requests with
+    // different seeds — the worker-level question: does dispatching the
+    // batch through shared decode rounds beat iterating it?
+    println!("== cross-request decode benches (B=4, c=3, γ=5) ==");
+    let bd = CpuModel::synthetic(4, 64, 4, 256, 41);
+    let bt = CpuModel::synthetic(4, 64, 4, 256, 43);
+    let bcfgs: Vec<GenConfig> = (0..4u64)
+        .map(|seed| GenConfig {
+            c: 3,
+            gamma: 5,
+            max_len: 72,
+            seed: seed * 7 + 1,
+            kset: KmerSet::new(true, true, true),
+            ..Default::default()
+        })
+        .collect();
+    let bctx: Vec<u8> = ctx.clone();
+    let gen_iters: u64 = if smoke { 1 } else { 5 };
+
+    // committed tokens are identical across both paths (the equivalence
+    // tests pin it), so count them once up front — this pass doubles as
+    // warmup — and reuse the sum for both throughput numbers
+    let new_tokens: usize = bcfgs
+        .iter()
+        .map(|cfg| {
+            speculative_generate(&bd, &bt, Some(&table), &bctx, cfg).unwrap().new_tokens()
+        })
+        .sum();
+
+    let serial_ns = bench("decode B=4 (serial request loop)", gen_iters, || {
+        for cfg in &bcfgs {
+            std::hint::black_box(
+                speculative_generate(&bd, &bt, Some(&table), &bctx, cfg).unwrap(),
+            );
+        }
+    });
+    let batched_ns = bench("decode B=4 (lockstep batched rounds)", gen_iters, || {
+        let items: Vec<SpecBatchItem<'_>> =
+            bcfgs.iter().map(|cfg| SpecBatchItem { context: &bctx, cfg }).collect();
+        for out in speculative_generate_batch(&bd, &bt, Some(&table), &items) {
+            std::hint::black_box(out.unwrap());
+        }
+    });
+    let serial_tps = new_tokens as f64 / (serial_ns / 1e9);
+    let batched_tps = new_tokens as f64 / (batched_ns / 1e9);
+    let batch_speedup = serial_ns / batched_ns;
+    println!("serial  B=4 throughput: {serial_tps:.1} tok/s");
+    println!("batched B=4 throughput: {batched_tps:.1} tok/s");
+    println!("batched-vs-serial decode speedup: {batch_speedup:.2}x");
+
     let json = Json::obj(vec![
         ("model", Json::str("synthetic L4 d64 h4 S256")),
         ("c", Json::num(c as f64)),
@@ -147,6 +201,11 @@ fn main() {
         ("verify_round_ns_batched", Json::num(verify_new)),
         ("verify_round_ns_seed", Json::num(verify_seed)),
         ("verify_round_speedup_g5", Json::num(verify_speedup)),
+        ("batch_decode_b4_ns_serial", Json::num(serial_ns)),
+        ("batch_decode_b4_ns_batched", Json::num(batched_ns)),
+        ("batch_decode_b4_tokens_per_sec_serial", Json::num(serial_tps)),
+        ("batch_decode_b4_tokens_per_sec_batched", Json::num(batched_tps)),
+        ("batch_decode_speedup_b4", Json::num(batch_speedup)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

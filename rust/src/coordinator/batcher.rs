@@ -35,31 +35,46 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Key under which requests may share a batch.
-    fn key(r: &GenRequest) -> (String, Method) {
-        (r.protein.clone(), r.method)
+    /// Key under which requests may share a batch. By-reference so the
+    /// per-element comparisons `next_batch` runs on every poll don't
+    /// allocate a `String` clone each.
+    fn key(r: &GenRequest) -> (&str, Method) {
+        (r.protein.as_str(), r.method)
+    }
+
+    /// Time until the oldest queued request reaches `max_wait` (zero if it
+    /// already has; `max_wait` when the queue is empty). Workers sleep on
+    /// this instead of polling.
+    pub fn time_to_deadline(&self, now: Instant) -> Duration {
+        match self.queue.front() {
+            Some(r) => self.max_wait.saturating_sub(now.saturating_duration_since(r.submitted)),
+            None => self.max_wait,
+        }
     }
 
     /// Pop the next batch if one is ready (full, or oldest has waited long
     /// enough, or `flush` forces). Returns None when nothing should run yet.
     pub fn next_batch(&mut self, now: Instant, flush: bool) -> Option<Vec<GenRequest>> {
         let oldest = self.queue.front()?;
-        let waited = now.duration_since(oldest.submitted);
-        let key = Self::key(oldest);
-        let matching = self
-            .queue
-            .iter()
-            .filter(|r| Self::key(r) == key)
-            .take(self.max_batch)
-            .count();
+        let waited = now.saturating_duration_since(oldest.submitted);
+        let matching = {
+            let key = Self::key(oldest);
+            self.queue
+                .iter()
+                .filter(|r| Self::key(r) == key)
+                .take(self.max_batch)
+                .count()
+        };
         if !(flush || waited >= self.max_wait || matching >= self.max_batch) {
             return None;
         }
-        // extract up to max_batch requests with the head's key, preserving order
+        // extract up to max_batch requests with the head's key, preserving
+        // order; the popped head carries the key for the remaining compares
         let mut batch = Vec::with_capacity(matching);
         let mut rest = VecDeque::with_capacity(self.queue.len());
+        batch.push(self.queue.pop_front()?);
         while let Some(r) = self.queue.pop_front() {
-            if batch.len() < self.max_batch && Self::key(&r) == key {
+            if batch.len() < self.max_batch && Self::key(&r) == Self::key(&batch[0]) {
                 batch.push(r);
             } else {
                 rest.push_back(r);
@@ -140,6 +155,84 @@ mod tests {
         let batch = b.next_batch(Instant::now(), false).unwrap();
         assert_eq!(batch.len(), 2);
         assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn cross_key_batches_pop_in_arrival_order() {
+        // interleaved keys: batches must come out headed by the oldest
+        // remaining request, never reordered across keys
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        b.push(req(1, "GFP", Method::SpecMer, 40));
+        b.push(req(2, "GB1", Method::SpecMer, 30));
+        b.push(req(3, "GFP", Method::SpecMer, 20));
+        b.push(req(4, "TEM1", Method::SpecMer, 10));
+        b.push(req(5, "GB1", Method::SpecMer, 5));
+        let heads: Vec<u64> = std::iter::from_fn(|| {
+            b.next_batch(Instant::now(), false).map(|batch| batch[0].id)
+        })
+        .collect();
+        assert_eq!(heads, vec![1, 2, 4], "head order must follow arrival order");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn minority_key_is_not_starved_by_a_flood() {
+        // 10 GFP requests around a single GB1: GB1 must be served as soon
+        // as it reaches the front, within a bounded number of polls
+        let mut b = Batcher::new(4, Duration::from_millis(0));
+        for i in 0..5 {
+            b.push(req(i, "GFP", Method::SpecMer, 100));
+        }
+        b.push(req(99, "GB1", Method::SpecMer, 60));
+        for i in 5..10 {
+            b.push(req(i, "GFP", Method::SpecMer, 50));
+        }
+        let mut polls = 0;
+        let mut minority_seen = 0;
+        while !b.is_empty() {
+            polls += 1;
+            assert!(polls <= 4, "minority key starved: {polls} polls and counting");
+            let batch = b.next_batch(Instant::now(), false).unwrap();
+            minority_seen += batch.iter().filter(|r| r.protein == "GB1").count();
+        }
+        assert_eq!(minority_seen, 1, "minority request delivered exactly once");
+    }
+
+    #[test]
+    fn flush_drains_every_request_exactly_once() {
+        let mut b = Batcher::new(3, Duration::from_secs(3600));
+        let mut want: Vec<u64> = Vec::new();
+        for i in 0..10u64 {
+            let protein = ["GFP", "GB1", "TEM1"][(i % 3) as usize];
+            b.push(req(i, protein, Method::SpecMer, 0));
+            want.push(i);
+        }
+        let mut got: Vec<u64> = Vec::new();
+        while let Some(batch) = b.next_batch(Instant::now(), true) {
+            assert!(batch.len() <= 3, "flush must still respect max_batch");
+            got.extend(batch.iter().map(|r| r.id));
+        }
+        assert!(b.is_empty(), "flush leaves nothing behind");
+        got.sort_unstable();
+        assert_eq!(got, want, "every queued request drained exactly once");
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_request() {
+        let mut b = Batcher::new(8, Duration::from_millis(100));
+        assert_eq!(
+            b.time_to_deadline(Instant::now()),
+            Duration::from_millis(100),
+            "empty queue falls back to max_wait"
+        );
+        b.push(req(1, "GFP", Method::SpecMer, 40));
+        b.push(req(2, "GFP", Method::SpecMer, 10)); // younger, not the head
+        let ttd = b.time_to_deadline(Instant::now());
+        assert!(ttd <= Duration::from_millis(60), "keyed off the oldest: {ttd:?}");
+        // an aged-out head saturates to zero rather than panicking
+        let mut b2 = Batcher::new(8, Duration::from_millis(100));
+        b2.push(req(3, "GB1", Method::SpecMer, 500));
+        assert_eq!(b2.time_to_deadline(Instant::now()), Duration::ZERO);
     }
 
     #[test]

@@ -60,6 +60,20 @@ pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
 pub trait GenEngine {
     /// Generate one sequence for `protein` with `method`.
     fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput>;
+    /// Generate a whole batcher batch (one `(protein, method)` key, one
+    /// config per request) in a single call, returning per-request results
+    /// in order. The default loops [`GenEngine::generate`]; `Engine`
+    /// overrides it to run lockstep-compatible requests through
+    /// [`decode::speculative_generate_batch`] so one decode round serves
+    /// the whole batch.
+    fn generate_batch(
+        &self,
+        protein: &str,
+        method: Method,
+        cfgs: &[GenConfig],
+    ) -> Vec<Result<GenOutput>> {
+        cfgs.iter().map(|cfg| self.generate(protein, method, cfg)).collect()
+    }
     /// Length-normalized NLL of a token sequence under the target model.
     fn score_nll(&self, tokens: &[u8]) -> Result<f64>;
     /// Target-model embedding of a token sequence.
@@ -93,18 +107,28 @@ impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
             overrides: HashMap::new(),
         }
     }
+
+    /// Per-request config normalization shared by `generate` and
+    /// `generate_batch`: clamp max_len to the family and degrade
+    /// `Speculative` to single-candidate drafting.
+    fn normalized(cfg: &GenConfig, fam: &Family, method: Method) -> GenConfig {
+        let mut cfg = cfg.clone();
+        cfg.max_len = cfg.max_len.min(fam.max_len());
+        if method == Method::Speculative {
+            cfg.c = 1;
+        }
+        cfg
+    }
 }
 
 impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
     fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput> {
         let fam = self.family(protein)?;
-        let mut cfg = cfg.clone();
-        cfg.max_len = cfg.max_len.min(fam.max_len());
+        let cfg = Self::normalized(cfg, fam, method);
         match method {
             Method::TargetOnly => decode::target_only_generate(&self.target, &fam.context, &cfg),
             Method::DraftOnly => decode::target_only_generate(&self.draft, &fam.context, &cfg),
             Method::Speculative => {
-                cfg.c = 1;
                 decode::speculative_generate(&self.draft, &self.target, None, &fam.context, &cfg)
             }
             Method::SpecMer => {
@@ -118,6 +142,64 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
                 )
             }
         }
+    }
+
+    fn generate_batch(
+        &self,
+        protein: &str,
+        method: Method,
+        cfgs: &[GenConfig],
+    ) -> Vec<Result<GenOutput>> {
+        // only the speculative methods have a lockstep path; baselines (and
+        // trivial batches) fall back to the serial loop
+        if cfgs.len() <= 1 || !matches!(method, Method::Speculative | Method::SpecMer) {
+            return cfgs.iter().map(|cfg| self.generate(protein, method, cfg)).collect();
+        }
+        let fam = match self.family(protein) {
+            Ok(f) => f,
+            Err(_) => {
+                return cfgs
+                    .iter()
+                    .map(|_| Err(anyhow!("unknown protein {protein}")))
+                    .collect()
+            }
+        };
+        let table = match method {
+            Method::SpecMer => Some(self.overrides.get(protein).unwrap_or(&fam.table)),
+            _ => None,
+        };
+        // normalize per-request configs exactly like `generate` does
+        let norm: Vec<GenConfig> =
+            cfgs.iter().map(|cfg| Self::normalized(cfg, fam, method)).collect();
+        // group lockstep-compatible requests (equal dispatch shapes) and
+        // run each group as one batched decode; order is restored at the end
+        let compatible = |a: &GenConfig, b: &GenConfig| {
+            a.c == b.c
+                && a.gamma == b.gamma
+                && a.temp.to_bits() == b.temp.to_bits()
+                && a.top_p.to_bits() == b.top_p.to_bits()
+        };
+        let mut results: Vec<Option<Result<GenOutput>>> = (0..norm.len()).map(|_| None).collect();
+        let mut remaining: Vec<usize> = (0..norm.len()).collect();
+        while let Some(&first) = remaining.first() {
+            let group: Vec<usize> = remaining
+                .iter()
+                .copied()
+                .filter(|&i| compatible(&norm[i], &norm[first]))
+                .collect();
+            remaining.retain(|i| !group.contains(i));
+            let items: Vec<decode::SpecBatchItem<'_>> = group
+                .iter()
+                .map(|&i| decode::SpecBatchItem { context: &fam.context, cfg: &norm[i] })
+                .collect();
+            // per-item results: a single bad request fails alone, exactly
+            // like the serial loop did
+            let outs = decode::speculative_generate_batch(&self.draft, &self.target, table, &items);
+            for (&i, out) in group.iter().zip(outs) {
+                results[i] = Some(out);
+            }
+        }
+        results.into_iter().map(|o| o.expect("every request answered")).collect()
     }
 
     fn score_nll(&self, tokens: &[u8]) -> Result<f64> {
@@ -247,6 +329,18 @@ mod tests {
         // draws are identical so outputs differ only if selection differed
         // at least once — extremely likely across a full sequence.
         let _ = b;
+    }
+
+    // batch-vs-serial engine equivalence across all methods lives in
+    // tests/batch_decode_equivalence.rs (public-API integration test)
+
+    #[test]
+    fn generate_batch_unknown_protein_fails_every_request() {
+        let eng = synthetic_engine(3);
+        let cfgs = vec![GenConfig::default(), GenConfig::default()];
+        let batch = eng.generate_batch("Nope", Method::SpecMer, &cfgs);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.is_err()));
     }
 
     #[test]

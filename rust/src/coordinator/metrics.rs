@@ -18,8 +18,13 @@ pub struct Metrics {
     pub draft_calls: AtomicU64,
     pub target_calls: AtomicU64,
     pub prefill_hits: AtomicU64,
+    /// Worker batch dispatches (one lockstep decode run each).
+    pub batches: AtomicU64,
+    /// Requests served through batch dispatches (occupancy numerator).
+    pub batched_requests: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     decode_seconds: Mutex<f64>,
+    queue_wait_seconds: Mutex<f64>,
     started: Mutex<Option<Instant>>,
 }
 
@@ -43,6 +48,35 @@ impl Metrics {
 
     pub fn record_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one worker batch dispatch: how many requests rode it and the
+    /// summed queue wait (submit → dispatch) of its members, in seconds.
+    pub fn record_batch(&self, occupancy: usize, queue_wait_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+        *self.queue_wait_seconds.lock().unwrap() += queue_wait_s;
+    }
+
+    /// Mean requests per worker dispatch — how well the batcher is filling
+    /// lockstep rounds (1.0 = no cross-request batching happening).
+    pub fn batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed) as f64;
+        if b == 0.0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b
+        }
+    }
+
+    /// Total seconds requests spent queued before their batch dispatched.
+    pub fn queue_wait_total(&self) -> f64 {
+        *self.queue_wait_seconds.lock().unwrap()
+    }
+
+    /// Total seconds workers spent inside decode dispatches.
+    pub fn decode_seconds_total(&self) -> f64 {
+        *self.decode_seconds.lock().unwrap()
     }
 
     /// Overall acceptance ratio (Eq. 6) across all completed requests.
@@ -95,6 +129,10 @@ impl Metrics {
              specmer_draft_calls_total {}\n\
              specmer_target_calls_total {}\n\
              specmer_prefill_cache_hits_total {}\n\
+             specmer_batches_total {}\n\
+             specmer_batch_occupancy_avg {:.3}\n\
+             specmer_queue_wait_seconds_total {:.4}\n\
+             specmer_decode_seconds_total {:.4}\n\
              specmer_latency_p50_seconds {p50:.4}\n\
              specmer_latency_p99_seconds {p99:.4}\n",
             self.requests.load(Ordering::Relaxed),
@@ -109,6 +147,10 @@ impl Metrics {
             self.draft_calls.load(Ordering::Relaxed),
             self.target_calls.load(Ordering::Relaxed),
             self.prefill_hits.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.batch_occupancy(),
+            self.queue_wait_total(),
+            self.decode_seconds_total(),
         )
     }
 }
@@ -147,6 +189,20 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.acceptance_ratio(), 0.0);
         assert_eq!(m.tokens_per_second(), 0.0);
+        assert_eq!(m.batch_occupancy(), 0.0);
         assert!(m.text_dump().contains("specmer_requests_total 0"));
+    }
+
+    #[test]
+    fn batch_dispatches_tracked() {
+        let m = Metrics::new();
+        m.record_batch(4, 0.2);
+        m.record_batch(2, 0.1);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert!((m.batch_occupancy() - 3.0).abs() < 1e-12);
+        assert!((m.queue_wait_total() - 0.3).abs() < 1e-12);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_batches_total 2"));
+        assert!(dump.contains("specmer_batch_occupancy_avg 3.000"));
     }
 }

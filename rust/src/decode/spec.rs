@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use super::{GenConfig, GenOutput};
 use crate::kmer::{score, KmerTable};
-use crate::runtime::ModelBackend;
+use crate::runtime::{DraftSeq, ModelBackend, VerifySeq};
 use crate::sampling;
 use crate::tokenizer::EOS;
 use crate::util::rng::Pcg64;
@@ -141,6 +141,302 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
         }
     }
     Ok(out)
+}
+
+/// One request of a lockstep batch: its context and decoding config.
+///
+/// Within one `speculative_generate_batch` call, `c`, `gamma`, `temp` and
+/// `top_p` must match across items (they fix the dispatch shapes); seed,
+/// max_len, context and the k-mer selection knobs may differ freely. The
+/// coordinator groups requests so the shape constraint always holds.
+pub struct SpecBatchItem<'a> {
+    pub context: &'a [u8],
+    pub cfg: &'a GenConfig,
+}
+
+/// Generate B sequences with speculative decoding / SpecMER in lockstep:
+/// per round, one batched draft dispatch over all active sequences'
+/// candidate rows and one batched verify over their selected blocks.
+///
+/// Per-sequence RNG and acceptance state make every sequence's token
+/// stream identical to a solo [`speculative_generate`] call with the same
+/// seed (bitwise, on backends whose batched dispatches are row-independent
+/// — `tests/batch_decode_equivalence.rs` pins this for the CPU runtime).
+/// Sequences that finish early (EOS / max_len) drop out of the batch while
+/// the rest continue. Items with `probe_rate > 0` interleave extra probe
+/// dispatches into a round and are routed through the sequential engine;
+/// their results are spliced back in order.
+///
+/// Results are per-item, preserving the serial worker loop's failure
+/// isolation: a bad config, a failed prefill or a probe item's error fails
+/// only that request. Only a *shared* dispatch error (the batched
+/// draft/verify call itself) poisons the whole lockstep group.
+pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    table: Option<&KmerTable>,
+    items: &[SpecBatchItem<'_>],
+) -> Vec<Result<GenOutput>> {
+    let mut results: Vec<Option<Result<GenOutput>>> = (0..items.len()).map(|_| None).collect();
+    let mut lock = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        if it.cfg.probe_rate > 0.0 {
+            results[i] = Some(speculative_generate(draft, target, table, it.context, it.cfg));
+        } else {
+            lock.push(i);
+        }
+    }
+    if !lock.is_empty() {
+        for (i, out) in lock.iter().zip(lockstep_generate(draft, target, table, items, &lock)) {
+            results[*i] = Some(out);
+        }
+    }
+    results.into_iter().map(|o| o.expect("every item decoded")).collect()
+}
+
+/// Per-sequence state of the lockstep loop. The RNG stream is consumed in
+/// exactly the order the sequential path consumes it (round uniforms, then
+/// coupling draws, then the bonus draw), which is what makes the batched
+/// token stream reproduce the solo one.
+struct LockSeq<DC, TC> {
+    dcache: DC,
+    tcache: TC,
+    rng: Pcg64,
+    out: GenOutput,
+    draft_fed: usize,
+    /// cfg.max_len clamped to the model cap (the accept-loop limit).
+    eff_max: usize,
+    /// Round-loop limit: eff_max further clamped by the KV hard cap.
+    stop_at: usize,
+    kset: crate::kmer::KmerSet,
+    kmer_boundary: bool,
+    done: bool,
+    // round scratch (kept across rounds to avoid per-round allocation)
+    committed: usize,
+    sel: usize,
+    feed: Vec<u8>,
+    u: Vec<f32>,
+    vtoks: Vec<u8>,
+}
+
+/// Build one sequence's lockstep state (validation + both prefills); an
+/// error here fails only this item.
+fn init_seq<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    it: &SpecBatchItem<'_>,
+    c: usize,
+    gamma: usize,
+    model_cap: usize,
+) -> Result<LockSeq<D::Cache, T::Cache>> {
+    it.cfg.validate(it.context.len(), model_cap)?;
+    let eff_max = it.cfg.max_len.min(model_cap);
+    // same slack rule as the sequential loop: a full block must fit
+    let hard_cap = model_cap - gamma;
+    Ok(LockSeq {
+        dcache: draft.prefill(it.context)?,
+        tcache: target.prefill(it.context)?,
+        rng: Pcg64::new(it.cfg.seed),
+        out: GenOutput {
+            tokens: it.context.to_vec(),
+            context_len: it.context.len(),
+            ..Default::default()
+        },
+        draft_fed: it.context.len() - 1,
+        eff_max,
+        stop_at: eff_max.min(hard_cap),
+        kset: it.cfg.kset,
+        kmer_boundary: it.cfg.kmer_boundary,
+        done: false,
+        committed: 0,
+        sel: 0,
+        feed: Vec::new(),
+        u: Vec::with_capacity(c * gamma),
+        vtoks: Vec::with_capacity(gamma + 1),
+    })
+}
+
+fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    table: Option<&KmerTable>,
+    items: &[SpecBatchItem<'_>],
+    idxs: &[usize],
+) -> Vec<Result<GenOutput>> {
+    let head = items[idxs[0]].cfg;
+    let (c, gamma, temp, top_p) = (head.c, head.gamma, head.temp, head.top_p);
+    for &i in &idxs[1..] {
+        let cfg = items[i].cfg;
+        if cfg.c != c
+            || cfg.gamma != gamma
+            || cfg.temp.to_bits() != temp.to_bits()
+            || cfg.top_p.to_bits() != top_p.to_bits()
+        {
+            // a caller bug, not a request failure: report it on every item
+            return idxs
+                .iter()
+                .map(|_| {
+                    Err(anyhow::anyhow!(
+                        "lockstep batch requires equal (c, gamma, temp, top_p) across \
+                         items (group requests before dispatching)"
+                    ))
+                })
+                .collect();
+        }
+    }
+    let model_cap = target.maxlen().min(draft.maxlen());
+
+    let mut results: Vec<Option<Result<GenOutput>>> = (0..idxs.len()).map(|_| None).collect();
+    // per-item init: a bad config or failed prefill drops only that item
+    let mut seqs: Vec<LockSeq<D::Cache, T::Cache>> = Vec::with_capacity(idxs.len());
+    let mut slots: Vec<usize> = Vec::with_capacity(idxs.len());
+    for (slot, &i) in idxs.iter().enumerate() {
+        match init_seq(draft, target, &items[i], c, gamma, model_cap) {
+            Ok(s) => {
+                seqs.push(s);
+                slots.push(slot);
+            }
+            Err(e) => results[slot] = Some(Err(e)),
+        }
+    }
+    'rounds: loop {
+        // ---- round setup: drop finished sequences, draw round uniforms --
+        let mut any_active = false;
+        for s in seqs.iter_mut() {
+            if s.done {
+                continue;
+            }
+            if s.out.tokens.len() >= s.stop_at || *s.out.tokens.last().unwrap() == EOS {
+                s.done = true;
+                continue;
+            }
+            any_active = true;
+            s.out.rounds += 1;
+            s.committed = s.out.tokens.len();
+            s.feed.clear();
+            s.feed.extend_from_slice(&s.out.tokens[s.draft_fed..]);
+            s.u.clear();
+            for _ in 0..c * gamma {
+                s.u.push(s.rng.next_f32());
+            }
+            s.out.draft_calls += 1;
+        }
+        if !any_active {
+            break;
+        }
+
+        // ---- 1. candidate construction: one lockstep draft dispatch -----
+        let mut dseqs: Vec<DraftSeq<'_, D::Cache>> = Vec::new();
+        for s in seqs.iter_mut().filter(|s| !s.done) {
+            dseqs.push(DraftSeq { cache: &mut s.dcache, feed: &s.feed, pos: s.draft_fed, u: &s.u });
+        }
+        let blocks_res = draft.generate_batch(&mut dseqs, c, gamma, temp, top_p);
+        drop(dseqs);
+        let blocks = match blocks_res {
+            Ok(b) => b,
+            Err(e) => {
+                poison_active(&mut results, &slots, &seqs, e);
+                break 'rounds;
+            }
+        };
+
+        // ---- 2. per-sequence k-mer selection ----------------------------
+        let mut bi = 0;
+        for s in seqs.iter_mut().filter(|s| !s.done) {
+            let block = &blocks[bi];
+            bi += 1;
+            s.draft_fed = s.committed;
+            s.sel = match (table, c) {
+                (Some(t), cc) if cc > 1 => {
+                    if s.kmer_boundary {
+                        let tail_len = s.kset.kmax() - 1;
+                        let tail = &s.out.tokens[s.committed.saturating_sub(tail_len)..];
+                        score::select_best_with_context(t, tail, &block.tokens, s.kset)
+                    } else {
+                        score::select_best(t, &block.tokens, s.kset)
+                    }
+                }
+                _ => 0,
+            };
+            s.vtoks.clear();
+            s.vtoks.push(s.out.tokens[s.committed - 1]);
+            s.vtoks.extend_from_slice(&block.tokens[s.sel]);
+        }
+
+        // ---- 3. conditional probabilities: one lockstep verify ----------
+        let mut vseqs: Vec<VerifySeq<'_, T::Cache>> = Vec::new();
+        for s in seqs.iter_mut().filter(|s| !s.done) {
+            vseqs.push(VerifySeq { cache: &mut s.tcache, toks: &s.vtoks, pos: s.committed - 1 });
+        }
+        let verifies_res = target.verify_batch(&mut vseqs, temp, top_p);
+        drop(vseqs);
+        let verifies = match verifies_res {
+            Ok(v) => v,
+            Err(e) => {
+                poison_active(&mut results, &slots, &seqs, e);
+                break 'rounds;
+            }
+        };
+
+        // ---- 4. per-sequence maximal coupling on its own RNG stream -----
+        let mut bi = 0;
+        for s in seqs.iter_mut().filter(|s| !s.done) {
+            let block = &blocks[bi];
+            let verify = &verifies[bi];
+            bi += 1;
+            s.out.target_calls += 1;
+            let cand = &block.tokens[s.sel];
+            let p_dists = &block.dists[s.sel];
+            let mut all_accepted = true;
+            for i in 0..gamma {
+                let x = cand[i] as usize;
+                let (acc, tok) = sampling::couple(&p_dists[i], &verify.dists[i], x, &mut s.rng);
+                s.out.online_nll_sum += sampling::nll_of(&verify.dists[i], tok);
+                s.out.tokens.push(tok as u8);
+                if acc {
+                    s.out.accepted += 1;
+                } else {
+                    s.out.rejected += 1;
+                    all_accepted = false;
+                }
+                if !acc || tok as u8 == EOS || s.out.tokens.len() >= s.eff_max {
+                    all_accepted = acc && tok as u8 != EOS && s.out.tokens.len() < s.eff_max;
+                    break;
+                }
+            }
+            if all_accepted && s.out.tokens.len() < s.eff_max {
+                let bonus_dist = &verify.dists[gamma];
+                let tok = sampling::sample(bonus_dist, s.rng.next_f32());
+                s.out.online_nll_sum += sampling::nll_of(bonus_dist, tok);
+                s.out.tokens.push(tok as u8);
+                s.out.bonus += 1;
+            }
+        }
+    }
+    for (slot, s) in slots.into_iter().zip(seqs) {
+        // dispatch poisoning already filled these slots; don't overwrite
+        if results[slot].is_none() {
+            results[slot] = Some(Ok(s.out));
+        }
+    }
+    results.into_iter().map(|o| o.expect("every slot resolved")).collect()
+}
+
+/// A *shared* dispatch died mid-round: fail the sequences still in flight.
+/// Sequences already `done` completed earlier rounds with valid outputs and
+/// keep them — only work the failed dispatch was actually carrying is lost.
+fn poison_active<DC, TC>(
+    results: &mut [Option<Result<GenOutput>>],
+    slots: &[usize],
+    seqs: &[LockSeq<DC, TC>],
+    e: anyhow::Error,
+) {
+    let msg = format!("{e:#}");
+    for (&slot, s) in slots.iter().zip(seqs) {
+        if !s.done {
+            results[slot] = Some(Err(anyhow::anyhow!("lockstep dispatch failed: {msg}")));
+        }
+    }
 }
 
 /// Estimate a misranking event: did *any* candidate pass a sequence-level
@@ -357,6 +653,102 @@ mod tests {
         let out = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
         assert!(out.tokens.len() > 3);
         assert!(out.rounds > 0);
+    }
+
+    #[test]
+    fn batch_matches_sequential_per_sequence() {
+        // the tentpole invariant at the decode level: B lockstep sequences
+        // == B solo runs, token for token and stat for stat
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let ctxs: [&[u8]; 3] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13]];
+        let mut cfgs = vec![cfg(3, 5, 11), cfg(3, 5, 23), cfg(3, 5, 31)];
+        cfgs[1].max_len = 20; // finishes early and must drop out cleanly
+        cfgs[2].kmer_boundary = true; // per-sequence selection knob
+
+        let solo: Vec<GenOutput> = ctxs
+            .iter()
+            .zip(&cfgs)
+            .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+            .collect();
+        let items: Vec<SpecBatchItem<'_>> = ctxs
+            .iter()
+            .zip(&cfgs)
+            .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+            .collect();
+        let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+
+        assert_eq!(batch.len(), solo.len());
+        for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.tokens, want.tokens, "seq {b} tokens diverged");
+            assert_eq!(got.accepted, want.accepted, "seq {b}");
+            assert_eq!(got.rejected, want.rejected, "seq {b}");
+            assert_eq!(got.bonus, want.bonus, "seq {b}");
+            assert_eq!(got.rounds, want.rounds, "seq {b}");
+            assert_eq!(got.draft_calls, want.draft_calls, "seq {b}");
+            assert_eq!(got.target_calls, want.target_calls, "seq {b}");
+        }
+    }
+
+    #[test]
+    fn batch_rejects_mismatched_shapes() {
+        let (d, t) = models();
+        let a = cfg(2, 5, 1);
+        let b = cfg(2, 8, 2); // different gamma: not lockstep-compatible
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let items = [
+            SpecBatchItem { context: ctx, cfg: &a },
+            SpecBatchItem { context: ctx, cfg: &b },
+        ];
+        let outs = speculative_generate_batch(&d, &t, None, &items);
+        assert!(outs.iter().all(|r| r.is_err()), "shape mismatch is a caller bug");
+    }
+
+    #[test]
+    fn batch_isolates_per_item_failures() {
+        // one invalid config (context >= max_len) must not take down the
+        // healthy requests sharing its lockstep group
+        let (d, t) = models();
+        let good = cfg(2, 5, 1);
+        let mut bad = cfg(2, 5, 2);
+        bad.max_len = 3; // context length 3 >= max_len -> validate() fails
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let items = [
+            SpecBatchItem { context: ctx, cfg: &good },
+            SpecBatchItem { context: ctx, cfg: &bad },
+            SpecBatchItem { context: ctx, cfg: &good },
+        ];
+        let outs = speculative_generate_batch(&d, &t, None, &items);
+        assert!(outs[0].is_ok(), "{:?}", outs[0].as_ref().err());
+        assert!(outs[1].is_err());
+        assert!(outs[2].is_ok());
+        let want = speculative_generate(&d, &t, None, ctx, &good).unwrap();
+        assert_eq!(outs[0].as_ref().unwrap().tokens, want.tokens);
+        assert_eq!(outs[2].as_ref().unwrap().tokens, want.tokens);
+    }
+
+    #[test]
+    fn batch_splices_probe_items_through_sequential_path() {
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let mut probing = cfg(3, 5, 17);
+        probing.probe_rate = 1.0;
+        let plain = cfg(3, 5, 19);
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let items = [
+            SpecBatchItem { context: ctx, cfg: &probing },
+            SpecBatchItem { context: ctx, cfg: &plain },
+        ];
+        let outs = speculative_generate_batch(&d, &t, Some(&table), &items);
+        let probed = outs[0].as_ref().unwrap();
+        assert!(!probed.probes.is_empty(), "probe item must still probe");
+        let want = speculative_generate(&d, &t, Some(&table), ctx, &plain).unwrap();
+        assert_eq!(outs[1].as_ref().unwrap().tokens, want.tokens);
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //!     committed prefix read-only across the `c` candidates and gives each
 //!     one a γ-slot scratch tail, so a draft round performs γ−1 batched
 //!     `[c,D]` steps — no full KV-cache clone, no per-step heap churn.
+//!   * **Cross-sequence lockstep** (`generate_batch`/`verify_batch`): B
+//!     sequences with ragged committed prefixes run one decode round
+//!     together — a ragged `[ΣG_b, D]` feed, γ−1 arena steps of `[B·c, D]`
+//!     rows (a `BranchedArena`: per-sequence cache slots + per-candidate
+//!     tails), and a `[Σ(γ+1), D]` verify — with per-row results bitwise
+//!     equal to B solo dispatches, so lockstep serving is lossless.
 //!
 //! The GEMM kernels accumulate bitwise-identically to the scalar mat-vec
 //! path, so the batched forward is *exactly* equal to the seed per-position
@@ -28,7 +34,7 @@
 
 use anyhow::Result;
 
-use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+use super::backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
 use super::gemm;
 use crate::params::{ModelDims, ModelParams};
 use crate::sampling;
@@ -90,6 +96,81 @@ pub struct BranchedCache<'a> {
     proj: Vec<f32>,
     ff: Vec<f32>,
     scores: Vec<f32>,
+}
+
+/// Sequence-slot arena for one *lockstep* draft round over B sequences:
+/// the multi-sequence generalization of [`BranchedCache`]. Every sequence
+/// keeps its committed prefix in its own (read-only) cache slot — prefixes
+/// may have different lengths — and each of its `c` candidates owns a
+/// γ-slot scratch tail. Tails are flat `[B, L, 2, C, H, γ, Dh]` (a
+/// sequence's sub-block uses the exact [`BranchedCache`] layout), and the
+/// round workspaces span the union of candidate rows `[B·c, D]`, so one
+/// arena step runs every projection/MLP/logits GEMM over all sequences at
+/// once while attention stays per-row against the owning sequence's cache.
+struct BranchedArena<'a> {
+    /// Per-sequence (committed cache, committed length). Tail slot `s` of
+    /// sequence `b` holds the KV of absolute position `bases[b].1 + s`.
+    bases: Vec<(&'a CpuCache, usize)>,
+    c: usize,
+    gamma: usize,
+    /// Tail floats per sequence ( = L * 2 * c * H * γ * Dh).
+    seq_stride: usize,
+    tail: Vec<f32>,
+    // round-lifetime workspaces, all [B·c, d_model] except `ff` ([B·c, d_ff])
+    xs: Vec<f32>,
+    hbuf: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl<'a> BranchedArena<'a> {
+    fn new(m: &CpuModel, bases: Vec<(&'a CpuCache, usize)>, c: usize, gamma: usize) -> Self {
+        let d = m.dims.d_model;
+        let d_ff = m.dims.d_ff;
+        let nh = m.dims.n_head;
+        let dh = m.dims.d_head();
+        let b = bases.len();
+        let rows = b * c;
+        let seq_stride = m.dims.n_layer * 2 * c * nh * gamma * dh;
+        BranchedArena {
+            bases,
+            c,
+            gamma,
+            seq_stride,
+            tail: vec![0.0; b * seq_stride],
+            xs: vec![0.0; rows * d],
+            hbuf: vec![0.0; rows * d],
+            q: vec![0.0; rows * d],
+            k: vec![0.0; rows * d],
+            v: vec![0.0; rows * d],
+            att: vec![0.0; rows * d],
+            proj: vec![0.0; rows * d],
+            ff: vec![0.0; rows * d_ff],
+            scores: Vec::new(),
+        }
+    }
+
+    /// Start offset of the contiguous slot run for
+    /// (sequence, layer, k/v, cand, head).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn tail_base(
+        &self,
+        nh: usize,
+        dh: usize,
+        b: usize,
+        l: usize,
+        kv: usize,
+        ci: usize,
+        hh: usize,
+    ) -> usize {
+        b * self.seq_stride + ((((l * 2 + kv) * self.c + ci) * nh + hh) * self.gamma) * dh
+    }
 }
 
 impl<'a> BranchedCache<'a> {
@@ -497,6 +578,264 @@ impl CpuModel {
         self.logits_rows(&br.hbuf, b)
     }
 
+    /// Ragged teacher-forced forward over B sequences: item `b` feeds
+    /// `items[b].1` at absolute positions starting from `items[b].2`,
+    /// reading/writing its *own* cache (`items[b].0`). The union of all
+    /// rows (R = Σ_b G_b) goes through each projection, the MLP and the
+    /// final LN as one `[R, D]` GEMM; K/V writes and attention reads stay
+    /// per-sequence. Per-row arithmetic is identical to [`Self::cached_forward`]
+    /// on that sequence alone (the GEMM kernels accumulate row-
+    /// independently), so the result is bitwise-equal to B separate
+    /// dispatches. Returns the final hidden states as one flat [R, D]
+    /// buffer, rows in item order.
+    fn forward_ragged(&self, items: &mut [(&mut CpuCache, &[u8], usize)]) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let d_ff = self.dims.d_ff;
+        let nh = self.dims.n_head;
+        let dh = self.dims.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // row layout: item b's rows start at row_off[b]
+        let mut row_off = Vec::with_capacity(items.len());
+        let mut rt = 0usize;
+        for it in items.iter() {
+            assert!(
+                it.2 + it.1.len() <= self.dims.maxlen(),
+                "ragged forward past maxlen: pos {} + {} > {} (engines must \
+                 leave a full block of slack — see decode::spec)",
+                it.2,
+                it.1.len(),
+                self.dims.maxlen()
+            );
+            row_off.push(rt);
+            rt += it.1.len();
+        }
+
+        // embed
+        let mut xs = vec![0.0f32; rt * d];
+        for (b, it) in items.iter().enumerate() {
+            let (toks, pos) = (it.1, it.2);
+            for (i, &t) in toks.iter().enumerate() {
+                let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
+                let pe = &self.pos_emb[(pos + i) * d..(pos + i + 1) * d];
+                let row = &mut xs[(row_off[b] + i) * d..(row_off[b] + i + 1) * d];
+                for j in 0..d {
+                    row[j] = te[j] + pe[j];
+                }
+            }
+        }
+
+        let mut hbuf = vec![0.0f32; rt * d];
+        let mut q = vec![0.0f32; rt * d];
+        let mut kbuf = vec![0.0f32; rt * d];
+        let mut vbuf = vec![0.0f32; rt * d];
+        let mut att = vec![0.0f32; rt * d];
+        let mut proj = vec![0.0f32; rt * d];
+        let mut ff = vec![0.0f32; rt * d_ff];
+        let mut scores: Vec<f32> = Vec::new();
+
+        for (l, lay) in self.layers.iter().enumerate() {
+            // pre-LN + batched QKV for the union of rows
+            hbuf.copy_from_slice(&xs);
+            for i in 0..rt {
+                ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
+            }
+            gemm::matmul(&hbuf, &lay.wq, rt, d, d, &mut q);
+            gemm::matmul(&hbuf, &lay.wk, rt, d, d, &mut kbuf);
+            gemm::matmul(&hbuf, &lay.wv, rt, d, d, &mut vbuf);
+            // K/V into each sequence's own cache at its own positions
+            for (b, it) in items.iter_mut().enumerate() {
+                let (toks, pos) = (it.1, it.2);
+                let cache = &mut *it.0;
+                for i in 0..toks.len() {
+                    let row = row_off[b] + i;
+                    for hh in 0..nh {
+                        let kslot = self.cache_idx(l, 0, hh, pos + i);
+                        let vslot = self.cache_idx(l, 1, hh, pos + i);
+                        cache.data[kslot..kslot + dh]
+                            .copy_from_slice(&kbuf[row * d + hh * dh..row * d + (hh + 1) * dh]);
+                        cache.data[vslot..vslot + dh]
+                            .copy_from_slice(&vbuf[row * d + hh * dh..row * d + (hh + 1) * dh]);
+                    }
+                }
+            }
+            // attention per row over the owning sequence's cache
+            att.fill(0.0);
+            for (b, it) in items.iter().enumerate() {
+                let (toks, pos) = (it.1, it.2);
+                let cache = &*it.0;
+                for i in 0..toks.len() {
+                    let qpos = pos + i;
+                    let row = row_off[b] + i;
+                    for hh in 0..nh {
+                        let qh = &q[row * d + hh * dh..row * d + (hh + 1) * dh];
+                        let kbase = self.cache_idx(l, 0, hh, 0);
+                        let vbase = self.cache_idx(l, 1, hh, 0);
+                        let n1 = qpos + 1;
+                        attend_one(
+                            qh,
+                            scale,
+                            dh,
+                            &cache.data[kbase..kbase + n1 * dh],
+                            &cache.data[vbase..vbase + n1 * dh],
+                            n1,
+                            &[],
+                            &[],
+                            0,
+                            &mut att[row * d + hh * dh..row * d + (hh + 1) * dh],
+                            &mut scores,
+                        );
+                    }
+                }
+            }
+            // out projection + residual (batched over the union of rows)
+            gemm::matmul(&att, &lay.wo, rt, d, d, &mut proj);
+            for (x, p) in xs.iter_mut().zip(&proj) {
+                *x += p;
+            }
+            // MLP (batched)
+            hbuf.copy_from_slice(&xs);
+            for i in 0..rt {
+                ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
+            }
+            gemm::matmul(&hbuf, &lay.w1, rt, d, d_ff, &mut ff);
+            for i in 0..rt {
+                let row = &mut ff[i * d_ff..(i + 1) * d_ff];
+                for (j, f) in row.iter_mut().enumerate() {
+                    *f = gelu(*f + lay.b1[j]);
+                }
+            }
+            gemm::matmul(&ff, &lay.w2, rt, d_ff, d, &mut proj);
+            for i in 0..rt {
+                let xrow = &mut xs[i * d..(i + 1) * d];
+                let prow = &proj[i * d..(i + 1) * d];
+                for j in 0..d {
+                    xrow[j] += prow[j] + lay.b2[j];
+                }
+            }
+        }
+        // final LN
+        for i in 0..rt {
+            ln(&mut xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b);
+        }
+        xs
+    }
+
+    /// One lockstep draft step over the arena: forward every (sequence,
+    /// candidate) row's current token — `cur` is flat `[B·c]` — writing K/V
+    /// into tail slot `slot` and attending over each sequence's committed
+    /// prefix plus the candidate's own tail slots `0..=slot`. A sequence's
+    /// query position is `bases[b].1 + slot` (prefixes are ragged). Returns
+    /// the next-token logits, flat [B·c, V].
+    fn arena_step(&self, ar: &mut BranchedArena, cur: &[u8], slot: usize) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let d_ff = self.dims.d_ff;
+        let nh = self.dims.n_head;
+        let dh = self.dims.d_head();
+        let bn = ar.bases.len();
+        let c = ar.c;
+        let rows = bn * c;
+        debug_assert_eq!(cur.len(), rows);
+        debug_assert!(slot < ar.gamma);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embed: a row's token sits at its sequence's frontier + slot
+        for b in 0..bn {
+            let qpos = ar.bases[b].1 + slot;
+            debug_assert!(qpos < self.dims.maxlen());
+            let pe = &self.pos_emb[qpos * d..(qpos + 1) * d];
+            for ci in 0..c {
+                let row = b * c + ci;
+                let t = cur[row] as usize;
+                let te = &self.tok_emb[t * d..(t + 1) * d];
+                let xrow = &mut ar.xs[row * d..(row + 1) * d];
+                for j in 0..d {
+                    xrow[j] = te[j] + pe[j];
+                }
+            }
+        }
+
+        for (l, lay) in self.layers.iter().enumerate() {
+            ar.hbuf.copy_from_slice(&ar.xs);
+            for r in 0..rows {
+                ln(&mut ar.hbuf[r * d..(r + 1) * d], &lay.ln1_g, &lay.ln1_b);
+            }
+            gemm::matmul(&ar.hbuf, &lay.wq, rows, d, d, &mut ar.q);
+            gemm::matmul(&ar.hbuf, &lay.wk, rows, d, d, &mut ar.k);
+            gemm::matmul(&ar.hbuf, &lay.wv, rows, d, d, &mut ar.v);
+            // write K/V into each (sequence, candidate) private tail slot
+            for b in 0..bn {
+                for ci in 0..c {
+                    let row = b * c + ci;
+                    for hh in 0..nh {
+                        let kb = ar.tail_base(nh, dh, b, l, 0, ci, hh) + slot * dh;
+                        let vb = ar.tail_base(nh, dh, b, l, 1, ci, hh) + slot * dh;
+                        ar.tail[kb..kb + dh]
+                            .copy_from_slice(&ar.k[row * d + hh * dh..row * d + (hh + 1) * dh]);
+                        ar.tail[vb..vb + dh]
+                            .copy_from_slice(&ar.v[row * d + hh * dh..row * d + (hh + 1) * dh]);
+                    }
+                }
+            }
+            // attention: own committed prefix + own tail slots 0..=slot
+            ar.att.fill(0.0);
+            for b in 0..bn {
+                let (base, base_len) = ar.bases[b];
+                for ci in 0..c {
+                    let row = b * c + ci;
+                    for hh in 0..nh {
+                        let qh = &ar.q[row * d + hh * dh..row * d + (hh + 1) * dh];
+                        let kbase = self.cache_idx(l, 0, hh, 0);
+                        let vbase = self.cache_idx(l, 1, hh, 0);
+                        let kt = ar.tail_base(nh, dh, b, l, 0, ci, hh);
+                        let vt = ar.tail_base(nh, dh, b, l, 1, ci, hh);
+                        attend_one(
+                            qh,
+                            scale,
+                            dh,
+                            &base.data[kbase..kbase + base_len * dh],
+                            &base.data[vbase..vbase + base_len * dh],
+                            base_len,
+                            &ar.tail[kt..kt + (slot + 1) * dh],
+                            &ar.tail[vt..vt + (slot + 1) * dh],
+                            slot + 1,
+                            &mut ar.att[row * d + hh * dh..row * d + (hh + 1) * dh],
+                            &mut ar.scores,
+                        );
+                    }
+                }
+            }
+            gemm::matmul(&ar.att, &lay.wo, rows, d, d, &mut ar.proj);
+            for (x, p) in ar.xs.iter_mut().zip(&ar.proj) {
+                *x += p;
+            }
+            ar.hbuf.copy_from_slice(&ar.xs);
+            for r in 0..rows {
+                ln(&mut ar.hbuf[r * d..(r + 1) * d], &lay.ln2_g, &lay.ln2_b);
+            }
+            gemm::matmul(&ar.hbuf, &lay.w1, rows, d, d_ff, &mut ar.ff);
+            for r in 0..rows {
+                let row = &mut ar.ff[r * d_ff..(r + 1) * d_ff];
+                for (j, f) in row.iter_mut().enumerate() {
+                    *f = gelu(*f + lay.b1[j]);
+                }
+            }
+            gemm::matmul(&ar.ff, &lay.w2, rows, d_ff, d, &mut ar.proj);
+            for r in 0..rows {
+                let xrow = &mut ar.xs[r * d..(r + 1) * d];
+                let prow = &ar.proj[r * d..(r + 1) * d];
+                for j in 0..d {
+                    xrow[j] += prow[j] + lay.b2[j];
+                }
+            }
+        }
+        ar.hbuf.copy_from_slice(&ar.xs);
+        for r in 0..rows {
+            ln(&mut ar.hbuf[r * d..(r + 1) * d], &self.lnf_g, &self.lnf_b);
+        }
+        self.logits_rows(&ar.hbuf, rows)
+    }
+
     /// Logits from one final hidden state (weight-tied head).
     fn logits(&self, h: &[f32]) -> Vec<f32> {
         self.logits_rows(h, 1)
@@ -619,6 +958,136 @@ impl ModelBackend for CpuModel {
             .map(|i| sampling::adjust_dist(&flat[i * v..(i + 1) * v], temp, top_p))
             .collect();
         Ok(VerifyBlock { dists })
+    }
+
+    /// Lockstep draft over B sequences: one ragged `[ΣG_b, D]` feed
+    /// dispatch, then γ−1 arena steps of `[B·c, D]` rows. Row-independent
+    /// kernels make every sequence's block bitwise-equal to a solo
+    /// `generate` call on the same cache.
+    fn generate_batch(
+        &self,
+        seqs: &mut [DraftSeq<'_, CpuCache>],
+        c: usize,
+        gamma: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<Vec<DraftBlock>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = self.dims.d_model;
+        let v = self.vocab;
+        let bn = seqs.len();
+        // split per-sequence pieces out of the DraftSeq views: the cache
+        // reborrows feed the ragged forward, the uniforms drive sampling
+        let mut us: Vec<&[f32]> = Vec::with_capacity(bn);
+        let mut items: Vec<(&mut CpuCache, &[u8], usize)> = Vec::with_capacity(bn);
+        for s in seqs.iter_mut() {
+            debug_assert_eq!(s.u.len(), c * gamma);
+            us.push(s.u);
+            items.push((&mut *s.cache, s.feed, s.pos));
+        }
+        // feed phase always runs (trait contract: post-feed committed state)
+        let hidden = self.forward_ragged(&mut items);
+        if gamma == 0 {
+            return Ok((0..bn)
+                .map(|_| DraftBlock { tokens: vec![Vec::new(); c], dists: vec![Vec::new(); c] })
+                .collect());
+        }
+        // per-sequence post-feed logits: gather each last row, one GEMM
+        let mut starts = Vec::with_capacity(bn);
+        let mut lasth = vec![0.0f32; bn * d];
+        let mut r = 0usize;
+        for (b, it) in items.iter().enumerate() {
+            let g = it.1.len();
+            let start = it.2 + g;
+            assert!(
+                start + gamma <= self.dims.maxlen(),
+                "draft block past maxlen: start {start} + gamma {gamma} > {}",
+                self.dims.maxlen()
+            );
+            starts.push(start);
+            lasth[b * d..(b + 1) * d].copy_from_slice(&hidden[(r + g - 1) * d..(r + g) * d]);
+            r += g;
+        }
+        let last_logits = self.logits_rows(&lasth, bn);
+
+        let mut tokens: Vec<Vec<Vec<u8>>> = (0..bn).map(|_| vec![vec![0u8; gamma]; c]).collect();
+        let mut dists: Vec<Vec<Vec<Vec<f32>>>> = (0..bn)
+            .map(|_| (0..c).map(|_| Vec::with_capacity(gamma)).collect())
+            .collect();
+
+        // step 0: a sequence's candidates all sample from its post-feed dist
+        let mut cur = vec![0u8; bn * c];
+        for b in 0..bn {
+            let dist0 = sampling::adjust_dist(&last_logits[b * v..(b + 1) * v], temp, top_p);
+            for ci in 0..c {
+                let tok = sampling::sample(&dist0, us[b][ci * gamma]) as u8;
+                tokens[b][ci][0] = tok;
+                cur[b * c + ci] = tok;
+                dists[b][ci].push(dist0.clone());
+            }
+        }
+        // steps 1..gamma: one [B·c, D] arena forward per step
+        if gamma > 1 {
+            let bases: Vec<(&CpuCache, usize)> = items
+                .iter()
+                .zip(&starts)
+                .map(|(it, &start)| (&*it.0, start))
+                .collect();
+            let mut ar = BranchedArena::new(self, bases, c, gamma);
+            for gi in 1..gamma {
+                let logits = self.arena_step(&mut ar, &cur, gi - 1);
+                for b in 0..bn {
+                    for ci in 0..c {
+                        let row = b * c + ci;
+                        let dist =
+                            sampling::adjust_dist(&logits[row * v..(row + 1) * v], temp, top_p);
+                        let tok = sampling::sample(&dist, us[b][ci * gamma + gi]) as u8;
+                        tokens[b][ci][gi] = tok;
+                        cur[row] = tok;
+                        dists[b][ci].push(dist);
+                    }
+                }
+            }
+        }
+        Ok(tokens
+            .into_iter()
+            .zip(dists)
+            .map(|(t, ds)| DraftBlock { tokens: t, dists: ds })
+            .collect())
+    }
+
+    /// Lockstep verification: the union of all sequences' teacher-forced
+    /// rows through one ragged forward and one logits GEMM.
+    fn verify_batch(
+        &self,
+        seqs: &mut [VerifySeq<'_, CpuCache>],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<Vec<VerifyBlock>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let v = self.vocab;
+        let mut items: Vec<(&mut CpuCache, &[u8], usize)> = seqs
+            .iter_mut()
+            .map(|s| (&mut *s.cache, s.toks, s.pos))
+            .collect();
+        let hidden = self.forward_ragged(&mut items);
+        let lens: Vec<usize> = items.iter().map(|it| it.1.len()).collect();
+        let rt: usize = lens.iter().sum();
+        let flat = self.logits_rows(&hidden, rt);
+        let mut out = Vec::with_capacity(lens.len());
+        let mut r = 0usize;
+        for g in lens {
+            let dists = (r..r + g)
+                .map(|i| sampling::adjust_dist(&flat[i * v..(i + 1) * v], temp, top_p))
+                .collect();
+            r += g;
+            out.push(VerifyBlock { dists });
+        }
+        Ok(out)
     }
 
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
@@ -948,6 +1417,84 @@ mod tests {
         let m = tiny();
         let e = m.embed(&[1, 5, 9]).unwrap();
         assert_eq!(e.len(), 16);
+    }
+
+    #[test]
+    fn generate_batch_matches_solo_generate_per_sequence() {
+        // lockstep over ragged prefixes == B independent draft rounds
+        let m = tiny();
+        let ctxs: Vec<Vec<u8>> = vec![vec![1, 5, 9, 13], vec![1, 7], vec![1, 5, 9, 13, 7, 4]];
+        let (c, gamma) = (3usize, 4usize);
+        let us: Vec<Vec<f32>> = (0..ctxs.len())
+            .map(|b| (0..c * gamma).map(|i| ((b * 31 + i * 7) as f32 * 0.113) % 1.0).collect())
+            .collect();
+
+        // solo path
+        let mut solo = Vec::new();
+        for (b, ctx) in ctxs.iter().enumerate() {
+            let mut cache = m.prefill(ctx).unwrap();
+            let pos = ctx.len() - 1;
+            let feed = vec![ctx[pos]];
+            solo.push(m.generate(&mut cache, &feed, pos, c, gamma, &us[b], 0.9, 0.95).unwrap());
+        }
+
+        // lockstep path
+        let mut caches: Vec<CpuCache> = ctxs.iter().map(|ctx| m.prefill(ctx).unwrap()).collect();
+        let feeds: Vec<Vec<u8>> = ctxs.iter().map(|ctx| vec![*ctx.last().unwrap()]).collect();
+        let mut seqs: Vec<DraftSeq<'_, CpuCache>> = Vec::new();
+        for ((cache, ctx), (feed, u)) in
+            caches.iter_mut().zip(&ctxs).zip(feeds.iter().zip(&us))
+        {
+            seqs.push(DraftSeq { cache, feed, pos: ctx.len() - 1, u });
+        }
+        let blocks = m.generate_batch(&mut seqs, c, gamma, 0.9, 0.95).unwrap();
+
+        assert_eq!(blocks.len(), solo.len());
+        for (b, (got, want)) in blocks.iter().zip(&solo).enumerate() {
+            assert_eq!(got.tokens, want.tokens, "seq {b} tokens diverged");
+            for (dg, dw) in got.dists.iter().zip(&want.dists) {
+                for (pg, pw) in dg.iter().zip(dw) {
+                    for (x, y) in pg.iter().zip(pw) {
+                        assert!((x - y).abs() <= 1e-6, "seq {b}: {x} vs {y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verify_batch_matches_solo_verify_and_caches_agree() {
+        let m = tiny();
+        let ctxs: Vec<Vec<u8>> = vec![vec![1, 5, 9], vec![1, 5, 9, 13, 7]];
+        let vtokss: Vec<Vec<u8>> = vec![vec![9, 4, 6, 8], vec![7, 2, 11]];
+
+        let mut solo_caches: Vec<CpuCache> =
+            ctxs.iter().map(|ctx| m.prefill(ctx).unwrap()).collect();
+        let mut solo = Vec::new();
+        for ((cache, ctx), vtoks) in solo_caches.iter_mut().zip(&ctxs).zip(&vtokss) {
+            solo.push(m.verify(cache, vtoks, ctx.len() - 1, 1.0, 0.95).unwrap());
+        }
+
+        let mut caches: Vec<CpuCache> = ctxs.iter().map(|ctx| m.prefill(ctx).unwrap()).collect();
+        let mut seqs: Vec<VerifySeq<'_, CpuCache>> = Vec::new();
+        for ((cache, ctx), vtoks) in caches.iter_mut().zip(&ctxs).zip(&vtokss) {
+            seqs.push(VerifySeq { cache, toks: vtoks, pos: ctx.len() - 1 });
+        }
+        let got = m.verify_batch(&mut seqs, 1.0, 0.95).unwrap();
+
+        for (b, (g, w)) in got.iter().zip(&solo).enumerate() {
+            assert_eq!(g.dists.len(), w.dists.len());
+            for (dg, dw) in g.dists.iter().zip(&w.dists) {
+                for (x, y) in dg.iter().zip(dw) {
+                    assert!((x - y).abs() <= 1e-6, "seq {b}: {x} vs {y}");
+                }
+            }
+        }
+        for (b, (cg, cw)) in caches.iter().zip(&solo_caches).enumerate() {
+            for (x, y) in cg.data.iter().zip(&cw.data) {
+                assert!((x - y).abs() <= 1e-6, "seq {b} cache diverged: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,20 @@
 //! per-element accumulation in index order, so batched results are bitwise
 //! identical to the seed scalar path (kept as `cpu_ref::reference`;
 //! `tests/cpu_batched_equivalence.rs` enforces the equivalence).
+//!
+//! ## Cross-sequence lockstep (`generate_batch` / `verify_batch`)
+//!
+//! The serving path extends the same row-union idea across *requests*: B
+//! sequences of one family run each decode round together. Per-sequence
+//! state (cache slot, feed span, uniforms) is carried by
+//! [`backend::DraftSeq`]/[`backend::VerifySeq`] views; `cpu_ref` executes
+//! the round as a ragged `[ΣG_b, D]` feed, γ−1 `[B·c, D]` arena steps over
+//! a sequence-slot cache arena, and a ragged verify. Because every kernel
+//! is row-independent, a sequence's tokens are bitwise-identical to a solo
+//! decode with the same seed — `tests/batch_decode_equivalence.rs` pins
+//! this end to end. Backends without a batched implementation inherit
+//! serial-loop defaults, so lockstep serving degrades gracefully (the HLO
+//! backend currently loops; batched HLO programs are an open item).
 
 pub mod backend;
 pub mod client;
@@ -46,7 +60,7 @@ pub mod gemm;
 pub mod hlo;
 pub mod prefill_cache;
 
-pub use backend::{DraftBlock, ModelBackend, VerifyBlock};
+pub use backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
 pub use client::Runtime;
 pub use cpu_ref::CpuModel;
 pub use hlo::{HloKmerScorer, HloModel};

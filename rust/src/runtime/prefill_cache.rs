@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::backend::{DraftBlock, ModelBackend, VerifyBlock};
+use super::backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
 
 pub struct PrefillCached<B: ModelBackend> {
     inner: B,
@@ -87,6 +87,28 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
         top_p: f32,
     ) -> Result<VerifyBlock> {
         self.inner.verify(cache, toks, pos, temp, top_p)
+    }
+
+    // forward the lockstep entry points so the inner backend's batched
+    // dispatches are used (the trait defaults would loop solo calls)
+    fn generate_batch(
+        &self,
+        seqs: &mut [DraftSeq<'_, Self::Cache>],
+        c: usize,
+        gamma: usize,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<Vec<DraftBlock>> {
+        self.inner.generate_batch(seqs, c, gamma, temp, top_p)
+    }
+
+    fn verify_batch(
+        &self,
+        seqs: &mut [VerifySeq<'_, Self::Cache>],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<Vec<VerifyBlock>> {
+        self.inner.verify_batch(seqs, temp, top_p)
     }
 
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {

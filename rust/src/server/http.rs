@@ -1,8 +1,21 @@
 //! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`.
 //!
-//! Request path (DESIGN.md §5):
-//!   client → POST /generate → Router (affinity) → Batcher → worker engine
-//!   → maximal-coupling decode → JSON response.
+//! Request path (DESIGN.md §5, extended by the batched-decode serving
+//! path): a client `POST /generate` with `n` sequences fans out into `n`
+//! single-sequence requests through the [`Router`], which places them on a
+//! worker by protein affinity (spilling to the least-loaded worker under
+//! imbalance). Each worker's `Batcher` groups queued requests by
+//! `(protein, method)` — closing a batch when it is full or its oldest
+//! member has waited `max_wait` — and the worker dispatches the *whole*
+//! batch through `GenEngine::generate_batch`: lockstep-compatible requests
+//! (equal `c`, `gamma`, `temp`, `top_p`; seeds and `max_len` free) share
+//! decode rounds, each round issuing one batched draft dispatch of
+//! `[B·c, D]` rows and one ragged verify over all active sequences, with
+//! finished sequences dropping out mid-flight. Per-sequence RNG state keeps
+//! every response bitwise-identical to an unbatched run with the same seed.
+//! Responses are collected per request and folded into one JSON reply;
+//! `GET /metrics` exposes batch occupancy, queue-wait and decode seconds
+//! alongside the acceptance/throughput counters.
 //!
 //! The protocol subset is deliberately small: one request per connection
 //! (`Connection: close`), Content-Length bodies only — enough for any HTTP

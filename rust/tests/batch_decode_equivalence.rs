@@ -1,0 +1,156 @@
+//! Equivalence suite for cross-request lockstep decoding (ISSUE 2
+//! tentpole): `speculative_generate_batch` over B mixed-length requests
+//! must yield, per sequence, exactly the tokens and accept/reject/bonus
+//! counts of B separate `speculative_generate` calls with the same seeds.
+//! The batched path shares draft dispatches of `[B·c, D]` rows and ragged
+//! verify dispatches, so this pins the whole stack: ragged forward, cache
+//! arena, per-sequence RNG streams, and mid-flight drop-out of finished
+//! sequences.
+
+use specmer::coordinator::engine::synthetic_engine;
+use specmer::coordinator::GenEngine;
+use specmer::config::Method;
+use specmer::decode::{
+    speculative_generate, speculative_generate_batch, GenConfig, SpecBatchItem,
+};
+use specmer::kmer::{KmerSet, KmerTable};
+use specmer::msa::simulate::generate_family;
+use specmer::runtime::cpu_ref::CpuModel;
+use specmer::tokenizer::BOS;
+
+fn cfg(c: usize, gamma: usize, seed: u64, max_len: usize) -> GenConfig {
+    GenConfig {
+        c,
+        gamma,
+        seed,
+        max_len,
+        kset: KmerSet::new(true, true, true),
+        ..Default::default()
+    }
+}
+
+/// The acceptance-criterion scenario: B=4 requests with different context
+/// lengths, seeds and max_lens — sequences finish at different rounds, so
+/// the batch shrinks mid-flight — against independent sequential runs.
+#[test]
+fn lockstep_b4_mixed_lengths_equals_sequential() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = KmerTable::build(&msa);
+    // distinct draft/target so rejections and corrections actually occur
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+
+    let ctxs: [&[u8]; 4] = [
+        &[BOS, 5, 9],
+        &[BOS, 7],
+        &[BOS, 5, 9, 13, 7, 4],
+        &[BOS, 11, 3],
+    ];
+    let cfgs = [
+        cfg(3, 5, 3, 40),
+        cfg(3, 5, 11, 24), // shortest: drops out while others continue
+        cfg(3, 5, 21, 48),
+        cfg(3, 5, 33, 36),
+    ];
+
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+        .collect();
+    let items: Vec<SpecBatchItem<'_>> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .collect();
+    let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+
+    // the mixed max_lens must actually produce mixed-length outputs, or the
+    // drop-out path was never exercised
+    let lens: Vec<usize> = solo.iter().map(|o| o.tokens.len()).collect();
+    assert!(
+        lens.iter().any(|&l| l != lens[0]),
+        "test setup: sequences should finish at different lengths ({lens:?})"
+    );
+
+    for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("lockstep item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "seq {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+        assert_eq!(got.draft_calls, want.draft_calls, "seq {b}: draft calls");
+        assert_eq!(got.target_calls, want.target_calls, "seq {b}: target calls");
+        assert!(
+            (got.online_nll_sum - want.online_nll_sum).abs() < 1e-9,
+            "seq {b}: online NLL"
+        );
+    }
+}
+
+/// Vanilla speculative decoding (c = 1, no table) through the same batch
+/// machinery.
+#[test]
+fn lockstep_c1_no_table_equals_sequential() {
+    let d = CpuModel::synthetic(2, 16, 2, 96, 17);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 18);
+    let ctxs: [&[u8]; 3] = [&[BOS, 5], &[BOS, 5, 9, 13], &[BOS, 2, 4]];
+    let cfgs = [cfg(1, 5, 1, 40), cfg(1, 5, 2, 32), cfg(1, 5, 3, 44)];
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, None, ctx, cfg).unwrap())
+        .collect();
+    let items: Vec<SpecBatchItem<'_>> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .collect();
+    let batch = speculative_generate_batch(&d, &t, None, &items);
+    for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+        assert_eq!(got.as_ref().unwrap().tokens, want.tokens, "seq {b} diverged");
+    }
+}
+
+/// A batch of one degenerates to exactly the sequential engine.
+#[test]
+fn lockstep_b1_is_the_sequential_engine() {
+    let d = CpuModel::synthetic(2, 16, 2, 96, 27);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 28);
+    let ctx: &[u8] = &[BOS, 5, 9];
+    let c = cfg(2, 5, 9, 40);
+    let want = speculative_generate(&d, &t, None, ctx, &c).unwrap();
+    let got = speculative_generate_batch(
+        &d,
+        &t,
+        None,
+        &[SpecBatchItem { context: ctx, cfg: &c }],
+    );
+    assert_eq!(got.len(), 1);
+    let out = got[0].as_ref().unwrap();
+    assert_eq!(out.tokens, want.tokens);
+    assert_eq!(out.accepted, want.accepted);
+}
+
+/// Engine-level check over the full coordinator path: a worker-style batch
+/// through `GenEngine::generate_batch` equals per-request `generate` calls
+/// for every method, including the grouping of lockstep-incompatible
+/// configs.
+#[test]
+fn engine_batch_matches_serial_for_all_methods() {
+    let eng = synthetic_engine(3);
+    for method in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
+        let mut cfgs: Vec<GenConfig> = (0..4u64)
+            .map(|seed| GenConfig { max_len: 26, gamma: 5, c: 3, seed, ..Default::default() })
+            .collect();
+        cfgs[1].gamma = 4; // forces two lockstep groups
+        cfgs[3].max_len = 20;
+        let batch = eng.generate_batch("SynB", method, &cfgs);
+        for (i, (got, cfg)) in batch.iter().zip(&cfgs).enumerate() {
+            let want = eng.generate("SynB", method, cfg).unwrap();
+            let got = got.as_ref().expect("batch request failed");
+            assert_eq!(got.tokens, want.tokens, "{method:?} req {i} diverged");
+        }
+    }
+}
