@@ -7,13 +7,19 @@
 //! both for the batched branched-cache runtime and for the seed
 //! clone-per-candidate implementation (`cpu_ref::reference`), plus the
 //! worker-level question — four full generations dispatched as **lockstep
-//! batched rounds vs a serial request loop** — and emits the numbers
-//! machine-readably to `results/bench_micro.json`. Set
-//! `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
+//! batched rounds vs a serial request loop** — plus the serving-path
+//! question under **streaming arrivals** (B=4 staggered submits): measured
+//! occupancy of continuous round-boundary admission vs run-to-completion
+//! dispatch. All numbers are emitted machine-readably to
+//! `results/bench_micro.json`. Set `SPECMER_BENCH_SMOKE=1` for a fast CI
+//! smoke run.
 
 use std::time::Instant;
 
-use specmer::decode::{speculative_generate, speculative_generate_batch, GenConfig, SpecBatchItem};
+use specmer::decode::{
+    speculative_generate, speculative_generate_batch, speculative_generate_continuous,
+    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem,
+};
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
 use specmer::runtime::cpu_ref::{reference, CpuModel};
@@ -191,6 +197,118 @@ fn main() {
     println!("batched B=4 throughput: {batched_tps:.1} tok/s");
     println!("batched-vs-serial decode speedup: {batch_speedup:.2}x");
 
+    // ---- streaming arrivals: continuous batching vs run-to-completion ----
+    // The same four requests now *arrive staggered* (a few decode rounds
+    // apart). Continuous batching admits each at the next round boundary
+    // of the in-flight group; run-to-completion dispatches whatever has
+    // arrived whenever the worker goes idle and never looks at the queue
+    // mid-decode. Occupancy is measured in sequence-rounds per worker
+    // round, idle rounds included — the time-weighted fullness of the
+    // `[B·c, D]` dispatches.
+    println!("== streaming-arrival occupancy (B=4, staggered submits) ==");
+    let arrivals: Vec<usize> = vec![0, 2, 3, 5];
+
+    struct StreamHook {
+        pending: Vec<(usize, AdmitItem)>,
+        boundary: usize,
+        seq_rounds: u64,
+        busy_rounds: u64,
+        idle_rounds: u64,
+        completed: usize,
+    }
+
+    impl AdmissionHook for StreamHook {
+        fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+            let mut b = self.boundary;
+            // worker idle: fast-forward to the next arrival, counting the
+            // idle rounds against occupancy
+            if active == 0 && !self.pending.is_empty() {
+                let next = self.pending.iter().map(|(at, _)| *at).min().unwrap();
+                if next > b {
+                    self.idle_rounds += (next - b) as u64;
+                    b = next;
+                }
+            }
+            self.boundary = b + 1;
+            let (now, later): (Vec<_>, Vec<_>) =
+                self.pending.drain(..).partition(|(at, _)| *at <= b);
+            self.pending = later;
+            let will_run = active + now.len();
+            if will_run > 0 {
+                self.busy_rounds += 1;
+                self.seq_rounds += will_run as u64;
+            }
+            now.into_iter().map(|(_, item)| item).collect()
+        }
+        fn complete(&mut self, _ticket: u64, result: anyhow::Result<GenOutput>) {
+            result.unwrap();
+            self.completed += 1;
+        }
+    }
+
+    let mut hook = StreamHook {
+        pending: bcfgs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| {
+                (
+                    arrivals[i],
+                    AdmitItem { ticket: i as u64, context: bctx.clone(), cfg: cfg.clone() },
+                )
+            })
+            .collect(),
+        boundary: 0,
+        seq_rounds: 0,
+        busy_rounds: 0,
+        idle_rounds: 0,
+        completed: 0,
+    };
+    speculative_generate_continuous(
+        &bd,
+        &bt,
+        Some(&table),
+        LockstepShape::of(&bcfgs[0]),
+        &mut hook,
+    );
+    assert_eq!(hook.completed, 4, "continuous schedule must answer all 4");
+    let occ_cont =
+        hook.seq_rounds as f64 / (hook.busy_rounds + hook.idle_rounds).max(1) as f64;
+
+    // run-to-completion: a worker-round clock; each dispatch takes the max
+    // of its members' round counts (lockstep), arrivals during a decode
+    // wait for the next idle point
+    let (mut clock, mut qi) = (0usize, 0usize);
+    let (mut rtc_seq_rounds, mut rtc_busy, mut rtc_idle) = (0u64, 0u64, 0u64);
+    while qi < arrivals.len() {
+        if arrivals[qi] > clock {
+            rtc_idle += (arrivals[qi] - clock) as u64;
+            clock = arrivals[qi];
+        }
+        let mut take = 0;
+        while qi + take < arrivals.len() && arrivals[qi + take] <= clock {
+            take += 1;
+        }
+        let items: Vec<SpecBatchItem<'_>> = bcfgs[qi..qi + take]
+            .iter()
+            .map(|cfg| SpecBatchItem { context: &bctx, cfg })
+            .collect();
+        let outs = speculative_generate_batch(&bd, &bt, Some(&table), &items);
+        let rounds: Vec<u64> = outs.iter().map(|o| o.as_ref().unwrap().rounds).collect();
+        let rmax = *rounds.iter().max().unwrap();
+        rtc_seq_rounds += rounds.iter().sum::<u64>();
+        rtc_busy += rmax;
+        clock += rmax as usize;
+        qi += take;
+    }
+    let occ_rtc = rtc_seq_rounds as f64 / (rtc_busy + rtc_idle).max(1) as f64;
+    println!("occupancy continuous (admit at round boundaries): {occ_cont:.3}");
+    println!("occupancy run-to-completion (idle-point dispatch): {occ_rtc:.3}");
+    assert!(
+        occ_cont > occ_rtc,
+        "continuous batching must beat run-to-completion under streaming \
+         arrivals: {occ_cont:.3} vs {occ_rtc:.3}"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str("synthetic L4 d64 h4 S256")),
         ("c", Json::num(c as f64)),
@@ -206,6 +324,8 @@ fn main() {
         ("batch_decode_b4_tokens_per_sec_serial", Json::num(serial_tps)),
         ("batch_decode_b4_tokens_per_sec_batched", Json::num(batched_tps)),
         ("batch_decode_speedup_b4", Json::num(batch_speedup)),
+        ("streaming_b4_occupancy_continuous", Json::num(occ_cont)),
+        ("streaming_b4_occupancy_run_to_completion", Json::num(occ_rtc)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

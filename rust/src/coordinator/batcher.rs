@@ -52,6 +52,72 @@ impl Batcher {
         }
     }
 
+    /// Count queued requests that could join an in-flight lockstep group
+    /// for `(protein, method)` under `pred` — the admission preview
+    /// [`Self::take_compatible`] uses to skip queue rebuilds on boundaries
+    /// with nothing to admit.
+    pub fn peek_compatible(
+        &self,
+        protein: &str,
+        method: Method,
+        pred: &dyn Fn(&GenRequest) -> bool,
+    ) -> usize {
+        self.queue
+            .iter()
+            .filter(|r| Self::key(r) == (protein, method) && pred(r))
+            .count()
+    }
+
+    /// Remove and return up to `max` queued requests for `(protein, method)`
+    /// that satisfy `pred`, preserving arrival order — the round-boundary
+    /// admission pop for continuous batching.
+    ///
+    /// Fairness guard: when the queue head belongs to a *different* group
+    /// and has already waited `max_wait`, nothing is admitted — an
+    /// in-flight group must not keep jumping an aged-out request whose own
+    /// dispatch is blocked behind it.
+    pub fn take_compatible(
+        &mut self,
+        now: Instant,
+        protein: &str,
+        method: Method,
+        max: usize,
+        pred: &dyn Fn(&GenRequest) -> bool,
+    ) -> Vec<GenRequest> {
+        if max == 0 || self.queue.is_empty() {
+            return Vec::new();
+        }
+        if let Some(front) = self.queue.front() {
+            let front_admissible = Self::key(front) == (protein, method) && pred(front);
+            if !front_admissible
+                && now.saturating_duration_since(front.submitted) >= self.max_wait
+            {
+                return Vec::new();
+            }
+        }
+        // boundaries with nothing to admit are the common case under mixed
+        // traffic: don't rebuild the queue unless something matches
+        if self.peek_compatible(protein, method, pred) == 0 {
+            return Vec::new();
+        }
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(r) = self.queue.pop_front() {
+            if Self::key(&r) == (protein, method) && pred(&r) {
+                taken.push(r);
+                if taken.len() == max {
+                    break;
+                }
+            } else {
+                rest.push_back(r);
+            }
+        }
+        // once full, everything left keeps its order behind the leftovers
+        rest.extend(self.queue.drain(..));
+        self.queue = rest;
+        taken
+    }
+
     /// Pop the next batch if one is ready (full, or oldest has waited long
     /// enough, or `flush` forces). Returns None when nothing should run yet.
     pub fn next_batch(&mut self, now: Instant, flush: bool) -> Option<Vec<GenRequest>> {
@@ -233,6 +299,57 @@ mod tests {
         let mut b2 = Batcher::new(8, Duration::from_millis(100));
         b2.push(req(3, "GB1", Method::SpecMer, 500));
         assert_eq!(b2.time_to_deadline(Instant::now()), Duration::ZERO);
+    }
+
+    #[test]
+    fn take_compatible_pops_matching_in_arrival_order() {
+        let mut b = Batcher::new(8, Duration::from_secs(3600));
+        b.push(req(1, "GFP", Method::SpecMer, 10));
+        b.push(req(2, "GB1", Method::SpecMer, 9));
+        b.push(req(3, "GFP", Method::SpecMer, 8));
+        b.push(req(4, "GFP", Method::Speculative, 7));
+        b.push(req(5, "GFP", Method::SpecMer, 6));
+        let all = |_: &GenRequest| true;
+        assert_eq!(b.peek_compatible("GFP", Method::SpecMer, &all), 3);
+        let got = b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 2, &all);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.len(), 3, "non-matching and over-max requests stay queued");
+        // the leftovers keep their arrival order
+        let mut rest = Vec::new();
+        while let Some(batch) = b.next_batch(Instant::now(), true) {
+            rest.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(rest, vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn take_compatible_respects_pred() {
+        let mut b = Batcher::new(8, Duration::from_secs(3600));
+        b.push(req(1, "GFP", Method::SpecMer, 10));
+        b.push(req(2, "GFP", Method::SpecMer, 9));
+        let odd_only = |r: &GenRequest| r.id % 2 == 1;
+        let got = b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &odd_only);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 1);
+        assert_eq!(b.len(), 1, "pred-rejected request stays queued");
+    }
+
+    #[test]
+    fn take_compatible_yields_to_aged_out_foreign_head() {
+        // an aged-out head of a *different* group blocks admission (the
+        // in-flight group must not starve it further)...
+        let mut b = Batcher::new(8, Duration::from_millis(50));
+        b.push(req(1, "GB1", Method::SpecMer, 100));
+        b.push(req(2, "GFP", Method::SpecMer, 100));
+        let all = |_: &GenRequest| true;
+        assert!(b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &all).is_empty());
+        // ...but a still-fresh foreign head does not
+        let mut b2 = Batcher::new(8, Duration::from_millis(50));
+        b2.push(req(3, "GB1", Method::SpecMer, 0));
+        b2.push(req(4, "GFP", Method::SpecMer, 0));
+        let got = b2.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &all);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(b2.len(), 1);
     }
 
     #[test]

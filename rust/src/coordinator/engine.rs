@@ -8,7 +8,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, Result};
 
 use crate::config::{Config, Method};
-use crate::decode::{self, GenConfig, GenOutput};
+use crate::decode::{self, AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape};
 use crate::eval::PlddtScorer;
 use crate::kmer::KmerTable;
 use crate::msa::{self, FamilyMeta, Msa};
@@ -56,6 +56,19 @@ pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
         .collect()
 }
 
+/// Where the worker's continuous-batching dispatch pulls new requests from
+/// and delivers finished ones to. The worker implements this over its
+/// batcher: `admit` is called at every draft/verify round boundary and may
+/// pop newly-queued compatible requests; `complete` fires the moment any
+/// sequence finishes, so clients are answered mid-flight.
+pub trait RequestSource {
+    /// Called at each round boundary with the number of sequences still in
+    /// flight; returns `(ticket, cfg)` pairs to admit into the group.
+    fn admit(&mut self, active: usize) -> Vec<(u64, GenConfig)>;
+    /// Delivers one request's final result (exactly once per ticket).
+    fn complete(&mut self, ticket: u64, result: Result<GenOutput>);
+}
+
 /// Object-safe engine interface used by the scheduler, server and benches.
 pub trait GenEngine {
     /// Generate one sequence for `protein` with `method`.
@@ -73,6 +86,43 @@ pub trait GenEngine {
         cfgs: &[GenConfig],
     ) -> Vec<Result<GenOutput>> {
         cfgs.iter().map(|cfg| self.generate(protein, method, cfg)).collect()
+    }
+    /// The lockstep dispatch shape `(protein, method, cfg)` would decode
+    /// under, if the engine can serve it on the continuous-batching path
+    /// (None → the request must go through [`GenEngine::generate_batch`]).
+    fn lockstep_shape(
+        &self,
+        protein: &str,
+        method: Method,
+        cfg: &GenConfig,
+    ) -> Option<LockstepShape> {
+        let _ = (protein, method, cfg);
+        None
+    }
+    /// Continuous batching: run one in-flight lockstep group of shape
+    /// `shape`, consulting `source` at every round boundary for newly
+    /// arrived compatible requests and completing each the moment it
+    /// finishes. Returns when a boundary finds the group empty and the
+    /// source has nothing to admit. The default serves requests serially
+    /// (still re-polling the source between requests) for engines without
+    /// a lockstep decode path.
+    fn generate_continuous(
+        &self,
+        protein: &str,
+        method: Method,
+        shape: &LockstepShape,
+        source: &mut dyn RequestSource,
+    ) {
+        let _ = shape;
+        loop {
+            let items = source.admit(0);
+            if items.is_empty() {
+                return;
+            }
+            for (ticket, cfg) in items {
+                source.complete(ticket, self.generate(protein, method, &cfg));
+            }
+        }
     }
     /// Length-normalized NLL of a token sequence under the target model.
     fn score_nll(&self, tokens: &[u8]) -> Result<f64>;
@@ -98,6 +148,45 @@ pub struct Engine<D: ModelBackend, T: ModelBackend> {
     overrides: HashMap<String, KmerTable>,
 }
 
+/// Per-request config normalization shared by `generate`, `generate_batch`
+/// and the continuous-batching admission path: clamp max_len to the family
+/// and degrade `Speculative` to single-candidate drafting.
+fn normalized_cfg(cfg: &GenConfig, fam: &Family, method: Method) -> GenConfig {
+    let mut cfg = cfg.clone();
+    cfg.max_len = cfg.max_len.min(fam.max_len());
+    if method == Method::Speculative {
+        cfg.c = 1;
+    }
+    cfg
+}
+
+/// Adapts a worker's [`RequestSource`] to the decode layer's
+/// [`AdmissionHook`]: attaches the family context and normalizes each
+/// admitted config exactly like the non-continuous dispatch paths do.
+struct SourceAdapter<'a> {
+    source: &'a mut dyn RequestSource,
+    fam: &'a Family,
+    method: Method,
+}
+
+impl AdmissionHook for SourceAdapter<'_> {
+    fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+        self.source
+            .admit(active)
+            .into_iter()
+            .map(|(ticket, cfg)| AdmitItem {
+                ticket,
+                context: self.fam.context.clone(),
+                cfg: normalized_cfg(&cfg, self.fam, self.method),
+            })
+            .collect()
+    }
+
+    fn complete(&mut self, ticket: u64, result: Result<GenOutput>) {
+        self.source.complete(ticket, result);
+    }
+}
+
 impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
     pub fn new(draft: D, target: T, families: Vec<Family>) -> Engine<D, T> {
         Engine {
@@ -107,24 +196,12 @@ impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
             overrides: HashMap::new(),
         }
     }
-
-    /// Per-request config normalization shared by `generate` and
-    /// `generate_batch`: clamp max_len to the family and degrade
-    /// `Speculative` to single-candidate drafting.
-    fn normalized(cfg: &GenConfig, fam: &Family, method: Method) -> GenConfig {
-        let mut cfg = cfg.clone();
-        cfg.max_len = cfg.max_len.min(fam.max_len());
-        if method == Method::Speculative {
-            cfg.c = 1;
-        }
-        cfg
-    }
 }
 
 impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
     fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput> {
         let fam = self.family(protein)?;
-        let cfg = Self::normalized(cfg, fam, method);
+        let cfg = normalized_cfg(cfg, fam, method);
         match method {
             Method::TargetOnly => decode::target_only_generate(&self.target, &fam.context, &cfg),
             Method::DraftOnly => decode::target_only_generate(&self.draft, &fam.context, &cfg),
@@ -170,15 +247,10 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
         };
         // normalize per-request configs exactly like `generate` does
         let norm: Vec<GenConfig> =
-            cfgs.iter().map(|cfg| Self::normalized(cfg, fam, method)).collect();
+            cfgs.iter().map(|cfg| normalized_cfg(cfg, fam, method)).collect();
         // group lockstep-compatible requests (equal dispatch shapes) and
         // run each group as one batched decode; order is restored at the end
-        let compatible = |a: &GenConfig, b: &GenConfig| {
-            a.c == b.c
-                && a.gamma == b.gamma
-                && a.temp.to_bits() == b.temp.to_bits()
-                && a.top_p.to_bits() == b.top_p.to_bits()
-        };
+        let compatible = |a: &GenConfig, b: &GenConfig| LockstepShape::of(a).admits(b);
         let mut results: Vec<Option<Result<GenOutput>>> = (0..norm.len()).map(|_| None).collect();
         let mut remaining: Vec<usize> = (0..norm.len()).collect();
         while let Some(&first) = remaining.first() {
@@ -200,6 +272,58 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
             }
         }
         results.into_iter().map(|o| o.expect("every request answered")).collect()
+    }
+
+    fn lockstep_shape(
+        &self,
+        protein: &str,
+        method: Method,
+        cfg: &GenConfig,
+    ) -> Option<LockstepShape> {
+        // only the speculative methods have a lockstep decode; probe items
+        // interleave extra dispatches and must take the sequential path
+        if !matches!(method, Method::Speculative | Method::SpecMer) || cfg.probe_rate > 0.0 {
+            return None;
+        }
+        let fam = self.family(protein).ok()?;
+        Some(LockstepShape::of(&normalized_cfg(cfg, fam, method)))
+    }
+
+    fn generate_continuous(
+        &self,
+        protein: &str,
+        method: Method,
+        shape: &LockstepShape,
+        source: &mut dyn RequestSource,
+    ) {
+        let fam = match self.family(protein) {
+            Ok(f) => f,
+            Err(e) => {
+                // answer (not hang) everything the source still admits
+                let msg = format!("{e:#}");
+                loop {
+                    let items = source.admit(0);
+                    if items.is_empty() {
+                        return;
+                    }
+                    for (ticket, _) in items {
+                        source.complete(ticket, Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        };
+        let table = match method {
+            Method::SpecMer => Some(self.overrides.get(protein).unwrap_or(&fam.table)),
+            _ => None,
+        };
+        let mut hook = SourceAdapter { source, fam, method };
+        decode::speculative_generate_continuous(
+            &self.draft,
+            &self.target,
+            table,
+            *shape,
+            &mut hook,
+        );
     }
 
     fn score_nll(&self, tokens: &[u8]) -> Result<f64> {

@@ -20,11 +20,21 @@ pub struct Metrics {
     pub prefill_hits: AtomicU64,
     /// Worker batch dispatches (one lockstep decode run each).
     pub batches: AtomicU64,
-    /// Requests served through batch dispatches (occupancy numerator).
+    /// Requests served through batch dispatches (occupancy numerator),
+    /// including requests admitted into an in-flight group mid-decode.
     pub batched_requests: AtomicU64,
+    /// Requests spliced into an in-flight lockstep group at a round
+    /// boundary (the continuous-batching path).
+    pub admitted: AtomicU64,
+    /// Worker engine-construction failures (each marks a dead worker that
+    /// answers its queue with errors).
+    pub engine_failures: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     decode_seconds: Mutex<f64>,
     queue_wait_seconds: Mutex<f64>,
+    /// (Σ round seconds, Σ in-flight-sequences · round seconds) — the
+    /// time-weighted occupancy gauge's denominator and numerator.
+    round_time: Mutex<(f64, f64)>,
     started: Mutex<Option<Instant>>,
 }
 
@@ -56,6 +66,40 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
         *self.queue_wait_seconds.lock().unwrap() += queue_wait_s;
+    }
+
+    /// Record one request admitted into an in-flight lockstep group at a
+    /// round boundary (continuous batching) and its queue wait in seconds.
+    pub fn record_admission(&self, queue_wait_s: f64) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(1, Ordering::Relaxed);
+        *self.queue_wait_seconds.lock().unwrap() += queue_wait_s;
+    }
+
+    /// Record a worker whose engine factory failed.
+    pub fn record_engine_failure(&self) {
+        self.engine_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one decode round: how many sequences were in flight and how
+    /// long the round took (feeds the time-weighted occupancy gauge).
+    pub fn record_round(&self, active: usize, dt_s: f64) {
+        let mut rt = self.round_time.lock().unwrap();
+        rt.0 += dt_s;
+        rt.1 += active as f64 * dt_s;
+    }
+
+    /// Time-weighted mean of in-flight sequences per decode round — unlike
+    /// [`Self::batch_occupancy`] (a per-dispatch head count) this weights
+    /// by how long each round actually ran, so it reflects how full the
+    /// `[B·c, D]` dispatches were over wall time under streaming arrivals.
+    pub fn occupancy_time_weighted(&self) -> f64 {
+        let rt = self.round_time.lock().unwrap();
+        if rt.0 == 0.0 {
+            0.0
+        } else {
+            rt.1 / rt.0
+        }
     }
 
     /// Mean requests per worker dispatch — how well the batcher is filling
@@ -131,6 +175,9 @@ impl Metrics {
              specmer_prefill_cache_hits_total {}\n\
              specmer_batches_total {}\n\
              specmer_batch_occupancy_avg {:.3}\n\
+             specmer_admitted_total {}\n\
+             specmer_engine_failures_total {}\n\
+             specmer_occupancy_time_weighted {:.3}\n\
              specmer_queue_wait_seconds_total {:.4}\n\
              specmer_decode_seconds_total {:.4}\n\
              specmer_latency_p50_seconds {p50:.4}\n\
@@ -149,6 +196,9 @@ impl Metrics {
             self.prefill_hits.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
+            self.admitted.load(Ordering::Relaxed),
+            self.engine_failures.load(Ordering::Relaxed),
+            self.occupancy_time_weighted(),
             self.queue_wait_total(),
             self.decode_seconds_total(),
         )
@@ -204,5 +254,28 @@ mod tests {
         let dump = m.text_dump();
         assert!(dump.contains("specmer_batches_total 2"));
         assert!(dump.contains("specmer_batch_occupancy_avg 3.000"));
+    }
+
+    #[test]
+    fn admissions_count_toward_occupancy() {
+        let m = Metrics::new();
+        m.record_batch(2, 0.2);
+        m.record_admission(0.05);
+        m.record_admission(0.15);
+        assert_eq!(m.admitted.load(Ordering::Relaxed), 2);
+        // admitted requests rode the existing dispatch: 4 requests, 1 batch
+        assert!((m.batch_occupancy() - 4.0).abs() < 1e-12);
+        assert!((m.queue_wait_total() - 0.4).abs() < 1e-12);
+        assert!(m.text_dump().contains("specmer_admitted_total 2"));
+    }
+
+    #[test]
+    fn time_weighted_occupancy_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.occupancy_time_weighted(), 0.0);
+        m.record_round(4, 1.0); // 4 sequences for 1s
+        m.record_round(1, 3.0); // 1 sequence for 3s
+        assert!((m.occupancy_time_weighted() - 7.0 / 4.0).abs() < 1e-12);
+        assert!(m.text_dump().contains("specmer_occupancy_time_weighted 1.750"));
     }
 }

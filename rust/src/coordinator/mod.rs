@@ -9,7 +9,10 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use engine::{build_engine, engine_for_bench, load_families, synthetic_engine, Engine, Family, GenEngine};
+pub use engine::{
+    build_engine, engine_for_bench, load_families, synthetic_engine, Engine, Family, GenEngine,
+    RequestSource,
+};
 pub use metrics::Metrics;
 pub use request::{GenRequest, GenResponse};
 pub use router::Router;

@@ -35,21 +35,28 @@ impl Router {
         Router { scheduler, next_id: AtomicU64::new(1), spill_threshold: 4 }
     }
 
-    /// Pick a worker for `protein` (exposed for tests).
+    /// Pick a worker for `protein` (exposed for tests). Dead workers (a
+    /// failed engine factory) are never selected while any live worker
+    /// exists; if all are dead we fall back to affinity — the dead worker's
+    /// drain loop still answers with errors rather than hanging clients.
     pub fn place(&self, protein: &str) -> usize {
         let n = self.scheduler.n_workers();
         if n == 1 {
             return 0;
         }
         let affinity = (fnv1a(protein) % n as u64) as usize;
+        let alive = self.scheduler.alive();
         let loads = self.scheduler.loads();
-        let (min_w, min_load) = loads
+        let live_min = loads
             .iter()
             .enumerate()
+            .filter(|(i, _)| alive[*i])
             .min_by_key(|(_, &l)| l)
-            .map(|(i, &l)| (i, l))
-            .unwrap_or((0, 0));
-        if loads[affinity] > min_load + self.spill_threshold {
+            .map(|(i, &l)| (i, l));
+        let Some((min_w, min_load)) = live_min else {
+            return affinity; // every worker is dead
+        };
+        if !alive[affinity] || loads[affinity] > min_load + self.spill_threshold {
             min_w
         } else {
             affinity
@@ -136,6 +143,46 @@ mod tests {
         for _ in 0..4 {
             let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             assert!(resp.result.is_ok());
+        }
+    }
+
+    #[test]
+    fn dead_workers_are_not_selected() {
+        use std::sync::atomic::AtomicUsize;
+
+        // one of the two workers fails to build its engine; once marked
+        // dead, placement must always pick the live one
+        let ctr = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&ctr);
+        let factory: EngineFactory = Arc::new(move || {
+            if c2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(anyhow::anyhow!("boom"))
+            } else {
+                Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>)
+            }
+        });
+        let sched = Arc::new(Scheduler::start(
+            2,
+            4,
+            Duration::from_millis(1),
+            factory,
+            Arc::new(Metrics::new()),
+        ));
+        // wait for exactly one worker to come up dead (factory call order
+        // across worker threads is racy, which worker is dead is not fixed)
+        let mut dead = 0;
+        for _ in 0..500 {
+            dead = sched.alive().iter().filter(|a| !**a).count();
+            if dead == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(dead, 1, "exactly one worker should be dead: {:?}", sched.alive());
+        let live = sched.alive().iter().position(|&a| a).unwrap();
+        let r = Router::new(sched);
+        for protein in ["GFP", "GB1", "TEM1", "SynA", "SynB"] {
+            assert_eq!(r.place(protein), live, "{protein} routed to a dead worker");
         }
     }
 

@@ -3,24 +3,35 @@
 //! *inside* their worker thread from a Send factory), fed by per-worker
 //! batchers behind a mutex+condvar.
 //!
-//! A worker dispatches each batcher batch *whole* through
-//! [`GenEngine::generate_batch`], so compatible requests share lockstep
-//! decode rounds instead of running B independent decode loops; batch
-//! occupancy and queue-wait are recorded per dispatch. Workers with queued
-//! but not-yet-aged work sleep on the condvar until the oldest request's
-//! `max_wait` deadline instead of spinning.
+//! Dispatch is **continuously batched** (vLLM-style): a popped batch whose
+//! head request has a lockstep decode shape runs through
+//! [`GenEngine::generate_continuous`], and at *every* draft/verify round
+//! boundary the worker re-polls its queue (under the existing mutex) and
+//! splices newly-arrived compatible requests into the in-flight group,
+//! while finished sequences are answered the moment they complete — so
+//! occupancy stays high under streaming arrivals instead of collapsing to
+//! run-to-completion. Mixed-shape leftovers, probe items and non-lockstep
+//! methods go through the plain [`GenEngine::generate_batch`] dispatch.
+//! Queued and in-flight work are tracked separately (the router's
+//! least-loaded signal is their sum), a worker whose engine factory fails
+//! marks itself dead and answers its queue with errors instead of hanging
+//! clients, and workers with queued but not-yet-aged work sleep on the
+//! condvar until the oldest request's `max_wait` deadline.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
-use super::engine::GenEngine;
+use super::engine::{GenEngine, RequestSource};
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
+use crate::config::Method;
+use crate::decode::{GenConfig, GenOutput};
 
 /// Send-able engine constructor run inside each worker thread.
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn GenEngine>> + Send + Sync>;
@@ -30,6 +41,11 @@ struct WorkerShared {
     cv: Condvar,
     stop: AtomicBool,
     queued: AtomicUsize,
+    /// Requests popped from the queue but not yet answered.
+    inflight: AtomicUsize,
+    /// Set when the worker's engine factory failed: the worker only drains
+    /// its queue with error responses, and the router stops selecting it.
+    dead: AtomicBool,
 }
 
 pub struct Worker {
@@ -57,6 +73,8 @@ impl Scheduler {
                     cv: Condvar::new(),
                     stop: AtomicBool::new(false),
                     queued: AtomicUsize::new(0),
+                    inflight: AtomicUsize::new(0),
+                    dead: AtomicBool::new(false),
                 });
                 let s2 = Arc::clone(&shared);
                 let f = Arc::clone(&factory);
@@ -75,11 +93,41 @@ impl Scheduler {
         self.workers.len()
     }
 
-    /// Queue depth of each worker (for the router's least-loaded policy).
+    /// Outstanding work per worker — queued *plus* in-flight, so the
+    /// router's least-loaded policy sees requests for the whole time they
+    /// occupy the worker, not only while they sit in its queue.
     pub fn loads(&self) -> Vec<usize> {
         self.workers
             .iter()
+            .map(|w| {
+                w.shared.queued.load(Ordering::Relaxed)
+                    + w.shared.inflight.load(Ordering::Relaxed)
+            })
+            .collect()
+    }
+
+    /// Queue-only depth per worker (requests not yet popped).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.workers
+            .iter()
             .map(|w| w.shared.queued.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// In-flight (popped, unanswered) requests per worker.
+    pub fn inflight(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .map(|w| w.shared.inflight.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Liveness per worker: false once a worker's engine factory failed
+    /// (it answers every request with an error; the router skips it).
+    pub fn alive(&self) -> Vec<bool> {
+        self.workers
+            .iter()
+            .map(|w| !w.shared.dead.load(Ordering::SeqCst))
             .collect()
     }
 
@@ -112,8 +160,16 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
         Ok(e) => e,
         Err(e) => {
             eprintln!("[specmer] worker failed to build engine: {e:#}");
+            metrics.record_engine_failure();
+            shared.dead.store(true, Ordering::SeqCst);
+            drain_dead(&shared, &metrics, &format!("{e:#}"));
             return;
         }
+    };
+    // batcher limits are construction-time constants; read them once
+    let (max_batch, max_wait) = {
+        let b = shared.batcher.lock().unwrap();
+        (b.max_batch, b.max_wait)
     };
     loop {
         // wait for work or shutdown
@@ -139,35 +195,280 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
             }
         };
         shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+        shared.inflight.fetch_add(batch.len(), Ordering::Relaxed);
+        dispatch(&shared, engine.as_ref(), &metrics, batch, max_batch, max_wait);
+    }
+}
 
-        // one lockstep dispatch for the whole batch (one (protein, method)
-        // key by the batcher's grouping); decode wall time is attributed
-        // evenly so per-request decode_seconds still sum to the wall time
+/// A worker whose engine never came up must still answer its queue: every
+/// queued (and future) request gets an error response instead of a client
+/// hanging on a reply channel whose sender is never dropped. Runs until
+/// shutdown.
+fn drain_dead(shared: &WorkerShared, metrics: &Metrics, err: &str) {
+    let mut b = shared.batcher.lock().unwrap();
+    loop {
+        while let Some(batch) = b.next_batch(Instant::now(), true) {
+            shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+            for req in batch {
+                metrics.record_failure();
+                let latency = req.submitted.elapsed().as_secs_f64();
+                let _ = req.reply.send(GenResponse {
+                    id: req.id,
+                    protein: req.protein,
+                    method: req.method,
+                    result: Err(anyhow!("worker engine unavailable: {err}")),
+                    latency,
+                    decode_seconds: 0.0,
+                });
+            }
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        b = shared.cv.wait(b).unwrap();
+    }
+}
+
+/// Dispatch one popped batch (a single `(protein, method)` key). Members
+/// sharing the head request's lockstep shape run on the continuous path —
+/// one in-flight group admitting newly-queued compatible requests at every
+/// round boundary; leftovers (mixed shapes, probe items) and non-lockstep
+/// methods take the plain batched dispatch afterwards.
+fn dispatch(
+    shared: &WorkerShared,
+    engine: &dyn GenEngine,
+    metrics: &Metrics,
+    mut batch: Vec<GenRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let protein = batch[0].protein.clone();
+    let method = batch[0].method;
+    if let Some(shape) = engine.lockstep_shape(&protein, method, &batch[0].cfg) {
+        // raw-config compatibility with the *normalized* shape: max_len
+        // clamping never affects the shape, and `Speculative` normalizes to
+        // c = 1, so raw `c` is normalized before the check; probe items need
+        // the sequential path and are never admitted
+        let compatible = move |cfg: &GenConfig| {
+            if cfg.probe_rate > 0.0 {
+                return false;
+            }
+            let mut norm = cfg.clone();
+            if method == Method::Speculative {
+                norm.c = 1;
+            }
+            shape.admits(&norm)
+        };
+        let (group, rest): (Vec<GenRequest>, Vec<GenRequest>) =
+            batch.into_iter().partition(|r| compatible(&r.cfg));
         let now = Instant::now();
-        let queue_wait: f64 = batch
+        let queue_wait: f64 = group
             .iter()
             .map(|r| now.saturating_duration_since(r.submitted).as_secs_f64())
             .sum();
-        metrics.record_batch(batch.len(), queue_wait);
-        let cfgs: Vec<_> = batch.iter().map(|r| r.cfg.clone()).collect();
-        let t0 = Instant::now();
-        let results = engine.generate_batch(&batch[0].protein, batch[0].method, &cfgs);
-        let per_req_decode = t0.elapsed().as_secs_f64() / batch.len() as f64;
-        for (req, result) in batch.into_iter().zip(results) {
+        metrics.record_batch(group.len(), queue_wait);
+        // fairness: popped leftovers wait for the group to drain, so new
+        // admissions must stop once the oldest leftover ages out — same
+        // guard `Batcher::take_compatible` applies to requests still queued
+        let admit_until = rest.iter().map(|r| r.submitted + max_wait).min();
+        let mut source = WorkerSource {
+            shared,
+            metrics,
+            protein: &protein,
+            method,
+            compatible: &compatible,
+            max_batch,
+            admit_until,
+            initial: group,
+            inflight: HashMap::new(),
+            next_ticket: 0,
+            last_boundary: Instant::now(),
+            round_active: 0,
+        };
+        engine.generate_continuous(&protein, method, &shape, &mut source);
+        // defensive: an engine that abandons the group must not hang clients
+        source.fail_remaining("continuous dispatch ended without answering");
+        batch = rest;
+        if batch.is_empty() {
+            return;
+        }
+    }
+
+    // plain batched dispatch; decode wall time is attributed evenly so
+    // per-request decode_seconds still sum to the wall time
+    let now = Instant::now();
+    let queue_wait: f64 = batch
+        .iter()
+        .map(|r| now.saturating_duration_since(r.submitted).as_secs_f64())
+        .sum();
+    metrics.record_batch(batch.len(), queue_wait);
+    let cfgs: Vec<_> = batch.iter().map(|r| r.cfg.clone()).collect();
+    let t0 = Instant::now();
+    let mut results = engine.generate_batch(&protein, method, &cfgs);
+    // a length-mismatched result vector must never silently drop replies
+    // (a client would hang forever): fail the remainder explicitly
+    let got = results.len();
+    if got != batch.len() {
+        results.truncate(batch.len());
+        while results.len() < batch.len() {
+            results.push(Err(anyhow!(
+                "engine answered {got} of {} batched requests",
+                batch.len()
+            )));
+        }
+    }
+    let per_req_decode = t0.elapsed().as_secs_f64() / batch.len() as f64;
+    for (req, result) in batch.into_iter().zip(results) {
+        let latency = req.submitted.elapsed().as_secs_f64();
+        match &result {
+            Ok(out) => metrics.record(out, latency, per_req_decode),
+            Err(_) => metrics.record_failure(),
+        }
+        let _ = req.reply.send(GenResponse {
+            id: req.id,
+            protein: req.protein,
+            method: req.method,
+            result,
+            latency,
+            decode_seconds: per_req_decode,
+        });
+        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The worker's [`RequestSource`]: feeds the continuous-batching dispatch
+/// from the initial popped batch, then re-polls the batcher (under the
+/// worker mutex) at every round boundary for newly-arrived compatible
+/// requests, and answers each request the moment its sequence finishes.
+/// Also does the round bookkeeping: time-weighted occupancy and a
+/// per-request decode-seconds share (each round's wall time split evenly
+/// over the sequences that rode it).
+struct WorkerSource<'a> {
+    shared: &'a WorkerShared,
+    metrics: &'a Metrics,
+    protein: &'a str,
+    method: Method,
+    compatible: &'a dyn Fn(&GenConfig) -> bool,
+    max_batch: usize,
+    /// Queue admission cutoff: once the oldest incompatible leftover of the
+    /// popped batch reaches its `max_wait` deadline, stop splicing new work
+    /// into the group so it can drain and the leftover can dispatch.
+    admit_until: Option<Instant>,
+    /// Popped batch members, admitted at the first boundary.
+    initial: Vec<GenRequest>,
+    /// Unanswered requests by ticket, with their decode-seconds share.
+    inflight: HashMap<u64, (GenRequest, f64)>,
+    next_ticket: u64,
+    last_boundary: Instant,
+    /// Sequences that rode the round now ending (set at each admit).
+    round_active: usize,
+}
+
+impl WorkerSource<'_> {
+    /// Attribute the wall time since the previous boundary to the
+    /// sequences that were in flight for it.
+    fn charge_round(&mut self) {
+        let dt = self.last_boundary.elapsed().as_secs_f64();
+        self.last_boundary = Instant::now();
+        if dt <= 0.0 || self.round_active == 0 {
+            return;
+        }
+        self.metrics.record_round(self.round_active, dt);
+        let share = dt / self.round_active as f64;
+        for slot in self.inflight.values_mut() {
+            slot.1 += share;
+        }
+    }
+
+    /// Fail everything the engine never answered — admitted tickets still
+    /// in flight *and* initial members it never even admitted (defensive; a
+    /// correct engine admits the whole batch and completes every ticket).
+    fn fail_remaining(&mut self, why: &str) {
+        for req in std::mem::take(&mut self.initial) {
+            self.metrics.record_failure();
             let latency = req.submitted.elapsed().as_secs_f64();
-            match &result {
-                Ok(out) => metrics.record(out, latency, per_req_decode),
-                Err(_) => metrics.record_failure(),
-            }
             let _ = req.reply.send(GenResponse {
                 id: req.id,
                 protein: req.protein,
                 method: req.method,
-                result,
+                result: Err(anyhow!("{why}")),
                 latency,
-                decode_seconds: per_req_decode,
+                decode_seconds: 0.0,
             });
+            self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
         }
+        let tickets: Vec<u64> = self.inflight.keys().copied().collect();
+        for t in tickets {
+            self.complete(t, Err(anyhow!("{why}")));
+        }
+    }
+}
+
+impl RequestSource for WorkerSource<'_> {
+    fn admit(&mut self, active: usize) -> Vec<(u64, GenConfig)> {
+        self.charge_round();
+        // initial members first, then splice in whatever compatible work
+        // arrived while the group was decoding
+        let mut reqs = std::mem::take(&mut self.initial);
+        let free = self.max_batch.saturating_sub(active + reqs.len());
+        let may_poll = match self.admit_until {
+            Some(deadline) => Instant::now() < deadline,
+            None => true,
+        };
+        if free > 0 && may_poll {
+            let pred = |r: &GenRequest| (self.compatible)(&r.cfg);
+            let taken = {
+                let mut b = self.shared.batcher.lock().unwrap();
+                b.take_compatible(Instant::now(), self.protein, self.method, free, &pred)
+            };
+            if !taken.is_empty() {
+                self.shared.queued.fetch_sub(taken.len(), Ordering::Relaxed);
+                self.shared.inflight.fetch_add(taken.len(), Ordering::Relaxed);
+                let now = Instant::now();
+                for r in &taken {
+                    self.metrics.record_admission(
+                        now.saturating_duration_since(r.submitted).as_secs_f64(),
+                    );
+                }
+                reqs.extend(taken);
+            }
+        }
+        let out: Vec<(u64, GenConfig)> = reqs
+            .into_iter()
+            .map(|r| {
+                let ticket = self.next_ticket;
+                self.next_ticket += 1;
+                let cfg = r.cfg.clone();
+                self.inflight.insert(ticket, (r, 0.0));
+                (ticket, cfg)
+            })
+            .collect();
+        self.round_active = self.inflight.len();
+        out
+    }
+
+    fn complete(&mut self, ticket: u64, result: Result<GenOutput>) {
+        self.charge_round();
+        let Some((req, decode_s)) = self.inflight.remove(&ticket) else {
+            return;
+        };
+        // retired sequences don't ride the next round: keeps the occupancy
+        // gauge honest when an admission completes before any round runs
+        self.round_active = self.round_active.saturating_sub(1);
+        let latency = req.submitted.elapsed().as_secs_f64();
+        match &result {
+            Ok(out) => self.metrics.record(out, latency, decode_s),
+            Err(_) => self.metrics.record_failure(),
+        }
+        let _ = req.reply.send(GenResponse {
+            id: req.id,
+            protein: req.protein,
+            method: req.method,
+            result,
+            latency,
+            decode_seconds: decode_s,
+        });
+        self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -291,5 +592,187 @@ mod tests {
     fn shutdown_drains_cleanly() {
         let s = sched(2);
         drop(s); // must not hang
+    }
+
+    #[test]
+    fn failed_engine_factory_answers_every_request() {
+        // reply senders must be dropped (with an error sent) — clients used
+        // to hang forever when the factory failed
+        let factory: EngineFactory = Arc::new(|| Err(anyhow!("no artifacts")));
+        let metrics = Arc::new(Metrics::new());
+        let s = Scheduler::start(1, 4, Duration::from_millis(1), factory, Arc::clone(&metrics));
+        let (tx, rx) = channel();
+        for id in 0..3u64 {
+            s.submit_to(
+                0,
+                GenRequest {
+                    id,
+                    protein: "SynA".into(),
+                    method: Method::SpecMer,
+                    cfg: GenConfig::default(),
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        for _ in 0..3 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(r.result.is_err(), "dead worker must answer with an error");
+        }
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.engine_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(s.alive(), vec![false]);
+    }
+
+    #[test]
+    fn short_result_vector_fails_remainder_explicitly() {
+        use crate::coordinator::engine::Family;
+        use crate::decode::GenOutput;
+        use crate::kmer::KmerTable;
+
+        // buggy engine: answers only the first request of any batch
+        struct ShortEngine;
+        impl GenEngine for ShortEngine {
+            fn generate(
+                &self,
+                _protein: &str,
+                _method: Method,
+                _cfg: &GenConfig,
+            ) -> Result<GenOutput> {
+                Ok(GenOutput { tokens: vec![1, 5, 9], context_len: 1, ..Default::default() })
+            }
+            fn generate_batch(
+                &self,
+                protein: &str,
+                method: Method,
+                cfgs: &[GenConfig],
+            ) -> Vec<Result<GenOutput>> {
+                vec![self.generate(protein, method, &cfgs[0])]
+            }
+            fn score_nll(&self, _tokens: &[u8]) -> Result<f64> {
+                Ok(0.0)
+            }
+            fn embed(&self, _tokens: &[u8]) -> Result<Vec<f32>> {
+                Ok(Vec::new())
+            }
+            fn families(&self) -> &[Family] {
+                &[]
+            }
+            fn set_table_override(&mut self, _protein: &str, _table: Option<KmerTable>) {}
+        }
+
+        let factory: EngineFactory = Arc::new(|| Ok(Box::new(ShortEngine) as Box<dyn GenEngine>));
+        let metrics = Arc::new(Metrics::new());
+        let s = Scheduler::start(1, 4, Duration::from_millis(50), factory, Arc::clone(&metrics));
+        let (tx, rx) = channel();
+        for id in 0..3u64 {
+            s.submit_to(
+                0,
+                GenRequest {
+                    id,
+                    protein: "SynA".into(),
+                    method: Method::TargetOnly,
+                    cfg: GenConfig::default(),
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        let (mut ok, mut err) = (0, 0);
+        for _ in 0..3 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            match r.result {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    err += 1;
+                    assert!(format!("{e:#}").contains("answered"), "{e:#}");
+                }
+            }
+        }
+        // every request was answered: the ones the engine dropped got an
+        // explicit error instead of a hung client
+        assert_eq!(ok + err, 3);
+        assert!(err >= 1, "short result vector must fail the remainder");
+        assert_eq!(
+            metrics.completed.load(Ordering::Relaxed) + metrics.failed.load(Ordering::Relaxed),
+            3
+        );
+    }
+
+    #[test]
+    fn loads_split_queued_and_inflight() {
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let s = Scheduler::start(
+            1,
+            8,
+            Duration::from_secs(3600),
+            factory,
+            Arc::new(Metrics::new()),
+        );
+        let (tx, rx) = channel();
+        for id in 0..2u64 {
+            s.submit_to(
+                0,
+                GenRequest {
+                    id,
+                    protein: "SynA".into(),
+                    method: Method::SpecMer,
+                    cfg: GenConfig { max_len: 16, seed: id, ..Default::default() },
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                },
+            );
+        }
+        // the batch can't fire (not full, not aged): the work must be
+        // visible as queued, not in flight, and loads() as their sum
+        assert_eq!(s.queue_depths(), vec![2]);
+        assert_eq!(s.inflight(), vec![0]);
+        assert_eq!(s.loads(), vec![2]);
+        drop(tx);
+        drop(s); // shutdown flush answers both
+        assert_eq!(rx.iter().count(), 2);
+    }
+
+    #[test]
+    fn staggered_arrivals_bitwise_match_solo_runs() {
+        // requests submitted while the worker is mid-decode get admitted
+        // into the in-flight lockstep group at a round boundary; admission
+        // must not perturb any request's token stream
+        let s = sched(1);
+        let (tx, rx) = channel();
+        let mut cfgs: HashMap<u64, GenConfig> = HashMap::new();
+        for wave in 0..3u64 {
+            for i in 0..2u64 {
+                let id = wave * 2 + i;
+                let cfg = GenConfig {
+                    max_len: 36,
+                    seed: id * 13 + 1,
+                    c: 3,
+                    gamma: 5,
+                    ..Default::default()
+                };
+                cfgs.insert(id, cfg.clone());
+                s.submit_to(
+                    0,
+                    GenRequest {
+                        id,
+                        protein: "SynA".into(),
+                        method: Method::SpecMer,
+                        cfg,
+                        reply: tx.clone(),
+                        submitted: Instant::now(),
+                    },
+                );
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let eng = synthetic_engine(3);
+        for _ in 0..6 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let got = r.result.expect("request failed");
+            let want = eng.generate(&r.protein, r.method, &cfgs[&r.id]).unwrap();
+            assert_eq!(got.tokens, want.tokens, "request {} diverged under admission", r.id);
+        }
     }
 }

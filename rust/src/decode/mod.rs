@@ -4,7 +4,10 @@
 pub mod spec;
 pub mod target_only;
 
-pub use spec::{speculative_generate, speculative_generate_batch, SpecBatchItem, SpecOptions};
+pub use spec::{
+    speculative_generate, speculative_generate_batch, speculative_generate_continuous,
+    AdmissionHook, AdmitItem, LockstepShape, SpecBatchItem, SpecOptions,
+};
 pub use target_only::target_only_generate;
 
 use crate::kmer::KmerSet;

@@ -6,6 +6,14 @@
 //! §3.1): draft `c` candidate blocks in one batched call, pick the block
 //! with the highest Eq.-2 k-mer score, verify only that block with the
 //! target, and accept/correct tokens by token-level maximal coupling.
+//!
+//! Cross-request serving is built on an explicit [`LockstepGroup`] state
+//! machine: B same-shape requests share each round's draft/verify
+//! dispatches, finished sequences retire at round boundaries, and — for
+//! continuous batching ([`speculative_generate_continuous`]) — an
+//! [`AdmissionHook`] may splice newly-arrived compatible requests into the
+//! in-flight group at any boundary without perturbing resident sequences'
+//! RNG streams.
 
 use anyhow::Result;
 
@@ -123,10 +131,8 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
                 all_accepted = false;
             }
             if !acc || tok as u8 == EOS || out.tokens.len() >= max_len {
-                if !acc {
-                    // corrected token replaces the draft token; stop block
-                }
-                all_accepted = acc && tok as u8 != EOS && out.tokens.len() < max_len;
+                // stopping for any reason means no bonus token this round
+                all_accepted = false;
                 break;
             }
         }
@@ -194,11 +200,105 @@ pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
     results.into_iter().map(|o| o.expect("every item decoded")).collect()
 }
 
+/// Dispatch-shape key of a lockstep group: the four knobs that fix the
+/// shapes of the shared draft/verify dispatches. Requests may share decode
+/// rounds iff their shapes match bitwise; seed, `max_len`, context and the
+/// k-mer selection knobs stay free per sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct LockstepShape {
+    pub c: usize,
+    pub gamma: usize,
+    pub temp: f32,
+    pub top_p: f32,
+}
+
+impl LockstepShape {
+    pub fn of(cfg: &GenConfig) -> LockstepShape {
+        LockstepShape { c: cfg.c, gamma: cfg.gamma, temp: cfg.temp, top_p: cfg.top_p }
+    }
+
+    /// Whether a request with `cfg` may join a group of this shape (bitwise
+    /// float comparison: grouping must never change dispatch arithmetic).
+    pub fn admits(&self, cfg: &GenConfig) -> bool {
+        cfg.c == self.c
+            && cfg.gamma == self.gamma
+            && cfg.temp.to_bits() == self.temp.to_bits()
+            && cfg.top_p.to_bits() == self.top_p.to_bits()
+    }
+}
+
+/// One request joining an in-flight lockstep group. Owned (unlike
+/// [`SpecBatchItem`]): admitted requests outlive the caller's borrow of the
+/// round that admitted them. `ticket` is the caller's correlation key,
+/// echoed back through [`AdmissionHook::complete`].
+pub struct AdmitItem {
+    pub ticket: u64,
+    pub context: Vec<u8>,
+    pub cfg: GenConfig,
+}
+
+/// Round-boundary admission control for continuous batching.
+///
+/// [`speculative_generate_continuous`] calls `admit` at *every* draft/verify
+/// round boundary — the worker's chance to splice newly-queued compatible
+/// requests into the in-flight group — and `complete` the moment any
+/// sequence finishes (so clients are answered mid-flight, not when the
+/// whole group drains).
+pub trait AdmissionHook {
+    /// Called at each round boundary with the number of sequences still in
+    /// flight; returns the requests to admit into the group.
+    fn admit(&mut self, active: usize) -> Vec<AdmitItem>;
+    /// Delivers one sequence's final result (exactly once per ticket).
+    fn complete(&mut self, ticket: u64, result: Result<GenOutput>);
+}
+
+/// Generate sequences with continuous batching: an in-flight lockstep
+/// group that admits new compatible requests at every round boundary while
+/// finished sequences drop out (and are answered) mid-flight.
+///
+/// Starts empty: the first `admit` call supplies the initial members.
+/// Returns when a round boundary finds the group empty and the hook has
+/// nothing to admit. Admission never perturbs resident sequences — each
+/// sequence keeps its own RNG/acceptance state and cache, and the batched
+/// dispatches are row-independent, so every token stream stays bitwise
+/// identical to a solo [`speculative_generate`] run with the same seed
+/// (pinned by `tests/batch_decode_equivalence.rs`).
+pub fn speculative_generate_continuous<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    table: Option<&KmerTable>,
+    shape: LockstepShape,
+    hook: &mut dyn AdmissionHook,
+) {
+    let mut group = LockstepGroup::new(draft, target, table, shape);
+    loop {
+        let items = hook.admit(group.active());
+        let none_admitted = items.is_empty();
+        for item in items {
+            group.admit(item);
+        }
+        for (ticket, result) in group.drain_completed() {
+            hook.complete(ticket, result);
+        }
+        if group.active() == 0 {
+            if none_admitted {
+                return;
+            }
+            continue; // every admitted item failed init or finished instantly
+        }
+        group.step_round();
+        for (ticket, result) in group.drain_completed() {
+            hook.complete(ticket, result);
+        }
+    }
+}
+
 /// Per-sequence state of the lockstep loop. The RNG stream is consumed in
 /// exactly the order the sequential path consumes it (round uniforms, then
 /// coupling draws, then the bonus draw), which is what makes the batched
 /// token stream reproduce the solo one.
 struct LockSeq<DC, TC> {
+    ticket: u64,
     dcache: DC,
     tcache: TC,
     rng: Pcg64,
@@ -210,7 +310,6 @@ struct LockSeq<DC, TC> {
     stop_at: usize,
     kset: crate::kmer::KmerSet,
     kmer_boundary: bool,
-    done: bool,
     // round scratch (kept across rounds to avoid per-round allocation)
     committed: usize,
     sel: usize,
@@ -219,35 +318,45 @@ struct LockSeq<DC, TC> {
     vtoks: Vec<u8>,
 }
 
+impl<DC, TC> LockSeq<DC, TC> {
+    /// The sequential loop's stop predicate, checked at round boundaries.
+    fn finished(&self) -> bool {
+        self.out.tokens.len() >= self.stop_at || *self.out.tokens.last().unwrap() == EOS
+    }
+}
+
 /// Build one sequence's lockstep state (validation + both prefills); an
 /// error here fails only this item.
+#[allow(clippy::too_many_arguments)]
 fn init_seq<D: ModelBackend, T: ModelBackend>(
     draft: &D,
     target: &T,
-    it: &SpecBatchItem<'_>,
+    ticket: u64,
+    context: &[u8],
+    cfg: &GenConfig,
     c: usize,
     gamma: usize,
     model_cap: usize,
 ) -> Result<LockSeq<D::Cache, T::Cache>> {
-    it.cfg.validate(it.context.len(), model_cap)?;
-    let eff_max = it.cfg.max_len.min(model_cap);
+    cfg.validate(context.len(), model_cap)?;
+    let eff_max = cfg.max_len.min(model_cap);
     // same slack rule as the sequential loop: a full block must fit
     let hard_cap = model_cap - gamma;
     Ok(LockSeq {
-        dcache: draft.prefill(it.context)?,
-        tcache: target.prefill(it.context)?,
-        rng: Pcg64::new(it.cfg.seed),
+        ticket,
+        dcache: draft.prefill(context)?,
+        tcache: target.prefill(context)?,
+        rng: Pcg64::new(cfg.seed),
         out: GenOutput {
-            tokens: it.context.to_vec(),
-            context_len: it.context.len(),
+            tokens: context.to_vec(),
+            context_len: context.len(),
             ..Default::default()
         },
-        draft_fed: it.context.len() - 1,
+        draft_fed: context.len() - 1,
         eff_max,
         stop_at: eff_max.min(hard_cap),
-        kset: it.cfg.kset,
-        kmer_boundary: it.cfg.kmer_boundary,
-        done: false,
+        kset: cfg.kset,
+        kmer_boundary: cfg.kmer_boundary,
         committed: 0,
         sel: 0,
         feed: Vec::new(),
@@ -256,61 +365,107 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
     })
 }
 
-fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
-    draft: &D,
-    target: &T,
-    table: Option<&KmerTable>,
-    items: &[SpecBatchItem<'_>],
-    idxs: &[usize],
-) -> Vec<Result<GenOutput>> {
-    let head = items[idxs[0]].cfg;
-    let (c, gamma, temp, top_p) = (head.c, head.gamma, head.temp, head.top_p);
-    for &i in &idxs[1..] {
-        let cfg = items[i].cfg;
-        if cfg.c != c
-            || cfg.gamma != gamma
-            || cfg.temp.to_bits() != temp.to_bits()
-            || cfg.top_p.to_bits() != top_p.to_bits()
-        {
-            // a caller bug, not a request failure: report it on every item
-            return idxs
-                .iter()
-                .map(|_| {
-                    Err(anyhow::anyhow!(
-                        "lockstep batch requires equal (c, gamma, temp, top_p) across \
-                         items (group requests before dispatching)"
-                    ))
-                })
-                .collect();
-        }
-    }
-    let model_cap = target.maxlen().min(draft.maxlen());
+/// Explicit state machine of one in-flight lockstep group: resident
+/// sequences share each round's draft/verify dispatches; [`Self::admit`]
+/// splices a new sequence in at a round boundary (prefilling its caches so
+/// the backend can reuse a freed arena slot next round) and finished
+/// sequences are retired into a completion queue the caller drains between
+/// rounds. Every resident sequence is active — retirement happens at the
+/// boundary, so a round never carries dead rows.
+struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
+    draft: &'m D,
+    target: &'m T,
+    table: Option<&'m KmerTable>,
+    shape: LockstepShape,
+    model_cap: usize,
+    seqs: Vec<LockSeq<D::Cache, T::Cache>>,
+    completed: Vec<(u64, Result<GenOutput>)>,
+}
 
-    let mut results: Vec<Option<Result<GenOutput>>> = (0..idxs.len()).map(|_| None).collect();
-    // per-item init: a bad config or failed prefill drops only that item
-    let mut seqs: Vec<LockSeq<D::Cache, T::Cache>> = Vec::with_capacity(idxs.len());
-    let mut slots: Vec<usize> = Vec::with_capacity(idxs.len());
-    for (slot, &i) in idxs.iter().enumerate() {
-        match init_seq(draft, target, &items[i], c, gamma, model_cap) {
-            Ok(s) => {
-                seqs.push(s);
-                slots.push(slot);
-            }
-            Err(e) => results[slot] = Some(Err(e)),
+impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
+    fn new(
+        draft: &'m D,
+        target: &'m T,
+        table: Option<&'m KmerTable>,
+        shape: LockstepShape,
+    ) -> Self {
+        let model_cap = target.maxlen().min(draft.maxlen());
+        LockstepGroup {
+            draft,
+            target,
+            table,
+            shape,
+            model_cap,
+            seqs: Vec::new(),
+            completed: Vec::new(),
         }
     }
-    'rounds: loop {
-        // ---- round setup: drop finished sequences, draw round uniforms --
-        let mut any_active = false;
-        for s in seqs.iter_mut() {
-            if s.done {
-                continue;
-            }
-            if s.out.tokens.len() >= s.stop_at || *s.out.tokens.last().unwrap() == EOS {
-                s.done = true;
-                continue;
-            }
-            any_active = true;
+
+    fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn drain_completed(&mut self) -> Vec<(u64, Result<GenOutput>)> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Admit one request at the current round boundary. A shape mismatch,
+    /// probing config, invalid config or failed prefill completes the
+    /// ticket with an error (never poisons residents); a context already at
+    /// its limit completes immediately with a zero-round output, exactly
+    /// like the solo loop.
+    fn admit(&mut self, item: AdmitItem) {
+        if !self.shape.admits(&item.cfg) {
+            self.completed.push((
+                item.ticket,
+                Err(anyhow::anyhow!(
+                    "request admitted into a lockstep group with a different \
+                     (c, gamma, temp, top_p) shape"
+                )),
+            ));
+            return;
+        }
+        // probe items interleave extra dispatches and RNG draws the solo
+        // path performs but lockstep rounds cannot: admitting one would
+        // silently diverge from its solo run (the batch entry point routes
+        // them through the sequential engine instead — do the same upstream)
+        if item.cfg.probe_rate > 0.0 {
+            self.completed.push((
+                item.ticket,
+                Err(anyhow::anyhow!(
+                    "probe_rate > 0 requests cannot join a lockstep group; \
+                     decode them through the sequential path"
+                )),
+            ));
+            return;
+        }
+        let init = init_seq(
+            self.draft,
+            self.target,
+            item.ticket,
+            &item.context,
+            &item.cfg,
+            self.shape.c,
+            self.shape.gamma,
+            self.model_cap,
+        );
+        match init {
+            Ok(s) if s.finished() => self.completed.push((s.ticket, Ok(s.out))),
+            Ok(s) => self.seqs.push(s),
+            Err(e) => self.completed.push((item.ticket, Err(e))),
+        }
+    }
+
+    /// Run one draft/verify round over every resident sequence, then retire
+    /// the ones that finished. A *shared* dispatch error fails all residents
+    /// (per-sequence work the dispatch was carrying is lost) and empties the
+    /// group.
+    fn step_round(&mut self) {
+        let (c, gamma) = (self.shape.c, self.shape.gamma);
+        let (temp, top_p) = (self.shape.temp, self.shape.top_p);
+
+        // ---- round setup: draw round uniforms on each sequence's RNG ----
+        for s in self.seqs.iter_mut() {
             s.out.rounds += 1;
             s.committed = s.out.tokens.len();
             s.feed.clear();
@@ -321,32 +476,26 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
             }
             s.out.draft_calls += 1;
         }
-        if !any_active {
-            break;
-        }
 
         // ---- 1. candidate construction: one lockstep draft dispatch -----
         let mut dseqs: Vec<DraftSeq<'_, D::Cache>> = Vec::new();
-        for s in seqs.iter_mut().filter(|s| !s.done) {
+        for s in self.seqs.iter_mut() {
             dseqs.push(DraftSeq { cache: &mut s.dcache, feed: &s.feed, pos: s.draft_fed, u: &s.u });
         }
-        let blocks_res = draft.generate_batch(&mut dseqs, c, gamma, temp, top_p);
+        let blocks_res = self.draft.generate_batch(&mut dseqs, c, gamma, temp, top_p);
         drop(dseqs);
         let blocks = match blocks_res {
             Ok(b) => b,
             Err(e) => {
-                poison_active(&mut results, &slots, &seqs, e);
-                break 'rounds;
+                self.poison(e);
+                return;
             }
         };
 
         // ---- 2. per-sequence k-mer selection ----------------------------
-        let mut bi = 0;
-        for s in seqs.iter_mut().filter(|s| !s.done) {
-            let block = &blocks[bi];
-            bi += 1;
+        for (s, block) in self.seqs.iter_mut().zip(&blocks) {
             s.draft_fed = s.committed;
-            s.sel = match (table, c) {
+            s.sel = match (self.table, c) {
                 (Some(t), cc) if cc > 1 => {
                     if s.kmer_boundary {
                         let tail_len = s.kset.kmax() - 1;
@@ -365,25 +514,21 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
 
         // ---- 3. conditional probabilities: one lockstep verify ----------
         let mut vseqs: Vec<VerifySeq<'_, T::Cache>> = Vec::new();
-        for s in seqs.iter_mut().filter(|s| !s.done) {
+        for s in self.seqs.iter_mut() {
             vseqs.push(VerifySeq { cache: &mut s.tcache, toks: &s.vtoks, pos: s.committed - 1 });
         }
-        let verifies_res = target.verify_batch(&mut vseqs, temp, top_p);
+        let verifies_res = self.target.verify_batch(&mut vseqs, temp, top_p);
         drop(vseqs);
         let verifies = match verifies_res {
             Ok(v) => v,
             Err(e) => {
-                poison_active(&mut results, &slots, &seqs, e);
-                break 'rounds;
+                self.poison(e);
+                return;
             }
         };
 
         // ---- 4. per-sequence maximal coupling on its own RNG stream -----
-        let mut bi = 0;
-        for s in seqs.iter_mut().filter(|s| !s.done) {
-            let block = &blocks[bi];
-            let verify = &verifies[bi];
-            bi += 1;
+        for ((s, block), verify) in self.seqs.iter_mut().zip(&blocks).zip(&verifies) {
             s.out.target_calls += 1;
             let cand = &block.tokens[s.sel];
             let p_dists = &block.dists[s.sel];
@@ -400,7 +545,8 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
                     all_accepted = false;
                 }
                 if !acc || tok as u8 == EOS || s.out.tokens.len() >= s.eff_max {
-                    all_accepted = acc && tok as u8 != EOS && s.out.tokens.len() < s.eff_max;
+                    // stopping for any reason means no bonus token this round
+                    all_accepted = false;
                     break;
                 }
             }
@@ -412,31 +558,73 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
                 s.out.bonus += 1;
             }
         }
+
+        // ---- retire finished sequences (frees their slots for admission) -
+        let mut still = Vec::with_capacity(self.seqs.len());
+        for s in std::mem::take(&mut self.seqs) {
+            if s.finished() {
+                self.completed.push((s.ticket, Ok(s.out)));
+            } else {
+                still.push(s);
+            }
+        }
+        self.seqs = still;
     }
-    for (slot, s) in slots.into_iter().zip(seqs) {
-        // dispatch poisoning already filled these slots; don't overwrite
-        if results[slot].is_none() {
-            results[slot] = Some(Ok(s.out));
+
+    /// A shared dispatch died mid-round: fail every resident sequence.
+    /// Sequences retired at earlier boundaries keep their valid outputs.
+    fn poison(&mut self, e: anyhow::Error) {
+        let msg = format!("{e:#}");
+        for s in self.seqs.drain(..) {
+            self.completed
+                .push((s.ticket, Err(anyhow::anyhow!("lockstep dispatch failed: {msg}"))));
         }
     }
-    results.into_iter().map(|o| o.expect("every slot resolved")).collect()
 }
 
-/// A *shared* dispatch died mid-round: fail the sequences still in flight.
-/// Sequences already `done` completed earlier rounds with valid outputs and
-/// keep them — only work the failed dispatch was actually carrying is lost.
-fn poison_active<DC, TC>(
-    results: &mut [Option<Result<GenOutput>>],
-    slots: &[usize],
-    seqs: &[LockSeq<DC, TC>],
-    e: anyhow::Error,
-) {
-    let msg = format!("{e:#}");
-    for (&slot, s) in slots.iter().zip(seqs) {
-        if !s.done {
-            results[slot] = Some(Err(anyhow::anyhow!("lockstep dispatch failed: {msg}")));
+fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    table: Option<&KmerTable>,
+    items: &[SpecBatchItem<'_>],
+    idxs: &[usize],
+) -> Vec<Result<GenOutput>> {
+    let shape = LockstepShape::of(items[idxs[0]].cfg);
+    for &i in &idxs[1..] {
+        if !shape.admits(items[i].cfg) {
+            // a caller bug, not a request failure: report it on every item
+            return idxs
+                .iter()
+                .map(|_| {
+                    Err(anyhow::anyhow!(
+                        "lockstep batch requires equal (c, gamma, temp, top_p) across \
+                         items (group requests before dispatching)"
+                    ))
+                })
+                .collect();
         }
     }
+
+    let mut group = LockstepGroup::new(draft, target, table, shape);
+    // per-item init: a bad config or failed prefill drops only that item
+    for (slot, &i) in idxs.iter().enumerate() {
+        group.admit(AdmitItem {
+            ticket: slot as u64,
+            context: items[i].context.to_vec(),
+            cfg: items[i].cfg.clone(),
+        });
+    }
+    let mut results: Vec<Option<Result<GenOutput>>> = (0..idxs.len()).map(|_| None).collect();
+    loop {
+        for (ticket, result) in group.drain_completed() {
+            results[ticket as usize] = Some(result);
+        }
+        if group.active() == 0 {
+            break;
+        }
+        group.step_round();
+    }
+    results.into_iter().map(|o| o.expect("every slot resolved")).collect()
 }
 
 /// Estimate a misranking event: did *any* candidate pass a sequence-level
@@ -749,6 +937,81 @@ mod tests {
         assert!(!probed.probes.is_empty(), "probe item must still probe");
         let want = speculative_generate(&d, &t, Some(&table), ctx, &plain).unwrap();
         assert_eq!(outs[1].as_ref().unwrap().tokens, want.tokens);
+    }
+
+    /// Minimal scripted hook: admits each item once its boundary index is
+    /// reached, collects completions by ticket.
+    struct Scripted {
+        pending: Vec<(usize, AdmitItem)>,
+        boundary: usize,
+        done: Vec<(u64, Result<GenOutput>)>,
+    }
+
+    impl AdmissionHook for Scripted {
+        fn admit(&mut self, _active: usize) -> Vec<AdmitItem> {
+            let b = self.boundary;
+            self.boundary += 1;
+            let (now, later): (Vec<_>, Vec<_>) =
+                self.pending.drain(..).partition(|(at, _)| *at <= b);
+            self.pending = later;
+            now.into_iter().map(|(_, item)| item).collect()
+        }
+        fn complete(&mut self, ticket: u64, result: Result<GenOutput>) {
+            self.done.push((ticket, result));
+        }
+    }
+
+    #[test]
+    fn continuous_admission_matches_solo_runs() {
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let cfgs = [cfg(2, 5, 3), cfg(2, 5, 17)];
+        let mut hook = Scripted {
+            pending: cfgs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    // second request arrives a round boundary after the first
+                    (i, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: c.clone() })
+                })
+                .collect(),
+            boundary: 0,
+            done: Vec::new(),
+        };
+        speculative_generate_continuous(&d, &t, None, LockstepShape::of(&cfgs[0]), &mut hook);
+        assert_eq!(hook.done.len(), 2, "every admitted request completed");
+        hook.done.sort_by_key(|(t, _)| *t);
+        for (i, (ticket, got)) in hook.done.iter().enumerate() {
+            assert_eq!(*ticket, i as u64);
+            let want = speculative_generate(&d, &t, None, ctx, &cfgs[i]).unwrap();
+            assert_eq!(got.as_ref().unwrap().tokens, want.tokens, "seq {i} diverged");
+        }
+    }
+
+    #[test]
+    fn continuous_admission_rejects_mismatched_and_probing_items() {
+        let (d, t) = models();
+        let good = cfg(2, 5, 1);
+        let bad = cfg(2, 8, 2); // different gamma than the group shape
+        let mut probing = cfg(2, 5, 4); // probes splice extra dispatches:
+        probing.probe_rate = 1.0; // sequential-path only, must be refused
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let mut hook = Scripted {
+            pending: vec![
+                (0, AdmitItem { ticket: 0, context: ctx.to_vec(), cfg: good.clone() }),
+                (1, AdmitItem { ticket: 1, context: ctx.to_vec(), cfg: bad }),
+                (1, AdmitItem { ticket: 2, context: ctx.to_vec(), cfg: probing }),
+            ],
+            boundary: 0,
+            done: Vec::new(),
+        };
+        speculative_generate_continuous(&d, &t, None, LockstepShape::of(&good), &mut hook);
+        assert_eq!(hook.done.len(), 3);
+        hook.done.sort_by_key(|(t, _)| *t);
+        assert!(hook.done[0].1.is_ok(), "resident sequence unaffected");
+        assert!(hook.done[1].1.is_err(), "mismatched shape must be refused");
+        assert!(hook.done[2].1.is_err(), "probe_rate > 0 must be refused");
     }
 
     #[test]

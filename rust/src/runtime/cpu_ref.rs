@@ -31,6 +31,15 @@
 //! path, so the batched forward is *exactly* equal to the seed per-position
 //! implementation, which is preserved under [`reference`] as the
 //! equivalence oracle and bench baseline.
+//!
+//! All round-lifetime workspaces (the arena/branch tails and the
+//! teacher-forced forward buffers) are drawn from a per-model [`BufPool`]
+//! rather than allocated per round: each worker owns its engine, so the
+//! pool is effectively per-worker, and continuous-batching decode rounds
+//! recycle one another's buffers. Pooled buffers are re-zeroed on handout,
+//! keeping every round bitwise-identical to a fresh-allocation run.
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -39,6 +48,57 @@ use super::gemm;
 use crate::params::{ModelDims, ModelParams};
 use crate::sampling;
 use crate::util::rng::Pcg64;
+
+/// Reusable workspace set for one forward / draft round. The hot-path entry
+/// points draw one of these from the owning model's [`BufPool`] instead of
+/// allocating: under continuous batching a worker issues one arena plus one
+/// ragged teacher-forced workspace per decode round, and at high request
+/// rates those per-round allocations dominated allocator traffic.
+#[derive(Default)]
+struct RoundBufs {
+    tail: Vec<f32>,
+    xs: Vec<f32>,
+    hbuf: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Per-model buffer pool. Engines are built inside their worker thread, so
+/// this doubles as the ROADMAP's per-*worker* arena pool: buffers grown for
+/// one round are handed to the next round instead of going back to the
+/// allocator. The mutex is uncontended on the serving path (one worker
+/// thread drives a model); it only exists to keep `CpuModel: Sync`.
+#[derive(Default)]
+struct BufPool {
+    bufs: Mutex<Vec<RoundBufs>>,
+}
+
+impl BufPool {
+    fn take(&self) -> RoundBufs {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, bufs: RoundBufs) {
+        let mut pool = self.bufs.lock().unwrap();
+        // a forward holds at most a few sets at once; keep the pool bounded
+        if pool.len() < 8 {
+            pool.push(bufs);
+        }
+    }
+}
+
+/// Size a pooled buffer: zeroed `len` floats reusing capacity. `clear` +
+/// `resize` zero-fills everything, so a pooled round is bitwise identical
+/// to one running on fresh `vec![0.0; len]` allocations.
+fn grab(v: &mut Vec<f32>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
 
 /// One transformer block's weights.
 struct Layer {
@@ -65,6 +125,8 @@ pub struct CpuModel {
     layers: Vec<Layer>,
     lnf_g: Vec<f32>,
     lnf_b: Vec<f32>,
+    /// Round-workspace pool (see [`BufPool`]).
+    pool: BufPool,
 }
 
 /// KV cache: flat [L, 2, H, S, Dh], identical layout to the HLO programs.
@@ -129,7 +191,17 @@ struct BranchedArena<'a> {
 }
 
 impl<'a> BranchedArena<'a> {
-    fn new(m: &CpuModel, bases: Vec<(&'a CpuCache, usize)>, c: usize, gamma: usize) -> Self {
+    /// Build the round arena on pooled buffers (`bufs` is resized and
+    /// zeroed to this round's B·c rows, reusing capacity left by earlier
+    /// rounds — sequences admitted mid-flight land in whatever slot space
+    /// retired sequences freed).
+    fn new(
+        m: &CpuModel,
+        bases: Vec<(&'a CpuCache, usize)>,
+        c: usize,
+        gamma: usize,
+        mut bufs: RoundBufs,
+    ) -> Self {
         let d = m.dims.d_model;
         let d_ff = m.dims.d_ff;
         let nh = m.dims.n_head;
@@ -137,21 +209,47 @@ impl<'a> BranchedArena<'a> {
         let b = bases.len();
         let rows = b * c;
         let seq_stride = m.dims.n_layer * 2 * c * nh * gamma * dh;
+        grab(&mut bufs.tail, b * seq_stride);
+        grab(&mut bufs.xs, rows * d);
+        grab(&mut bufs.hbuf, rows * d);
+        grab(&mut bufs.q, rows * d);
+        grab(&mut bufs.k, rows * d);
+        grab(&mut bufs.v, rows * d);
+        grab(&mut bufs.att, rows * d);
+        grab(&mut bufs.proj, rows * d);
+        grab(&mut bufs.ff, rows * d_ff);
+        bufs.scores.clear();
         BranchedArena {
             bases,
             c,
             gamma,
             seq_stride,
-            tail: vec![0.0; b * seq_stride],
-            xs: vec![0.0; rows * d],
-            hbuf: vec![0.0; rows * d],
-            q: vec![0.0; rows * d],
-            k: vec![0.0; rows * d],
-            v: vec![0.0; rows * d],
-            att: vec![0.0; rows * d],
-            proj: vec![0.0; rows * d],
-            ff: vec![0.0; rows * d_ff],
-            scores: Vec::new(),
+            tail: bufs.tail,
+            xs: bufs.xs,
+            hbuf: bufs.hbuf,
+            q: bufs.q,
+            k: bufs.k,
+            v: bufs.v,
+            att: bufs.att,
+            proj: bufs.proj,
+            ff: bufs.ff,
+            scores: bufs.scores,
+        }
+    }
+
+    /// Release the arena, returning its buffers for pooling.
+    fn into_bufs(self) -> RoundBufs {
+        RoundBufs {
+            tail: self.tail,
+            xs: self.xs,
+            hbuf: self.hbuf,
+            q: self.q,
+            k: self.k,
+            v: self.v,
+            att: self.att,
+            proj: self.proj,
+            ff: self.ff,
+            scores: self.scores,
         }
     }
 
@@ -174,26 +272,59 @@ impl<'a> BranchedArena<'a> {
 }
 
 impl<'a> BranchedCache<'a> {
-    fn new(m: &CpuModel, base: &'a CpuCache, base_len: usize, c: usize, gamma: usize) -> Self {
+    fn new(
+        m: &CpuModel,
+        base: &'a CpuCache,
+        base_len: usize,
+        c: usize,
+        gamma: usize,
+        mut bufs: RoundBufs,
+    ) -> Self {
         let d = m.dims.d_model;
         let d_ff = m.dims.d_ff;
         let nh = m.dims.n_head;
         let dh = m.dims.d_head();
+        grab(&mut bufs.tail, m.dims.n_layer * 2 * c * nh * gamma * dh);
+        grab(&mut bufs.xs, c * d);
+        grab(&mut bufs.hbuf, c * d);
+        grab(&mut bufs.q, c * d);
+        grab(&mut bufs.k, c * d);
+        grab(&mut bufs.v, c * d);
+        grab(&mut bufs.att, c * d);
+        grab(&mut bufs.proj, c * d);
+        grab(&mut bufs.ff, c * d_ff);
+        bufs.scores.clear();
         BranchedCache {
             base,
             base_len,
             c,
             gamma,
-            tail: vec![0.0; m.dims.n_layer * 2 * c * nh * gamma * dh],
-            xs: vec![0.0; c * d],
-            hbuf: vec![0.0; c * d],
-            q: vec![0.0; c * d],
-            k: vec![0.0; c * d],
-            v: vec![0.0; c * d],
-            att: vec![0.0; c * d],
-            proj: vec![0.0; c * d],
-            ff: vec![0.0; c * d_ff],
-            scores: Vec::new(),
+            tail: bufs.tail,
+            xs: bufs.xs,
+            hbuf: bufs.hbuf,
+            q: bufs.q,
+            k: bufs.k,
+            v: bufs.v,
+            att: bufs.att,
+            proj: bufs.proj,
+            ff: bufs.ff,
+            scores: bufs.scores,
+        }
+    }
+
+    /// Release the branch state, returning its buffers for pooling.
+    fn into_bufs(self) -> RoundBufs {
+        RoundBufs {
+            tail: self.tail,
+            xs: self.xs,
+            hbuf: self.hbuf,
+            q: self.q,
+            k: self.k,
+            v: self.v,
+            att: self.att,
+            proj: self.proj,
+            ff: self.ff,
+            scores: self.scores,
         }
     }
 
@@ -306,6 +437,7 @@ impl CpuModel {
             layers,
             lnf_g: t("lnf_g")?,
             lnf_b: t("lnf_b")?,
+            pool: BufPool::default(),
         })
     }
 
@@ -350,6 +482,7 @@ impl CpuModel {
             layers,
             lnf_g: vec![1.0; d_model],
             lnf_b: vec![0.0; d_model],
+            pool: BufPool::default(),
         }
     }
 
@@ -393,14 +526,24 @@ impl CpuModel {
             }
         }
 
-        let mut hbuf = vec![0.0f32; g * d];
-        let mut q = vec![0.0f32; g * d];
-        let mut kbuf = vec![0.0f32; g * d];
-        let mut vbuf = vec![0.0f32; g * d];
-        let mut att = vec![0.0f32; g * d];
-        let mut proj = vec![0.0f32; g * d];
-        let mut ff = vec![0.0f32; g * d_ff];
-        let mut scores: Vec<f32> = Vec::new();
+        // pooled workspaces (xs is the return value and stays owned)
+        let mut bufs = self.pool.take();
+        let mut hbuf = std::mem::take(&mut bufs.hbuf);
+        let mut q = std::mem::take(&mut bufs.q);
+        let mut kbuf = std::mem::take(&mut bufs.k);
+        let mut vbuf = std::mem::take(&mut bufs.v);
+        let mut att = std::mem::take(&mut bufs.att);
+        let mut proj = std::mem::take(&mut bufs.proj);
+        let mut ff = std::mem::take(&mut bufs.ff);
+        let mut scores = std::mem::take(&mut bufs.scores);
+        grab(&mut hbuf, g * d);
+        grab(&mut q, g * d);
+        grab(&mut kbuf, g * d);
+        grab(&mut vbuf, g * d);
+        grab(&mut att, g * d);
+        grab(&mut proj, g * d);
+        grab(&mut ff, g * d_ff);
+        scores.clear();
 
         for (l, lay) in self.layers.iter().enumerate() {
             // pre-LN + batched QKV for all G positions, K/V into the cache
@@ -476,6 +619,15 @@ impl CpuModel {
         for i in 0..g {
             ln(&mut xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b);
         }
+        bufs.hbuf = hbuf;
+        bufs.q = q;
+        bufs.k = kbuf;
+        bufs.v = vbuf;
+        bufs.att = att;
+        bufs.proj = proj;
+        bufs.ff = ff;
+        bufs.scores = scores;
+        self.pool.put(bufs);
         xs
     }
 
@@ -625,14 +777,24 @@ impl CpuModel {
             }
         }
 
-        let mut hbuf = vec![0.0f32; rt * d];
-        let mut q = vec![0.0f32; rt * d];
-        let mut kbuf = vec![0.0f32; rt * d];
-        let mut vbuf = vec![0.0f32; rt * d];
-        let mut att = vec![0.0f32; rt * d];
-        let mut proj = vec![0.0f32; rt * d];
-        let mut ff = vec![0.0f32; rt * d_ff];
-        let mut scores: Vec<f32> = Vec::new();
+        // pooled workspaces (xs is the return value and stays owned)
+        let mut bufs = self.pool.take();
+        let mut hbuf = std::mem::take(&mut bufs.hbuf);
+        let mut q = std::mem::take(&mut bufs.q);
+        let mut kbuf = std::mem::take(&mut bufs.k);
+        let mut vbuf = std::mem::take(&mut bufs.v);
+        let mut att = std::mem::take(&mut bufs.att);
+        let mut proj = std::mem::take(&mut bufs.proj);
+        let mut ff = std::mem::take(&mut bufs.ff);
+        let mut scores = std::mem::take(&mut bufs.scores);
+        grab(&mut hbuf, rt * d);
+        grab(&mut q, rt * d);
+        grab(&mut kbuf, rt * d);
+        grab(&mut vbuf, rt * d);
+        grab(&mut att, rt * d);
+        grab(&mut proj, rt * d);
+        grab(&mut ff, rt * d_ff);
+        scores.clear();
 
         for (l, lay) in self.layers.iter().enumerate() {
             // pre-LN + batched QKV for the union of rows
@@ -718,6 +880,15 @@ impl CpuModel {
         for i in 0..rt {
             ln(&mut xs[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b);
         }
+        bufs.hbuf = hbuf;
+        bufs.q = q;
+        bufs.k = kbuf;
+        bufs.v = vbuf;
+        bufs.att = att;
+        bufs.proj = proj;
+        bufs.ff = ff;
+        bufs.scores = scores;
+        self.pool.put(bufs);
         xs
     }
 
@@ -928,7 +1099,7 @@ impl ModelBackend for CpuModel {
         // steps 1..gamma: one batched [c, D] forward per step over the
         // branched cache — no full-cache clones, no per-step allocation
         if gamma > 1 {
-            let mut br = BranchedCache::new(self, cache, start, c, gamma);
+            let mut br = BranchedCache::new(self, cache, start, c, gamma, self.pool.take());
             for gi in 1..gamma {
                 let logits = self.branched_step(&mut br, &cur, start + gi - 1, gi - 1);
                 for ci in 0..c {
@@ -939,6 +1110,7 @@ impl ModelBackend for CpuModel {
                     dists[ci].push(dist);
                 }
             }
+            self.pool.put(br.into_bufs());
         }
         Ok(DraftBlock { tokens, dists })
     }
@@ -1028,14 +1200,15 @@ impl ModelBackend for CpuModel {
                 dists[b][ci].push(dist0.clone());
             }
         }
-        // steps 1..gamma: one [B·c, D] arena forward per step
+        // steps 1..gamma: one [B·c, D] arena forward per step, the arena
+        // riding the per-worker buffer pool round to round
         if gamma > 1 {
             let bases: Vec<(&CpuCache, usize)> = items
                 .iter()
                 .zip(&starts)
                 .map(|(it, &start)| (&*it.0, start))
                 .collect();
-            let mut ar = BranchedArena::new(self, bases, c, gamma);
+            let mut ar = BranchedArena::new(self, bases, c, gamma, self.pool.take());
             for gi in 1..gamma {
                 let logits = self.arena_step(&mut ar, &cur, gi - 1);
                 for b in 0..bn {
@@ -1050,6 +1223,7 @@ impl ModelBackend for CpuModel {
                     }
                 }
             }
+            self.pool.put(ar.into_bufs());
         }
         Ok(tokens
             .into_iter()
@@ -1400,6 +1574,24 @@ mod tests {
                 for (x, y) in pa.iter().zip(pb) {
                     assert!((x - y).abs() < 1e-6, "{x} vs {y}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_round_buffers_do_not_change_results() {
+        // repeated identical calls ride the warm buffer pool; handout
+        // re-zeroing must keep them bitwise-equal to the first (cold) call
+        let m = tiny();
+        let u: Vec<f32> = (0..3 * 5).map(|i| (i as f32 * 0.29) % 1.0).collect();
+        let mut c1 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let a = m.generate(&mut c1, &[13], 3, 3, 5, &u, 0.9, 0.95).unwrap();
+        let mut c2 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let b = m.generate(&mut c2, &[13], 3, 3, 5, &u, 0.9, 0.95).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        for (da, db) in a.dists.iter().zip(&b.dists) {
+            for (pa, pb) in da.iter().zip(db) {
+                assert_eq!(pa, pb, "pooled round diverged bitwise");
             }
         }
     }

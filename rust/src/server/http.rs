@@ -1,21 +1,25 @@
 //! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`.
 //!
-//! Request path (DESIGN.md §5, extended by the batched-decode serving
-//! path): a client `POST /generate` with `n` sequences fans out into `n`
-//! single-sequence requests through the [`Router`], which places them on a
-//! worker by protein affinity (spilling to the least-loaded worker under
-//! imbalance). Each worker's `Batcher` groups queued requests by
-//! `(protein, method)` — closing a batch when it is full or its oldest
-//! member has waited `max_wait` — and the worker dispatches the *whole*
-//! batch through `GenEngine::generate_batch`: lockstep-compatible requests
-//! (equal `c`, `gamma`, `temp`, `top_p`; seeds and `max_len` free) share
-//! decode rounds, each round issuing one batched draft dispatch of
-//! `[B·c, D]` rows and one ragged verify over all active sequences, with
-//! finished sequences dropping out mid-flight. Per-sequence RNG state keeps
-//! every response bitwise-identical to an unbatched run with the same seed.
-//! Responses are collected per request and folded into one JSON reply;
-//! `GET /metrics` exposes batch occupancy, queue-wait and decode seconds
-//! alongside the acceptance/throughput counters.
+//! Request path (DESIGN.md §5, extended by the continuously-batched
+//! serving path): a client `POST /generate` with `n` sequences fans out
+//! into `n` single-sequence requests through the [`Router`], which places
+//! them on a *live* worker by protein affinity (spilling to the
+//! least-loaded worker — judged on queued *plus* in-flight work — under
+//! imbalance; workers whose engine failed to build answer with errors and
+//! are skipped). Each worker's `Batcher` groups queued requests by
+//! `(protein, method)`, and speculative-method batches run as an in-flight
+//! lockstep group with **continuous batching**: at every draft/verify
+//! round boundary the worker re-polls its queue and admits newly-arrived
+//! lockstep-compatible requests (equal `c`, `gamma`, `temp`, `top_p`;
+//! seeds and `max_len` free) into the group, while finished sequences are
+//! answered the moment they complete. Each round issues one batched draft
+//! dispatch of `[B·c, D]` rows and one ragged verify over all active
+//! sequences; per-sequence RNG state keeps every response
+//! bitwise-identical to an unbatched run with the same seed, admissions
+//! included. Responses are collected per request and folded into one JSON
+//! reply; `GET /metrics` exposes batch occupancy, admission counts, the
+//! time-weighted occupancy gauge, queue-wait and decode seconds alongside
+//! the acceptance/throughput counters.
 //!
 //! The protocol subset is deliberately small: one request per connection
 //! (`Connection: close`), Content-Length bodies only — enough for any HTTP

@@ -11,7 +11,8 @@ use specmer::coordinator::engine::synthetic_engine;
 use specmer::coordinator::GenEngine;
 use specmer::config::Method;
 use specmer::decode::{
-    speculative_generate, speculative_generate_batch, GenConfig, SpecBatchItem,
+    speculative_generate, speculative_generate_batch, speculative_generate_continuous,
+    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem,
 };
 use specmer::kmer::{KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
@@ -131,6 +132,105 @@ fn lockstep_b1_is_the_sequential_engine() {
     let out = got[0].as_ref().unwrap();
     assert_eq!(out.tokens, want.tokens);
     assert_eq!(out.accepted, want.accepted);
+}
+
+/// Scripted admission source for the continuous-batching driver: each item
+/// joins the group once its arrival boundary is reached; the hook records
+/// how many sequences were in flight at each admission.
+struct Scripted {
+    pending: Vec<(usize, AdmitItem)>,
+    boundary: usize,
+    active_at_admission: Vec<usize>,
+    done: Vec<(u64, anyhow::Result<GenOutput>)>,
+}
+
+impl AdmissionHook for Scripted {
+    fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+        let b = self.boundary;
+        self.boundary += 1;
+        let (now, later): (Vec<_>, Vec<_>) = self.pending.drain(..).partition(|(at, _)| *at <= b);
+        self.pending = later;
+        for _ in &now {
+            self.active_at_admission.push(active);
+        }
+        now.into_iter().map(|(_, item)| item).collect()
+    }
+    fn complete(&mut self, ticket: u64, result: anyhow::Result<GenOutput>) {
+        self.done.push((ticket, result));
+    }
+}
+
+/// The continuous-batching acceptance criterion: requests admitted into an
+/// in-flight lockstep group at round boundaries emit token streams (and
+/// accept/reject/bonus/round stats) bitwise-identical to solo decodes with
+/// the same seed — resident sequences' RNG streams are never perturbed by
+/// admission, and late joiners behave exactly as if they had started alone.
+#[test]
+fn round_boundary_admission_equals_sequential() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = KmerTable::build(&msa);
+    // distinct draft/target so rejections and corrections actually occur
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+
+    let ctxs: [&[u8]; 4] = [
+        &[BOS, 5, 9],
+        &[BOS, 7],
+        &[BOS, 5, 9, 13, 7, 4],
+        &[BOS, 11, 3],
+    ];
+    let cfgs = [
+        cfg(3, 5, 3, 48),
+        cfg(3, 5, 11, 40),
+        cfg(3, 5, 21, 48), // joins two rounds in
+        cfg(3, 5, 33, 44), // joins three rounds in
+    ];
+    // max_len >= 40 with gamma 5 guarantees every sequence runs well past
+    // boundary 3, so the late arrivals genuinely join an in-flight group
+    let arrivals = [0usize, 1, 2, 3];
+
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+        .collect();
+
+    let mut hook = Scripted {
+        pending: arrivals
+            .iter()
+            .zip(ctxs.iter().zip(&cfgs))
+            .enumerate()
+            .map(|(i, (&at, (ctx, cfg)))| {
+                (at, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: cfg.clone() })
+            })
+            .collect(),
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    speculative_generate_continuous(&d, &t, Some(&table), LockstepShape::of(&cfgs[0]), &mut hook);
+
+    // the late arrivals must have found residents in flight, or this test
+    // never exercised mid-flight admission
+    assert_eq!(hook.active_at_admission.len(), 4);
+    assert!(
+        hook.active_at_admission[1..].iter().any(|&a| a > 0),
+        "no admission happened mid-flight: {:?}",
+        hook.active_at_admission
+    );
+
+    assert_eq!(hook.done.len(), 4, "every admitted request completed");
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("admitted item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "seq {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+        assert_eq!(got.draft_calls, want.draft_calls, "seq {b}: draft calls");
+        assert_eq!(got.target_calls, want.target_calls, "seq {b}: target calls");
+    }
 }
 
 /// Engine-level check over the full coordinator path: a worker-style batch
