@@ -1,20 +1,25 @@
 # SpecMER repo verification entry points.
 #
 #   make verify       hygiene gates (rustfmt check + clippy -D warnings),
-#                     tier-1 (release build + tests), plus a bench_micro
-#                     smoke run, which writes machine-readable round
-#                     latencies — including the batched-vs-serial B=4
-#                     decode throughput — to rust/results/bench_micro.json
-#                     (cargo runs bench binaries from the package root), so
-#                     perf regressions on the draft/verify/serving hot
-#                     paths show up there, not just in prose.
+#                     tier-1 (release build + tests), the same test suite
+#                     again with SPECMER_FORCE_PORTABLE=1 (both SIMD
+#                     dispatch arms must stay green — the kernels pin
+#                     bitwise equality between them), plus a bench_micro
+#                     smoke run, which writes machine-readable round and
+#                     kernel latencies — including the scalar-vs-vectorized
+#                     GEMM and prepacked-logits-head speedups and the
+#                     batched-vs-serial B=4 decode throughput — to
+#                     rust/results/bench_micro.json (cargo runs bench
+#                     binaries from the package root), so perf regressions
+#                     on the draft/verify/serving hot paths show up there,
+#                     not just in prose.
 #   make bench-micro  full (non-smoke) micro benches.
 
 CARGO ?= cargo
 
-.PHONY: verify fmt-check lint build test bench-smoke bench-micro
+.PHONY: verify fmt-check lint build test test-portable bench-smoke bench-micro
 
-verify: fmt-check lint build test bench-smoke
+verify: fmt-check lint build test test-portable bench-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -27,6 +32,11 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# force the portable chunked-lane kernels (the dispatcher consumes the env
+# var once per process) so the non-AVX2 arm stays green everywhere
+test-portable:
+	SPECMER_FORCE_PORTABLE=1 $(CARGO) test -q
 
 bench-smoke:
 	SPECMER_BENCH_SMOKE=1 $(CARGO) bench --bench bench_micro

@@ -2,15 +2,18 @@
 //! this is a minimal warmup+measure harness with median-of-runs output).
 //! These feed EXPERIMENTS.md §Perf.
 //!
-//! Besides the scalar kernels, this bench measures a full **draft round**
-//! (`generate` at c=3, γ=5) and a **verify round** on a synthetic model,
-//! both for the batched branched-cache runtime and for the seed
-//! clone-per-candidate implementation (`cpu_ref::reference`), plus the
-//! worker-level question — four full generations dispatched as **lockstep
-//! batched rounds vs a serial request loop** — plus the serving-path
-//! question under **streaming arrivals** (B=4 staggered submits): measured
-//! occupancy of continuous round-boundary admission vs run-to-completion
-//! dispatch. All numbers are emitted machine-readably to
+//! Besides the scalar kernels, this bench measures the **compute-kernel
+//! floor** (seed scalar GEMM vs the SIMD dispatch, the seed `matmul_nt`
+//! logits head vs the prepacked `[D, V]` panel, the attention weighted-V
+//! lane helper, and single-thread vs persistent-pool row parallelism), a
+//! full **draft round** (`generate` at c=3, γ=5) and a **verify round** on
+//! a synthetic model — both for the batched branched-cache runtime and for
+//! the seed clone-per-candidate implementation (`cpu_ref::reference`) —
+//! plus the worker-level question — four full generations dispatched as
+//! **lockstep batched rounds vs a serial request loop** — plus the
+//! serving-path question under **streaming arrivals** (B=4 staggered
+//! submits): measured occupancy of continuous round-boundary admission vs
+//! run-to-completion dispatch. All numbers are emitted machine-readably to
 //! `results/bench_micro.json`. Set `SPECMER_BENCH_SMOKE=1` for a fast CI
 //! smoke run.
 
@@ -22,11 +25,13 @@ use specmer::decode::{
 };
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
+use specmer::params::PackedWeights;
 use specmer::runtime::cpu_ref::{reference, CpuModel};
-use specmer::runtime::ModelBackend;
+use specmer::runtime::{gemm, simd, ModelBackend};
 use specmer::sampling;
 use specmer::util::json::Json;
 use specmer::util::rng::Pcg64;
+use specmer::util::threadpool::compute_threads;
 
 /// Median ns/iter over 5 measured runs (after warmup).
 fn bench_ns<F: FnMut()>(iters: u64, mut f: F) -> f64 {
@@ -97,6 +102,98 @@ fn main() {
     bench("kmer table build (120x200 MSA)", (20 / scale).max(2), || {
         std::hint::black_box(KmerTable::build(&msa));
     });
+
+    // ---- compute-kernel benches: scalar reference vs SIMD dispatch -------
+    // The per-kernel floor every round bench above is built on. The scalar
+    // reference is the seed mat-vec (kept verbatim in gemm); the vectorized
+    // numbers run whatever arm the dispatcher selected on this machine.
+    println!(
+        "== compute-kernel benches (dispatch: {}, threads: {}) ==",
+        simd::active().name(),
+        compute_threads()
+    );
+    let mut krng = Pcg64::new(77);
+    let mut randf = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (krng.gaussian() * 0.5) as f32).collect()
+    };
+    let kernel_iters: u64 = if smoke { 20 } else { 400 };
+
+    // single-thread GEMM: a draft-round-like projection shape
+    let (gm, gk, gn) = (8usize, 256usize, 256usize);
+    let ga = randf(gm * gk);
+    let gb = randf(gk * gn);
+    let mut gout = vec![0.0f32; gm * gn];
+    let gemm_scalar_ns = bench("gemm 8x256x256 st (seed scalar ref)", kernel_iters, || {
+        gemm::matmul_scalar(&ga, &gb, gm, gk, gn, &mut gout);
+        std::hint::black_box(&gout);
+    });
+    let gemm_simd_ns = bench("gemm 8x256x256 st (vectorized)", kernel_iters, || {
+        gemm::matmul_st(&ga, &gb, gm, gk, gn, &mut gout);
+        std::hint::black_box(&gout);
+    });
+    let gemm_st_speedup = gemm_scalar_ns / gemm_simd_ns;
+    println!("single-thread GEMM speedup vs scalar ref: {gemm_st_speedup:.2}x");
+
+    // multi-thread GEMM: a shape past the parallel threshold
+    let (mm, mk, mn) = (64usize, 256usize, 512usize);
+    let ma = randf(mm * mk);
+    let mb = randf(mk * mn);
+    let mut mout = vec![0.0f32; mm * mn];
+    let mt_iters: u64 = if smoke { 5 } else { 60 };
+    let gemm_mt_single_ns = bench("gemm 64x256x512 (single-thread)", mt_iters, || {
+        gemm::matmul_st(&ma, &mb, mm, mk, mn, &mut mout);
+        std::hint::black_box(&mout);
+    });
+    let gemm_mt_pool_ns = bench("gemm 64x256x512 (persistent pool)", mt_iters, || {
+        gemm::matmul(&ma, &mb, mm, mk, mn, &mut mout);
+        std::hint::black_box(&mout);
+    });
+    let gemm_mt_speedup = gemm_mt_single_ns / gemm_mt_pool_ns;
+    println!("pool-parallel GEMM speedup vs single-thread: {gemm_mt_speedup:.2}x");
+
+    // logits head: seed transposed-dot head vs the prepacked [D, V] panel
+    let (hr, hd, hv) = (8usize, 64usize, 32usize);
+    let hh = randf(hr * hd);
+    let hemb = randf(hv * hd); // [V, D]
+    let hpacked = PackedWeights::pack(&hemb, hv, hd, simd::LANES);
+    let mut hout = vec![0.0f32; hr * hpacked.v_pad];
+    let head_seed_ns = bench("logits head r8 d64 V32 (seed matmul_nt)", kernel_iters, || {
+        gemm::matmul_nt(&hh, &hemb, hr, hd, hv, &mut hout[..hr * hv]);
+        std::hint::black_box(&hout);
+    });
+    let head_packed_ns = bench("logits head r8 d64 V32 (prepacked dense)", kernel_iters, || {
+        gemm::matmul_dense_st(&hh, &hpacked.emb_t, hr, hd, hpacked.v_pad, &mut hout);
+        std::hint::black_box(&hout);
+    });
+    let head_speedup = head_seed_ns / head_packed_ns;
+    println!("prepacked logits-head speedup vs seed: {head_speedup:.2}x");
+
+    // attention weighted-V accumulation: scalar loop vs the lane helper
+    let (adh, aseq) = (64usize, 256usize);
+    let avals = randf(aseq * adh);
+    let aws = randf(aseq);
+    let mut aout = vec![0.0f32; adh];
+    let att_iters: u64 = if smoke { 200 } else { 20_000 };
+    let att_scalar_ns = bench("attention V-accum S=256 dh=64 (scalar)", att_iters, || {
+        aout.fill(0.0);
+        for s in 0..aseq {
+            let w = aws[s];
+            let vv = &avals[s * adh..(s + 1) * adh];
+            for (o, &x) in aout.iter_mut().zip(vv) {
+                *o += w * x;
+            }
+        }
+        std::hint::black_box(&aout);
+    });
+    let att_simd_ns = bench("attention V-accum S=256 dh=64 (lanes)", att_iters, || {
+        aout.fill(0.0);
+        for s in 0..aseq {
+            simd::axpy(aws[s], &avals[s * adh..(s + 1) * adh], &mut aout);
+        }
+        std::hint::black_box(&aout);
+    });
+    let att_speedup = att_scalar_ns / att_simd_ns;
+    println!("attention V-accum speedup vs scalar: {att_speedup:.2}x");
 
     // ---- draft / verify round benches: batched vs seed implementation ----
     // Synthetic but non-trivial model: 4 layers, d=64, 4 heads, S=256. The
@@ -313,6 +410,20 @@ fn main() {
         ("model", Json::str("synthetic L4 d64 h4 S256")),
         ("c", Json::num(c as f64)),
         ("gamma", Json::num(gamma as f64)),
+        ("kernel_dispatch", Json::str(simd::active().name())),
+        ("kernel_threads", Json::num(compute_threads() as f64)),
+        ("gemm_st_8x256x256_ns_scalar_ref", Json::num(gemm_scalar_ns)),
+        ("gemm_st_8x256x256_ns_vectorized", Json::num(gemm_simd_ns)),
+        ("gemm_st_speedup_vs_scalar", Json::num(gemm_st_speedup)),
+        ("gemm_mt_64x256x512_ns_single", Json::num(gemm_mt_single_ns)),
+        ("gemm_mt_64x256x512_ns_pool", Json::num(gemm_mt_pool_ns)),
+        ("gemm_mt_speedup_vs_single", Json::num(gemm_mt_speedup)),
+        ("logits_head_r8_d64_v32_ns_seed_nt", Json::num(head_seed_ns)),
+        ("logits_head_r8_d64_v32_ns_prepacked", Json::num(head_packed_ns)),
+        ("logits_head_speedup_vs_seed", Json::num(head_speedup)),
+        ("attention_vaccum_s256_dh64_ns_scalar", Json::num(att_scalar_ns)),
+        ("attention_vaccum_s256_dh64_ns_lanes", Json::num(att_simd_ns)),
+        ("attention_vaccum_speedup_vs_scalar", Json::num(att_speedup)),
         ("draft_round_ns_batched", Json::num(draft_new)),
         ("draft_round_ns_seed", Json::num(draft_seed)),
         ("draft_round_speedup_c3_g5", Json::num(draft_speedup)),

@@ -76,7 +76,8 @@ pub trait GenEngine {
     /// Generate a whole batcher batch (one `(protein, method)` key, one
     /// config per request) in a single call, returning per-request results
     /// in order. The default loops [`GenEngine::generate`]; `Engine`
-    /// overrides it to run lockstep-compatible requests through
+    /// overrides it to run lockstep-compatible requests (equal `(c, gamma)`
+    /// — sampling params are per-sequence) through
     /// [`decode::speculative_generate_batch`] so one decode round serves
     /// the whole batch.
     fn generate_batch(

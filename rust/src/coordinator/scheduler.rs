@@ -245,10 +245,11 @@ fn dispatch(
     let protein = batch[0].protein.clone();
     let method = batch[0].method;
     if let Some(shape) = engine.lockstep_shape(&protein, method, &batch[0].cfg) {
-        // raw-config compatibility with the *normalized* shape: max_len
-        // clamping never affects the shape, and `Speculative` normalizes to
-        // c = 1, so raw `c` is normalized before the check; probe items need
-        // the sequential path and are never admitted
+        // raw-config compatibility with the *normalized* `(c, gamma)` shape
+        // (temp/top_p ride per-sequence): max_len clamping never affects
+        // the shape, and `Speculative` normalizes to c = 1, so raw `c` is
+        // normalized before the check; probe items need the sequential
+        // path and are never admitted
         let compatible = move |cfg: &GenConfig| {
             if cfg.probe_rate > 0.0 {
                 return false;

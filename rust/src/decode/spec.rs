@@ -151,9 +151,10 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
 
 /// One request of a lockstep batch: its context and decoding config.
 ///
-/// Within one `speculative_generate_batch` call, `c`, `gamma`, `temp` and
-/// `top_p` must match across items (they fix the dispatch shapes); seed,
-/// max_len, context and the k-mer selection knobs may differ freely. The
+/// Within one `speculative_generate_batch` call, `c` and `gamma` must match
+/// across items (they fix the dispatch shapes); seed, max_len, context,
+/// the k-mer selection knobs, and the sampling params (`temp`/`top_p` only
+/// gate each sequence's own `adjust_dist` rows) may differ freely. The
 /// coordinator groups requests so the shape constraint always holds.
 pub struct SpecBatchItem<'a> {
     pub context: &'a [u8],
@@ -200,30 +201,26 @@ pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
     results.into_iter().map(|o| o.expect("every item decoded")).collect()
 }
 
-/// Dispatch-shape key of a lockstep group: the four knobs that fix the
+/// Dispatch-shape key of a lockstep group: the two knobs that fix the
 /// shapes of the shared draft/verify dispatches. Requests may share decode
-/// rounds iff their shapes match bitwise; seed, `max_len`, context and the
-/// k-mer selection knobs stay free per sequence.
+/// rounds iff `(c, gamma)` match; seed, `max_len`, context, the k-mer
+/// selection knobs — and the sampling params (`temp`/`top_p` only gate the
+/// per-row `adjust_dist`, threaded per-sequence through
+/// [`DraftSeq`]/[`VerifySeq`]) — stay free per sequence.
 #[derive(Clone, Copy, Debug)]
 pub struct LockstepShape {
     pub c: usize,
     pub gamma: usize,
-    pub temp: f32,
-    pub top_p: f32,
 }
 
 impl LockstepShape {
     pub fn of(cfg: &GenConfig) -> LockstepShape {
-        LockstepShape { c: cfg.c, gamma: cfg.gamma, temp: cfg.temp, top_p: cfg.top_p }
+        LockstepShape { c: cfg.c, gamma: cfg.gamma }
     }
 
-    /// Whether a request with `cfg` may join a group of this shape (bitwise
-    /// float comparison: grouping must never change dispatch arithmetic).
+    /// Whether a request with `cfg` may join a group of this shape.
     pub fn admits(&self, cfg: &GenConfig) -> bool {
-        cfg.c == self.c
-            && cfg.gamma == self.gamma
-            && cfg.temp.to_bits() == self.temp.to_bits()
-            && cfg.top_p.to_bits() == self.top_p.to_bits()
+        cfg.c == self.c && cfg.gamma == self.gamma
     }
 }
 
@@ -304,6 +301,10 @@ struct LockSeq<DC, TC> {
     rng: Pcg64,
     out: GenOutput,
     draft_fed: usize,
+    /// Per-sequence sampling params (free within a lockstep group: they
+    /// only gate this sequence's `adjust_dist` rows).
+    temp: f32,
+    top_p: f32,
     /// cfg.max_len clamped to the model cap (the accept-loop limit).
     eff_max: usize,
     /// Round-loop limit: eff_max further clamped by the KV hard cap.
@@ -353,6 +354,8 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
             ..Default::default()
         },
         draft_fed: context.len() - 1,
+        temp: cfg.temp,
+        top_p: cfg.top_p,
         eff_max,
         stop_at: eff_max.min(hard_cap),
         kset: cfg.kset,
@@ -420,7 +423,7 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
                 item.ticket,
                 Err(anyhow::anyhow!(
                     "request admitted into a lockstep group with a different \
-                     (c, gamma, temp, top_p) shape"
+                     (c, gamma) shape"
                 )),
             ));
             return;
@@ -462,7 +465,6 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
     /// group.
     fn step_round(&mut self) {
         let (c, gamma) = (self.shape.c, self.shape.gamma);
-        let (temp, top_p) = (self.shape.temp, self.shape.top_p);
 
         // ---- round setup: draw round uniforms on each sequence's RNG ----
         for s in self.seqs.iter_mut() {
@@ -480,9 +482,16 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
         // ---- 1. candidate construction: one lockstep draft dispatch -----
         let mut dseqs: Vec<DraftSeq<'_, D::Cache>> = Vec::new();
         for s in self.seqs.iter_mut() {
-            dseqs.push(DraftSeq { cache: &mut s.dcache, feed: &s.feed, pos: s.draft_fed, u: &s.u });
+            dseqs.push(DraftSeq {
+                cache: &mut s.dcache,
+                feed: &s.feed,
+                pos: s.draft_fed,
+                u: &s.u,
+                temp: s.temp,
+                top_p: s.top_p,
+            });
         }
-        let blocks_res = self.draft.generate_batch(&mut dseqs, c, gamma, temp, top_p);
+        let blocks_res = self.draft.generate_batch(&mut dseqs, c, gamma);
         drop(dseqs);
         let blocks = match blocks_res {
             Ok(b) => b,
@@ -515,9 +524,15 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
         // ---- 3. conditional probabilities: one lockstep verify ----------
         let mut vseqs: Vec<VerifySeq<'_, T::Cache>> = Vec::new();
         for s in self.seqs.iter_mut() {
-            vseqs.push(VerifySeq { cache: &mut s.tcache, toks: &s.vtoks, pos: s.committed - 1 });
+            vseqs.push(VerifySeq {
+                cache: &mut s.tcache,
+                toks: &s.vtoks,
+                pos: s.committed - 1,
+                temp: s.temp,
+                top_p: s.top_p,
+            });
         }
-        let verifies_res = self.target.verify_batch(&mut vseqs, temp, top_p);
+        let verifies_res = self.target.verify_batch(&mut vseqs);
         drop(vseqs);
         let verifies = match verifies_res {
             Ok(v) => v,
@@ -597,8 +612,8 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
                 .iter()
                 .map(|_| {
                     Err(anyhow::anyhow!(
-                        "lockstep batch requires equal (c, gamma, temp, top_p) across \
-                         items (group requests before dispatching)"
+                        "lockstep batch requires equal (c, gamma) across items \
+                         (group requests before dispatching)"
                     ))
                 })
                 .collect();
@@ -878,6 +893,37 @@ mod tests {
             assert_eq!(got.rounds, want.rounds, "seq {b}");
             assert_eq!(got.draft_calls, want.draft_calls, "seq {b}");
             assert_eq!(got.target_calls, want.target_calls, "seq {b}");
+        }
+    }
+
+    #[test]
+    fn batch_with_mixed_sampling_params_matches_solo_runs() {
+        // temp/top_p only gate per-row adjust_dist: requests differing in
+        // them share one lockstep group and must still reproduce their solo
+        // token streams exactly
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let ctx: &[u8] = &[BOS, 5, 9];
+        let mut cfgs = vec![cfg(2, 5, 3), cfg(2, 5, 7), cfg(2, 5, 11)];
+        cfgs[0].temp = 1.0;
+        cfgs[0].top_p = 1.0;
+        cfgs[1].temp = 0.8;
+        cfgs[1].top_p = 0.95;
+        cfgs[2].temp = 0.6;
+        cfgs[2].top_p = 0.9;
+        let solo: Vec<GenOutput> = cfgs
+            .iter()
+            .map(|c| speculative_generate(&d, &t, None, ctx, c).unwrap())
+            .collect();
+        let items: Vec<SpecBatchItem<'_>> =
+            cfgs.iter().map(|c| SpecBatchItem { context: ctx, cfg: c }).collect();
+        let batch = speculative_generate_batch(&d, &t, None, &items);
+        for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+            let got = got.as_ref().expect("mixed-sampling item failed");
+            assert_eq!(got.tokens, want.tokens, "seq {b} diverged");
+            assert_eq!(got.accepted, want.accepted, "seq {b}");
+            assert_eq!(got.rejected, want.rejected, "seq {b}");
+            assert_eq!(got.bonus, want.bonus, "seq {b}");
         }
     }
 

@@ -103,6 +103,49 @@ pub struct Manifest {
     pub models: BTreeMap<String, ModelDims>,
 }
 
+/// Prepacked weight panels for the CPU runtime's column-vectorized kernels,
+/// built **once at model load** (`CpuModel::from_params` / `synthetic`).
+///
+/// The weight-tied logits head multiplies hidden states against the token
+/// embedding, which is stored row-major `[V, D]` — the wrong orientation
+/// for a kernel that vectorizes across output columns, which is why the
+/// seed path ran a per-vocab-entry transposed dot product (`matmul_nt`).
+/// Packing transposes the embedding once into a row-major `[D, V_pad]`
+/// panel (`V_pad` = vocab rounded up to `lanes`, zero-filled), so the head
+/// becomes a plain `[rows, D] × [D, V]` `matmul_dense` call. Per output
+/// element the accumulation order over `D` is unchanged, so the packed
+/// head is bitwise-identical to the seed head. The CPU runtime packs at
+/// `lanes = 1` (exact width — its kernels handle trailing columns with a
+/// scalar tail); alignment padding is for panels whose consumer wants
+/// full-width vector tiles only.
+///
+/// Projection weights are exported row-major `[in, out]` — already the
+/// column-lane orientation — so only the tied head needs a packed panel.
+pub struct PackedWeights {
+    /// Transposed tied embedding, row-major `[D, V_pad]`.
+    pub emb_t: Vec<f32>,
+    /// Columns in the packed panel (`vocab` rounded up to `lanes`).
+    pub v_pad: usize,
+    /// Real vocab width (columns `vocab..v_pad` are zero padding).
+    pub vocab: usize,
+}
+
+impl PackedWeights {
+    /// Transpose the first `vocab` rows of a `[V, D]` embedding into a
+    /// `[D, V_pad]` panel aligned to `lanes` columns.
+    pub fn pack(tok_emb: &[f32], vocab: usize, d: usize, lanes: usize) -> PackedWeights {
+        let lanes = lanes.max(1);
+        let v_pad = (vocab + lanes - 1) / lanes * lanes;
+        let mut emb_t = vec![0.0f32; d * v_pad];
+        for t in 0..vocab {
+            for i in 0..d {
+                emb_t[i * v_pad + t] = tok_emb[t * d + i];
+            }
+        }
+        PackedWeights { emb_t, v_pad, vocab }
+    }
+}
+
 fn req_usize(v: &Json, key: &str) -> Result<usize, ParamsError> {
     v.get(key)
         .and_then(|x| x.as_usize())
@@ -252,5 +295,19 @@ mod tests {
         if let Ok(mp) = mp {
             assert!(mp.tensor("nope").is_err());
         }
+    }
+
+    #[test]
+    fn packed_weights_transpose_and_pad() {
+        // [V=3, D=2] embedding packed at lane width 4 -> [D=2, V_pad=4]
+        let emb = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = PackedWeights::pack(&emb, 3, 2, 4);
+        assert_eq!(p.v_pad, 4);
+        assert_eq!(p.vocab, 3);
+        assert_eq!(p.emb_t, vec![1.0, 3.0, 5.0, 0.0, 2.0, 4.0, 6.0, 0.0]);
+        // already-aligned vocab gets no padding
+        let p2 = PackedWeights::pack(&emb[..4], 2, 2, 2);
+        assert_eq!(p2.v_pad, 2);
+        assert_eq!(p2.emb_t, vec![1.0, 3.0, 2.0, 4.0]);
     }
 }

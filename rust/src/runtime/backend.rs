@@ -22,13 +22,15 @@
 //! the `runtime` module docs for the full cache-branching contract.
 //!
 //! `generate_batch`/`verify_batch` are the cross-sequence lockstep entry
-//! points: B independent sequences — each with its own cache, feed span and
-//! uniforms — go through one draft dispatch of `[B·c, D]` rows and one
-//! verify dispatch over the union of their teacher-forced rows. The default
-//! implementations loop the single-sequence calls (correct for any
-//! backend); `cpu_ref` overrides them with genuinely batched dispatches.
-//! The contract either way: per-sequence results must be identical to B
-//! separate `generate`/`verify` calls over the same caches.
+//! points: B independent sequences — each with its own cache, feed span,
+//! uniforms and sampling params (`temp`/`top_p` only gate the per-row
+//! `adjust_dist`, so they vary freely within a batch) — go through one
+//! draft dispatch of `[B·c, D]` rows and one verify dispatch over the
+//! union of their teacher-forced rows. The default implementations loop
+//! the single-sequence calls (correct for any backend); `cpu_ref`
+//! overrides them with genuinely batched dispatches. The contract either
+//! way: per-sequence results must be identical to B separate
+//! `generate`/`verify` calls over the same caches.
 
 use anyhow::Result;
 
@@ -46,21 +48,28 @@ pub struct VerifyBlock {
 }
 
 /// One sequence's slice of a lockstep draft dispatch: its own cache, the
-/// committed-but-unfed tokens to feed at absolute position `pos`, and the
-/// `c * gamma` uniforms driving its candidate sampling.
+/// committed-but-unfed tokens to feed at absolute position `pos`, the
+/// `c * gamma` uniforms driving its candidate sampling, and its sampling
+/// params (`temp`/`top_p` only gate the per-row `adjust_dist`, so they may
+/// vary freely across a lockstep batch).
 pub struct DraftSeq<'a, C> {
     pub cache: &'a mut C,
     pub feed: &'a [u8],
     pub pos: usize,
     pub u: &'a [f32],
+    pub temp: f32,
+    pub top_p: f32,
 }
 
 /// One sequence's slice of a lockstep verify dispatch (`toks`/`pos` follow
-/// the [`ModelBackend::verify`] convention).
+/// the [`ModelBackend::verify`] convention; `temp`/`top_p` are
+/// per-sequence, as in [`DraftSeq`]).
 pub struct VerifySeq<'a, C> {
     pub cache: &'a mut C,
     pub toks: &'a [u8],
     pub pos: usize,
+    pub temp: f32,
+    pub top_p: f32,
 }
 
 pub trait ModelBackend {
@@ -109,34 +118,28 @@ pub trait ModelBackend {
 
     /// Lockstep draft over B sequences: every sequence feeds its pending
     /// committed tokens and drafts `c` candidate blocks of `gamma` tokens
-    /// in one dispatch. `c`, `gamma`, `temp`, `top_p` are shared across the
-    /// batch (the coordinator groups requests so they match); cache, feed
-    /// span and uniforms are per-sequence. Returns one [`DraftBlock`] per
-    /// sequence, in order. Must be result-identical to looping `generate`.
+    /// in one dispatch. Only `c` and `gamma` are shared across the batch
+    /// (they fix the dispatch shapes; the coordinator groups requests so
+    /// they match); cache, feed span, uniforms and sampling params are
+    /// per-sequence. Returns one [`DraftBlock`] per sequence, in order.
+    /// Must be result-identical to looping `generate`.
     fn generate_batch(
         &self,
         seqs: &mut [DraftSeq<'_, Self::Cache>],
         c: usize,
         gamma: usize,
-        temp: f32,
-        top_p: f32,
     ) -> Result<Vec<DraftBlock>> {
         seqs.iter_mut()
-            .map(|s| self.generate(s.cache, s.feed, s.pos, c, gamma, s.u, temp, top_p))
+            .map(|s| self.generate(s.cache, s.feed, s.pos, c, gamma, s.u, s.temp, s.top_p))
             .collect()
     }
 
     /// Lockstep teacher-forced verification over B sequences; one
     /// [`VerifyBlock`] per sequence, in order. Must be result-identical to
     /// looping `verify`.
-    fn verify_batch(
-        &self,
-        seqs: &mut [VerifySeq<'_, Self::Cache>],
-        temp: f32,
-        top_p: f32,
-    ) -> Result<Vec<VerifyBlock>> {
+    fn verify_batch(&self, seqs: &mut [VerifySeq<'_, Self::Cache>]) -> Result<Vec<VerifyBlock>> {
         seqs.iter_mut()
-            .map(|s| self.verify(s.cache, s.toks, s.pos, temp, top_p))
+            .map(|s| self.verify(s.cache, s.toks, s.pos, s.temp, s.top_p))
             .collect()
     }
 

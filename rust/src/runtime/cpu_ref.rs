@@ -27,10 +27,14 @@
 //!     tails), and a `[Σ(γ+1), D]` verify — with per-row results bitwise
 //!     equal to B solo dispatches, so lockstep serving is lossless.
 //!
-//! The GEMM kernels accumulate bitwise-identically to the scalar mat-vec
-//! path, so the batched forward is *exactly* equal to the seed per-position
-//! implementation, which is preserved under [`reference`] as the
-//! equivalence oracle and bench baseline.
+//! The GEMM kernels (runtime-dispatched SIMD, see the `runtime` and
+//! [`super::simd`] module docs) accumulate bitwise-identically to the
+//! scalar mat-vec path, so the batched forward is *exactly* equal to the
+//! seed per-position implementation, which is preserved under [`reference`]
+//! as the equivalence oracle and bench baseline. The weight-tied logits
+//! head runs against a [`PackedWeights`] panel — the tied embedding
+//! transposed once at model load — so it shares the column-vectorized
+//! kernels instead of doing per-vocab-entry transposed dot products.
 //!
 //! All round-lifetime workspaces (the arena/branch tails and the
 //! teacher-forced forward buffers) are drawn from a per-model [`BufPool`]
@@ -44,8 +48,8 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use super::backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
-use super::gemm;
-use crate::params::{ModelDims, ModelParams};
+use super::{gemm, simd};
+use crate::params::{ModelDims, ModelParams, PackedWeights};
 use crate::sampling;
 use crate::util::rng::Pcg64;
 
@@ -125,6 +129,10 @@ pub struct CpuModel {
     layers: Vec<Layer>,
     lnf_g: Vec<f32>,
     lnf_b: Vec<f32>,
+    /// Tied embedding transposed once at load into a `[D, V]` panel so the
+    /// logits head runs on the column-vectorized GEMM kernel instead of
+    /// per-vocab-entry transposed dot products (see [`PackedWeights`]).
+    packed: PackedWeights,
     /// Round-workspace pool (see [`BufPool`]).
     pool: BufPool,
 }
@@ -335,14 +343,15 @@ impl<'a> BranchedCache<'a> {
     }
 }
 
+/// LayerNorm. The mean/variance reductions keep one serial accumulator in
+/// index order (vector lanes would reassociate the sums and change bits);
+/// the elementwise application runs on the SIMD lane helper.
 fn ln(x: &mut [f32], g: &[f32], b: &[f32]) {
     let d = x.len();
     let mu: f32 = x.iter().sum::<f32>() / d as f32;
     let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
     let inv = 1.0 / (var + 1e-5).sqrt();
-    for i in 0..d {
-        x[i] = (x[i] - mu) * inv * g[i] + b[i];
-    }
+    simd::ln_apply(x, g, b, mu, inv);
 }
 
 /// tanh-approximated GELU (matches jax.nn.gelu's default approximate=True).
@@ -355,7 +364,11 @@ fn gelu(x: f32) -> f32 {
 /// One query head's attention over two contiguous KV segments (committed
 /// prefix + optional branch tail), accumulated into `out` (pre-zeroed).
 /// Score order, running max, and the weighted-V accumulation all match the
-/// scalar reference path operation-for-operation.
+/// scalar reference path operation-for-operation. The QK dots and the
+/// softmax normalizer are single-accumulator reductions (and `exp` is a
+/// libm call), so they stay scalar in index order; the weighted-V inner
+/// loop has independent output slots per `dh` lane and rides
+/// [`simd::axpy`].
 #[allow(clippy::too_many_arguments)]
 fn attend_one(
     qh: &[f32],
@@ -393,17 +406,11 @@ fn attend_one(
     }
     for (s, &w) in scores.iter().take(n1).enumerate() {
         let vv = &v1[s * dh..(s + 1) * dh];
-        let wz = w / z;
-        for j in 0..dh {
-            out[j] += wz * vv[j];
-        }
+        simd::axpy(w / z, vv, out);
     }
     for (s, &w) in scores[n1..].iter().enumerate() {
         let vv = &v2[s * dh..(s + 1) * dh];
-        let wz = w / z;
-        for j in 0..dh {
-            out[j] += wz * vv[j];
-        }
+        simd::axpy(w / z, vv, out);
     }
 }
 
@@ -428,15 +435,23 @@ impl CpuModel {
                 b2: t(&p("b2"))?,
             });
         }
+        let tok_emb = t("tok_emb")?;
+        let d = mp.dims.d_model;
+        // exact-width [D, V] panel: the column-vectorized kernels handle a
+        // non-lane-multiple trailing tile themselves, so padding here would
+        // only buy wasted multiply-adds against zero columns plus a per-call
+        // truncation copy in `logits_rows`
+        let packed = PackedWeights::pack(&tok_emb[..vocab * d], vocab, d, 1);
         Ok(CpuModel {
             name: mp.name.clone(),
             dims: mp.dims.clone(),
             vocab,
-            tok_emb: t("tok_emb")?,
+            tok_emb,
             pos_emb: t("pos_emb")?,
             layers,
             lnf_g: t("lnf_g")?,
             lnf_b: t("lnf_b")?,
+            packed,
             pool: BufPool::default(),
         })
     }
@@ -466,6 +481,8 @@ impl CpuModel {
                 b2: vec![0.0; d_model],
             })
             .collect();
+        let tok_emb = w(vocab * d_model, 0.3);
+        let packed = PackedWeights::pack(&tok_emb, vocab, d_model, 1);
         CpuModel {
             name: "synthetic".into(),
             dims: ModelDims {
@@ -477,11 +494,12 @@ impl CpuModel {
                 cache_shape: [n_layer, 2, n_head, maxlen, d_model / n_head],
             },
             vocab,
-            tok_emb: w(vocab * d_model, 0.3),
+            tok_emb,
             pos_emb: w(maxlen * d_model, 0.05),
             layers,
             lnf_g: vec![1.0; d_model],
             lnf_b: vec![0.0; d_model],
+            packed,
             pool: BufPool::default(),
         }
     }
@@ -591,9 +609,7 @@ impl CpuModel {
             }
             // out projection + residual (batched)
             gemm::matmul(&att, &lay.wo, g, d, d, &mut proj);
-            for (x, p) in xs.iter_mut().zip(&proj) {
-                *x += p;
-            }
+            simd::add_assign(&mut xs, &proj);
             // MLP (batched)
             hbuf.copy_from_slice(&xs);
             for i in 0..g {
@@ -610,9 +626,7 @@ impl CpuModel {
             for i in 0..g {
                 let xrow = &mut xs[i * d..(i + 1) * d];
                 let prow = &proj[i * d..(i + 1) * d];
-                for j in 0..d {
-                    xrow[j] += prow[j] + lay.b2[j];
-                }
+                simd::add2_assign(xrow, prow, &lay.b2);
             }
         }
         // final LN
@@ -700,9 +714,7 @@ impl CpuModel {
                 }
             }
             gemm::matmul(&br.att, &lay.wo, b, d, d, &mut br.proj);
-            for (x, p) in br.xs.iter_mut().zip(&br.proj) {
-                *x += p;
-            }
+            simd::add_assign(&mut br.xs, &br.proj);
             br.hbuf.copy_from_slice(&br.xs);
             for ci in 0..b {
                 ln(&mut br.hbuf[ci * d..(ci + 1) * d], &lay.ln2_g, &lay.ln2_b);
@@ -718,9 +730,7 @@ impl CpuModel {
             for ci in 0..b {
                 let xrow = &mut br.xs[ci * d..(ci + 1) * d];
                 let prow = &br.proj[ci * d..(ci + 1) * d];
-                for j in 0..d {
-                    xrow[j] += prow[j] + lay.b2[j];
-                }
+                simd::add2_assign(xrow, prow, &lay.b2);
             }
         }
         br.hbuf.copy_from_slice(&br.xs);
@@ -852,9 +862,7 @@ impl CpuModel {
             }
             // out projection + residual (batched over the union of rows)
             gemm::matmul(&att, &lay.wo, rt, d, d, &mut proj);
-            for (x, p) in xs.iter_mut().zip(&proj) {
-                *x += p;
-            }
+            simd::add_assign(&mut xs, &proj);
             // MLP (batched)
             hbuf.copy_from_slice(&xs);
             for i in 0..rt {
@@ -871,9 +879,7 @@ impl CpuModel {
             for i in 0..rt {
                 let xrow = &mut xs[i * d..(i + 1) * d];
                 let prow = &proj[i * d..(i + 1) * d];
-                for j in 0..d {
-                    xrow[j] += prow[j] + lay.b2[j];
-                }
+                simd::add2_assign(xrow, prow, &lay.b2);
             }
         }
         // final LN
@@ -977,9 +983,7 @@ impl CpuModel {
                 }
             }
             gemm::matmul(&ar.att, &lay.wo, rows, d, d, &mut ar.proj);
-            for (x, p) in ar.xs.iter_mut().zip(&ar.proj) {
-                *x += p;
-            }
+            simd::add_assign(&mut ar.xs, &ar.proj);
             ar.hbuf.copy_from_slice(&ar.xs);
             for r in 0..rows {
                 ln(&mut ar.hbuf[r * d..(r + 1) * d], &lay.ln2_g, &lay.ln2_b);
@@ -995,9 +999,7 @@ impl CpuModel {
             for r in 0..rows {
                 let xrow = &mut ar.xs[r * d..(r + 1) * d];
                 let prow = &ar.proj[r * d..(r + 1) * d];
-                for j in 0..d {
-                    xrow[j] += prow[j] + lay.b2[j];
-                }
+                simd::add2_assign(xrow, prow, &lay.b2);
             }
         }
         ar.hbuf.copy_from_slice(&ar.xs);
@@ -1013,11 +1015,15 @@ impl CpuModel {
     }
 
     /// Batched weight-tied logits head: `rows` hidden states (flat [rows, D])
-    /// against the embedding table in one GEMM. Returns flat [rows, V].
+    /// against the prepacked `[D, V]` embedding panel in one dense GEMM
+    /// (per-element accumulation order identical to the seed `matmul_nt`
+    /// head). Returns flat [rows, V].
     fn logits_rows(&self, h: &[f32], rows: usize) -> Vec<f32> {
         let d = self.dims.d_model;
-        let mut out = vec![0.0f32; rows * self.vocab];
-        gemm::matmul_nt(h, &self.tok_emb[..self.vocab * d], rows, d, self.vocab, &mut out);
+        let v = self.vocab;
+        debug_assert_eq!(self.packed.v_pad, v, "head panel is packed at exact vocab width");
+        let mut out = vec![0.0f32; rows * v];
+        gemm::matmul_dense(h, &self.packed.emb_t, rows, d, v, &mut out);
         out
     }
 
@@ -1135,14 +1141,13 @@ impl ModelBackend for CpuModel {
     /// Lockstep draft over B sequences: one ragged `[ΣG_b, D]` feed
     /// dispatch, then γ−1 arena steps of `[B·c, D]` rows. Row-independent
     /// kernels make every sequence's block bitwise-equal to a solo
-    /// `generate` call on the same cache.
+    /// `generate` call on the same cache. `temp`/`top_p` are per-sequence:
+    /// they only gate each row's `adjust_dist`, never a shared dispatch.
     fn generate_batch(
         &self,
         seqs: &mut [DraftSeq<'_, CpuCache>],
         c: usize,
         gamma: usize,
-        temp: f32,
-        top_p: f32,
     ) -> Result<Vec<DraftBlock>> {
         if seqs.is_empty() {
             return Ok(Vec::new());
@@ -1151,12 +1156,15 @@ impl ModelBackend for CpuModel {
         let v = self.vocab;
         let bn = seqs.len();
         // split per-sequence pieces out of the DraftSeq views: the cache
-        // reborrows feed the ragged forward, the uniforms drive sampling
+        // reborrows feed the ragged forward, the uniforms and sampling
+        // params drive each sequence's own adjust/sample steps
         let mut us: Vec<&[f32]> = Vec::with_capacity(bn);
+        let mut sp: Vec<(f32, f32)> = Vec::with_capacity(bn);
         let mut items: Vec<(&mut CpuCache, &[u8], usize)> = Vec::with_capacity(bn);
         for s in seqs.iter_mut() {
             debug_assert_eq!(s.u.len(), c * gamma);
             us.push(s.u);
+            sp.push((s.temp, s.top_p));
             items.push((&mut *s.cache, s.feed, s.pos));
         }
         // feed phase always runs (trait contract: post-feed committed state)
@@ -1192,7 +1200,8 @@ impl ModelBackend for CpuModel {
         // step 0: a sequence's candidates all sample from its post-feed dist
         let mut cur = vec![0u8; bn * c];
         for b in 0..bn {
-            let dist0 = sampling::adjust_dist(&last_logits[b * v..(b + 1) * v], temp, top_p);
+            let dist0 =
+                sampling::adjust_dist(&last_logits[b * v..(b + 1) * v], sp[b].0, sp[b].1);
             for ci in 0..c {
                 let tok = sampling::sample(&dist0, us[b][ci * gamma]) as u8;
                 tokens[b][ci][0] = tok;
@@ -1214,8 +1223,11 @@ impl ModelBackend for CpuModel {
                 for b in 0..bn {
                     for ci in 0..c {
                         let row = b * c + ci;
-                        let dist =
-                            sampling::adjust_dist(&logits[row * v..(row + 1) * v], temp, top_p);
+                        let dist = sampling::adjust_dist(
+                            &logits[row * v..(row + 1) * v],
+                            sp[b].0,
+                            sp[b].1,
+                        );
                         let tok = sampling::sample(&dist, us[b][ci * gamma + gi]) as u8;
                         tokens[b][ci][gi] = tok;
                         cur[row] = tok;
@@ -1233,30 +1245,28 @@ impl ModelBackend for CpuModel {
     }
 
     /// Lockstep verification: the union of all sequences' teacher-forced
-    /// rows through one ragged forward and one logits GEMM.
-    fn verify_batch(
-        &self,
-        seqs: &mut [VerifySeq<'_, CpuCache>],
-        temp: f32,
-        top_p: f32,
-    ) -> Result<Vec<VerifyBlock>> {
+    /// rows through one ragged forward and one logits GEMM. `temp`/`top_p`
+    /// adjust each sequence's own rows.
+    fn verify_batch(&self, seqs: &mut [VerifySeq<'_, CpuCache>]) -> Result<Vec<VerifyBlock>> {
         if seqs.is_empty() {
             return Ok(Vec::new());
         }
         let v = self.vocab;
-        let mut items: Vec<(&mut CpuCache, &[u8], usize)> = seqs
-            .iter_mut()
-            .map(|s| (&mut *s.cache, s.toks, s.pos))
-            .collect();
+        let mut sp: Vec<(f32, f32)> = Vec::with_capacity(seqs.len());
+        let mut items: Vec<(&mut CpuCache, &[u8], usize)> = Vec::with_capacity(seqs.len());
+        for s in seqs.iter_mut() {
+            sp.push((s.temp, s.top_p));
+            items.push((&mut *s.cache, s.toks, s.pos));
+        }
         let hidden = self.forward_ragged(&mut items);
         let lens: Vec<usize> = items.iter().map(|it| it.1.len()).collect();
         let rt: usize = lens.iter().sum();
         let flat = self.logits_rows(&hidden, rt);
         let mut out = Vec::with_capacity(lens.len());
         let mut r = 0usize;
-        for g in lens {
+        for (b, g) in lens.into_iter().enumerate() {
             let dists = (r..r + g)
-                .map(|i| sampling::adjust_dist(&flat[i * v..(i + 1) * v], temp, top_p))
+                .map(|i| sampling::adjust_dist(&flat[i * v..(i + 1) * v], sp[b].0, sp[b].1))
                 .collect();
             r += g;
             out.push(VerifyBlock { dists });
@@ -1309,6 +1319,19 @@ impl ModelBackend for CpuModel {
 pub mod reference {
     use super::*;
 
+    /// Seed scalar LayerNorm, kept independent of [`super::simd`] so the
+    /// oracle cannot inherit a bug from the vectorized helpers it exists
+    /// to check (the hot path's `ln` shares `simd::ln_apply`).
+    fn ln_scalar(x: &mut [f32], g: &[f32], b: &[f32]) {
+        let d = x.len();
+        let mu: f32 = x.iter().sum::<f32>() / d as f32;
+        let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..d {
+            x[i] = (x[i] - mu) * inv * g[i] + b[i];
+        }
+    }
+
     /// y[j] += Σ_i x[i] * w[i*cols + j]  (row-major [rows, cols])
     fn matvec_acc(x: &[f32], w: &[f32], y: &mut [f32]) {
         let cols = y.len();
@@ -1353,7 +1376,7 @@ pub mod reference {
             let mut qs: Vec<Vec<f32>> = Vec::with_capacity(g);
             for (i, x) in xs.iter().enumerate() {
                 let mut h = x.clone();
-                ln(&mut h, &lay.ln1_g, &lay.ln1_b);
+                ln_scalar(&mut h, &lay.ln1_g, &lay.ln1_b);
                 let q = matvec(&h, &lay.wq, d);
                 let k = matvec(&h, &lay.wk, d);
                 let v = matvec(&h, &lay.wv, d);
@@ -1400,7 +1423,7 @@ pub mod reference {
                     x[j] += proj[j];
                 }
                 let mut h = x.clone();
-                ln(&mut h, &lay.ln2_g, &lay.ln2_b);
+                ln_scalar(&mut h, &lay.ln2_g, &lay.ln2_b);
                 let mut ff = matvec(&h, &lay.w1, m.dims.d_ff);
                 for (j, f) in ff.iter_mut().enumerate() {
                     *f = gelu(*f + lay.b1[j]);
@@ -1413,7 +1436,7 @@ pub mod reference {
             }
         }
         for x in xs.iter_mut() {
-            ln(x, &m.lnf_g, &m.lnf_b);
+            ln_scalar(x, &m.lnf_g, &m.lnf_b);
         }
         xs
     }
@@ -1637,9 +1660,9 @@ mod tests {
         for ((cache, ctx), (feed, u)) in
             caches.iter_mut().zip(&ctxs).zip(feeds.iter().zip(&us))
         {
-            seqs.push(DraftSeq { cache, feed, pos: ctx.len() - 1, u });
+            seqs.push(DraftSeq { cache, feed, pos: ctx.len() - 1, u, temp: 0.9, top_p: 0.95 });
         }
-        let blocks = m.generate_batch(&mut seqs, c, gamma, 0.9, 0.95).unwrap();
+        let blocks = m.generate_batch(&mut seqs, c, gamma).unwrap();
 
         assert_eq!(blocks.len(), solo.len());
         for (b, (got, want)) in blocks.iter().zip(&solo).enumerate() {
@@ -1670,9 +1693,9 @@ mod tests {
         let mut caches: Vec<CpuCache> = ctxs.iter().map(|ctx| m.prefill(ctx).unwrap()).collect();
         let mut seqs: Vec<VerifySeq<'_, CpuCache>> = Vec::new();
         for ((cache, ctx), vtoks) in caches.iter_mut().zip(&ctxs).zip(&vtokss) {
-            seqs.push(VerifySeq { cache, toks: vtoks, pos: ctx.len() - 1 });
+            seqs.push(VerifySeq { cache, toks: vtoks, pos: ctx.len() - 1, temp: 1.0, top_p: 0.95 });
         }
-        let got = m.verify_batch(&mut seqs, 1.0, 0.95).unwrap();
+        let got = m.verify_batch(&mut seqs).unwrap();
 
         for (b, (g, w)) in got.iter().zip(&solo).enumerate() {
             assert_eq!(g.dists.len(), w.dists.len());

@@ -1,35 +1,59 @@
-//! Blocked GEMM micro-kernels for the pure-Rust runtime.
+//! Blocked, SIMD-dispatched GEMM kernels for the pure-Rust runtime.
 //!
 //! The batched draft/verify paths funnel every projection (`[B,D]×[D,N]`,
-//! weights row-major `[in, out]`) and the weight-tied logits head
-//! (`[B,D]×[V,D]ᵀ`) through these two kernels, so all `c` candidate rows —
-//! or all `G` teacher-forced feed positions — share one streaming pass over
-//! each weight matrix instead of `B` scalar mat-vecs.
+//! weights row-major `[in, out]`) and — via the prepacked `[D, V]` head
+//! panel ([`crate::params::PackedWeights`]) — the weight-tied logits head
+//! through [`matmul`]/[`matmul_dense`], so all `c` candidate rows — or all
+//! `G` teacher-forced feed positions — share one streaming pass over each
+//! weight matrix instead of `B` scalar mat-vecs.
 //!
-//! Two properties the rest of the runtime relies on:
+//! # Kernel tiers
+//!
+//! Both entry points dispatch once per process ([`super::simd::active`]):
+//! an explicit AVX2 arm (register-tiled 4-row × 16-column micro-kernel,
+//! separate mul + add — never FMA) when the CPU supports it, and a portable
+//! chunked-lane arm that is the same code path on every architecture.
+//! `SPECMER_FORCE_PORTABLE` pins the portable arm for CI. The seed scalar
+//! kernels are kept verbatim ([`matmul_scalar`], [`matmul_dense_scalar`],
+//! [`matmul_nt`]) as the equivalence oracle and bench baseline.
+//!
+//! # Properties the rest of the runtime relies on
 //!
 //!   * **Bitwise-stable accumulation.** Each output element accumulates
 //!     over the shared `k` dimension strictly in index order with a single
 //!     accumulator, exactly like the seed scalar mat-vec (including its
-//!     skip of zero inputs). Column tiling and row partitioning only
-//!     reorder *independent* accumulators, so results are bit-identical to
-//!     the per-position reference path — `tests/cpu_batched_equivalence.rs`
-//!     asserts this.
+//!     skip of zero inputs; the `_dense` variants match the seed logits
+//!     head, which has no skip). Vector lanes run across *independent
+//!     output columns* and every multiply-accumulate is a separate IEEE
+//!     mul then add, so all tiers — and row partitioning across threads —
+//!     are bit-identical to the per-position reference path.
+//!     `tests/cpu_batched_equivalence.rs` and `tests/kernel_equivalence.rs`
+//!     assert this.
 //!   * **Bounded threading.** Row-parallelism (via
-//!     [`crate::util::threadpool::parallel_chunks_mut`]) only kicks in past
-//!     a FLOP threshold, so tiny test models never pay thread overhead.
+//!     [`crate::util::threadpool::parallel_chunks_mut`], running on the
+//!     persistent [`crate::util::threadpool::compute_pool`] rather than
+//!     per-call thread spawns) only kicks in past a FLOP threshold, so tiny
+//!     test models never pay threading overhead. The thread budget is
+//!     resolved once per process (`SPECMER_THREADS` overrides it).
 
-use crate::util::threadpool::parallel_chunks_mut;
+use super::simd::{self, Kernel};
+use crate::util::threadpool::{compute_threads, parallel_chunks_mut};
 
-/// Column-tile width in f32 lanes (1 KiB per accumulator row): the `B`
-/// panel of one tile stays cache-resident while every row reuses it.
-const COL_BLOCK: usize = 256;
-
-/// 2·m·k·n below this runs single-threaded (thread spawn ≫ work).
+/// 2·m·k·n below this runs single-threaded (pool handoff ≫ work).
 const PAR_FLOPS: usize = 1 << 22;
 
-/// `out[m,n] = a[m,k] × b[k,n]`, `b` row-major `[k,n]` (projection weights).
-/// Overwrites `out`. Rows are partitioned across threads for large shapes.
+/// Threads worth engaging for an `m × k × n` product.
+fn plan_threads(m: usize, k: usize, n: usize) -> usize {
+    if 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n) < PAR_FLOPS {
+        1
+    } else {
+        compute_threads().min(m)
+    }
+}
+
+/// `out[m,n] = a[m,k] × b[k,n]`, `b` row-major `[k,n]` (projection weights),
+/// with the seed mat-vec's skip of exactly-zero inputs. Overwrites `out`.
+/// Rows are partitioned across the persistent compute pool for large shapes.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -37,53 +61,171 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     if m == 0 || n == 0 {
         return;
     }
-    let threads = if 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n) < PAR_FLOPS {
-        1
-    } else {
-        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(m)
-    };
+    let threads = plan_threads(m, k, n);
     if threads <= 1 {
-        matmul_rows(a, b, k, n, out);
+        rows_dispatch(simd::active(), a, b, k, n, out, true);
         return;
     }
     let rows_per = (m + threads - 1) / threads;
     parallel_chunks_mut(out, rows_per * n, |ci, chunk| {
         let r0 = ci * rows_per;
         let rows = chunk.len() / n;
-        matmul_rows(&a[r0 * k..(r0 + rows) * k], b, k, n, chunk);
+        rows_dispatch(simd::active(), &a[r0 * k..(r0 + rows) * k], b, k, n, chunk, true);
     });
 }
 
-/// Serial row-block kernel, column-tiled so the weight panel streams
-/// through cache once while every row of `a` reuses it.
-fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
-    let rows = out.len() / n;
-    let mut jb = 0;
-    while jb < n {
-        let je = (jb + COL_BLOCK).min(n);
-        for r in 0..rows {
-            out[r * n + jb..r * n + je].fill(0.0);
-        }
-        for i in 0..k {
-            let brow = &b[i * n + jb..i * n + je];
-            for r in 0..rows {
-                let x = a[r * k + i];
-                if x == 0.0 {
-                    continue; // mirror the scalar mat-vec's sparse-input skip
-                }
-                let orow = &mut out[r * n + jb..r * n + je];
-                for (o, &w) in orow.iter_mut().zip(brow) {
-                    *o += x * w;
-                }
-            }
-        }
-        jb = je;
+/// [`matmul`] without the zero-input skip: accumulation per element matches
+/// the seed weight-tied logits head (a plain dot product over `k`). Used
+/// with the prepacked `[D, V]` embedding panel.
+pub fn matmul_dense(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        rows_dispatch(simd::active(), a, b, k, n, out, false);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    parallel_chunks_mut(out, rows_per * n, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let rows = chunk.len() / n;
+        rows_dispatch(simd::active(), &a[r0 * k..(r0 + rows) * k], b, k, n, chunk, false);
+    });
+}
+
+/// Single-threaded [`matmul`] on the active kernel arm (benches).
+pub fn matmul_st(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_st_with(simd::active(), a, b, m, k, n, out)
+}
+
+/// Single-threaded [`matmul`] on an explicit kernel arm (tests compare the
+/// arms bitwise; an AVX2 request on a machine without it runs portable).
+pub fn matmul_st_with(
+    kernel: Kernel,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    rows_dispatch(kernel, a, b, k, n, out, true);
+}
+
+/// Single-threaded [`matmul_dense`] on the active kernel arm (benches).
+pub fn matmul_dense_st(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_dense_st_with(simd::active(), a, b, m, k, n, out)
+}
+
+/// Single-threaded [`matmul_dense`] on an explicit kernel arm.
+pub fn matmul_dense_st_with(
+    kernel: Kernel,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    rows_dispatch(kernel, a, b, k, n, out, false);
+}
+
+/// Row-block kernel dispatch (see module docs for the tier map).
+fn rows_dispatch(
+    kernel: Kernel,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+) {
+    match kernel {
+        Kernel::Avx2 => rows_avx2(a, b, k, n, out, skip),
+        Kernel::Portable => portable::matmul_rows(a, b, k, n, out, skip),
     }
 }
 
-/// `out[m,n] = a[m,k] × b[n,k]ᵀ` — the weight-tied logits head (`b` is the
-/// token-embedding table, row-major `[vocab, d]`). Contiguous row-row dot
-/// products; `k` accumulates in order (bit-equal to the scalar head).
+#[cfg(target_arch = "x86_64")]
+fn rows_avx2(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32], skip: bool) {
+    if simd::has_avx2() {
+        // SAFETY: AVX2 support was just confirmed at runtime.
+        unsafe { avx2::matmul_rows(a, b, k, n, out, skip) }
+    } else {
+        portable::matmul_rows(a, b, k, n, out, skip)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn rows_avx2(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32], skip: bool) {
+    portable::matmul_rows(a, b, k, n, out, skip)
+}
+
+/// The seed scalar mat-vec, kept verbatim (per-row streaming passes with
+/// the zero-input skip): equivalence oracle and bench baseline for the
+/// vectorized arms. Single-threaded by design.
+pub fn matmul_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.fill(0.0);
+        for (i, &x) in arow.iter().enumerate() {
+            if x == 0.0 {
+                continue; // the seed mat-vec's sparse-input skip
+            }
+            let brow = &b[i * n..(i + 1) * n];
+            for (o, &w) in orow.iter_mut().zip(brow) {
+                *o += x * w;
+            }
+        }
+    }
+}
+
+/// [`matmul_scalar`] without the zero-input skip: the seed logits head's
+/// accumulation order on a pre-transposed panel. Oracle for the `_dense`
+/// vectorized arms.
+pub fn matmul_dense_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.fill(0.0);
+        for (i, &x) in arow.iter().enumerate() {
+            let brow = &b[i * n..(i + 1) * n];
+            for (o, &w) in orow.iter_mut().zip(brow) {
+                *o += x * w;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] × b[n,k]ᵀ` — the seed weight-tied logits head (`b` is
+/// the token-embedding table, row-major `[vocab, d]`). Contiguous row-row
+/// dot products; `k` accumulates in order. **No longer on the hot path**:
+/// the runtime prepacks the embedding into `[D, V]` at model load and runs
+/// the head through [`matmul_dense`], which accumulates in the identical
+/// per-element order. Kept as the oracle and bench baseline for that claim.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -101,9 +243,203 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [
     }
 }
 
+/// Portable chunked-lane arm: the same code path on every architecture.
+/// Column tiles of [`simd::LANES`] accumulators stay in registers across
+/// the whole `k` loop (the seed kernel re-loaded and re-stored the output
+/// tile on every `k` step), with `k` strictly in index order per element.
+mod portable {
+    use crate::runtime::simd::LANES;
+
+    pub fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32], skip: bool) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            let mut jb = 0usize;
+            while jb + LANES <= n {
+                let mut acc = [0.0f32; LANES];
+                for (i, &x) in arow.iter().enumerate() {
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let btile = &b[i * n + jb..i * n + jb + LANES];
+                    for (l, acc_l) in acc.iter_mut().enumerate() {
+                        *acc_l += x * btile[l];
+                    }
+                }
+                orow[jb..jb + LANES].copy_from_slice(&acc);
+                jb += LANES;
+            }
+            if jb < n {
+                tail_cols(arow, b, n, jb, &mut orow[jb..], skip);
+            }
+        }
+    }
+
+    /// Scalar tail for the `n % LANES` trailing columns (same `i` order).
+    pub fn tail_cols(arow: &[f32], b: &[f32], n: usize, jb: usize, out: &mut [f32], skip: bool) {
+        out.fill(0.0);
+        for (i, &x) in arow.iter().enumerate() {
+            if skip && x == 0.0 {
+                continue;
+            }
+            let btile = &b[i * n + jb..i * n + n];
+            for (o, &w) in out.iter_mut().zip(btile) {
+                *o += x * w;
+            }
+        }
+    }
+}
+
+/// AVX2 arm: register-tiled micro-kernel, 4 rows × 16 columns of
+/// accumulators held in ymm registers across the whole `k` loop. Every
+/// accumulate is `_mm256_add_ps(acc, _mm256_mul_ps(x, b))` — separate mul
+/// and add, never `fmadd`, because fusing rounds once where the seed scalar
+/// path rounds twice and would break bitwise equivalence.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_rows(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        skip: bool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            row_block4(&a[r * k..(r + 4) * k], b, k, n, &mut out[r * n..(r + 4) * n], skip);
+            r += 4;
+        }
+        while r < rows {
+            row_block1(&a[r * k..(r + 1) * k], b, k, n, &mut out[r * n..(r + 1) * n], skip);
+            r += 1;
+        }
+    }
+
+    /// 4 rows × 16 columns per tile: 8 ymm accumulators, each weight tile
+    /// loaded once and reused by all four rows.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_block4(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32], skip: bool) {
+        let mut jb = 0usize;
+        while jb + 16 <= n {
+            let mut acc = [_mm256_setzero_ps(); 8];
+            for i in 0..k {
+                // in-bounds: jb + 16 <= n, so i*n + jb + 16 <= (i+1)*n <= k*n
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
+                for rr in 0..4 {
+                    let x = *a.get_unchecked(rr * k + i);
+                    if skip && x == 0.0 {
+                        continue; // per-(row, i) skip, same as the seed path
+                    }
+                    let xv = _mm256_set1_ps(x);
+                    acc[rr * 2] = _mm256_add_ps(acc[rr * 2], _mm256_mul_ps(xv, b0));
+                    acc[rr * 2 + 1] = _mm256_add_ps(acc[rr * 2 + 1], _mm256_mul_ps(xv, b1));
+                }
+            }
+            for rr in 0..4 {
+                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), acc[rr * 2]);
+                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb + 8), acc[rr * 2 + 1]);
+            }
+            jb += 16;
+        }
+        while jb + 8 <= n {
+            let mut acc = [_mm256_setzero_ps(); 4];
+            for i in 0..k {
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                for (rr, acc_r) in acc.iter_mut().enumerate() {
+                    let x = *a.get_unchecked(rr * k + i);
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    *acc_r = _mm256_add_ps(*acc_r, _mm256_mul_ps(_mm256_set1_ps(x), b0));
+                }
+            }
+            for (rr, acc_r) in acc.iter().enumerate() {
+                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), *acc_r);
+            }
+            jb += 8;
+        }
+        if jb < n {
+            for rr in 0..4 {
+                super::portable::tail_cols(
+                    &a[rr * k..(rr + 1) * k],
+                    b,
+                    n,
+                    jb,
+                    &mut out[rr * n + jb..rr * n + n],
+                    skip,
+                );
+            }
+        }
+    }
+
+    /// Single-row kernel for the `rows % 4` remainder.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_block1(
+        arow: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        skip: bool,
+    ) {
+        let mut jb = 0usize;
+        while jb + 16 <= n {
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for i in 0..k {
+                let x = *arow.get_unchecked(i);
+                if skip && x == 0.0 {
+                    continue;
+                }
+                let xv = _mm256_set1_ps(x);
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
+                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, b0));
+                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, b1));
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(jb + 8), acc1);
+            jb += 16;
+        }
+        while jb + 8 <= n {
+            let mut acc = _mm256_setzero_ps();
+            for i in 0..k {
+                let x = *arow.get_unchecked(i);
+                if skip && x == 0.0 {
+                    continue;
+                }
+                let xv = _mm256_set1_ps(x);
+                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, b0));
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc);
+            jb += 8;
+        }
+        if jb < n {
+            super::portable::tail_cols(arow, b, n, jb, &mut out[jb..], skip);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
     use crate::util::rng::Pcg64;
 
     fn randv(n: usize, rng: &mut Pcg64) -> Vec<f32> {
@@ -125,6 +461,10 @@ mod tests {
         out
     }
 
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     #[test]
     fn matches_naive_bitwise_across_shapes() {
         let mut rng = Pcg64::new(11);
@@ -134,10 +474,7 @@ mod tests {
             let mut out = vec![0.0f32; m * n];
             matmul(&a, &b, m, k, n, &mut out);
             let want = naive(&a, &b, m, k, n);
-            assert!(
-                out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "({m},{k},{n}) not bitwise equal"
-            );
+            assert!(bits_eq(&out, &want), "({m},{k},{n}) not bitwise equal");
         }
     }
 
@@ -151,7 +488,7 @@ mod tests {
         let mut out = vec![0.0f32; m * n];
         matmul(&a, &b, m, k, n, &mut out);
         let want = naive(&a, &b, m, k, n);
-        assert!(out.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(bits_eq(&out, &want));
     }
 
     #[test]
@@ -184,5 +521,66 @@ mod tests {
         // [2,2] x [2,2]: zero inputs exercise the skip branch
         matmul(&a, &b, 2, 2, 2, &mut o);
         assert_eq!(o, vec![3.0, 4.0, 6.0, 8.0]);
+    }
+
+    /// The tentpole invariant at kernel level: the AVX2 arm, the portable
+    /// arm, and the seed scalar kernel are bitwise-identical across
+    /// randomized shapes — including non-multiple-of-lane widths, the
+    /// 4-row block boundary, and exact-zero inputs (the skip edge).
+    #[test]
+    fn dispatch_arms_bitwise_equal_proptest() {
+        check("matmul arms bitwise equal", 80, |g| {
+            let m = g.usize_in(1..10);
+            let k = g.usize_in(1..40);
+            let n = g.usize_in(1..70);
+            // ~30% exact zeros exercise the skip edge on every arm
+            let a: Vec<f32> = (0..m * k)
+                .map(|_| {
+                    if g.f64_in(0.0..1.0) < 0.3 {
+                        0.0
+                    } else {
+                        g.f64_in(-2.0..2.0) as f32
+                    }
+                })
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+
+            let mut scalar = vec![0.0f32; m * n];
+            matmul_scalar(&a, &b, m, k, n, &mut scalar);
+            for kernel in [Kernel::Avx2, Kernel::Portable] {
+                let mut got = vec![0.0f32; m * n];
+                matmul_st_with(kernel, &a, &b, m, k, n, &mut got);
+                assert!(bits_eq(&got, &scalar), "{kernel:?} skip ({m},{k},{n})");
+            }
+
+            let mut scalar_d = vec![0.0f32; m * n];
+            matmul_dense_scalar(&a, &b, m, k, n, &mut scalar_d);
+            for kernel in [Kernel::Avx2, Kernel::Portable] {
+                let mut got = vec![0.0f32; m * n];
+                matmul_dense_st_with(kernel, &a, &b, m, k, n, &mut got);
+                assert!(bits_eq(&got, &scalar_d), "{kernel:?} dense ({m},{k},{n})");
+            }
+        });
+    }
+
+    /// Row partitioning across the persistent pool must not change bits
+    /// (chunks are whole rows; each element keeps its serial accumulator).
+    #[test]
+    fn parallel_rows_bitwise_equal_single_thread() {
+        // 2*16*256*520 > PAR_FLOPS: the pool path engages (given >1 thread)
+        let (m, k, n) = (16, 256, 520);
+        let mut rng = Pcg64::new(29);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut par = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut par);
+        let mut st = vec![0.0f32; m * n];
+        matmul_st(&a, &b, m, k, n, &mut st);
+        assert!(bits_eq(&par, &st), "row partitioning changed bits");
+        let mut par_d = vec![0.0f32; m * n];
+        matmul_dense(&a, &b, m, k, n, &mut par_d);
+        let mut st_d = vec![0.0f32; m * n];
+        matmul_dense_st(&a, &b, m, k, n, &mut st_d);
+        assert!(bits_eq(&par_d, &st_d), "dense row partitioning changed bits");
     }
 }

@@ -28,22 +28,43 @@
 //! exactly the frontier convention it expects, and no KV bytes are copied
 //! to branch.
 //!
-//! ## Batched forward
+//! ## Batched forward and the SIMD compute tiers
 //!
 //! All `c` candidate rows of a draft step — and all `G` positions of a
 //! teacher-forced block — go through each projection, the MLP and the
-//! weight-tied logits head as single `[B,D]×[D,N]` calls into [`gemm`],
-//! which tiles columns, streams each weight panel once for all rows, and
-//! row-parallelizes large shapes via `util::threadpool`. The kernels keep
-//! per-element accumulation in index order, so batched results are bitwise
-//! identical to the seed scalar path (kept as `cpu_ref::reference`;
-//! `tests/cpu_batched_equivalence.rs` enforces the equivalence).
+//! weight-tied logits head as single `[B,D]×[D,N]` calls into [`gemm`].
+//! The kernels are **runtime-dispatched SIMD** (see [`simd`]): an explicit
+//! AVX2 arm (register-tiled micro-kernel) on machines that support it, and
+//! a portable chunked-lane arm that is the same code path on every other
+//! architecture (`SPECMER_FORCE_PORTABLE` pins it for CI). Large shapes
+//! row-parallelize over the persistent `util::threadpool::compute_pool`
+//! instead of spawning threads per call.
+//!
+//! **Prepacked weights:** the weight-tied logits head used to run a
+//! per-vocab-entry transposed dot product (`gemm::matmul_nt`) that no
+//! column-vectorized kernel could serve. `CpuModel` now transposes the
+//! tied embedding once at model load into an exact-width `[D, V]` panel
+//! (`params::PackedWeights`; the kernels' scalar column tails handle a
+//! non-lane-multiple vocab), so the head is a plain `gemm::matmul_dense`
+//! call sharing the projection kernels.
+//!
+//! **Why this stays bitwise-stable:** lanes run across *independent output
+//! columns* while each output element accumulates over the shared `k`
+//! dimension strictly in index order with a single accumulator, and every
+//! multiply-accumulate is a separate IEEE mul then add (never FMA). So
+//! vectorization only reorders work across elements, never within one —
+//! batched results are bitwise identical to the seed scalar path (kept as
+//! `cpu_ref::reference`; `tests/cpu_batched_equivalence.rs` and
+//! `tests/kernel_equivalence.rs` enforce the equivalence). Reductions with
+//! one serial accumulator (LN statistics, attention QK dots, softmax
+//! normalizers) and transcendentals (`tanh`, `exp`) stay scalar for the
+//! same reason — see the [`simd`] module docs.
 //!
 //! ## Cross-sequence lockstep (`generate_batch` / `verify_batch`)
 //!
 //! The serving path extends the same row-union idea across *requests*: B
 //! sequences of one family run each decode round together. Per-sequence
-//! state (cache slot, feed span, uniforms) is carried by
+//! state (cache slot, feed span, uniforms, `temp`/`top_p`) is carried by
 //! [`backend::DraftSeq`]/[`backend::VerifySeq`] views; `cpu_ref` executes
 //! the round as a ragged `[ΣG_b, D]` feed, γ−1 `[B·c, D]` arena steps over
 //! a sequence-slot cache arena, and a ragged verify. Because every kernel
@@ -59,6 +80,7 @@ pub mod cpu_ref;
 pub mod gemm;
 pub mod hlo;
 pub mod prefill_cache;
+pub mod simd;
 
 pub use backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
 pub use client::Runtime;

@@ -96,19 +96,12 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
         seqs: &mut [DraftSeq<'_, Self::Cache>],
         c: usize,
         gamma: usize,
-        temp: f32,
-        top_p: f32,
     ) -> Result<Vec<DraftBlock>> {
-        self.inner.generate_batch(seqs, c, gamma, temp, top_p)
+        self.inner.generate_batch(seqs, c, gamma)
     }
 
-    fn verify_batch(
-        &self,
-        seqs: &mut [VerifySeq<'_, Self::Cache>],
-        temp: f32,
-        top_p: f32,
-    ) -> Result<Vec<VerifyBlock>> {
-        self.inner.verify_batch(seqs, temp, top_p)
+    fn verify_batch(&self, seqs: &mut [VerifySeq<'_, Self::Cache>]) -> Result<Vec<VerifyBlock>> {
+        self.inner.verify_batch(seqs)
     }
 
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {

@@ -1,0 +1,357 @@
+//! SIMD dispatch tiers and elementwise lane helpers for the CPU runtime.
+//!
+//! # Dispatch tiers
+//!
+//! Every vectorized kernel in the runtime ([`super::gemm`] and the helpers
+//! below) has two arms, selected **once per process** by [`active`]:
+//!
+//!   * [`Kernel::Avx2`] — explicit AVX2 via `std::arch`, taken when
+//!     `is_x86_feature_detected!("avx2")` reports support;
+//!   * [`Kernel::Portable`] — plain chunked-lane Rust, the same code path
+//!     on every architecture (and the only one off x86-64). The
+//!     `SPECMER_FORCE_PORTABLE` env var pins this arm on any machine so CI
+//!     can keep both arms green.
+//!
+//! # The bitwise-stability argument
+//!
+//! The runtime's equivalence suites pin batched results to the seed scalar
+//! implementation bit for bit, so vectorization may only reorder work
+//! across **independent output elements**, never within one element's
+//! accumulation:
+//!
+//!   * lanes run across independent outputs (GEMM output columns,
+//!     elementwise slots), each lane performing the exact per-element
+//!     operation chain of the scalar code;
+//!   * every multiply-accumulate is a **separate mul then add** — never a
+//!     fused multiply-add, which rounds once instead of twice and would
+//!     change bits vs the seed path;
+//!   * reductions with a single serial accumulator (LN mean/variance,
+//!     attention QK dots, softmax normalizers) stay scalar in strict index
+//!     order — splitting them across lanes would reassociate the sum;
+//!   * transcendentals (GELU's `tanh`, softmax's `exp`) stay scalar libm
+//!     calls — a vector polynomial approximation would change bits.
+//!
+//! IEEE-754 single ops (`mul`, `add`, `sub`) are exactly rounded and
+//! lane-wise identical to their scalar counterparts, so both arms produce
+//! bit-identical results — pinned by proptests in this module, in
+//! [`super::gemm`], and in `tests/kernel_equivalence.rs`.
+
+use std::sync::OnceLock;
+
+/// f32 lanes per vector step (one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Which kernel arm the runtime dispatches to (see module docs).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kernel {
+    Avx2,
+    Portable,
+}
+
+impl Kernel {
+    /// Stable name for logs / bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Avx2 => "avx2",
+            Kernel::Portable => "portable",
+        }
+    }
+}
+
+/// Whether this machine can execute the AVX2 arm.
+#[cfg(target_arch = "x86_64")]
+pub fn has_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether this machine can execute the AVX2 arm.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn has_avx2() -> bool {
+    false
+}
+
+/// The process-wide kernel arm, resolved once: `SPECMER_FORCE_PORTABLE`
+/// (non-empty, not "0") pins the portable arm; otherwise AVX2 when
+/// detected, portable everywhere else.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced = std::env::var("SPECMER_FORCE_PORTABLE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if !forced && has_avx2() {
+            Kernel::Avx2
+        } else {
+            Kernel::Portable
+        }
+    })
+}
+
+/// Clamp a requested arm to what this machine can execute (callers may ask
+/// for [`Kernel::Avx2`] unconditionally, e.g. tests comparing both arms).
+fn executable(kernel: Kernel) -> Kernel {
+    match kernel {
+        Kernel::Avx2 if !has_avx2() => Kernel::Portable,
+        k => k,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// out[j] += s[j]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(out: &mut [f32], s: &[f32]) {
+        let n = out.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(j));
+            let x = _mm256_loadu_ps(s.as_ptr().add(j));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, x));
+            j += 8;
+        }
+        while j < n {
+            out[j] += s[j];
+            j += 1;
+        }
+    }
+
+    /// x[j] += p[j] + b[j]  (inner add first, exactly like the scalar code)
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add2_assign(x: &mut [f32], p: &[f32], b: &[f32]) {
+        let n = x.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            let pv = _mm256_loadu_ps(p.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            _mm256_storeu_ps(
+                x.as_mut_ptr().add(j),
+                _mm256_add_ps(xv, _mm256_add_ps(pv, bv)),
+            );
+            j += 8;
+        }
+        while j < n {
+            x[j] += p[j] + b[j];
+            j += 1;
+        }
+    }
+
+    /// x[j] = (x[j] - mu) * inv * g[j] + b[j]
+    /// (mul, mul, add — no FMA, same chain as the scalar LN application)
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ln_apply(x: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+        let n = x.len();
+        let muv = _mm256_set1_ps(mu);
+        let invv = _mm256_set1_ps(inv);
+        let mut j = 0;
+        while j + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            let gv = _mm256_loadu_ps(g.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            let t = _mm256_mul_ps(_mm256_mul_ps(_mm256_sub_ps(xv, muv), invv), gv);
+            _mm256_storeu_ps(x.as_mut_ptr().add(j), _mm256_add_ps(t, bv));
+            j += 8;
+        }
+        while j < n {
+            x[j] = (x[j] - mu) * inv * g[j] + b[j];
+            j += 1;
+        }
+    }
+
+    /// out[j] += w * v[j]  (attention weighted-V accumulation; mul then add)
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(w: f32, v: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let wv = _mm256_set1_ps(w);
+        let mut j = 0;
+        while j + 8 <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(j));
+            let x = _mm256_loadu_ps(v.as_ptr().add(j));
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(j),
+                _mm256_add_ps(o, _mm256_mul_ps(wv, x)),
+            );
+            j += 8;
+        }
+        while j < n {
+            out[j] += w * v[j];
+            j += 1;
+        }
+    }
+}
+
+mod portable {
+    /// out[j] += s[j]
+    pub fn add_assign(out: &mut [f32], s: &[f32]) {
+        for (o, &x) in out.iter_mut().zip(s) {
+            *o += x;
+        }
+    }
+
+    /// x[j] += p[j] + b[j]
+    pub fn add2_assign(x: &mut [f32], p: &[f32], b: &[f32]) {
+        for ((xo, &pv), &bv) in x.iter_mut().zip(p).zip(b) {
+            *xo += pv + bv;
+        }
+    }
+
+    /// x[j] = (x[j] - mu) * inv * g[j] + b[j]
+    pub fn ln_apply(x: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+        for ((xo, &gv), &bv) in x.iter_mut().zip(g).zip(b) {
+            *xo = (*xo - mu) * inv * gv + bv;
+        }
+    }
+
+    /// out[j] += w * v[j]
+    pub fn axpy(w: f32, v: &[f32], out: &mut [f32]) {
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += w * x;
+        }
+    }
+}
+
+/// Residual add: `out[j] += s[j]` elementwise.
+pub fn add_assign(out: &mut [f32], s: &[f32]) {
+    add_assign_with(active(), out, s)
+}
+
+/// [`add_assign`] on an explicit arm (tests compare both).
+pub fn add_assign_with(kernel: Kernel, out: &mut [f32], s: &[f32]) {
+    debug_assert_eq!(out.len(), s.len());
+    match executable(kernel) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` only yields Avx2 when the feature is present.
+        Kernel::Avx2 => unsafe { avx2::add_assign(out, s) },
+        _ => portable::add_assign(out, s),
+    }
+}
+
+/// Residual + bias add: `x[j] += p[j] + b[j]` elementwise.
+pub fn add2_assign(x: &mut [f32], p: &[f32], b: &[f32]) {
+    add2_assign_with(active(), x, p, b)
+}
+
+/// [`add2_assign`] on an explicit arm (tests compare both).
+pub fn add2_assign_with(kernel: Kernel, x: &mut [f32], p: &[f32], b: &[f32]) {
+    debug_assert_eq!(x.len(), p.len());
+    debug_assert_eq!(x.len(), b.len());
+    match executable(kernel) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` only yields Avx2 when the feature is present.
+        Kernel::Avx2 => unsafe { avx2::add2_assign(x, p, b) },
+        _ => portable::add2_assign(x, p, b),
+    }
+}
+
+/// LayerNorm application: `x[j] = (x[j] - mu) * inv * g[j] + b[j]`. The
+/// mean/variance reductions stay with the caller in scalar index order.
+pub fn ln_apply(x: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+    ln_apply_with(active(), x, g, b, mu, inv)
+}
+
+/// [`ln_apply`] on an explicit arm (tests compare both).
+pub fn ln_apply_with(kernel: Kernel, x: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), b.len());
+    match executable(kernel) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` only yields Avx2 when the feature is present.
+        Kernel::Avx2 => unsafe { avx2::ln_apply(x, g, b, mu, inv) },
+        _ => portable::ln_apply(x, g, b, mu, inv),
+    }
+}
+
+/// Weighted accumulate: `out[j] += w * v[j]` (the attention V inner loop).
+pub fn axpy(w: f32, v: &[f32], out: &mut [f32]) {
+    axpy_with(active(), w, v, out)
+}
+
+/// [`axpy`] on an explicit arm (tests compare both).
+pub fn axpy_with(kernel: Kernel, w: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), v.len());
+    match executable(kernel) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` only yields Avx2 when the feature is present.
+        Kernel::Avx2 => unsafe { avx2::axpy(w, v, out) },
+        _ => portable::axpy(w, v, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn randv(g: &mut Gen, n: usize) -> Vec<f32> {
+        (0..n).map(|_| g.f64_in(-2.0..2.0) as f32).collect()
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Both arms of every elementwise helper agree bitwise with the scalar
+    /// loop across lengths crossing the lane width (including 0 and tails).
+    #[test]
+    fn elementwise_helpers_bitwise_match_scalar() {
+        check("simd elementwise == scalar", 120, |g| {
+            let n = g.usize_in(0..37);
+            let base = randv(g, n);
+            let s = randv(g, n);
+            let b = randv(g, n);
+            let gg = randv(g, n);
+            let mu = g.f64_in(-1.0..1.0) as f32;
+            let inv = g.f64_in(0.1..2.0) as f32;
+            let w = g.f64_in(-1.5..1.5) as f32;
+
+            for kernel in [Kernel::Avx2, Kernel::Portable] {
+                // add_assign
+                let mut want = base.clone();
+                for (o, &x) in want.iter_mut().zip(&s) {
+                    *o += x;
+                }
+                let mut got = base.clone();
+                add_assign_with(kernel, &mut got, &s);
+                assert!(bits_eq(&got, &want), "{kernel:?} add_assign n={n}");
+
+                // add2_assign
+                let mut want = base.clone();
+                for ((xo, &pv), &bv) in want.iter_mut().zip(&s).zip(&b) {
+                    *xo += pv + bv;
+                }
+                let mut got = base.clone();
+                add2_assign_with(kernel, &mut got, &s, &b);
+                assert!(bits_eq(&got, &want), "{kernel:?} add2_assign n={n}");
+
+                // ln_apply
+                let mut want = base.clone();
+                for ((xo, &gv), &bv) in want.iter_mut().zip(&gg).zip(&b) {
+                    *xo = (*xo - mu) * inv * gv + bv;
+                }
+                let mut got = base.clone();
+                ln_apply_with(kernel, &mut got, &gg, &b, mu, inv);
+                assert!(bits_eq(&got, &want), "{kernel:?} ln_apply n={n}");
+
+                // axpy
+                let mut want = base.clone();
+                for (o, &x) in want.iter_mut().zip(&s) {
+                    *o += w * x;
+                }
+                let mut got = base.clone();
+                axpy_with(kernel, w, &s, &mut got);
+                assert!(bits_eq(&got, &want), "{kernel:?} axpy n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn active_is_stable_and_portable_is_executable() {
+        assert_eq!(active(), active());
+        assert_eq!(executable(Kernel::Portable), Kernel::Portable);
+        if !has_avx2() {
+            assert_eq!(executable(Kernel::Avx2), Kernel::Portable);
+        }
+    }
+}

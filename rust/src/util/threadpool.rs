@@ -1,9 +1,21 @@
 //! Fixed-size thread pool (tokio is unavailable offline; the serving layer
 //! runs on blocking threads + channels, which at our request rates is
 //! indistinguishable from an async runtime and much simpler to reason about).
+//!
+//! Two pools live here so every form of parallelism in the crate is in one
+//! place:
+//!
+//!   * [`ThreadPool`] — the classic shared-queue pool for `'static` jobs
+//!     (serving workers, `parallel_map`).
+//!   * [`ScopedPool`] — a **persistent** pool for borrowed data-parallel
+//!     compute. The GEMM row-parallel path used to spawn fresh OS threads
+//!     via `thread::scope` on every large-shape call, paying thread-spawn
+//!     latency every decode round; [`compute_pool`] keeps one set of
+//!     workers alive for the whole process and hands them task indices
+//!     through an atomic claim counter instead.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -75,12 +87,219 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Process-wide compute thread budget, resolved **once** (the GEMM entry
+/// points used to re-query `available_parallelism()` on every call): the
+/// `SPECMER_THREADS` env override (for reproducible benching) wins,
+/// otherwise `available_parallelism`.
+pub fn compute_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPECMER_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    })
+}
+
+/// The process-wide persistent [`ScopedPool`] the compute kernels run on,
+/// spawned lazily with [`compute_threads`] participants (the submitting
+/// thread counts as one, so `compute_threads() - 1` workers are spawned).
+pub fn compute_pool() -> &'static ScopedPool {
+    static POOL: OnceLock<ScopedPool> = OnceLock::new();
+    POOL.get_or_init(|| ScopedPool::new(compute_threads()))
+}
+
+/// Borrowed task closure published to the pool workers. The submitter does
+/// not return from [`ScopedPool::run`] until every claimed task finished,
+/// so the `'static` lifetime is a loan the workers never outlive.
+struct TaskFn(&'static (dyn Fn(usize) + Sync));
+
+/// One published parallel job: a task closure plus claim/finish counters.
+struct JobInner {
+    f: TaskFn,
+    /// Next unclaimed task index (claimed with `fetch_add`).
+    next: AtomicUsize,
+    /// Tasks that finished running (the submitter joins on this).
+    done: AtomicUsize,
+    total: usize,
+    /// Set when any task panicked; the submitter re-panics after the join.
+    panicked: AtomicBool,
+}
+
+struct Slot {
+    job: Option<Arc<JobInner>>,
+    /// Set by `Drop`: workers exit their wait loop instead of parking.
+    stop: bool,
+}
+
+struct PoolShared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a job with unclaimed tasks.
+    work: Condvar,
+    /// Submitters wait here for task completion / the slot to free up.
+    done: Condvar,
+}
+
+/// Persistent scoped worker pool for borrowed data-parallel compute.
+///
+/// Unlike [`ThreadPool`], jobs may borrow caller data: `run` publishes the
+/// closure, the workers (and the submitting thread itself) claim task
+/// indices from a shared atomic counter, and `run` only returns once every
+/// task finished — so the borrow outlives every dereference. One job runs
+/// at a time; concurrent submitters (one engine worker per serving thread)
+/// queue on the slot, which matches the old `thread::scope` behaviour of
+/// sharing the machine's cores between concurrent large GEMMs.
+pub struct ScopedPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+fn run_tasks(job: &JobInner) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::SeqCst);
+        if i >= job.total {
+            break;
+        }
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.f.0)(i))).is_ok();
+        if !ok {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        job.done.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn scoped_worker(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.stop {
+                    return;
+                }
+                match slot.job.as_ref() {
+                    Some(j) if j.next.load(Ordering::SeqCst) < j.total => break Arc::clone(j),
+                    _ => slot = shared.work.wait(slot).unwrap(),
+                }
+            }
+        };
+        run_tasks(&job);
+        // we may have just finished the job's last task: wake the submitter
+        // (taking the lock orders the wake after its `done` re-check)
+        let _guard = shared.slot.lock().unwrap();
+        shared.done.notify_all();
+    }
+}
+
+impl ScopedPool {
+    /// Pool with `threads` total participants; spawns `threads - 1`
+    /// persistent workers (the submitting thread executes tasks too).
+    pub fn new(threads: usize) -> ScopedPool {
+        let shared = Arc::new(PoolShared {
+            slot: Mutex::new(Slot { job: None, stop: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = threads.saturating_sub(1);
+        let handles = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("compute-{i}"))
+                    .spawn(move || scoped_worker(s))
+                    .expect("spawn compute worker")
+            })
+            .collect();
+        ScopedPool { shared, workers, handles }
+    }
+
+    /// Worker threads backing this pool (0 = `run` always inlines).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(0..total)` across the pool, returning when every task
+    /// finished. Tasks must not submit nested `run` calls (the compute
+    /// kernels never do); a panicking task is caught, the remaining tasks
+    /// still run, and `run` re-panics on the submitting thread.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if self.workers == 0 || total == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the closure reference is lent to the workers only for the
+        // duration of this call — `run` joins every claimed task (below)
+        // before returning, and unclaimed copies of the reference are never
+        // dereferenced — so extending the lifetime to 'static is sound.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Arc::new(JobInner {
+            f: TaskFn(f_static),
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            total,
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.job.is_some() {
+                // another thread's kernel call owns the pool: queue up
+                slot = self.shared.done.wait(slot).unwrap();
+            }
+            slot.job = Some(Arc::clone(&job));
+            self.shared.work.notify_all();
+        }
+        // the submitter works too: claim tasks until none remain
+        run_tasks(&job);
+        let mut slot = self.shared.slot.lock().unwrap();
+        while job.done.load(Ordering::SeqCst) < total {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        slot.job = None;
+        drop(slot);
+        // wake submitters queued on the now-free slot
+        self.shared.done.notify_all();
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("scoped pool task panicked");
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        // `run` borrows the pool, so no job can be in flight here; flag the
+        // workers out of their wait loop and join them (the process-global
+        // `compute_pool` lives in a static and is never dropped)
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.stop = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw base pointer smuggled into the chunk tasks; soundness is argued at
+/// the single construction site in [`parallel_chunks_mut`].
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Scoped data-parallel helper for the compute kernels (`runtime::gemm`):
 /// split `data` into `chunk_len`-sized mutable chunks and run `f(i, chunk)`
-/// for each chunk concurrently, returning once all chunks finish. The
-/// shared-queue [`ThreadPool`] requires `'static` jobs, so borrowed-data
-/// compute uses this scoped sibling; both primitives live here so every
-/// form of parallelism in the crate is in one place.
+/// for each chunk concurrently, returning once all chunks finish. Runs on
+/// the persistent [`compute_pool`] instead of spawning threads per call.
 ///
 /// A single chunk (or empty input) runs inline on the caller's thread.
 pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
@@ -95,12 +314,20 @@ where
         f(0, data);
         return;
     }
-    thread::scope(|s| {
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            let f = &f;
-            s.spawn(move || f(i, chunk));
-        }
-    });
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let len = data.len();
+    let base = SendPtr(data.as_mut_ptr());
+    let task = move |i: usize| {
+        let start = i * chunk_len;
+        let end = ((i + 1) * chunk_len).min(len);
+        // SAFETY: task i covers exactly data[start..end); tasks cover
+        // disjoint in-bounds ranges, T is Send, and `run` joins every task
+        // before returning, so no chunk outlives the caller's exclusive
+        // borrow of `data`.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(i, chunk);
+    };
+    compute_pool().run(n_chunks, &task);
 }
 
 /// Run `f` over `items` with `n` threads, preserving order of results.
@@ -192,5 +419,75 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn scoped_pool_runs_every_task_exactly_once() {
+        let pool = ScopedPool::new(3);
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        // reuse the same pool across submissions (persistence is the point)
+        for _ in 0..5 {
+            pool.run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 5, "task {i}");
+        }
+    }
+
+    #[test]
+    fn scoped_pool_single_participant_runs_inline() {
+        let pool = ScopedPool::new(1);
+        assert_eq!(pool.workers(), 0);
+        let hits = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scoped_pool_concurrent_submitters_all_complete() {
+        let pool = Arc::new(ScopedPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        pool.run(8, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 10 * 8);
+    }
+
+    #[test]
+    fn scoped_pool_drop_joins_workers() {
+        let pool = ScopedPool::new(3);
+        pool.run(8, &|_| {});
+        drop(pool); // must not hang or leak parked workers
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool task panicked")]
+    fn scoped_pool_propagates_task_panic() {
+        let pool = ScopedPool::new(2);
+        pool.run(4, &|i| {
+            assert!(i != 2, "boom");
+        });
+    }
+
+    #[test]
+    fn compute_threads_is_stable_and_positive() {
+        let a = compute_threads();
+        let b = compute_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b, "resolved once, stable across calls");
     }
 }

@@ -1,0 +1,158 @@
+//! Per-sequence sampling params in lockstep groups (ROADMAP item, ISSUE 4
+//! satellite): `temp`/`top_p` only gate each sequence's own `adjust_dist`
+//! rows, so requests differing in them now share one lockstep group — the
+//! compatibility key shrank to `(c, gamma)` — and every sequence must
+//! still reproduce its solo token stream exactly, both through the batch
+//! entry point and through continuous round-boundary admission.
+
+use specmer::config::Method;
+use specmer::coordinator::engine::synthetic_engine;
+use specmer::coordinator::GenEngine;
+use specmer::decode::{
+    speculative_generate, speculative_generate_batch, speculative_generate_continuous,
+    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem,
+};
+use specmer::kmer::{KmerSet, KmerTable};
+use specmer::msa::simulate::generate_family;
+use specmer::runtime::cpu_ref::CpuModel;
+use specmer::tokenizer::BOS;
+
+fn cfg(seed: u64, temp: f32, top_p: f32) -> GenConfig {
+    GenConfig {
+        c: 3,
+        gamma: 5,
+        seed,
+        temp,
+        top_p,
+        max_len: 40,
+        kset: KmerSet::new(true, true, true),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mixed_sampling_params_share_a_lockstep_batch() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = KmerTable::build(&msa);
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctxs: [&[u8]; 4] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13], &[BOS, 11, 3]];
+    let cfgs = [
+        cfg(3, 1.0, 1.0),
+        cfg(11, 0.8, 0.95),
+        cfg(21, 0.6, 0.9),
+        cfg(33, 1.2, 0.85),
+    ];
+
+    let solo: Vec<GenOutput> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+        .collect();
+    let items: Vec<SpecBatchItem<'_>> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .collect();
+    let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+
+    for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("mixed-sampling item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "seq {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+    }
+}
+
+/// Scripted admission source: each item joins once its boundary arrives.
+struct Scripted {
+    pending: Vec<(usize, AdmitItem)>,
+    boundary: usize,
+    active_at_admission: Vec<usize>,
+    done: Vec<(u64, anyhow::Result<GenOutput>)>,
+}
+
+impl AdmissionHook for Scripted {
+    fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+        let b = self.boundary;
+        self.boundary += 1;
+        let (now, later): (Vec<_>, Vec<_>) = self.pending.drain(..).partition(|(at, _)| *at <= b);
+        self.pending = later;
+        for _ in &now {
+            self.active_at_admission.push(active);
+        }
+        now.into_iter().map(|(_, item)| item).collect()
+    }
+    fn complete(&mut self, ticket: u64, result: anyhow::Result<GenOutput>) {
+        self.done.push((ticket, result));
+    }
+}
+
+/// Continuous admission with mixed temp/top_p: late joiners with different
+/// sampling params used to be refused as shape mismatches; now they splice
+/// into the in-flight group and still match their solo runs bitwise.
+#[test]
+fn continuous_admission_accepts_mixed_sampling_params() {
+    let d = CpuModel::synthetic(2, 16, 2, 96, 17);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 18);
+    let ctx: &[u8] = &[BOS, 5, 9];
+    let cfgs = [cfg(3, 1.0, 1.0), cfg(17, 0.7, 0.9), cfg(29, 0.9, 0.95)];
+    let arrivals = [0usize, 1, 2];
+
+    let solo: Vec<GenOutput> = cfgs
+        .iter()
+        .map(|c| speculative_generate(&d, &t, None, ctx, c).unwrap())
+        .collect();
+
+    let mut hook = Scripted {
+        pending: arrivals
+            .iter()
+            .zip(&cfgs)
+            .enumerate()
+            .map(|(i, (&at, c))| {
+                (at, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: c.clone() })
+            })
+            .collect(),
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    speculative_generate_continuous(&d, &t, None, LockstepShape::of(&cfgs[0]), &mut hook);
+
+    assert!(
+        hook.active_at_admission[1..].iter().any(|&a| a > 0),
+        "late arrivals never joined an in-flight group: {:?}",
+        hook.active_at_admission
+    );
+    assert_eq!(hook.done.len(), 3, "every admitted request completed");
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("admitted item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+    }
+}
+
+/// Engine-level: a worker batch with heterogeneous sampling params decodes
+/// as one group and matches per-request serial generation.
+#[test]
+fn engine_batch_with_mixed_sampling_params_matches_serial() {
+    let eng = synthetic_engine(3);
+    let mut cfgs: Vec<GenConfig> = (0..4u64)
+        .map(|seed| GenConfig { max_len: 26, gamma: 5, c: 3, seed, ..Default::default() })
+        .collect();
+    cfgs[1].temp = 0.7;
+    cfgs[2].top_p = 0.85;
+    cfgs[3].temp = 1.1;
+    cfgs[3].top_p = 1.0;
+    for method in [Method::Speculative, Method::SpecMer] {
+        let batch = eng.generate_batch("SynA", method, &cfgs);
+        for (i, (got, cfg)) in batch.iter().zip(&cfgs).enumerate() {
+            let want = eng.generate("SynA", method, cfg).unwrap();
+            let got = got.as_ref().expect("batch request failed");
+            assert_eq!(got.tokens, want.tokens, "{method:?} req {i} diverged");
+        }
+    }
+}
