@@ -15,7 +15,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use specmer::config::Config;
-use specmer::coordinator::{engine_for_bench, EngineFactory, Metrics, Router, Scheduler};
+use specmer::coordinator::{
+    engine_for_bench, EngineFactory, FamilyRegistry, Metrics, Router, Scheduler,
+};
 use specmer::util::cli::Args;
 use specmer::util::json::Json;
 use specmer::util::stats;
@@ -50,16 +52,17 @@ fn main() -> anyhow::Result<()> {
         factory,
         Arc::clone(&metrics),
     ));
-    let router = Arc::new(Router::new(sched));
+    // the router resolves per-sequence SeqSpecs at submission; a throwaway
+    // probe engine supplies the same family set the workers will load
+    let (probe, _) = engine_for_bench();
+    let proteins: Vec<String> =
+        probe.families().iter().map(|f| f.meta.name.clone()).take(3).collect();
+    let registry = Arc::new(FamilyRegistry::new(probe.families().to_vec()));
+    drop(probe);
+    let router = Arc::new(Router::new(sched, registry));
     let cfg = Config { port: 0, ..Default::default() };
     let server = specmer::server::serve(&cfg, Arc::clone(&router), Arc::clone(&metrics))?;
     println!("serving stack up at http://{}\n", server.addr);
-
-    // protein list from the engine itself (via a throwaway local engine)
-    let proteins: Vec<String> = {
-        let (probe, _) = engine_for_bench();
-        probe.families().iter().map(|f| f.meta.name.clone()).take(3).collect()
-    };
 
     println!("screening campaign: {} proteins x {n_per_protein} seqs x {} methods", proteins.len(), methods.len());
     println!("{:-<72}", "");

@@ -45,10 +45,12 @@ fn main() -> anyhow::Result<()> {
     };
     let t0 = std::time::Instant::now();
     let mut designs = Vec::new();
+    // resolve the per-sequence scoring plan (family context + k-mer table
+    // handle) once; the library loop only varies the seed
+    let mut spec = engine.spec(&protein, Method::SpecMer, &cfg)?;
     for i in 0..library {
-        let mut g = cfg.clone();
-        g.seed = 1000 + i as u64;
-        let out = engine.generate(&protein, Method::SpecMer, &g)?;
+        spec.cfg.seed = 1000 + i as u64;
+        let out = engine.generate(&spec)?;
         let nll = engine.score_nll(&out.tokens)?;
         let residues: Vec<u8> = out
             .tokens

@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     for method in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
         let t0 = std::time::Instant::now();
-        let out = engine.generate(&protein, method, &cfg)?;
+        let out = engine.generate_for(&protein, method, &cfg)?;
         let dt = t0.elapsed().as_secs_f64();
         let nll = engine.score_nll(&out.tokens)?;
         println!(

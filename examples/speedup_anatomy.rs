@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
                 seed: 100 + i as u64,
                 ..Default::default()
             };
-            let out = engine.generate(&protein, method, &cfg)?;
+            let out = engine.generate_for(&protein, method, &cfg)?;
             tokens += out.new_tokens();
             if method == Method::Speculative {
                 accepts.push(out.acceptance_ratio());

@@ -11,12 +11,15 @@
 //! the seed clone-per-candidate implementation (`cpu_ref::reference`) —
 //! plus the worker-level question — four full generations dispatched as
 //! **lockstep batched rounds vs a serial request loop** — plus the
-//! serving-path question under **streaming arrivals** (B=4 staggered
+//! serving-path questions under **streaming arrivals** (B=4 staggered
 //! submits): measured occupancy of continuous round-boundary admission vs
-//! run-to-completion dispatch. All numbers are emitted machine-readably to
-//! `results/bench_micro.json`. Set `SPECMER_BENCH_SMOKE=1` for a fast CI
-//! smoke run.
+//! run-to-completion dispatch, and — for mixed-family traffic (B=4
+//! staggered across 2 families) — **shape-keyed vs (protein, method)-keyed
+//! admission**, the SeqSpec redesign's cross-tenant occupancy lever. All
+//! numbers are emitted machine-readably to `results/bench_micro.json`.
+//! Set `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use specmer::decode::{
@@ -63,7 +66,7 @@ fn main() {
     let scale: u64 = if smoke { 100 } else { 1 };
 
     let (_prof, msa) = generate_family("bench", 120, 200, 1);
-    let table = KmerTable::build(&msa);
+    let table = Arc::new(KmerTable::build(&msa));
     let mut rng = Pcg64::new(7);
     let block5: Vec<u8> = (0..5).map(|_| 3 + rng.below(20) as u8).collect();
     let block15: Vec<u8> = (0..15).map(|_| 3 + rng.below(20) as u8).collect();
@@ -281,9 +284,11 @@ fn main() {
         }
     });
     let batched_ns = bench("decode B=4 (lockstep batched rounds)", gen_iters, || {
-        let items: Vec<SpecBatchItem<'_>> =
-            bcfgs.iter().map(|cfg| SpecBatchItem { context: &bctx, cfg }).collect();
-        for out in speculative_generate_batch(&bd, &bt, Some(&table), &items) {
+        let items: Vec<SpecBatchItem<'_>> = bcfgs
+            .iter()
+            .map(|cfg| SpecBatchItem { context: &bctx, cfg, table: Some(table.clone()) })
+            .collect();
+        for out in speculative_generate_batch(&bd, &bt, &items) {
             std::hint::black_box(out.unwrap());
         }
     });
@@ -348,10 +353,13 @@ fn main() {
             .iter()
             .enumerate()
             .map(|(i, cfg)| {
-                (
-                    arrivals[i],
-                    AdmitItem { ticket: i as u64, context: bctx.clone(), cfg: cfg.clone() },
-                )
+                let item = AdmitItem {
+                    ticket: i as u64,
+                    context: bctx.clone(),
+                    cfg: cfg.clone(),
+                    table: Some(table.clone()),
+                };
+                (arrivals[i], item)
             })
             .collect(),
         boundary: 0,
@@ -360,13 +368,7 @@ fn main() {
         idle_rounds: 0,
         completed: 0,
     };
-    speculative_generate_continuous(
-        &bd,
-        &bt,
-        Some(&table),
-        LockstepShape::of(&bcfgs[0]),
-        &mut hook,
-    );
+    speculative_generate_continuous(&bd, &bt, LockstepShape::of(&bcfgs[0]), &mut hook);
     assert_eq!(hook.completed, 4, "continuous schedule must answer all 4");
     let occ_cont =
         hook.seq_rounds as f64 / (hook.busy_rounds + hook.idle_rounds).max(1) as f64;
@@ -387,9 +389,9 @@ fn main() {
         }
         let items: Vec<SpecBatchItem<'_>> = bcfgs[qi..qi + take]
             .iter()
-            .map(|cfg| SpecBatchItem { context: &bctx, cfg })
+            .map(|cfg| SpecBatchItem { context: &bctx, cfg, table: Some(table.clone()) })
             .collect();
-        let outs = speculative_generate_batch(&bd, &bt, Some(&table), &items);
+        let outs = speculative_generate_batch(&bd, &bt, &items);
         let rounds: Vec<u64> = outs.iter().map(|o| o.as_ref().unwrap().rounds).collect();
         let rmax = *rounds.iter().max().unwrap();
         rtc_seq_rounds += rounds.iter().sum::<u64>();
@@ -404,6 +406,145 @@ fn main() {
         occ_cont > occ_rtc,
         "continuous batching must beat run-to-completion under streaming \
          arrivals: {occ_cont:.3} vs {occ_rtc:.3}"
+    );
+
+    // ---- mixed-family streaming: shape-keyed vs (protein, method)-keyed --
+    // The SeqSpec redesign's occupancy lever: the same four requests now
+    // alternate between *two protein families* (each scoring against its
+    // own k-mer table). Shape-keyed admission splices every arrival into
+    // the one in-flight group; the old (protein, method) key forces the
+    // worker to decode family-partitioned groups back to back. Occupancy
+    // is sequence-rounds per worker round, idle rounds included — the
+    // per-request round counts are identical under both policies (the
+    // equivalence suite pins admission-independence), so the denominator
+    // is the whole story.
+    println!("== mixed-family streaming occupancy (B=4, 2 families, staggered) ==");
+    let (_prof2, msa2) = generate_family("bench2", 120, 200, 2);
+    let table2 = Arc::new(KmerTable::build(&msa2));
+    let fam_tables = [table.clone(), table2.clone()];
+    let fam_of = [0usize, 1, 0, 1]; // request i -> family
+    let mix_arrivals = [0usize, 2, 3, 5];
+
+    struct MixHook {
+        /// (arrival boundary, family, item)
+        pending: Vec<(usize, usize, AdmitItem)>,
+        /// `Some(f)` = old (protein, method)-keyed run: only family `f`
+        /// may join this group; `None` = shape-keyed (anything joins).
+        filter: Option<usize>,
+        clock: usize,
+        seq_rounds: u64,
+        busy_rounds: u64,
+        idle_rounds: u64,
+        completed: usize,
+    }
+
+    impl AdmissionHook for MixHook {
+        fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+            let admissible = |f: usize, filter: Option<usize>| match filter {
+                None => true,
+                Some(k) => k == f,
+            };
+            if active == 0 {
+                let next = self
+                    .pending
+                    .iter()
+                    .filter(|(_, f, _)| admissible(*f, self.filter))
+                    .map(|(at, _, _)| *at)
+                    .min();
+                match next {
+                    // nothing left for this run's key: end the run
+                    None => return Vec::new(),
+                    Some(at) if at > self.clock => {
+                        // a *foreign-key* request already waiting must be
+                        // served first under keyed dispatch: end the run
+                        // rather than idling past it
+                        if self
+                            .pending
+                            .iter()
+                            .any(|(a, f, _)| !admissible(*f, self.filter) && *a <= self.clock)
+                        {
+                            return Vec::new();
+                        }
+                        self.idle_rounds += (at - self.clock) as u64;
+                        self.clock = at;
+                    }
+                    _ => {}
+                }
+            }
+            let (now, later): (Vec<_>, Vec<_>) = self
+                .pending
+                .drain(..)
+                .partition(|(at, f, _)| *at <= self.clock && admissible(*f, self.filter));
+            self.pending = later;
+            let will_run = active + now.len();
+            if will_run > 0 {
+                self.busy_rounds += 1;
+                self.seq_rounds += will_run as u64;
+                self.clock += 1;
+            }
+            now.into_iter().map(|(_, _, item)| item).collect()
+        }
+        fn complete(&mut self, _ticket: u64, result: anyhow::Result<GenOutput>) {
+            result.unwrap();
+            self.completed += 1;
+        }
+    }
+
+    let run_policy = |family_keyed: bool| -> f64 {
+        let build_pending = || -> Vec<(usize, usize, AdmitItem)> {
+            bcfgs
+                .iter()
+                .enumerate()
+                .map(|(i, cfg)| {
+                    let item = AdmitItem {
+                        ticket: i as u64,
+                        context: bctx.clone(),
+                        cfg: cfg.clone(),
+                        table: Some(fam_tables[fam_of[i]].clone()),
+                    };
+                    (mix_arrivals[i], fam_of[i], item)
+                })
+                .collect()
+        };
+        let mut pending = build_pending();
+        let (mut seq_rounds, mut busy, mut idle) = (0u64, 0u64, 0u64);
+        let mut clock = 0usize;
+        let mut completed = 0usize;
+        // single worker: each iteration is one popped group; under family
+        // keying the group anchor is the oldest pending request's family
+        while !pending.is_empty() {
+            let anchor =
+                pending.iter().min_by_key(|(at, _, _)| *at).map(|(_, f, _)| *f).unwrap();
+            let mut hook = MixHook {
+                pending: std::mem::take(&mut pending),
+                filter: family_keyed.then_some(anchor),
+                clock,
+                seq_rounds: 0,
+                busy_rounds: 0,
+                idle_rounds: 0,
+                completed: 0,
+            };
+            speculative_generate_continuous(&bd, &bt, LockstepShape::of(&bcfgs[0]), &mut hook);
+            pending = hook.pending;
+            clock = hook.clock;
+            seq_rounds += hook.seq_rounds;
+            busy += hook.busy_rounds;
+            idle += hook.idle_rounds;
+            completed += hook.completed;
+        }
+        assert_eq!(completed, 4, "policy sim must answer all 4 requests");
+        seq_rounds as f64 / (busy + idle).max(1) as f64
+    };
+
+    let occ_shape_keyed = run_policy(false);
+    let occ_protein_keyed = run_policy(true);
+    println!("occupancy shape-keyed admission (cross-family groups):   {occ_shape_keyed:.3}");
+    println!("occupancy (protein, method)-keyed (family-partitioned): {occ_protein_keyed:.3}");
+    assert!(
+        occ_shape_keyed > occ_protein_keyed,
+        "shape-keyed admission must beat (protein, method)-keyed occupancy \
+         under mixed-family staggered arrivals: {occ_shape_keyed:.3} vs \
+         {occ_protein_keyed:.3}"
     );
 
     let json = Json::obj(vec![
@@ -437,6 +578,8 @@ fn main() {
         ("batch_decode_speedup_b4", Json::num(batch_speedup)),
         ("streaming_b4_occupancy_continuous", Json::num(occ_cont)),
         ("streaming_b4_occupancy_run_to_completion", Json::num(occ_rtc)),
+        ("streaming_mixed_b4_occupancy_shape_keyed", Json::num(occ_shape_keyed)),
+        ("streaming_mixed_b4_occupancy_protein_keyed", Json::num(occ_protein_keyed)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

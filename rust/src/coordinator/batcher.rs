@@ -1,16 +1,27 @@
 //! Dynamic batcher: groups compatible queued requests so a worker can
-//! amortize per-protein state (k-mer table locality, prefill-cache hits).
+//! share lockstep decode rounds across them.
 //!
-//! Policy (vLLM-router style): requests are keyed by (protein, method);
-//! a batch closes when it reaches `max_batch` or the oldest member has
-//! waited `max_wait`. The queue preserves arrival order across keys so no
-//! key starves.
+//! Policy: requests are keyed by their **lockstep dispatch shape** alone
+//! (`SeqSpec::lockstep_shape()` — `Some((c, gamma))` for the speculative
+//! methods, `None` for baselines and probe items), *not* by
+//! `(protein, method)`: per-sequence k-mer tables and contexts ride on the
+//! `SeqSpec`, so requests for different protein families and mixed
+//! SpecMER/vanilla-speculative methods share one batch and one in-flight
+//! lockstep group. A batch closes when it reaches `max_batch` or the
+//! oldest member has waited `max_wait`. The queue preserves arrival order
+//! across keys so no shape starves, and round-boundary admission
+//! ([`Batcher::take_compatible`]) adds a **soft protein affinity**: when
+//! more shape-compatible requests are poppable than fit, the in-flight
+//! group's majority protein is preferred (k-mer table + prefill-cache
+//! locality) — but aged-out requests of any protein keep arrival-order
+//! priority, and an aged-out incompatible queue head blocks admission
+//! entirely, so foreign proteins are never starved.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::config::Method;
 use crate::coordinator::request::GenRequest;
+use crate::decode::LockstepShape;
 
 pub struct Batcher {
     queue: VecDeque<GenRequest>,
@@ -35,11 +46,11 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Key under which requests may share a batch. By-reference so the
-    /// per-element comparisons `next_batch` runs on every poll don't
-    /// allocate a `String` clone each.
-    fn key(r: &GenRequest) -> (&str, Method) {
-        (r.protein.as_str(), r.method)
+    /// Key under which requests may share a batch: the lockstep dispatch
+    /// shape only. `None` (baselines, probe items) is its own key — those
+    /// requests decode serially inside their batch anyway.
+    fn key(r: &GenRequest) -> Option<LockstepShape> {
+        r.spec.lockstep_shape()
     }
 
     /// Time until the oldest queued request reaches `max_wait` (zero if it
@@ -53,43 +64,40 @@ impl Batcher {
     }
 
     /// Count queued requests that could join an in-flight lockstep group
-    /// for `(protein, method)` under `pred` — the admission preview
-    /// [`Self::take_compatible`] uses to skip queue rebuilds on boundaries
-    /// with nothing to admit.
-    pub fn peek_compatible(
-        &self,
-        protein: &str,
-        method: Method,
-        pred: &dyn Fn(&GenRequest) -> bool,
-    ) -> usize {
-        self.queue
-            .iter()
-            .filter(|r| Self::key(r) == (protein, method) && pred(r))
-            .count()
+    /// of `shape` — the admission preview [`Self::take_compatible`] uses to
+    /// skip queue rebuilds on boundaries with nothing to admit.
+    pub fn peek_compatible(&self, shape: LockstepShape) -> usize {
+        self.queue.iter().filter(|r| Self::key(r) == Some(shape)).count()
     }
 
-    /// Remove and return up to `max` queued requests for `(protein, method)`
-    /// that satisfy `pred`, preserving arrival order — the round-boundary
-    /// admission pop for continuous batching.
+    /// Remove and return up to `max` queued requests whose dispatch shape
+    /// matches `shape` — the round-boundary admission pop for continuous
+    /// batching. Any protein and any speculative method qualifies.
     ///
-    /// Fairness guard: when the queue head belongs to a *different* group
-    /// and has already waited `max_wait`, nothing is admitted — an
-    /// in-flight group must not keep jumping an aged-out request whose own
-    /// dispatch is blocked behind it.
+    /// Fairness guard: when the queue head is *incompatible* and has
+    /// already waited `max_wait`, nothing is admitted — an in-flight group
+    /// must not keep jumping an aged-out request whose own dispatch is
+    /// blocked behind it.
+    ///
+    /// Soft protein affinity: when more compatible requests are queued
+    /// than `max`, requests for `prefer` (the group's majority protein)
+    /// are taken first — except that compatible requests which have
+    /// *already aged out* keep arrival-order priority over everything, so
+    /// a minority protein is never starved by a same-shape flood. Taken
+    /// requests are returned in arrival order.
     pub fn take_compatible(
         &mut self,
         now: Instant,
-        protein: &str,
-        method: Method,
+        shape: LockstepShape,
         max: usize,
-        pred: &dyn Fn(&GenRequest) -> bool,
+        prefer: Option<&str>,
     ) -> Vec<GenRequest> {
         if max == 0 || self.queue.is_empty() {
             return Vec::new();
         }
         if let Some(front) = self.queue.front() {
-            let front_admissible = Self::key(front) == (protein, method) && pred(front);
-            if !front_admissible
+            let front_compatible = Self::key(front) == Some(shape);
+            if !front_compatible
                 && now.saturating_duration_since(front.submitted) >= self.max_wait
             {
                 return Vec::new();
@@ -97,29 +105,59 @@ impl Batcher {
         }
         // boundaries with nothing to admit are the common case under mixed
         // traffic: don't rebuild the queue unless something matches
-        if self.peek_compatible(protein, method, pred) == 0 {
+        let n_compat = self.peek_compatible(shape);
+        if n_compat == 0 {
             return Vec::new();
         }
-        let mut taken = Vec::new();
-        let mut rest = VecDeque::with_capacity(self.queue.len());
-        while let Some(r) = self.queue.pop_front() {
-            if Self::key(&r) == (protein, method) && pred(&r) {
-                taken.push(r);
-                if taken.len() == max {
-                    break;
+        let chosen: Vec<usize> = if n_compat <= max {
+            // everything compatible fits: plain arrival order
+            self.queue
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| Self::key(r) == Some(shape))
+                .map(|(i, _)| i)
+                .collect()
+        } else {
+            // oversubscribed: aged-out first (arrival order — the
+            // no-starvation clause), then the preferred protein, then the
+            // rest; re-sorted to arrival order after the cut
+            let mut aged = Vec::new();
+            let mut pref = Vec::new();
+            let mut rest = Vec::new();
+            for (i, r) in self.queue.iter().enumerate() {
+                if Self::key(r) != Some(shape) {
+                    continue;
                 }
+                if now.saturating_duration_since(r.submitted) >= self.max_wait {
+                    aged.push(i);
+                } else if prefer.is_some_and(|p| &*r.spec.protein == p) {
+                    pref.push(i);
+                } else {
+                    rest.push(i);
+                }
+            }
+            let mut chosen: Vec<usize> =
+                aged.into_iter().chain(pref).chain(rest).take(max).collect();
+            chosen.sort_unstable();
+            chosen
+        };
+        let mut taken = Vec::with_capacity(chosen.len());
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for (i, r) in self.queue.drain(..).enumerate() {
+            if chosen.binary_search(&i).is_ok() {
+                taken.push(r);
             } else {
                 rest.push_back(r);
             }
         }
-        // once full, everything left keeps its order behind the leftovers
-        rest.extend(self.queue.drain(..));
         self.queue = rest;
         taken
     }
 
     /// Pop the next batch if one is ready (full, or oldest has waited long
     /// enough, or `flush` forces). Returns None when nothing should run yet.
+    /// A popped batch is shape-homogeneous: either one lockstep group's
+    /// worth of compatible requests or a run of non-lockstep requests.
     pub fn next_batch(&mut self, now: Instant, flush: bool) -> Option<Vec<GenRequest>> {
         let oldest = self.queue.front()?;
         let waited = now.saturating_duration_since(oldest.submitted);
@@ -154,34 +192,89 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Method;
+    use crate::coordinator::request::SeqSpec;
     use crate::decode::GenConfig;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
-    fn req(id: u64, protein: &str, method: Method, age_ms: u64) -> GenRequest {
+    fn spec(protein: &str, method: Method, c: usize, gamma: usize) -> SeqSpec {
+        // hand-built spec (tests bypass the registry); configs are given
+        // pre-normalized, like SeqSpec::resolve would produce
+        SeqSpec {
+            protein: Arc::from(protein),
+            method,
+            context: vec![1, 5, 9].into(),
+            table: None,
+            cfg: GenConfig { c, gamma, ..Default::default() },
+        }
+    }
+
+    fn req_shaped(
+        id: u64,
+        protein: &str,
+        method: Method,
+        c: usize,
+        gamma: usize,
+        age_ms: u64,
+    ) -> GenRequest {
         let (tx, _rx) = channel();
         // keep receiver alive by leaking; tests only inspect grouping
         std::mem::forget(_rx);
         GenRequest {
             id,
-            protein: protein.into(),
-            method,
-            cfg: GenConfig::default(),
+            spec: spec(protein, method, c, gamma),
             reply: tx,
             submitted: Instant::now() - Duration::from_millis(age_ms),
         }
     }
 
+    fn req(id: u64, protein: &str, method: Method, age_ms: u64) -> GenRequest {
+        req_shaped(id, protein, method, 3, 5, age_ms)
+    }
+
+    fn shape(c: usize, gamma: usize) -> LockstepShape {
+        LockstepShape { c, gamma }
+    }
+
     #[test]
-    fn groups_by_protein_and_method() {
+    fn groups_by_shape_across_proteins_and_methods() {
+        // the tentpole: different proteins — and mixed SpecMER/vanilla
+        // methods — with the same (c, gamma) share one batch
         let mut b = Batcher::new(8, Duration::from_millis(0));
-        b.push(req(1, "GFP", Method::SpecMer, 10));
-        b.push(req(2, "GB1", Method::SpecMer, 10));
-        b.push(req(3, "GFP", Method::SpecMer, 10));
+        b.push(req_shaped(1, "GFP", Method::SpecMer, 3, 5, 10));
+        b.push(req_shaped(2, "GB1", Method::SpecMer, 3, 5, 10));
+        b.push(req_shaped(3, "TEM1", Method::Speculative, 3, 5, 10));
+        let batch = b.next_batch(Instant::now(), false).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn different_shapes_do_not_mix() {
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        b.push(req_shaped(1, "GFP", Method::SpecMer, 3, 5, 10));
+        b.push(req_shaped(2, "GFP", Method::SpecMer, 3, 8, 10)); // gamma differs
+        b.push(req_shaped(3, "GFP", Method::SpecMer, 3, 5, 10));
         let batch = b.next_batch(Instant::now(), false).unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(b.len(), 1);
         let batch2 = b.next_batch(Instant::now(), false).unwrap();
         assert_eq!(batch2[0].id, 2);
+    }
+
+    #[test]
+    fn non_lockstep_requests_share_the_none_key() {
+        // baselines have no dispatch shape; they batch together (the
+        // engine loops them serially) but never with lockstep requests
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        b.push(req_shaped(1, "GFP", Method::TargetOnly, 1, 5, 10));
+        b.push(req_shaped(2, "GB1", Method::DraftOnly, 1, 5, 10));
+        b.push(req_shaped(3, "GFP", Method::SpecMer, 3, 5, 10));
+        let batch = b.next_batch(Instant::now(), false).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        let batch2 = b.next_batch(Instant::now(), false).unwrap();
+        assert_eq!(batch2[0].id, 3);
     }
 
     #[test]
@@ -200,9 +293,9 @@ mod tests {
     fn full_batch_fires_immediately() {
         let mut b = Batcher::new(2, Duration::from_secs(3600));
         b.push(req(1, "GFP", Method::SpecMer, 0));
-        b.push(req(2, "GFP", Method::SpecMer, 0));
+        b.push(req(2, "GB1", Method::SpecMer, 0));
         let batch = b.next_batch(Instant::now(), false).unwrap();
-        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.len(), 2, "cross-protein requests fill the batch");
     }
 
     #[test]
@@ -225,14 +318,14 @@ mod tests {
 
     #[test]
     fn cross_key_batches_pop_in_arrival_order() {
-        // interleaved keys: batches must come out headed by the oldest
+        // interleaved shapes: batches must come out headed by the oldest
         // remaining request, never reordered across keys
         let mut b = Batcher::new(8, Duration::from_millis(0));
-        b.push(req(1, "GFP", Method::SpecMer, 40));
-        b.push(req(2, "GB1", Method::SpecMer, 30));
-        b.push(req(3, "GFP", Method::SpecMer, 20));
-        b.push(req(4, "TEM1", Method::SpecMer, 10));
-        b.push(req(5, "GB1", Method::SpecMer, 5));
+        b.push(req_shaped(1, "GFP", Method::SpecMer, 3, 5, 40));
+        b.push(req_shaped(2, "GB1", Method::SpecMer, 3, 8, 30));
+        b.push(req_shaped(3, "GFP", Method::SpecMer, 3, 5, 20));
+        b.push(req_shaped(4, "TEM1", Method::SpecMer, 5, 5, 10));
+        b.push(req_shaped(5, "GB1", Method::SpecMer, 3, 8, 5));
         let heads: Vec<u64> = std::iter::from_fn(|| {
             b.next_batch(Instant::now(), false).map(|batch| batch[0].id)
         })
@@ -242,24 +335,24 @@ mod tests {
     }
 
     #[test]
-    fn minority_key_is_not_starved_by_a_flood() {
-        // 10 GFP requests around a single GB1: GB1 must be served as soon
-        // as it reaches the front, within a bounded number of polls
+    fn minority_shape_is_not_starved_by_a_flood() {
+        // 10 (3,5) requests around a single (3,8): the minority shape must
+        // be served as soon as it reaches the front, within bounded polls
         let mut b = Batcher::new(4, Duration::from_millis(0));
         for i in 0..5 {
-            b.push(req(i, "GFP", Method::SpecMer, 100));
+            b.push(req_shaped(i, "GFP", Method::SpecMer, 3, 5, 100));
         }
-        b.push(req(99, "GB1", Method::SpecMer, 60));
+        b.push(req_shaped(99, "GB1", Method::SpecMer, 3, 8, 60));
         for i in 5..10 {
-            b.push(req(i, "GFP", Method::SpecMer, 50));
+            b.push(req_shaped(i, "GFP", Method::SpecMer, 3, 5, 50));
         }
         let mut polls = 0;
         let mut minority_seen = 0;
         while !b.is_empty() {
             polls += 1;
-            assert!(polls <= 4, "minority key starved: {polls} polls and counting");
+            assert!(polls <= 4, "minority shape starved: {polls} polls and counting");
             let batch = b.next_batch(Instant::now(), false).unwrap();
-            minority_seen += batch.iter().filter(|r| r.protein == "GB1").count();
+            minority_seen += batch.iter().filter(|r| &*r.spec.protein == "GB1").count();
         }
         assert_eq!(minority_seen, 1, "minority request delivered exactly once");
     }
@@ -270,7 +363,8 @@ mod tests {
         let mut want: Vec<u64> = Vec::new();
         for i in 0..10u64 {
             let protein = ["GFP", "GB1", "TEM1"][(i % 3) as usize];
-            b.push(req(i, protein, Method::SpecMer, 0));
+            let gamma = [5usize, 8, 10][(i % 3) as usize];
+            b.push(req_shaped(i, protein, Method::SpecMer, 3, gamma, 0));
             want.push(i);
         }
         let mut got: Vec<u64> = Vec::new();
@@ -302,16 +396,15 @@ mod tests {
     }
 
     #[test]
-    fn take_compatible_pops_matching_in_arrival_order() {
+    fn take_compatible_pops_matching_shapes_across_proteins() {
         let mut b = Batcher::new(8, Duration::from_secs(3600));
-        b.push(req(1, "GFP", Method::SpecMer, 10));
-        b.push(req(2, "GB1", Method::SpecMer, 9));
-        b.push(req(3, "GFP", Method::SpecMer, 8));
-        b.push(req(4, "GFP", Method::Speculative, 7));
-        b.push(req(5, "GFP", Method::SpecMer, 6));
-        let all = |_: &GenRequest| true;
-        assert_eq!(b.peek_compatible("GFP", Method::SpecMer, &all), 3);
-        let got = b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 2, &all);
+        b.push(req_shaped(1, "GFP", Method::SpecMer, 3, 5, 10));
+        b.push(req_shaped(2, "GB1", Method::SpecMer, 3, 8, 9)); // wrong shape
+        b.push(req_shaped(3, "GB1", Method::SpecMer, 3, 5, 8)); // other protein, fits
+        b.push(req_shaped(4, "GFP", Method::Speculative, 1, 5, 7)); // wrong shape (c=1)
+        b.push(req_shaped(5, "GFP", Method::SpecMer, 3, 5, 6));
+        assert_eq!(b.peek_compatible(shape(3, 5)), 3);
+        let got = b.take_compatible(Instant::now(), shape(3, 5), 2, None);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(b.len(), 3, "non-matching and over-max requests stay queued");
         // the leftovers keep their arrival order
@@ -323,42 +416,65 @@ mod tests {
     }
 
     #[test]
-    fn take_compatible_respects_pred() {
+    fn take_compatible_prefers_majority_protein_when_oversubscribed() {
         let mut b = Batcher::new(8, Duration::from_secs(3600));
-        b.push(req(1, "GFP", Method::SpecMer, 10));
+        b.push(req(1, "GB1", Method::SpecMer, 10));
         b.push(req(2, "GFP", Method::SpecMer, 9));
-        let odd_only = |r: &GenRequest| r.id % 2 == 1;
-        let got = b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &odd_only);
-        assert_eq!(got.len(), 1);
-        assert_eq!(got[0].id, 1);
-        assert_eq!(b.len(), 1, "pred-rejected request stays queued");
+        b.push(req(3, "GB1", Method::SpecMer, 8));
+        b.push(req(4, "GFP", Method::SpecMer, 7));
+        // room for 2 of 4: the in-flight group's majority protein (GFP)
+        // wins the contested slots, arrival order preserved among taken
+        let got = b.take_compatible(Instant::now(), shape(3, 5), 2, Some("GFP"));
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert_eq!(b.len(), 2, "foreign-protein requests stay queued, not dropped");
+        // with room for everything, affinity must not reorder or filter
+        let got2 = b.take_compatible(Instant::now(), shape(3, 5), 8, Some("GFP"));
+        assert_eq!(got2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
     }
 
     #[test]
-    fn take_compatible_yields_to_aged_out_foreign_head() {
-        // an aged-out head of a *different* group blocks admission (the
+    fn affinity_never_starves_aged_foreign_proteins() {
+        let mut b = Batcher::new(8, Duration::from_millis(50));
+        b.push(req(1, "GB1", Method::SpecMer, 100)); // aged out, foreign
+        b.push(req(2, "GFP", Method::SpecMer, 10));
+        b.push(req(3, "GFP", Method::SpecMer, 9));
+        // one slot, preference GFP — but the aged-out GB1 request keeps
+        // arrival-order priority over the preferred protein
+        let got = b.take_compatible(Instant::now(), shape(3, 5), 1, Some("GFP"));
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn take_compatible_yields_to_aged_out_incompatible_head() {
+        // an aged-out head of a *different* shape blocks admission (the
         // in-flight group must not starve it further)...
         let mut b = Batcher::new(8, Duration::from_millis(50));
-        b.push(req(1, "GB1", Method::SpecMer, 100));
-        b.push(req(2, "GFP", Method::SpecMer, 100));
-        let all = |_: &GenRequest| true;
-        assert!(b.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &all).is_empty());
-        // ...but a still-fresh foreign head does not
+        b.push(req_shaped(1, "GB1", Method::SpecMer, 3, 8, 100));
+        b.push(req_shaped(2, "GFP", Method::SpecMer, 3, 5, 100));
+        assert!(b.take_compatible(Instant::now(), shape(3, 5), 8, None).is_empty());
+        // ...but a still-fresh incompatible head does not
         let mut b2 = Batcher::new(8, Duration::from_millis(50));
-        b2.push(req(3, "GB1", Method::SpecMer, 0));
-        b2.push(req(4, "GFP", Method::SpecMer, 0));
-        let got = b2.take_compatible(Instant::now(), "GFP", Method::SpecMer, 8, &all);
+        b2.push(req_shaped(3, "GB1", Method::SpecMer, 3, 8, 0));
+        b2.push(req_shaped(4, "GFP", Method::SpecMer, 3, 5, 0));
+        let got = b2.take_compatible(Instant::now(), shape(3, 5), 8, None);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
         assert_eq!(b2.len(), 1);
+        // an aged-out *compatible* head never blocks — whatever its protein
+        let mut b3 = Batcher::new(8, Duration::from_millis(50));
+        b3.push(req_shaped(5, "GB1", Method::SpecMer, 3, 5, 100));
+        let got = b3.take_compatible(Instant::now(), shape(3, 5), 8, Some("GFP"));
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
     }
 
     #[test]
-    fn different_methods_do_not_mix() {
-        let mut b = Batcher::new(8, Duration::from_millis(0));
-        b.push(req(1, "GFP", Method::Speculative, 10));
-        b.push(req(2, "GFP", Method::SpecMer, 10));
-        let batch = b.next_batch(Instant::now(), false).unwrap();
-        assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].id, 1);
+    fn probe_items_never_join_lockstep_admission() {
+        let mut b = Batcher::new(8, Duration::from_secs(3600));
+        let mut r = req(1, "GFP", Method::SpecMer, 10);
+        r.spec.cfg.probe_rate = 1.0; // sequential-path only
+        b.push(r);
+        b.push(req(2, "GFP", Method::SpecMer, 9));
+        let got = b.take_compatible(Instant::now(), shape(3, 5), 8, None);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.len(), 1, "probe item stays queued for the serial path");
     }
 }

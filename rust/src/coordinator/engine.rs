@@ -1,14 +1,23 @@
-//! The per-worker generation engine: backends + family registry + k-mer
-//! tables behind one object the scheduler and examples drive directly.
+//! The per-worker generation engine behind the [`SeqSpec`]-first API: a
+//! request is resolved **once** — family registry lookup, k-mer table
+//! `Arc` handle, config normalization — into a per-sequence scoring plan
+//! ([`GenEngine::spec`] / [`FamilyRegistry::spec`]), and every decode
+//! entry point (`generate`, `generate_batch`, `generate_continuous`) takes
+//! specs instead of `(protein, method, cfg)` tuples. Because the table and
+//! context ride on the spec, the batched paths group purely on the
+//! lockstep dispatch shape: one group may mix protein families and
+//! SpecMER/vanilla-speculative methods, and continuous admission splices
+//! any shape-compatible request into the in-flight group.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Config, Method};
-use crate::decode::{self, AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape};
+use crate::decode::{self, AdmitItem, GenConfig, GenOutput, LockstepShape};
 use crate::eval::PlddtScorer;
 use crate::kmer::KmerTable;
 use crate::msa::{self, FamilyMeta, Msa};
@@ -16,11 +25,17 @@ use crate::runtime::prefill_cache::PrefillCached;
 use crate::runtime::{CpuModel, HloModel, ModelBackend, Runtime};
 use crate::tokenizer::{self, BOS};
 
+use super::request::SeqSpec;
+
 /// Per-family state: metadata, MSA-derived k-mer table, context tokens.
+/// The name, table and context are shared handles so a [`SeqSpec`]
+/// resolution is a few `Arc` clones, not `String`/table/token copies.
 pub struct Family {
+    /// Canonical identifier (mirrors `meta.name`; lookups key on this).
+    pub name: Arc<str>,
     pub meta: FamilyMeta,
-    pub table: KmerTable,
-    pub context: Vec<u8>,
+    pub table: Arc<KmerTable>,
+    pub context: Arc<[u8]>,
     pub wt_tokens: Vec<u8>,
     pub msa: Msa,
 }
@@ -30,7 +45,14 @@ impl Family {
         let wt_tokens = tokenizer::encode(&meta.wild_type);
         let mut context = vec![BOS];
         context.extend(&wt_tokens[..meta.context.min(wt_tokens.len())]);
-        Family { table: KmerTable::build(&msa), context, wt_tokens, meta, msa }
+        Family {
+            name: Arc::from(meta.name.as_str()),
+            table: Arc::new(KmerTable::build(&msa)),
+            context: context.into(),
+            wt_tokens,
+            meta,
+            msa,
+        }
     }
 
     /// Max total token length for generation: BOS + wild-type + EOS.
@@ -43,15 +65,57 @@ impl Family {
     }
 }
 
+/// The one family lookup both resolvers (router-side registry, engine-side
+/// `GenEngine::family`) share — a single source of truth for name matching
+/// and the unknown-protein error.
+fn find_family<'a>(families: &'a [Arc<Family>], name: &str) -> Result<&'a Arc<Family>> {
+    families
+        .iter()
+        .find(|f| &*f.name == name)
+        .ok_or_else(|| anyhow!("unknown protein {name}"))
+}
+
+/// Shared family registry: the submission-side resolver for [`SeqSpec`]s.
+/// Loaded once per process and handed to the router *and* the worker
+/// engine factories, so families are resolved exactly once per request —
+/// workers never do a name lookup again.
+pub struct FamilyRegistry {
+    families: Vec<Arc<Family>>,
+}
+
+impl FamilyRegistry {
+    pub fn new(families: Vec<Arc<Family>>) -> FamilyRegistry {
+        FamilyRegistry { families }
+    }
+
+    /// Load every family from artifacts (families.json + msa/*.a2m).
+    pub fn load(artifacts: &Path) -> Result<FamilyRegistry> {
+        Ok(FamilyRegistry::new(load_families(artifacts)?))
+    }
+
+    pub fn families(&self) -> &[Arc<Family>] {
+        &self.families
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Arc<Family>> {
+        find_family(&self.families, name)
+    }
+
+    /// Resolve a request into its per-sequence scoring plan.
+    pub fn spec(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<SeqSpec> {
+        Ok(SeqSpec::resolve(self.get(protein)?, method, cfg, None))
+    }
+}
+
 /// Load every family from artifacts (families.json + msa/*.a2m).
-pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
+pub fn load_families(artifacts: &Path) -> Result<Vec<Arc<Family>>> {
     let metas = msa::load_families(&artifacts.join("families.json"))
         .map_err(|e| anyhow!("loading families.json from {}: {e:#}", artifacts.display()))?;
     metas
         .into_iter()
         .map(|meta| {
             let m = Msa::load(&artifacts.join("msa").join(format!("{}.a2m", meta.name)), &meta.name)?;
-            Ok(Family::from_msa(meta, m))
+            Ok(Arc::new(Family::from_msa(meta, m)))
         })
         .collect()
 }
@@ -59,69 +123,67 @@ pub fn load_families(artifacts: &Path) -> Result<Vec<Family>> {
 /// Where the worker's continuous-batching dispatch pulls new requests from
 /// and delivers finished ones to. The worker implements this over its
 /// batcher: `admit` is called at every draft/verify round boundary and may
-/// pop newly-queued compatible requests; `complete` fires the moment any
-/// sequence finishes, so clients are answered mid-flight.
+/// pop newly-queued shape-compatible requests — *any* protein or
+/// speculative method; `complete` fires the moment any sequence finishes,
+/// so clients are answered mid-flight.
 pub trait RequestSource {
     /// Called at each round boundary with the number of sequences still in
-    /// flight; returns `(ticket, cfg)` pairs to admit into the group.
-    fn admit(&mut self, active: usize) -> Vec<(u64, GenConfig)>;
+    /// flight; returns `(ticket, spec)` pairs to admit into the group.
+    fn admit(&mut self, active: usize) -> Vec<(u64, SeqSpec)>;
     /// Delivers one request's final result (exactly once per ticket).
     fn complete(&mut self, ticket: u64, result: Result<GenOutput>);
 }
 
 /// Object-safe engine interface used by the scheduler, server and benches.
+/// Decode entry points take resolved [`SeqSpec`]s; `spec` (and the router's
+/// registry) is where `(protein, method, cfg)` is resolved exactly once.
 pub trait GenEngine {
-    /// Generate one sequence for `protein` with `method`.
-    fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput>;
-    /// Generate a whole batcher batch (one `(protein, method)` key, one
-    /// config per request) in a single call, returning per-request results
-    /// in order. The default loops [`GenEngine::generate`]; `Engine`
-    /// overrides it to run lockstep-compatible requests (equal `(c, gamma)`
-    /// — sampling params are per-sequence) through
-    /// [`decode::speculative_generate_batch`] so one decode round serves
-    /// the whole batch.
-    fn generate_batch(
-        &self,
-        protein: &str,
-        method: Method,
-        cfgs: &[GenConfig],
-    ) -> Vec<Result<GenOutput>> {
-        cfgs.iter().map(|cfg| self.generate(protein, method, cfg)).collect()
+    /// Resolve a request into its per-sequence scoring plan (family
+    /// lookup, table handle, config normalization). Engines with table
+    /// overrides apply them here.
+    fn spec(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<SeqSpec> {
+        Ok(SeqSpec::resolve(self.family(protein)?, method, cfg, None))
     }
-    /// The lockstep dispatch shape `(protein, method, cfg)` would decode
-    /// under, if the engine can serve it on the continuous-batching path
-    /// (None → the request must go through [`GenEngine::generate_batch`]).
-    fn lockstep_shape(
-        &self,
-        protein: &str,
-        method: Method,
-        cfg: &GenConfig,
-    ) -> Option<LockstepShape> {
-        let _ = (protein, method, cfg);
+    /// Generate one sequence from a resolved spec.
+    fn generate(&self, spec: &SeqSpec) -> Result<GenOutput>;
+    /// Convenience for direct drivers (examples, experiments): resolve and
+    /// generate in one call.
+    fn generate_for(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput> {
+        self.generate(&self.spec(protein, method, cfg)?)
+    }
+    /// Generate a whole batcher batch in a single call, returning
+    /// per-request results in order. Specs may mix proteins and methods:
+    /// the default loops [`GenEngine::generate`]; `Engine` overrides it to
+    /// run lockstep-compatible specs (equal `(c, gamma)` — tables, contexts
+    /// and sampling params are per-sequence) through
+    /// [`decode::speculative_generate_batch`] so one decode round serves
+    /// the whole group.
+    fn generate_batch(&self, specs: &[SeqSpec]) -> Vec<Result<GenOutput>> {
+        specs.iter().map(|spec| self.generate(spec)).collect()
+    }
+    /// The lockstep dispatch shape `spec` would decode under, if the
+    /// engine can serve it on the continuous-batching path (None → the
+    /// request must go through [`GenEngine::generate_batch`]).
+    fn lockstep_shape(&self, spec: &SeqSpec) -> Option<LockstepShape> {
+        let _ = spec;
         None
     }
     /// Continuous batching: run one in-flight lockstep group of shape
     /// `shape`, consulting `source` at every round boundary for newly
-    /// arrived compatible requests and completing each the moment it
-    /// finishes. Returns when a boundary finds the group empty and the
-    /// source has nothing to admit. The default serves requests serially
-    /// (still re-polling the source between requests) for engines without
-    /// a lockstep decode path.
-    fn generate_continuous(
-        &self,
-        protein: &str,
-        method: Method,
-        shape: &LockstepShape,
-        source: &mut dyn RequestSource,
-    ) {
+    /// arrived shape-compatible requests — whatever their protein or
+    /// method — and completing each the moment it finishes. Returns when a
+    /// boundary finds the group empty and the source has nothing to admit.
+    /// The default serves requests serially (still re-polling the source
+    /// between requests) for engines without a lockstep decode path.
+    fn generate_continuous(&self, shape: &LockstepShape, source: &mut dyn RequestSource) {
         let _ = shape;
         loop {
             let items = source.admit(0);
             if items.is_empty() {
                 return;
             }
-            for (ticket, cfg) in items {
-                source.complete(ticket, self.generate(protein, method, &cfg));
+            for (ticket, spec) in items {
+                source.complete(ticket, self.generate(&spec));
             }
         }
     }
@@ -130,55 +192,42 @@ pub trait GenEngine {
     /// Target-model embedding of a token sequence.
     fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>>;
     /// Family registry.
-    fn families(&self) -> &[Family];
-    fn family(&self, name: &str) -> Result<&Family> {
-        self.families()
-            .iter()
-            .find(|f| f.meta.name == name)
-            .ok_or_else(|| anyhow!("unknown protein {name}"))
+    fn families(&self) -> &[Arc<Family>];
+    fn family(&self, name: &str) -> Result<&Arc<Family>> {
+        find_family(self.families(), name)
     }
-    /// Override the k-mer table used for a protein (App. C ablations).
-    fn set_table_override(&mut self, protein: &str, table: Option<KmerTable>);
+    /// Override the k-mer table used for a protein (App. C ablations);
+    /// applied by [`GenEngine::spec`] at resolution time.
+    fn set_table_override(&mut self, protein: &str, table: Option<Arc<KmerTable>>);
 }
 
 /// Generic engine over any backend pair.
 pub struct Engine<D: ModelBackend, T: ModelBackend> {
     pub draft: PrefillCached<D>,
     pub target: PrefillCached<T>,
-    families: Vec<Family>,
-    overrides: HashMap<String, KmerTable>,
-}
-
-/// Per-request config normalization shared by `generate`, `generate_batch`
-/// and the continuous-batching admission path: clamp max_len to the family
-/// and degrade `Speculative` to single-candidate drafting.
-fn normalized_cfg(cfg: &GenConfig, fam: &Family, method: Method) -> GenConfig {
-    let mut cfg = cfg.clone();
-    cfg.max_len = cfg.max_len.min(fam.max_len());
-    if method == Method::Speculative {
-        cfg.c = 1;
-    }
-    cfg
+    families: Vec<Arc<Family>>,
+    overrides: HashMap<String, Arc<KmerTable>>,
 }
 
 /// Adapts a worker's [`RequestSource`] to the decode layer's
-/// [`AdmissionHook`]: attaches the family context and normalizes each
-/// admitted config exactly like the non-continuous dispatch paths do.
+/// [`decode::AdmissionHook`]: specs arrive fully resolved, so this is a
+/// plain repack into owned [`AdmitItem`]s (context, config, table handle).
 struct SourceAdapter<'a> {
     source: &'a mut dyn RequestSource,
-    fam: &'a Family,
-    method: Method,
 }
 
-impl AdmissionHook for SourceAdapter<'_> {
+impl decode::AdmissionHook for SourceAdapter<'_> {
     fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
         self.source
             .admit(active)
             .into_iter()
-            .map(|(ticket, cfg)| AdmitItem {
+            .map(|(ticket, spec)| AdmitItem {
                 ticket,
-                context: self.fam.context.clone(),
-                cfg: normalized_cfg(&cfg, self.fam, self.method),
+                // the decode layer owns its copy (it becomes the output
+                // token buffer's prefix); the only context copy per request
+                context: spec.context.to_vec(),
+                cfg: spec.cfg,
+                table: spec.table,
             })
             .collect()
     }
@@ -189,7 +238,7 @@ impl AdmissionHook for SourceAdapter<'_> {
 }
 
 impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
-    pub fn new(draft: D, target: T, families: Vec<Family>) -> Engine<D, T> {
+    pub fn new(draft: D, target: T, families: Vec<Arc<Family>>) -> Engine<D, T> {
         Engine {
             draft: PrefillCached::new(draft),
             target: PrefillCached::new(target),
@@ -200,74 +249,64 @@ impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
 }
 
 impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
-    fn generate(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<GenOutput> {
+    fn spec(&self, protein: &str, method: Method, cfg: &GenConfig) -> Result<SeqSpec> {
         let fam = self.family(protein)?;
-        let cfg = normalized_cfg(cfg, fam, method);
-        match method {
-            Method::TargetOnly => decode::target_only_generate(&self.target, &fam.context, &cfg),
-            Method::DraftOnly => decode::target_only_generate(&self.draft, &fam.context, &cfg),
-            Method::Speculative => {
-                decode::speculative_generate(&self.draft, &self.target, None, &fam.context, &cfg)
+        Ok(SeqSpec::resolve(fam, method, cfg, self.overrides.get(protein)))
+    }
+
+    fn generate(&self, spec: &SeqSpec) -> Result<GenOutput> {
+        match spec.method {
+            Method::TargetOnly => {
+                decode::target_only_generate(&self.target, &spec.context, &spec.cfg)
             }
-            Method::SpecMer => {
-                let table = self.overrides.get(protein).unwrap_or(&fam.table);
-                decode::speculative_generate(
-                    &self.draft,
-                    &self.target,
-                    Some(table),
-                    &fam.context,
-                    &cfg,
-                )
+            Method::DraftOnly => {
+                decode::target_only_generate(&self.draft, &spec.context, &spec.cfg)
             }
+            Method::Speculative | Method::SpecMer => decode::speculative_generate(
+                &self.draft,
+                &self.target,
+                spec.table.as_deref(),
+                &spec.context,
+                &spec.cfg,
+            ),
         }
     }
 
-    fn generate_batch(
-        &self,
-        protein: &str,
-        method: Method,
-        cfgs: &[GenConfig],
-    ) -> Vec<Result<GenOutput>> {
-        // only the speculative methods have a lockstep path; baselines (and
-        // trivial batches) fall back to the serial loop
-        if cfgs.len() <= 1 || !matches!(method, Method::Speculative | Method::SpecMer) {
-            return cfgs.iter().map(|cfg| self.generate(protein, method, cfg)).collect();
+    fn generate_batch(&self, specs: &[SeqSpec]) -> Vec<Result<GenOutput>> {
+        if specs.len() <= 1 {
+            return specs.iter().map(|spec| self.generate(spec)).collect();
         }
-        let fam = match self.family(protein) {
-            Ok(f) => f,
-            Err(_) => {
-                return cfgs
-                    .iter()
-                    .map(|_| Err(anyhow!("unknown protein {protein}")))
-                    .collect()
+        let mut results: Vec<Option<Result<GenOutput>>> = (0..specs.len()).map(|_| None).collect();
+        // baselines and probe items have no lockstep decode: serial loop
+        let mut remaining: Vec<usize> = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.lockstep_shape().is_none() {
+                results[i] = Some(self.generate(spec));
+            } else {
+                remaining.push(i);
             }
-        };
-        let table = match method {
-            Method::SpecMer => Some(self.overrides.get(protein).unwrap_or(&fam.table)),
-            _ => None,
-        };
-        // normalize per-request configs exactly like `generate` does
-        let norm: Vec<GenConfig> =
-            cfgs.iter().map(|cfg| normalized_cfg(cfg, fam, method)).collect();
-        // group lockstep-compatible requests (equal dispatch shapes) and
-        // run each group as one batched decode; order is restored at the end
-        let compatible = |a: &GenConfig, b: &GenConfig| LockstepShape::of(a).admits(b);
-        let mut results: Vec<Option<Result<GenOutput>>> = (0..norm.len()).map(|_| None).collect();
-        let mut remaining: Vec<usize> = (0..norm.len()).collect();
+        }
+        // group shape-compatible specs — proteins and methods mix freely —
+        // and run each group as one batched decode; order restored at the end
         while let Some(&first) = remaining.first() {
+            let shape = specs[first].lockstep_shape();
             let group: Vec<usize> = remaining
                 .iter()
                 .copied()
-                .filter(|&i| compatible(&norm[i], &norm[first]))
+                .filter(|&i| specs[i].lockstep_shape() == shape)
                 .collect();
             remaining.retain(|i| !group.contains(i));
             let items: Vec<decode::SpecBatchItem<'_>> = group
                 .iter()
-                .map(|&i| decode::SpecBatchItem { context: &fam.context, cfg: &norm[i] })
+                .map(|&i| decode::SpecBatchItem {
+                    context: &specs[i].context,
+                    cfg: &specs[i].cfg,
+                    table: specs[i].table.clone(),
+                })
                 .collect();
             // per-item results: a single bad request fails alone, exactly
             // like the serial loop did
-            let outs = decode::speculative_generate_batch(&self.draft, &self.target, table, &items);
+            let outs = decode::speculative_generate_batch(&self.draft, &self.target, &items);
             for (&i, out) in group.iter().zip(outs) {
                 results[i] = Some(out);
             }
@@ -275,56 +314,13 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
         results.into_iter().map(|o| o.expect("every request answered")).collect()
     }
 
-    fn lockstep_shape(
-        &self,
-        protein: &str,
-        method: Method,
-        cfg: &GenConfig,
-    ) -> Option<LockstepShape> {
-        // only the speculative methods have a lockstep decode; probe items
-        // interleave extra dispatches and must take the sequential path
-        if !matches!(method, Method::Speculative | Method::SpecMer) || cfg.probe_rate > 0.0 {
-            return None;
-        }
-        let fam = self.family(protein).ok()?;
-        Some(LockstepShape::of(&normalized_cfg(cfg, fam, method)))
+    fn lockstep_shape(&self, spec: &SeqSpec) -> Option<LockstepShape> {
+        spec.lockstep_shape()
     }
 
-    fn generate_continuous(
-        &self,
-        protein: &str,
-        method: Method,
-        shape: &LockstepShape,
-        source: &mut dyn RequestSource,
-    ) {
-        let fam = match self.family(protein) {
-            Ok(f) => f,
-            Err(e) => {
-                // answer (not hang) everything the source still admits
-                let msg = format!("{e:#}");
-                loop {
-                    let items = source.admit(0);
-                    if items.is_empty() {
-                        return;
-                    }
-                    for (ticket, _) in items {
-                        source.complete(ticket, Err(anyhow!("{msg}")));
-                    }
-                }
-            }
-        };
-        let table = match method {
-            Method::SpecMer => Some(self.overrides.get(protein).unwrap_or(&fam.table)),
-            _ => None,
-        };
-        let mut hook = SourceAdapter { source, fam, method };
-        decode::speculative_generate_continuous(
-            &self.draft,
-            &self.target,
-            table,
-            *shape,
-            &mut hook,
-        );
+    fn generate_continuous(&self, shape: &LockstepShape, source: &mut dyn RequestSource) {
+        let mut hook = SourceAdapter { source };
+        decode::speculative_generate_continuous(&self.draft, &self.target, *shape, &mut hook);
     }
 
     fn score_nll(&self, tokens: &[u8]) -> Result<f64> {
@@ -335,11 +331,11 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
         self.target.embed(tokens)
     }
 
-    fn families(&self) -> &[Family] {
+    fn families(&self) -> &[Arc<Family>] {
         &self.families
     }
 
-    fn set_table_override(&mut self, protein: &str, table: Option<KmerTable>) {
+    fn set_table_override(&mut self, protein: &str, table: Option<Arc<KmerTable>>) {
         match table {
             Some(t) => {
                 self.overrides.insert(protein.to_string(), t);
@@ -351,9 +347,16 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
     }
 }
 
-/// Build the engine described by `Config` (HLO unless `--cpu-ref`).
+/// Build the engine described by `Config` (HLO unless `--cpu-ref`),
+/// loading its own family set from artifacts.
 pub fn build_engine(cfg: &Config) -> Result<Box<dyn GenEngine>> {
-    let families = load_families(&cfg.artifacts)?;
+    build_engine_with(cfg, load_families(&cfg.artifacts)?)
+}
+
+/// Build an engine around an already-loaded (shared) family set — the
+/// serving path hands every worker the same `Arc<Family>` handles the
+/// router resolves specs from, so families load once per process.
+pub fn build_engine_with(cfg: &Config, families: Vec<Arc<Family>>) -> Result<Box<dyn GenEngine>> {
     if cfg.cpu_ref {
         let manifest = crate::params::load_manifest(&cfg.artifacts)?;
         let d = crate::params::load_model(&cfg.artifacts, &cfg.draft_model)?;
@@ -389,13 +392,15 @@ pub fn engine_for_bench() -> (Box<dyn GenEngine>, bool) {
         Ok(e) => (e, true),
         Err(e) => {
             eprintln!("[bench] no artifacts ({e}); using synthetic engine");
-            (Box::new(synthetic_engine(3)), false)
+            (Box::new(synthetic_engine(3)) as Box<dyn GenEngine>, false)
         }
     }
 }
 
-/// A fully synthetic engine (no artifacts) for tests and CI smoke runs.
-pub fn synthetic_engine(seed: u64) -> Engine<CpuModel, CpuModel> {
+/// The synthetic family set backing [`synthetic_engine`] — also what test
+/// stacks hand to a [`FamilyRegistry`] so the router resolves against the
+/// exact same `Arc<Family>` data the workers decode with.
+pub fn synthetic_families(seed: u64) -> Vec<Arc<Family>> {
     let mut fams = Vec::new();
     for (i, (name, len, depth)) in
         [("SynA", 48usize, 40usize), ("SynB", 64, 40)].iter().enumerate()
@@ -411,11 +416,16 @@ pub fn synthetic_engine(seed: u64) -> Engine<CpuModel, CpuModel> {
             function: "synthetic".into(),
             wild_type: msa.wild_type.clone(),
         };
-        fams.push(Family::from_msa(meta, msa));
+        fams.push(Arc::new(Family::from_msa(meta, msa)));
     }
+    fams
+}
+
+/// A fully synthetic engine (no artifacts) for tests and CI smoke runs.
+pub fn synthetic_engine(seed: u64) -> Engine<CpuModel, CpuModel> {
     let draft = CpuModel::synthetic(2, 16, 2, 96, seed ^ 1);
     let target = CpuModel::synthetic(2, 24, 2, 96, seed ^ 2);
-    Engine::new(draft, target, fams)
+    Engine::new(draft, target, synthetic_families(seed))
 }
 
 #[cfg(test)]
@@ -427,28 +437,58 @@ mod tests {
         let eng = synthetic_engine(3);
         let cfg = GenConfig { max_len: 30, gamma: 5, c: 3, seed: 1, ..Default::default() };
         for method in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
-            let out = eng.generate("SynA", method, &cfg).unwrap();
+            let out = eng.generate_for("SynA", method, &cfg).unwrap();
             assert!(out.tokens.len() > out.context_len, "{method:?}");
         }
     }
 
     #[test]
-    fn unknown_protein_errors() {
+    fn unknown_protein_errors_at_resolution() {
         let eng = synthetic_engine(3);
-        assert!(eng.generate("Nope", Method::SpecMer, &GenConfig::default()).is_err());
+        assert!(eng.spec("Nope", Method::SpecMer, &GenConfig::default()).is_err());
+        assert!(eng.generate_for("Nope", Method::SpecMer, &GenConfig::default()).is_err());
+    }
+
+    #[test]
+    fn spec_resolves_table_and_normalizes_once() {
+        let eng = synthetic_engine(3);
+        let cfg = GenConfig { max_len: 10_000, gamma: 5, c: 3, seed: 1, ..Default::default() };
+        let s = eng.spec("SynA", Method::SpecMer, &cfg).unwrap();
+        assert_eq!(&*s.protein, "SynA");
+        assert!(s.table.is_some(), "SpecMER spec pins its family table");
+        assert!(
+            Arc::ptr_eq(s.table.as_ref().unwrap(), &eng.family("SynA").unwrap().table),
+            "spec shares the family table handle, no copy"
+        );
+        assert_eq!(s.cfg.max_len, eng.family("SynA").unwrap().max_len());
+        // Speculative normalizes to single-candidate drafting, no table
+        let sp = eng.spec("SynA", Method::Speculative, &cfg).unwrap();
+        assert_eq!(sp.cfg.c, 1);
+        assert!(sp.table.is_none());
+        // baselines have no lockstep shape; spec methods expose (c, gamma)
+        assert!(eng.spec("SynA", Method::TargetOnly, &cfg).unwrap().lockstep_shape().is_none());
+        let shape = s.lockstep_shape().unwrap();
+        assert_eq!((shape.c, shape.gamma), (3, 5));
     }
 
     #[test]
     fn table_override_changes_selection() {
         let mut eng = synthetic_engine(5);
         let cfg = GenConfig { max_len: 40, gamma: 5, c: 5, seed: 9, ..Default::default() };
-        let a = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        let a = eng.generate_for("SynA", Method::SpecMer, &cfg).unwrap();
         // override SynA's table with SynB's (cross-protein ablation)
         let other = eng.family("SynB").unwrap().table.clone();
-        eng.set_table_override("SynA", Some(other));
-        let b = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        eng.set_table_override("SynA", Some(other.clone()));
+        assert!(
+            Arc::ptr_eq(
+                eng.spec("SynA", Method::SpecMer, &cfg).unwrap().table.as_ref().unwrap(),
+                &other
+            ),
+            "override applied at spec resolution"
+        );
+        let b = eng.generate_for("SynA", Method::SpecMer, &cfg).unwrap();
         eng.set_table_override("SynA", None);
-        let c = eng.generate("SynA", Method::SpecMer, &cfg).unwrap();
+        let c = eng.generate_for("SynA", Method::SpecMer, &cfg).unwrap();
         assert_eq!(a.tokens, c.tokens, "override removal restores behaviour");
         // with same seed, the only difference is candidate selection; the
         // draws are identical so outputs differ only if selection differed
@@ -460,19 +500,36 @@ mod tests {
     // tests/batch_decode_equivalence.rs (public-API integration test)
 
     #[test]
-    fn generate_batch_unknown_protein_fails_every_request() {
+    fn generate_batch_mixes_proteins_and_methods() {
+        // the tentpole at the engine level: one batch, two proteins, two
+        // methods, one lockstep group per (c, gamma) — bitwise equal to
+        // per-request solo decodes
         let eng = synthetic_engine(3);
-        let cfgs = vec![GenConfig::default(), GenConfig::default()];
-        let batch = eng.generate_batch("Nope", Method::SpecMer, &cfgs);
-        assert_eq!(batch.len(), 2);
-        assert!(batch.iter().all(|r| r.is_err()));
+        let base = GenConfig { max_len: 26, gamma: 5, c: 1, seed: 0, ..Default::default() };
+        let mk = |protein: &str, method: Method, seed: u64| {
+            let mut c = base.clone();
+            c.seed = seed;
+            eng.spec(protein, method, &c).unwrap()
+        };
+        let specs = vec![
+            mk("SynA", Method::SpecMer, 1),
+            mk("SynB", Method::Speculative, 2),
+            mk("SynB", Method::SpecMer, 3),
+            mk("SynA", Method::Speculative, 4),
+        ];
+        let batch = eng.generate_batch(&specs);
+        for (i, (got, spec)) in batch.iter().zip(&specs).enumerate() {
+            let want = eng.generate(spec).unwrap();
+            let got = got.as_ref().expect("batched request failed");
+            assert_eq!(got.tokens, want.tokens, "mixed-key req {i} diverged");
+        }
     }
 
     #[test]
     fn max_len_clamped_to_family() {
         let eng = synthetic_engine(7);
         let cfg = GenConfig { max_len: 10_000, gamma: 5, c: 1, seed: 2, ..Default::default() };
-        let out = eng.generate("SynA", Method::Speculative, &cfg).unwrap();
+        let out = eng.generate_for("SynA", Method::Speculative, &cfg).unwrap();
         assert!(out.tokens.len() <= eng.family("SynA").unwrap().max_len());
     }
 
@@ -482,5 +539,22 @@ mod tests {
         let toks = eng.family("SynA").unwrap().context.clone();
         assert!(eng.score_nll(&toks).unwrap() > 0.0);
         assert_eq!(eng.embed(&toks).unwrap().len(), 24);
+    }
+
+    #[test]
+    fn registry_resolves_same_specs_as_engine() {
+        let fams = synthetic_families(3);
+        let reg = FamilyRegistry::new(fams.clone());
+        let eng = Engine::new(
+            CpuModel::synthetic(2, 16, 2, 96, 2),
+            CpuModel::synthetic(2, 24, 2, 96, 5),
+            fams,
+        );
+        let cfg = GenConfig { max_len: 30, gamma: 5, c: 3, seed: 1, ..Default::default() };
+        let a = reg.spec("SynB", Method::SpecMer, &cfg).unwrap();
+        let b = eng.spec("SynB", Method::SpecMer, &cfg).unwrap();
+        assert_eq!(a.context, b.context);
+        assert!(Arc::ptr_eq(a.table.as_ref().unwrap(), b.table.as_ref().unwrap()));
+        assert!(reg.spec("Nope", Method::SpecMer, &cfg).is_err());
     }
 }

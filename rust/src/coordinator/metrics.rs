@@ -26,6 +26,11 @@ pub struct Metrics {
     /// Requests spliced into an in-flight lockstep group at a round
     /// boundary (the continuous-batching path).
     pub admitted: AtomicU64,
+    /// Requests that rode a lockstep group whose anchor (first member) had
+    /// a *different* `(protein, method)` — the cross-tenant batching the
+    /// shape-keyed admission redesign unlocked. Under the old
+    /// `(protein, method)`-keyed batcher this counter could never move.
+    pub cross_key_admitted: AtomicU64,
     /// Worker engine-construction failures (each marks a dead worker that
     /// answers its queue with errors).
     pub engine_failures: AtomicU64,
@@ -35,6 +40,9 @@ pub struct Metrics {
     /// (Σ round seconds, Σ in-flight-sequences · round seconds) — the
     /// time-weighted occupancy gauge's denominator and numerator.
     round_time: Mutex<(f64, f64)>,
+    /// (finished lockstep groups, Σ distinct proteins per group) — the
+    /// distinct-proteins-per-group gauge's denominator and numerator.
+    group_mix: Mutex<(u64, u64)>,
     started: Mutex<Option<Instant>>,
 }
 
@@ -74,6 +82,34 @@ impl Metrics {
         self.admitted.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(1, Ordering::Relaxed);
         *self.queue_wait_seconds.lock().unwrap() += queue_wait_s;
+    }
+
+    /// Record one request that rode a lockstep group under a different
+    /// `(protein, method)` than the group's first member.
+    pub fn record_cross_key_admission(&self) {
+        self.cross_key_admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one finished lockstep group and how many distinct proteins
+    /// rode it over its lifetime (feeds the mix gauge).
+    pub fn record_group_mix(&self, distinct_proteins: usize) {
+        if distinct_proteins == 0 {
+            return;
+        }
+        let mut gm = self.group_mix.lock().unwrap();
+        gm.0 += 1;
+        gm.1 += distinct_proteins as u64;
+    }
+
+    /// Mean distinct proteins per lockstep group — 1.0 means groups are
+    /// still single-family; above 1.0 is cross-tenant batching at work.
+    pub fn group_distinct_proteins_avg(&self) -> f64 {
+        let gm = self.group_mix.lock().unwrap();
+        if gm.0 == 0 {
+            0.0
+        } else {
+            gm.1 as f64 / gm.0 as f64
+        }
     }
 
     /// Record a worker whose engine factory failed.
@@ -176,6 +212,8 @@ impl Metrics {
              specmer_batches_total {}\n\
              specmer_batch_occupancy_avg {:.3}\n\
              specmer_admitted_total {}\n\
+             specmer_cross_key_admitted_total {}\n\
+             specmer_group_distinct_proteins_avg {:.3}\n\
              specmer_engine_failures_total {}\n\
              specmer_occupancy_time_weighted {:.3}\n\
              specmer_queue_wait_seconds_total {:.4}\n\
@@ -197,6 +235,8 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
             self.admitted.load(Ordering::Relaxed),
+            self.cross_key_admitted.load(Ordering::Relaxed),
+            self.group_distinct_proteins_avg(),
             self.engine_failures.load(Ordering::Relaxed),
             self.occupancy_time_weighted(),
             self.queue_wait_total(),
@@ -267,6 +307,22 @@ mod tests {
         assert!((m.batch_occupancy() - 4.0).abs() < 1e-12);
         assert!((m.queue_wait_total() - 0.4).abs() < 1e-12);
         assert!(m.text_dump().contains("specmer_admitted_total 2"));
+    }
+
+    #[test]
+    fn cross_key_and_group_mix_gauges() {
+        let m = Metrics::new();
+        assert_eq!(m.group_distinct_proteins_avg(), 0.0);
+        m.record_cross_key_admission();
+        m.record_cross_key_admission();
+        m.record_group_mix(3); // one group saw 3 distinct proteins
+        m.record_group_mix(1); // one stayed single-family
+        m.record_group_mix(0); // empty groups don't skew the gauge
+        assert_eq!(m.cross_key_admitted.load(Ordering::Relaxed), 2);
+        assert!((m.group_distinct_proteins_avg() - 2.0).abs() < 1e-12);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_cross_key_admitted_total 2"));
+        assert!(dump.contains("specmer_group_distinct_proteins_avg 2.000"));
     }
 
     #[test]

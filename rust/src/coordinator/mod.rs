@@ -1,6 +1,7 @@
 //! L3 coordinator: the serving system around the decode engines —
-//! per-worker engines, dynamic batching, protein-affinity routing,
-//! metrics. See DESIGN.md §5 for the request path.
+//! per-worker engines, shape-keyed dynamic batching over per-sequence
+//! [`SeqSpec`] scoring plans, protein-affinity routing, metrics. See
+//! DESIGN.md §5 for the request path.
 
 pub mod batcher;
 pub mod engine;
@@ -10,10 +11,10 @@ pub mod router;
 pub mod scheduler;
 
 pub use engine::{
-    build_engine, engine_for_bench, load_families, synthetic_engine, Engine, Family, GenEngine,
-    RequestSource,
+    build_engine, build_engine_with, engine_for_bench, load_families, synthetic_engine,
+    synthetic_families, Engine, Family, FamilyRegistry, GenEngine, RequestSource,
 };
 pub use metrics::Metrics;
-pub use request::{GenRequest, GenResponse};
+pub use request::{GenRequest, GenResponse, SeqSpec};
 pub use router::Router;
 pub use scheduler::{EngineFactory, Scheduler};

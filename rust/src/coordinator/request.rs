@@ -1,17 +1,97 @@
-//! Request/response types flowing through the serving stack.
+//! Request/response types flowing through the serving stack, built around
+//! the per-sequence [`SeqSpec`] scoring plan: everything a worker needs to
+//! decode one sequence — family name, method, context tokens and the
+//! family's k-mer table as shared `Arc` handles, and the normalized
+//! decode config — resolved **once at submission** instead of re-looked-up
+//! stringly by `(protein, method)` at every layer. Because the table and
+//! context ride per sequence, batching and continuous admission key on the
+//! lockstep dispatch shape alone: requests for different proteins (and
+//! mixed SpecMER / vanilla-speculative methods) share decode rounds.
+
+use std::sync::Arc;
 
 use crate::config::Method;
-use crate::decode::{GenConfig, GenOutput};
+use crate::coordinator::engine::Family;
+use crate::decode::{GenConfig, GenOutput, LockstepShape};
+use crate::kmer::KmerTable;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+/// The fully-resolved per-sequence scoring plan. Constructed by
+/// [`SeqSpec::resolve`] (or the registry / engine helpers wrapping it);
+/// after that no layer needs the family registry again: the engine decodes
+/// straight from the spec, and the response shares the `Arc<str>` name
+/// instead of cloning a `String`.
+#[derive(Clone)]
+pub struct SeqSpec {
+    /// Family name (affinity routing, metrics, display). Shared handle —
+    /// cloning a spec or a response never copies the string.
+    pub protein: Arc<str>,
+    pub method: Method,
+    /// Context tokens (BOS + family context prefix) — a shared handle to
+    /// the family's immutable context, so cloning a spec (submission,
+    /// batch dispatch, admission) never copies the token buffer.
+    pub context: Arc<[u8]>,
+    /// This sequence's k-mer guidance table, resolved once at submission
+    /// (`None` for every non-SpecMER method).
+    pub table: Option<Arc<KmerTable>>,
+    /// Normalized decode config: `max_len` clamped to the family cap and
+    /// `Speculative` degraded to single-candidate drafting (`c = 1`).
+    pub cfg: GenConfig,
+}
+
+impl SeqSpec {
+    /// Resolve `(family, method, cfg)` into a spec: clamp `max_len` to the
+    /// family, normalize `Speculative` to `c = 1`, and pin the k-mer table
+    /// handle (`table_override` wins over the family's own table — the
+    /// App. C ablation hook).
+    pub fn resolve(
+        fam: &Family,
+        method: Method,
+        cfg: &GenConfig,
+        table_override: Option<&Arc<KmerTable>>,
+    ) -> SeqSpec {
+        let mut cfg = cfg.clone();
+        cfg.max_len = cfg.max_len.min(fam.max_len());
+        if method == Method::Speculative {
+            cfg.c = 1;
+        }
+        let table = match method {
+            Method::SpecMer => {
+                Some(table_override.cloned().unwrap_or_else(|| Arc::clone(&fam.table)))
+            }
+            _ => None,
+        };
+        SeqSpec {
+            protein: Arc::clone(&fam.name),
+            method,
+            context: Arc::clone(&fam.context),
+            table,
+            cfg,
+        }
+    }
+
+    /// The lockstep dispatch shape this sequence decodes under, if it can
+    /// ride the shared draft/verify pipeline at all: only the speculative
+    /// methods have a lockstep decode, and probe items interleave extra
+    /// dispatches so they must take the sequential path. This is the
+    /// batcher's *entire* grouping key — protein and method do not
+    /// partition traffic anymore.
+    pub fn lockstep_shape(&self) -> Option<LockstepShape> {
+        if !matches!(self.method, Method::Speculative | Method::SpecMer)
+            || self.cfg.probe_rate > 0.0
+        {
+            return None;
+        }
+        Some(LockstepShape::of(&self.cfg))
+    }
+}
+
 /// A single generation request (one sequence). Clients wanting N sequences
-/// submit N requests — the batcher groups them.
+/// submit N requests — the batcher groups them by dispatch shape.
 pub struct GenRequest {
     pub id: u64,
-    pub protein: String,
-    pub method: Method,
-    pub cfg: GenConfig,
+    pub spec: SeqSpec,
     /// Where to deliver the result.
     pub reply: Sender<GenResponse>,
     pub submitted: Instant,
@@ -20,7 +100,8 @@ pub struct GenRequest {
 /// Result of one request.
 pub struct GenResponse {
     pub id: u64,
-    pub protein: String,
+    /// Shared family-name handle (no per-response `String` clone).
+    pub protein: Arc<str>,
     pub method: Method,
     pub result: anyhow::Result<GenOutput>,
     /// End-to-end latency in seconds (queue + decode).

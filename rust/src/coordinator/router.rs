@@ -1,21 +1,31 @@
-//! Request router: protein-affinity placement with least-loaded fallback.
+//! Request router: resolves every request into its per-sequence
+//! [`SeqSpec`] **once at submission** (family registry lookup, k-mer table
+//! `Arc` handle, config normalization — unknown proteins are answered
+//! immediately instead of occupying a worker), then places it by
+//! protein-affinity with least-loaded fallback.
 //!
 //! Affinity keeps a protein's requests on the same worker so its k-mer
 //! table stays hot and the prefill memo hits (vLLM-router's cache-aware
-//! routing, adapted to per-family state). When the affinity target is
-//! overloaded relative to the least-loaded worker, the router spills.
+//! routing, adapted to per-family state) — it is a *placement* preference
+//! only: once queued, batching and admission are shape-keyed, so a
+//! worker's in-flight group happily mixes whatever proteins land on it.
+//! When the affinity target is overloaded relative to the least-loaded
+//! worker, the router spills.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::Method;
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::engine::FamilyRegistry;
+use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::scheduler::Scheduler;
 use crate::decode::GenConfig;
 
 pub struct Router {
     pub scheduler: Arc<Scheduler>,
+    /// Submission-side spec resolver (shared with the worker engines).
+    pub registry: Arc<FamilyRegistry>,
     next_id: AtomicU64,
     /// Spill when affinity worker has this many more queued than the min.
     pub spill_threshold: usize,
@@ -31,8 +41,8 @@ fn fnv1a(s: &str) -> u64 {
 }
 
 impl Router {
-    pub fn new(scheduler: Arc<Scheduler>) -> Router {
-        Router { scheduler, next_id: AtomicU64::new(1), spill_threshold: 4 }
+    pub fn new(scheduler: Arc<Scheduler>, registry: Arc<FamilyRegistry>) -> Router {
+        Router { scheduler, registry, next_id: AtomicU64::new(1), spill_threshold: 4 }
     }
 
     /// Pick a worker for `protein` (exposed for tests). Dead workers (a
@@ -63,27 +73,38 @@ impl Router {
         }
     }
 
-    /// Submit one request; returns its id.
+    /// Submit one request; returns its id. Resolution happens here —
+    /// workers receive a ready-to-decode [`crate::coordinator::SeqSpec`];
+    /// an unknown protein is answered with an error immediately.
     pub fn submit(
         &self,
         protein: &str,
         method: Method,
         cfg: GenConfig,
-        reply: std::sync::mpsc::Sender<crate::coordinator::request::GenResponse>,
+        reply: std::sync::mpsc::Sender<GenResponse>,
     ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let w = self.place(protein);
-        self.scheduler.submit_to(
-            w,
-            GenRequest {
-                id,
-                protein: protein.to_string(),
-                method,
-                cfg,
-                reply,
-                submitted: Instant::now(),
-            },
-        );
+        match self.registry.spec(protein, method, &cfg) {
+            Ok(spec) => {
+                let w = self.place(protein);
+                self.scheduler.submit_to(
+                    w,
+                    GenRequest { id, spec, reply, submitted: Instant::now() },
+                );
+            }
+            Err(e) => {
+                self.scheduler.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.scheduler.metrics.record_failure();
+                let _ = reply.send(GenResponse {
+                    id,
+                    protein: Arc::from(protein),
+                    method,
+                    result: Err(e),
+                    latency: 0.0,
+                    decode_seconds: 0.0,
+                });
+            }
+        }
         id
     }
 }
@@ -91,7 +112,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::{synthetic_engine, GenEngine};
+    use crate::coordinator::engine::{synthetic_engine, synthetic_families, GenEngine};
     use crate::coordinator::metrics::Metrics;
     use crate::coordinator::scheduler::EngineFactory;
     use std::sync::mpsc::channel;
@@ -107,7 +128,7 @@ mod tests {
             factory,
             Arc::new(Metrics::new()),
         ));
-        Router::new(sched)
+        Router::new(sched, Arc::new(FamilyRegistry::new(synthetic_families(3))))
     }
 
     #[test]
@@ -147,6 +168,20 @@ mod tests {
     }
 
     #[test]
+    fn unknown_protein_answered_at_submission() {
+        // spec resolution happens in the router now: a bad protein never
+        // occupies a worker and still gets exactly one error response
+        let r = router(1);
+        let (tx, rx) = channel();
+        r.submit("Nope", Method::SpecMer, GenConfig::default(), tx);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.result.is_err());
+        assert_eq!(&*resp.protein, "Nope");
+        assert_eq!(r.scheduler.metrics.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(r.scheduler.loads(), vec![0], "nothing was enqueued");
+    }
+
+    #[test]
     fn dead_workers_are_not_selected() {
         use std::sync::atomic::AtomicUsize;
 
@@ -180,7 +215,7 @@ mod tests {
         }
         assert_eq!(dead, 1, "exactly one worker should be dead: {:?}", sched.alive());
         let live = sched.alive().iter().position(|&a| a).unwrap();
-        let r = Router::new(sched);
+        let r = Router::new(sched, Arc::new(FamilyRegistry::new(synthetic_families(3))));
         for protein in ["GFP", "GB1", "TEM1", "SynA", "SynB"] {
             assert_eq!(r.place(protein), live, "{protein} routed to a dead worker");
         }
@@ -196,13 +231,19 @@ mod tests {
         let affinity = r.place("SynA");
         // flood that worker directly
         for seed in 0..12u64 {
+            let spec = r
+                .registry
+                .spec(
+                    "SynA",
+                    Method::SpecMer,
+                    &GenConfig { max_len: 30, seed, ..Default::default() },
+                )
+                .unwrap();
             r.scheduler.submit_to(
                 affinity,
                 GenRequest {
                     id: 1000 + seed,
-                    protein: "SynA".into(),
-                    method: Method::SpecMer,
-                    cfg: GenConfig { max_len: 30, seed, ..Default::default() },
+                    spec,
                     reply: tx.clone(),
                     submitted: Instant::now(),
                 },

@@ -3,15 +3,18 @@
 //! *inside* their worker thread from a Send factory), fed by per-worker
 //! batchers behind a mutex+condvar.
 //!
-//! Dispatch is **continuously batched** (vLLM-style): a popped batch whose
-//! head request has a lockstep decode shape runs through
+//! Dispatch is **continuously batched** (vLLM-style) and — since the
+//! [`SeqSpec`] redesign — **shape-keyed**: a popped batch whose requests
+//! have a lockstep dispatch shape runs through
 //! [`GenEngine::generate_continuous`], and at *every* draft/verify round
 //! boundary the worker re-polls its queue (under the existing mutex) and
-//! splices newly-arrived compatible requests into the in-flight group,
-//! while finished sequences are answered the moment they complete — so
-//! occupancy stays high under streaming arrivals instead of collapsing to
-//! run-to-completion. Mixed-shape leftovers, probe items and non-lockstep
-//! methods go through the plain [`GenEngine::generate_batch`] dispatch.
+//! splices newly-arrived shape-compatible requests into the in-flight
+//! group — *whatever their protein or method*, since each sequence carries
+//! its own k-mer table and context on its spec — while finished sequences
+//! are answered the moment they complete. Admission soft-prefers the
+//! group's majority protein (table/prefill locality) without starving
+//! foreign proteins. Baselines and probe items batch under the `None` key
+//! and go through the plain [`GenEngine::generate_batch`] dispatch.
 //! Queued and in-flight work are tracked separately (the router's
 //! least-loaded signal is their sum), a worker whose engine factory fails
 //! marks itself dead and answers its queue with errors instead of hanging
@@ -29,9 +32,9 @@ use anyhow::{anyhow, Result};
 use super::batcher::Batcher;
 use super::engine::{GenEngine, RequestSource};
 use super::metrics::Metrics;
-use super::request::{GenRequest, GenResponse};
+use super::request::{GenRequest, GenResponse, SeqSpec};
 use crate::config::Method;
-use crate::decode::{GenConfig, GenOutput};
+use crate::decode::GenOutput;
 
 /// Send-able engine constructor run inside each worker thread.
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn GenEngine>> + Send + Sync>;
@@ -167,10 +170,7 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
         }
     };
     // batcher limits are construction-time constants; read them once
-    let (max_batch, max_wait) = {
-        let b = shared.batcher.lock().unwrap();
-        (b.max_batch, b.max_wait)
-    };
+    let max_batch = shared.batcher.lock().unwrap().max_batch;
     loop {
         // wait for work or shutdown
         let batch = {
@@ -196,7 +196,7 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
         };
         shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
         shared.inflight.fetch_add(batch.len(), Ordering::Relaxed);
-        dispatch(&shared, engine.as_ref(), &metrics, batch, max_batch, max_wait);
+        dispatch(&shared, engine.as_ref(), &metrics, batch, max_batch);
     }
 }
 
@@ -214,8 +214,8 @@ fn drain_dead(shared: &WorkerShared, metrics: &Metrics, err: &str) {
                 let latency = req.submitted.elapsed().as_secs_f64();
                 let _ = req.reply.send(GenResponse {
                     id: req.id,
-                    protein: req.protein,
-                    method: req.method,
+                    protein: req.spec.protein,
+                    method: req.spec.method,
                     result: Err(anyhow!("worker engine unavailable: {err}")),
                     latency,
                     decode_seconds: 0.0,
@@ -229,83 +229,53 @@ fn drain_dead(shared: &WorkerShared, metrics: &Metrics, err: &str) {
     }
 }
 
-/// Dispatch one popped batch (a single `(protein, method)` key). Members
-/// sharing the head request's lockstep shape run on the continuous path —
-/// one in-flight group admitting newly-queued compatible requests at every
-/// round boundary; leftovers (mixed shapes, probe items) and non-lockstep
-/// methods take the plain batched dispatch afterwards.
+/// Dispatch one popped batch. The batcher keys batches by lockstep shape,
+/// so a popped batch is shape-homogeneous: if the engine can serve that
+/// shape it runs whole on the continuous path — one in-flight group
+/// admitting newly-queued shape-compatible requests (any protein, any
+/// speculative method) at every round boundary; otherwise (baselines,
+/// probe items, engines without a lockstep decode) it takes the plain
+/// batched dispatch.
 fn dispatch(
     shared: &WorkerShared,
     engine: &dyn GenEngine,
     metrics: &Metrics,
-    mut batch: Vec<GenRequest>,
+    batch: Vec<GenRequest>,
     max_batch: usize,
-    max_wait: Duration,
 ) {
-    let protein = batch[0].protein.clone();
-    let method = batch[0].method;
-    if let Some(shape) = engine.lockstep_shape(&protein, method, &batch[0].cfg) {
-        // raw-config compatibility with the *normalized* `(c, gamma)` shape
-        // (temp/top_p ride per-sequence): max_len clamping never affects
-        // the shape, and `Speculative` normalizes to c = 1, so raw `c` is
-        // normalized before the check; probe items need the sequential
-        // path and are never admitted
-        let compatible = move |cfg: &GenConfig| {
-            if cfg.probe_rate > 0.0 {
-                return false;
-            }
-            let mut norm = cfg.clone();
-            if method == Method::Speculative {
-                norm.c = 1;
-            }
-            shape.admits(&norm)
-        };
-        let (group, rest): (Vec<GenRequest>, Vec<GenRequest>) =
-            batch.into_iter().partition(|r| compatible(&r.cfg));
-        let now = Instant::now();
-        let queue_wait: f64 = group
-            .iter()
-            .map(|r| now.saturating_duration_since(r.submitted).as_secs_f64())
-            .sum();
-        metrics.record_batch(group.len(), queue_wait);
-        // fairness: popped leftovers wait for the group to drain, so new
-        // admissions must stop once the oldest leftover ages out — same
-        // guard `Batcher::take_compatible` applies to requests still queued
-        let admit_until = rest.iter().map(|r| r.submitted + max_wait).min();
-        let mut source = WorkerSource {
-            shared,
-            metrics,
-            protein: &protein,
-            method,
-            compatible: &compatible,
-            max_batch,
-            admit_until,
-            initial: group,
-            inflight: HashMap::new(),
-            next_ticket: 0,
-            last_boundary: Instant::now(),
-            round_active: 0,
-        };
-        engine.generate_continuous(&protein, method, &shape, &mut source);
-        // defensive: an engine that abandons the group must not hang clients
-        source.fail_remaining("continuous dispatch ended without answering");
-        batch = rest;
-        if batch.is_empty() {
-            return;
-        }
-    }
-
-    // plain batched dispatch; decode wall time is attributed evenly so
-    // per-request decode_seconds still sum to the wall time
     let now = Instant::now();
     let queue_wait: f64 = batch
         .iter()
         .map(|r| now.saturating_duration_since(r.submitted).as_secs_f64())
         .sum();
     metrics.record_batch(batch.len(), queue_wait);
-    let cfgs: Vec<_> = batch.iter().map(|r| r.cfg.clone()).collect();
+
+    if let Some(shape) = engine.lockstep_shape(&batch[0].spec) {
+        let mut source = WorkerSource {
+            shared,
+            metrics,
+            shape,
+            max_batch,
+            initial: batch,
+            inflight: HashMap::new(),
+            next_ticket: 0,
+            last_boundary: Instant::now(),
+            round_active: 0,
+            anchor: None,
+            distinct_proteins: Vec::new(),
+        };
+        engine.generate_continuous(&shape, &mut source);
+        // defensive: an engine that abandons the group must not hang clients
+        source.fail_remaining("continuous dispatch ended without answering");
+        metrics.record_group_mix(source.distinct_proteins.len());
+        return;
+    }
+
+    // plain batched dispatch; decode wall time is attributed evenly so
+    // per-request decode_seconds still sum to the wall time
+    let specs: Vec<SeqSpec> = batch.iter().map(|r| r.spec.clone()).collect();
     let t0 = Instant::now();
-    let mut results = engine.generate_batch(&protein, method, &cfgs);
+    let mut results = engine.generate_batch(&specs);
     // a length-mismatched result vector must never silently drop replies
     // (a client would hang forever): fail the remainder explicitly
     let got = results.len();
@@ -327,8 +297,8 @@ fn dispatch(
         }
         let _ = req.reply.send(GenResponse {
             id: req.id,
-            protein: req.protein,
-            method: req.method,
+            protein: req.spec.protein,
+            method: req.spec.method,
             result,
             latency,
             decode_seconds: per_req_decode,
@@ -339,22 +309,17 @@ fn dispatch(
 
 /// The worker's [`RequestSource`]: feeds the continuous-batching dispatch
 /// from the initial popped batch, then re-polls the batcher (under the
-/// worker mutex) at every round boundary for newly-arrived compatible
-/// requests, and answers each request the moment its sequence finishes.
-/// Also does the round bookkeeping: time-weighted occupancy and a
-/// per-request decode-seconds share (each round's wall time split evenly
-/// over the sequences that rode it).
+/// worker mutex) at every round boundary for newly-arrived shape-compatible
+/// requests — preferring the group's majority protein, never starving
+/// others — and answers each request the moment its sequence finishes.
+/// Also does the round bookkeeping: time-weighted occupancy, cross-key
+/// admission accounting, and a per-request decode-seconds share (each
+/// round's wall time split evenly over the sequences that rode it).
 struct WorkerSource<'a> {
     shared: &'a WorkerShared,
     metrics: &'a Metrics,
-    protein: &'a str,
-    method: Method,
-    compatible: &'a dyn Fn(&GenConfig) -> bool,
+    shape: crate::decode::LockstepShape,
     max_batch: usize,
-    /// Queue admission cutoff: once the oldest incompatible leftover of the
-    /// popped batch reaches its `max_wait` deadline, stop splicing new work
-    /// into the group so it can drain and the leftover can dispatch.
-    admit_until: Option<Instant>,
     /// Popped batch members, admitted at the first boundary.
     initial: Vec<GenRequest>,
     /// Unanswered requests by ticket, with their decode-seconds share.
@@ -363,6 +328,11 @@ struct WorkerSource<'a> {
     last_boundary: Instant,
     /// Sequences that rode the round now ending (set at each admit).
     round_active: usize,
+    /// `(protein, method)` of the group's first member: admissions under a
+    /// different key count toward `cross_key_admitted_total`.
+    anchor: Option<(Arc<str>, Method)>,
+    /// Every distinct protein that rode this group (gauge numerator).
+    distinct_proteins: Vec<Arc<str>>,
 }
 
 impl WorkerSource<'_> {
@@ -381,6 +351,32 @@ impl WorkerSource<'_> {
         }
     }
 
+    /// The group's majority protein among unanswered members — the soft
+    /// admission preference (k-mer table + prefill-cache locality).
+    fn majority_protein(&self) -> Option<Arc<str>> {
+        let mut counts: HashMap<&str, (usize, &Arc<str>)> = HashMap::new();
+        for (req, _) in self.inflight.values() {
+            let e = counts.entry(&req.spec.protein).or_insert((0, &req.spec.protein));
+            e.0 += 1;
+        }
+        counts.into_values().max_by_key(|(n, _)| *n).map(|(_, p)| Arc::clone(p))
+    }
+
+    /// Group-membership accounting for one request joining the group.
+    fn note_member(&mut self, req: &GenRequest) {
+        match &self.anchor {
+            None => self.anchor = Some((Arc::clone(&req.spec.protein), req.spec.method)),
+            Some((p, m)) => {
+                if **p != *req.spec.protein || *m != req.spec.method {
+                    self.metrics.record_cross_key_admission();
+                }
+            }
+        }
+        if !self.distinct_proteins.iter().any(|p| **p == *req.spec.protein) {
+            self.distinct_proteins.push(Arc::clone(&req.spec.protein));
+        }
+    }
+
     /// Fail everything the engine never answered — admitted tickets still
     /// in flight *and* initial members it never even admitted (defensive; a
     /// correct engine admits the whole batch and completes every ticket).
@@ -390,8 +386,8 @@ impl WorkerSource<'_> {
             let latency = req.submitted.elapsed().as_secs_f64();
             let _ = req.reply.send(GenResponse {
                 id: req.id,
-                protein: req.protein,
-                method: req.method,
+                protein: req.spec.protein,
+                method: req.spec.method,
                 result: Err(anyhow!("{why}")),
                 latency,
                 decode_seconds: 0.0,
@@ -406,21 +402,17 @@ impl WorkerSource<'_> {
 }
 
 impl RequestSource for WorkerSource<'_> {
-    fn admit(&mut self, active: usize) -> Vec<(u64, GenConfig)> {
+    fn admit(&mut self, active: usize) -> Vec<(u64, SeqSpec)> {
         self.charge_round();
-        // initial members first, then splice in whatever compatible work
-        // arrived while the group was decoding
+        // initial members first, then splice in whatever shape-compatible
+        // work arrived while the group was decoding
         let mut reqs = std::mem::take(&mut self.initial);
         let free = self.max_batch.saturating_sub(active + reqs.len());
-        let may_poll = match self.admit_until {
-            Some(deadline) => Instant::now() < deadline,
-            None => true,
-        };
-        if free > 0 && may_poll {
-            let pred = |r: &GenRequest| (self.compatible)(&r.cfg);
+        if free > 0 {
+            let prefer = self.majority_protein();
             let taken = {
                 let mut b = self.shared.batcher.lock().unwrap();
-                b.take_compatible(Instant::now(), self.protein, self.method, free, &pred)
+                b.take_compatible(Instant::now(), self.shape, free, prefer.as_deref())
             };
             if !taken.is_empty() {
                 self.shared.queued.fetch_sub(taken.len(), Ordering::Relaxed);
@@ -434,14 +426,15 @@ impl RequestSource for WorkerSource<'_> {
                 reqs.extend(taken);
             }
         }
-        let out: Vec<(u64, GenConfig)> = reqs
+        let out: Vec<(u64, SeqSpec)> = reqs
             .into_iter()
             .map(|r| {
+                self.note_member(&r);
                 let ticket = self.next_ticket;
                 self.next_ticket += 1;
-                let cfg = r.cfg.clone();
+                let spec = r.spec.clone();
                 self.inflight.insert(ticket, (r, 0.0));
-                (ticket, cfg)
+                (ticket, spec)
             })
             .collect();
         self.round_active = self.inflight.len();
@@ -463,8 +456,8 @@ impl RequestSource for WorkerSource<'_> {
         }
         let _ = req.reply.send(GenResponse {
             id: req.id,
-            protein: req.protein,
-            method: req.method,
+            protein: req.spec.protein,
+            method: req.spec.method,
             result,
             latency,
             decode_seconds: decode_s,
@@ -477,9 +470,29 @@ impl RequestSource for WorkerSource<'_> {
 mod tests {
     use super::*;
     use crate::config::Method;
-    use crate::coordinator::engine::synthetic_engine;
+    use crate::coordinator::engine::{synthetic_engine, synthetic_families, FamilyRegistry};
     use crate::decode::GenConfig;
     use std::sync::mpsc::channel;
+
+    fn registry() -> FamilyRegistry {
+        FamilyRegistry::new(synthetic_families(3))
+    }
+
+    fn request(
+        reg: &FamilyRegistry,
+        id: u64,
+        protein: &str,
+        method: Method,
+        cfg: GenConfig,
+        reply: std::sync::mpsc::Sender<GenResponse>,
+    ) -> GenRequest {
+        GenRequest {
+            id,
+            spec: reg.spec(protein, method, &cfg).unwrap(),
+            reply,
+            submitted: Instant::now(),
+        }
+    }
 
     fn sched(workers: usize) -> Scheduler {
         let factory: EngineFactory =
@@ -495,19 +508,20 @@ mod tests {
 
     #[test]
     fn processes_requests_and_replies() {
+        let reg = registry();
         let s = sched(1);
         let (tx, rx) = channel();
         for id in 0..4u64 {
             s.submit_to(
                 0,
-                GenRequest {
+                request(
+                    &reg,
                     id,
-                    protein: "SynA".into(),
-                    method: Method::SpecMer,
-                    cfg: GenConfig { max_len: 20, seed: id, ..Default::default() },
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                    "SynA",
+                    Method::SpecMer,
+                    GenConfig { max_len: 20, seed: id, ..Default::default() },
+                    tx.clone(),
+                ),
             );
         }
         let mut got: Vec<u64> = (0..4).map(|_| rx.recv_timeout(Duration::from_secs(30)).unwrap())
@@ -523,19 +537,20 @@ mod tests {
 
     #[test]
     fn multiple_workers_share_load() {
+        let reg = registry();
         let s = sched(2);
         let (tx, rx) = channel();
         for id in 0..6u64 {
             s.submit_to(
                 (id % 2) as usize,
-                GenRequest {
+                request(
+                    &reg,
                     id,
-                    protein: "SynA".into(),
-                    method: Method::Speculative,
-                    cfg: GenConfig { max_len: 16, seed: id, ..Default::default() },
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                    "SynA",
+                    Method::Speculative,
+                    GenConfig { max_len: 16, seed: id, ..Default::default() },
+                    tx.clone(),
+                ),
             );
         }
         for _ in 0..6 {
@@ -545,19 +560,20 @@ mod tests {
 
     #[test]
     fn batch_dispatch_records_occupancy() {
+        let reg = registry();
         let s = sched(1);
         let (tx, rx) = channel();
         for id in 0..4u64 {
             s.submit_to(
                 0,
-                GenRequest {
+                request(
+                    &reg,
                     id,
-                    protein: "SynA".into(),
-                    method: Method::SpecMer,
-                    cfg: GenConfig { max_len: 20, seed: id, ..Default::default() },
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                    "SynA",
+                    Method::SpecMer,
+                    GenConfig { max_len: 20, seed: id, ..Default::default() },
+                    tx.clone(),
+                ),
             );
         }
         for _ in 0..4 {
@@ -570,26 +586,6 @@ mod tests {
     }
 
     #[test]
-    fn unknown_protein_reports_error() {
-        let s = sched(1);
-        let (tx, rx) = channel();
-        s.submit_to(
-            0,
-            GenRequest {
-                id: 1,
-                protein: "Nope".into(),
-                method: Method::SpecMer,
-                cfg: GenConfig::default(),
-                reply: tx,
-                submitted: Instant::now(),
-            },
-        );
-        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-        assert!(r.result.is_err());
-        assert_eq!(s.metrics.failed.load(Ordering::Relaxed), 1);
-    }
-
-    #[test]
     fn shutdown_drains_cleanly() {
         let s = sched(2);
         drop(s); // must not hang
@@ -599,6 +595,7 @@ mod tests {
     fn failed_engine_factory_answers_every_request() {
         // reply senders must be dropped (with an error sent) — clients used
         // to hang forever when the factory failed
+        let reg = registry();
         let factory: EngineFactory = Arc::new(|| Err(anyhow!("no artifacts")));
         let metrics = Arc::new(Metrics::new());
         let s = Scheduler::start(1, 4, Duration::from_millis(1), factory, Arc::clone(&metrics));
@@ -606,14 +603,7 @@ mod tests {
         for id in 0..3u64 {
             s.submit_to(
                 0,
-                GenRequest {
-                    id,
-                    protein: "SynA".into(),
-                    method: Method::SpecMer,
-                    cfg: GenConfig::default(),
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                request(&reg, id, "SynA", Method::SpecMer, GenConfig::default(), tx.clone()),
             );
         }
         for _ in 0..3 {
@@ -628,27 +618,18 @@ mod tests {
     #[test]
     fn short_result_vector_fails_remainder_explicitly() {
         use crate::coordinator::engine::Family;
+        use crate::coordinator::request::SeqSpec;
         use crate::decode::GenOutput;
         use crate::kmer::KmerTable;
 
         // buggy engine: answers only the first request of any batch
         struct ShortEngine;
         impl GenEngine for ShortEngine {
-            fn generate(
-                &self,
-                _protein: &str,
-                _method: Method,
-                _cfg: &GenConfig,
-            ) -> Result<GenOutput> {
+            fn generate(&self, _spec: &SeqSpec) -> Result<GenOutput> {
                 Ok(GenOutput { tokens: vec![1, 5, 9], context_len: 1, ..Default::default() })
             }
-            fn generate_batch(
-                &self,
-                protein: &str,
-                method: Method,
-                cfgs: &[GenConfig],
-            ) -> Vec<Result<GenOutput>> {
-                vec![self.generate(protein, method, &cfgs[0])]
+            fn generate_batch(&self, specs: &[SeqSpec]) -> Vec<Result<GenOutput>> {
+                vec![self.generate(&specs[0])]
             }
             fn score_nll(&self, _tokens: &[u8]) -> Result<f64> {
                 Ok(0.0)
@@ -656,12 +637,13 @@ mod tests {
             fn embed(&self, _tokens: &[u8]) -> Result<Vec<f32>> {
                 Ok(Vec::new())
             }
-            fn families(&self) -> &[Family] {
+            fn families(&self) -> &[Arc<Family>] {
                 &[]
             }
-            fn set_table_override(&mut self, _protein: &str, _table: Option<KmerTable>) {}
+            fn set_table_override(&mut self, _protein: &str, _table: Option<Arc<KmerTable>>) {}
         }
 
+        let reg = registry();
         let factory: EngineFactory = Arc::new(|| Ok(Box::new(ShortEngine) as Box<dyn GenEngine>));
         let metrics = Arc::new(Metrics::new());
         let s = Scheduler::start(1, 4, Duration::from_millis(50), factory, Arc::clone(&metrics));
@@ -669,14 +651,7 @@ mod tests {
         for id in 0..3u64 {
             s.submit_to(
                 0,
-                GenRequest {
-                    id,
-                    protein: "SynA".into(),
-                    method: Method::TargetOnly,
-                    cfg: GenConfig::default(),
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                request(&reg, id, "SynA", Method::TargetOnly, GenConfig::default(), tx.clone()),
             );
         }
         let (mut ok, mut err) = (0, 0);
@@ -702,6 +677,7 @@ mod tests {
 
     #[test]
     fn loads_split_queued_and_inflight() {
+        let reg = registry();
         let factory: EngineFactory =
             Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
         let s = Scheduler::start(
@@ -715,14 +691,14 @@ mod tests {
         for id in 0..2u64 {
             s.submit_to(
                 0,
-                GenRequest {
+                request(
+                    &reg,
                     id,
-                    protein: "SynA".into(),
-                    method: Method::SpecMer,
-                    cfg: GenConfig { max_len: 16, seed: id, ..Default::default() },
-                    reply: tx.clone(),
-                    submitted: Instant::now(),
-                },
+                    "SynA",
+                    Method::SpecMer,
+                    GenConfig { max_len: 16, seed: id, ..Default::default() },
+                    tx.clone(),
+                ),
             );
         }
         // the batch can't fire (not full, not aged): the work must be
@@ -740,6 +716,7 @@ mod tests {
         // requests submitted while the worker is mid-decode get admitted
         // into the in-flight lockstep group at a round boundary; admission
         // must not perturb any request's token stream
+        let reg = registry();
         let s = sched(1);
         let (tx, rx) = channel();
         let mut cfgs: HashMap<u64, GenConfig> = HashMap::new();
@@ -754,17 +731,7 @@ mod tests {
                     ..Default::default()
                 };
                 cfgs.insert(id, cfg.clone());
-                s.submit_to(
-                    0,
-                    GenRequest {
-                        id,
-                        protein: "SynA".into(),
-                        method: Method::SpecMer,
-                        cfg,
-                        reply: tx.clone(),
-                        submitted: Instant::now(),
-                    },
-                );
+                s.submit_to(0, request(&reg, id, "SynA", Method::SpecMer, cfg, tx.clone()));
             }
             std::thread::sleep(Duration::from_millis(3));
         }
@@ -772,8 +739,56 @@ mod tests {
         for _ in 0..6 {
             let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             let got = r.result.expect("request failed");
-            let want = eng.generate(&r.protein, r.method, &cfgs[&r.id]).unwrap();
+            let want = eng.generate_for(&r.protein, r.method, &cfgs[&r.id]).unwrap();
             assert_eq!(got.tokens, want.tokens, "request {} diverged under admission", r.id);
         }
+    }
+
+    #[test]
+    fn mixed_protein_and_method_staggered_arrivals_bitwise_match() {
+        // the tentpole end-to-end: SynA and SynB requests — and mixed
+        // SpecMER/vanilla methods at the same (c, gamma) — stream into one
+        // worker, share in-flight lockstep groups via shape-keyed
+        // admission, and every token stream still matches its solo decode
+        let reg = registry();
+        let s = sched(1);
+        let (tx, rx) = channel();
+        let mut want: HashMap<u64, (String, Method, GenConfig)> = HashMap::new();
+        for wave in 0..3u64 {
+            for i in 0..2u64 {
+                let id = wave * 2 + i;
+                let protein = if id % 2 == 0 { "SynA" } else { "SynB" };
+                let method = if id % 3 == 0 { Method::Speculative } else { Method::SpecMer };
+                // c = 1 everywhere so both methods normalize to one shape
+                let cfg = GenConfig {
+                    max_len: 36,
+                    seed: id * 17 + 3,
+                    c: 1,
+                    gamma: 5,
+                    ..Default::default()
+                };
+                want.insert(id, (protein.to_string(), method, cfg.clone()));
+                s.submit_to(0, request(&reg, id, protein, method, cfg, tx.clone()));
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let eng = synthetic_engine(3);
+        for _ in 0..6 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let got = r.result.expect("request failed");
+            let (protein, method, cfg) = &want[&r.id];
+            assert_eq!(&*r.protein, protein.as_str());
+            let solo = eng.generate_for(protein, *method, cfg).unwrap();
+            assert_eq!(
+                got.tokens,
+                solo.tokens,
+                "request {} diverged under mixed-key admission",
+                r.id
+            );
+        }
+        // the whole point: requests crossed (protein, method) lines inside
+        // shared groups (batch splits are timing-dependent, so >= checks)
+        let cross = s.metrics.cross_key_admitted.load(Ordering::Relaxed);
+        assert!(cross >= 1, "no cross-key batching happened (cross={cross})");
     }
 }

@@ -13,7 +13,13 @@
 //! continuous batching ([`speculative_generate_continuous`]) — an
 //! [`AdmissionHook`] may splice newly-arrived compatible requests into the
 //! in-flight group at any boundary without perturbing resident sequences'
-//! RNG streams.
+//! RNG streams. Every per-sequence knob — context, seed, sampling params,
+//! and since the SeqSpec redesign the k-mer table itself — rides on the
+//! item ([`SpecBatchItem`]/[`AdmitItem`]), so a group may mix protein
+//! families and SpecMER/vanilla-speculative methods freely; only the
+//! dispatch shape `(c, gamma)` is shared.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -149,16 +155,22 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
     Ok(out)
 }
 
-/// One request of a lockstep batch: its context and decoding config.
+/// One request of a lockstep batch: its context, decoding config, and its
+/// *own* k-mer table handle (None for vanilla speculative decoding).
 ///
 /// Within one `speculative_generate_batch` call, `c` and `gamma` must match
 /// across items (they fix the dispatch shapes); seed, max_len, context,
-/// the k-mer selection knobs, and the sampling params (`temp`/`top_p` only
-/// gate each sequence's own `adjust_dist` rows) may differ freely. The
+/// the k-mer table, the selection knobs, and the sampling params
+/// (`temp`/`top_p` only gate each sequence's own `adjust_dist` rows) may
+/// differ freely — requests for *different protein families* (and mixed
+/// SpecMER / vanilla-speculative methods) share one lockstep group. The
 /// coordinator groups requests so the shape constraint always holds.
 pub struct SpecBatchItem<'a> {
     pub context: &'a [u8],
     pub cfg: &'a GenConfig,
+    /// K-mer guidance table for *this* sequence's family; selection always
+    /// scores a candidate block against its own family's statistics.
+    pub table: Option<Arc<KmerTable>>,
 }
 
 /// Generate B sequences with speculative decoding / SpecMER in lockstep:
@@ -181,20 +193,20 @@ pub struct SpecBatchItem<'a> {
 pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
     draft: &D,
     target: &T,
-    table: Option<&KmerTable>,
     items: &[SpecBatchItem<'_>],
 ) -> Vec<Result<GenOutput>> {
     let mut results: Vec<Option<Result<GenOutput>>> = (0..items.len()).map(|_| None).collect();
     let mut lock = Vec::new();
     for (i, it) in items.iter().enumerate() {
         if it.cfg.probe_rate > 0.0 {
-            results[i] = Some(speculative_generate(draft, target, table, it.context, it.cfg));
+            results[i] =
+                Some(speculative_generate(draft, target, it.table.as_deref(), it.context, it.cfg));
         } else {
             lock.push(i);
         }
     }
     if !lock.is_empty() {
-        for (i, out) in lock.iter().zip(lockstep_generate(draft, target, table, items, &lock)) {
+        for (i, out) in lock.iter().zip(lockstep_generate(draft, target, items, &lock)) {
             results[*i] = Some(out);
         }
     }
@@ -204,10 +216,13 @@ pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
 /// Dispatch-shape key of a lockstep group: the two knobs that fix the
 /// shapes of the shared draft/verify dispatches. Requests may share decode
 /// rounds iff `(c, gamma)` match; seed, `max_len`, context, the k-mer
-/// selection knobs — and the sampling params (`temp`/`top_p` only gate the
+/// *table* and selection knobs — per-sequence since the SeqSpec redesign,
+/// so different protein families and mixed SpecMER/vanilla methods splice
+/// into one group — and the sampling params (`temp`/`top_p` only gate the
 /// per-row `adjust_dist`, threaded per-sequence through
-/// [`DraftSeq`]/[`VerifySeq`]) — stay free per sequence.
-#[derive(Clone, Copy, Debug)]
+/// [`DraftSeq`]/[`VerifySeq`]) — stay free per sequence. `Eq`/`Hash` make
+/// the shape usable directly as the batcher's grouping key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct LockstepShape {
     pub c: usize,
     pub gamma: usize,
@@ -227,11 +242,14 @@ impl LockstepShape {
 /// One request joining an in-flight lockstep group. Owned (unlike
 /// [`SpecBatchItem`]): admitted requests outlive the caller's borrow of the
 /// round that admitted them. `ticket` is the caller's correlation key,
-/// echoed back through [`AdmissionHook::complete`].
+/// echoed back through [`AdmissionHook::complete`]. The table handle rides
+/// per item, so requests for different protein families join one group.
 pub struct AdmitItem {
     pub ticket: u64,
     pub context: Vec<u8>,
     pub cfg: GenConfig,
+    /// This sequence's k-mer table (None for vanilla speculative decoding).
+    pub table: Option<Arc<KmerTable>>,
 }
 
 /// Round-boundary admission control for continuous batching.
@@ -263,11 +281,10 @@ pub trait AdmissionHook {
 pub fn speculative_generate_continuous<D: ModelBackend, T: ModelBackend>(
     draft: &D,
     target: &T,
-    table: Option<&KmerTable>,
     shape: LockstepShape,
     hook: &mut dyn AdmissionHook,
 ) {
-    let mut group = LockstepGroup::new(draft, target, table, shape);
+    let mut group = LockstepGroup::new(draft, target, shape);
     loop {
         let items = hook.admit(group.active());
         let none_admitted = items.is_empty();
@@ -309,6 +326,9 @@ struct LockSeq<DC, TC> {
     eff_max: usize,
     /// Round-loop limit: eff_max further clamped by the KV hard cap.
     stop_at: usize,
+    /// This sequence's own family's k-mer table: selection in a mixed-
+    /// family group always scores a block against *its* MSA statistics.
+    table: Option<Arc<KmerTable>>,
     kset: crate::kmer::KmerSet,
     kmer_boundary: bool,
     // round scratch (kept across rounds to avoid per-round allocation)
@@ -335,6 +355,7 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
     ticket: u64,
     context: &[u8],
     cfg: &GenConfig,
+    table: Option<Arc<KmerTable>>,
     c: usize,
     gamma: usize,
     model_cap: usize,
@@ -358,6 +379,7 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
         top_p: cfg.top_p,
         eff_max,
         stop_at: eff_max.min(hard_cap),
+        table,
         kset: cfg.kset,
         kmer_boundary: cfg.kmer_boundary,
         committed: 0,
@@ -378,7 +400,6 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
 struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
     draft: &'m D,
     target: &'m T,
-    table: Option<&'m KmerTable>,
     shape: LockstepShape,
     model_cap: usize,
     seqs: Vec<LockSeq<D::Cache, T::Cache>>,
@@ -386,17 +407,11 @@ struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
 }
 
 impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
-    fn new(
-        draft: &'m D,
-        target: &'m T,
-        table: Option<&'m KmerTable>,
-        shape: LockstepShape,
-    ) -> Self {
+    fn new(draft: &'m D, target: &'m T, shape: LockstepShape) -> Self {
         let model_cap = target.maxlen().min(draft.maxlen());
         LockstepGroup {
             draft,
             target,
-            table,
             shape,
             model_cap,
             seqs: Vec::new(),
@@ -448,6 +463,7 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
             item.ticket,
             &item.context,
             &item.cfg,
+            item.table,
             self.shape.c,
             self.shape.gamma,
             self.model_cap,
@@ -501,10 +517,11 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
             }
         };
 
-        // ---- 2. per-sequence k-mer selection ----------------------------
+        // ---- 2. per-sequence k-mer selection (each against its *own*
+        //         family's table — groups may mix proteins and methods) ---
         for (s, block) in self.seqs.iter_mut().zip(&blocks) {
             s.draft_fed = s.committed;
-            s.sel = match (self.table, c) {
+            s.sel = match (s.table.as_deref(), c) {
                 (Some(t), cc) if cc > 1 => {
                     if s.kmer_boundary {
                         let tail_len = s.kset.kmax() - 1;
@@ -600,7 +617,6 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
 fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
     draft: &D,
     target: &T,
-    table: Option<&KmerTable>,
     items: &[SpecBatchItem<'_>],
     idxs: &[usize],
 ) -> Vec<Result<GenOutput>> {
@@ -620,13 +636,14 @@ fn lockstep_generate<D: ModelBackend, T: ModelBackend>(
         }
     }
 
-    let mut group = LockstepGroup::new(draft, target, table, shape);
+    let mut group = LockstepGroup::new(draft, target, shape);
     // per-item init: a bad config or failed prefill drops only that item
     for (slot, &i) in idxs.iter().enumerate() {
         group.admit(AdmitItem {
             ticket: slot as u64,
             context: items[i].context.to_vec(),
             cfg: items[i].cfg.clone(),
+            table: items[i].table.clone(),
         });
     }
     let mut results: Vec<Option<Result<GenOutput>>> = (0..idxs.len()).map(|_| None).collect();
@@ -863,7 +880,7 @@ mod tests {
         // the tentpole invariant at the decode level: B lockstep sequences
         // == B solo runs, token for token and stat for stat
         let (_prof, msa) = generate_family("T", 40, 30, 5);
-        let table = KmerTable::build(&msa);
+        let table = Arc::new(KmerTable::build(&msa));
         let d = CpuModel::synthetic(2, 16, 2, 64, 7);
         let t = CpuModel::synthetic(2, 16, 2, 64, 8);
         let ctxs: [&[u8]; 3] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13]];
@@ -879,9 +896,9 @@ mod tests {
         let items: Vec<SpecBatchItem<'_>> = ctxs
             .iter()
             .zip(&cfgs)
-            .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+            .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: Some(table.clone()) })
             .collect();
-        let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+        let batch = speculative_generate_batch(&d, &t, &items);
 
         assert_eq!(batch.len(), solo.len());
         for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
@@ -916,8 +933,8 @@ mod tests {
             .map(|c| speculative_generate(&d, &t, None, ctx, c).unwrap())
             .collect();
         let items: Vec<SpecBatchItem<'_>> =
-            cfgs.iter().map(|c| SpecBatchItem { context: ctx, cfg: c }).collect();
-        let batch = speculative_generate_batch(&d, &t, None, &items);
+            cfgs.iter().map(|c| SpecBatchItem { context: ctx, cfg: c, table: None }).collect();
+        let batch = speculative_generate_batch(&d, &t, &items);
         for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
             let got = got.as_ref().expect("mixed-sampling item failed");
             assert_eq!(got.tokens, want.tokens, "seq {b} diverged");
@@ -934,10 +951,10 @@ mod tests {
         let b = cfg(2, 8, 2); // different gamma: not lockstep-compatible
         let ctx: &[u8] = &[BOS, 5, 9];
         let items = [
-            SpecBatchItem { context: ctx, cfg: &a },
-            SpecBatchItem { context: ctx, cfg: &b },
+            SpecBatchItem { context: ctx, cfg: &a, table: None },
+            SpecBatchItem { context: ctx, cfg: &b, table: None },
         ];
-        let outs = speculative_generate_batch(&d, &t, None, &items);
+        let outs = speculative_generate_batch(&d, &t, &items);
         assert!(outs.iter().all(|r| r.is_err()), "shape mismatch is a caller bug");
     }
 
@@ -951,11 +968,11 @@ mod tests {
         bad.max_len = 3; // context length 3 >= max_len -> validate() fails
         let ctx: &[u8] = &[BOS, 5, 9];
         let items = [
-            SpecBatchItem { context: ctx, cfg: &good },
-            SpecBatchItem { context: ctx, cfg: &bad },
-            SpecBatchItem { context: ctx, cfg: &good },
+            SpecBatchItem { context: ctx, cfg: &good, table: None },
+            SpecBatchItem { context: ctx, cfg: &bad, table: None },
+            SpecBatchItem { context: ctx, cfg: &good, table: None },
         ];
-        let outs = speculative_generate_batch(&d, &t, None, &items);
+        let outs = speculative_generate_batch(&d, &t, &items);
         assert!(outs[0].is_ok(), "{:?}", outs[0].as_ref().err());
         assert!(outs[1].is_err());
         assert!(outs[2].is_ok());
@@ -967,7 +984,7 @@ mod tests {
     #[test]
     fn batch_splices_probe_items_through_sequential_path() {
         let (_prof, msa) = generate_family("T", 40, 30, 5);
-        let table = KmerTable::build(&msa);
+        let table = Arc::new(KmerTable::build(&msa));
         let d = CpuModel::synthetic(2, 16, 2, 64, 7);
         let t = CpuModel::synthetic(2, 16, 2, 64, 8);
         let mut probing = cfg(3, 5, 17);
@@ -975,10 +992,10 @@ mod tests {
         let plain = cfg(3, 5, 19);
         let ctx: &[u8] = &[BOS, 5, 9];
         let items = [
-            SpecBatchItem { context: ctx, cfg: &probing },
-            SpecBatchItem { context: ctx, cfg: &plain },
+            SpecBatchItem { context: ctx, cfg: &probing, table: Some(table.clone()) },
+            SpecBatchItem { context: ctx, cfg: &plain, table: Some(table.clone()) },
         ];
-        let outs = speculative_generate_batch(&d, &t, Some(&table), &items);
+        let outs = speculative_generate_batch(&d, &t, &items);
         let probed = outs[0].as_ref().unwrap();
         assert!(!probed.probes.is_empty(), "probe item must still probe");
         let want = speculative_generate(&d, &t, Some(&table), ctx, &plain).unwrap();
@@ -1019,13 +1036,19 @@ mod tests {
                 .enumerate()
                 .map(|(i, c)| {
                     // second request arrives a round boundary after the first
-                    (i, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: c.clone() })
+                    let item = AdmitItem {
+                        ticket: i as u64,
+                        context: ctx.to_vec(),
+                        cfg: c.clone(),
+                        table: None,
+                    };
+                    (i, item)
                 })
                 .collect(),
             boundary: 0,
             done: Vec::new(),
         };
-        speculative_generate_continuous(&d, &t, None, LockstepShape::of(&cfgs[0]), &mut hook);
+        speculative_generate_continuous(&d, &t, LockstepShape::of(&cfgs[0]), &mut hook);
         assert_eq!(hook.done.len(), 2, "every admitted request completed");
         hook.done.sort_by_key(|(t, _)| *t);
         for (i, (ticket, got)) in hook.done.iter().enumerate() {
@@ -1045,14 +1068,14 @@ mod tests {
         let ctx: &[u8] = &[BOS, 5, 9];
         let mut hook = Scripted {
             pending: vec![
-                (0, AdmitItem { ticket: 0, context: ctx.to_vec(), cfg: good.clone() }),
-                (1, AdmitItem { ticket: 1, context: ctx.to_vec(), cfg: bad }),
-                (1, AdmitItem { ticket: 2, context: ctx.to_vec(), cfg: probing }),
+                (0, AdmitItem { ticket: 0, context: ctx.to_vec(), cfg: good.clone(), table: None }),
+                (1, AdmitItem { ticket: 1, context: ctx.to_vec(), cfg: bad, table: None }),
+                (1, AdmitItem { ticket: 2, context: ctx.to_vec(), cfg: probing, table: None }),
             ],
             boundary: 0,
             done: Vec::new(),
         };
-        speculative_generate_continuous(&d, &t, None, LockstepShape::of(&good), &mut hook);
+        speculative_generate_continuous(&d, &t, LockstepShape::of(&good), &mut hook);
         assert_eq!(hook.done.len(), 3);
         hook.done.sort_by_key(|(t, _)| *t);
         assert!(hook.done[0].1.is_ok(), "resident sequence unaffected");

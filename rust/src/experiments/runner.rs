@@ -122,19 +122,21 @@ pub fn run_cell(
     let mut accepts = Vec::with_capacity(n);
     let mut decode_seconds = 0.0;
     let mut tokens = 0usize;
+    // resolve the scoring plan once for the whole cell; per-sequence runs
+    // only vary the seed
+    let mut spec = engine.spec(protein, method, cfg)?;
     // warmup: first use of a (c, gamma) program pair compiles it (~1s);
     // keep that out of the timed region so toks/sec reflects steady state.
     {
-        let mut w = cfg.clone();
-        w.seed = base_seed ^ 0xDEAD_BEEF;
-        w.max_len = w.max_len.min(40);
-        let _ = engine.generate(protein, method, &w)?;
+        let mut w = spec.clone();
+        w.cfg.seed = base_seed ^ 0xDEAD_BEEF;
+        w.cfg.max_len = w.cfg.max_len.min(40);
+        let _ = engine.generate(&w)?;
     }
     for i in 0..n {
-        let mut c = cfg.clone();
-        c.seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(i as u64);
+        spec.cfg.seed = base_seed.wrapping_mul(0x9E37_79B9).wrapping_add(i as u64);
         let t0 = Instant::now();
-        let out = engine.generate(protein, method, &c)?;
+        let out = engine.generate(&spec)?;
         decode_seconds += t0.elapsed().as_secs_f64();
         tokens += out.new_tokens();
         if method != Method::TargetOnly {

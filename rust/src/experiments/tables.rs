@@ -357,7 +357,7 @@ pub fn table8(engine: &mut Box<dyn GenEngine>, opts: &ExpOpts) -> Result<()> {
     if let Some(p) = deep {
         run_one(engine.as_ref(), &cfg, opts, k20, format!("{p} + full-depth MSA"), &p, &mut sink)?;
         let shallow = engine.family(&p)?.msa.subsample(100, 7);
-        engine.set_table_override(&p, Some(KmerTable::build(&shallow)));
+        engine.set_table_override(&p, Some(std::sync::Arc::new(KmerTable::build(&shallow))));
         run_one(engine.as_ref(), &cfg, opts, k20, format!("{p} + depth-100 MSA"), &p, &mut sink)?;
         engine.set_table_override(&p, None);
     }

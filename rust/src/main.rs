@@ -78,10 +78,11 @@ fn cmd_generate(args: &Args, cfg: &Config) -> Result<()> {
     let mut fasta = String::new();
     let t0 = std::time::Instant::now();
     let mut tokens = 0usize;
+    // resolve the per-sequence scoring plan once; only the seed varies
+    let mut spec = engine.spec(&protein, method, &cfg.gen)?;
     for i in 0..n {
-        let mut g = cfg.gen.clone();
-        g.seed = cfg.gen.seed.wrapping_add(i as u64);
-        let out = engine.generate(&protein, method, &g)?;
+        spec.cfg.seed = cfg.gen.seed.wrapping_add(i as u64);
+        let out = engine.generate(&spec)?;
         let nll = engine.score_nll(&out.tokens)?;
         tokens += out.new_tokens();
         fasta.push_str(&format!(
@@ -109,8 +110,13 @@ fn cmd_generate(args: &Args, cfg: &Config) -> Result<()> {
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let _ = args;
     let metrics = Arc::new(Metrics::new());
+    // families load once; the router resolves specs from the same
+    // Arc<Family> handles the worker engines decode with
+    let registry = Arc::new(specmer::coordinator::FamilyRegistry::load(&cfg.artifacts)?);
     let cfg2 = cfg.clone();
-    let factory: specmer::coordinator::EngineFactory = Arc::new(move || build_engine(&cfg2));
+    let reg2 = Arc::clone(&registry);
+    let factory: specmer::coordinator::EngineFactory =
+        Arc::new(move || specmer::coordinator::build_engine_with(&cfg2, reg2.families().to_vec()));
     let sched = Arc::new(Scheduler::start(
         cfg.workers,
         cfg.max_batch,
@@ -118,7 +124,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         factory,
         Arc::clone(&metrics),
     ));
-    let router = Arc::new(Router::new(sched));
+    let router = Arc::new(Router::new(sched, registry));
     let handle = specmer::server::serve(cfg, router, metrics)?;
     println!(
         "specmer serving on http://{} ({} workers, artifacts={})",

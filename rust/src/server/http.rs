@@ -1,25 +1,33 @@
 //! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`.
 //!
-//! Request path (DESIGN.md §5, extended by the continuously-batched
-//! serving path): a client `POST /generate` with `n` sequences fans out
-//! into `n` single-sequence requests through the [`Router`], which places
-//! them on a *live* worker by protein affinity (spilling to the
+//! Request path (DESIGN.md §5, extended by the continuously-batched,
+//! shape-keyed serving path): a client `POST /generate` with `n` sequences
+//! fans out into `n` single-sequence requests through the [`Router`],
+//! which resolves each into a per-sequence `SeqSpec` **once at
+//! submission** — family registry lookup, shared `Arc` k-mer table
+//! handle, normalized config; unknown proteins are answered immediately —
+//! and places it on a *live* worker by protein affinity (spilling to the
 //! least-loaded worker — judged on queued *plus* in-flight work — under
 //! imbalance; workers whose engine failed to build answer with errors and
-//! are skipped). Each worker's `Batcher` groups queued requests by
-//! `(protein, method)`, and speculative-method batches run as an in-flight
-//! lockstep group with **continuous batching**: at every draft/verify
-//! round boundary the worker re-polls its queue and admits newly-arrived
-//! lockstep-compatible requests (equal `c`, `gamma`, `temp`, `top_p`;
-//! seeds and `max_len` free) into the group, while finished sequences are
-//! answered the moment they complete. Each round issues one batched draft
-//! dispatch of `[B·c, D]` rows and one ragged verify over all active
-//! sequences; per-sequence RNG state keeps every response
+//! are skipped). Each worker's `Batcher` groups queued requests purely by
+//! **lockstep dispatch shape** `(c, gamma)` — *not* by
+//! `(protein, method)` — and shape batches run as an in-flight lockstep
+//! group with **continuous batching**: at every draft/verify round
+//! boundary the worker re-polls its queue and admits newly-arrived
+//! shape-compatible requests into the group, whatever their protein
+//! family or speculative method (each sequence scores candidates against
+//! its own table riding on its spec; admission soft-prefers the group's
+//! majority protein without starving others), while finished sequences
+//! are answered the moment they complete. Baselines and probe items stay
+//! on their separate non-drafting serial path. Each round issues one
+//! batched draft dispatch of `[B·c, D]` rows and one ragged verify over
+//! all active sequences; per-sequence RNG state keeps every response
 //! bitwise-identical to an unbatched run with the same seed, admissions
 //! included. Responses are collected per request and folded into one JSON
-//! reply; `GET /metrics` exposes batch occupancy, admission counts, the
-//! time-weighted occupancy gauge, queue-wait and decode seconds alongside
-//! the acceptance/throughput counters.
+//! reply; `GET /metrics` exposes batch occupancy, admission counts
+//! (including `cross_key_admitted_total` and the distinct-proteins-per-
+//! group gauge), the time-weighted occupancy gauge, queue-wait and decode
+//! seconds alongside the acceptance/throughput counters.
 //!
 //! The protocol subset is deliberately small: one request per connection
 //! (`Connection: close`), Content-Length bodies only — enough for any HTTP
@@ -226,7 +234,9 @@ fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::{synthetic_engine, GenEngine};
+    use crate::coordinator::engine::{
+        synthetic_engine, synthetic_families, FamilyRegistry, GenEngine,
+    };
     use crate::coordinator::Scheduler;
     use crate::coordinator::scheduler::EngineFactory;
 
@@ -241,7 +251,8 @@ mod tests {
             factory,
             Arc::clone(&metrics),
         ));
-        let router = Arc::new(Router::new(sched));
+        let registry = Arc::new(FamilyRegistry::new(synthetic_families(3)));
+        let router = Arc::new(Router::new(sched, registry));
         let cfg = Config { port: 0, ..Default::default() };
         let h = serve(&cfg, router, Arc::clone(&metrics)).unwrap();
         (h, metrics)

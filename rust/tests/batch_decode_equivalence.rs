@@ -7,6 +7,8 @@
 //! arena, per-sequence RNG streams, and mid-flight drop-out of finished
 //! sequences.
 
+use std::sync::Arc;
+
 use specmer::coordinator::engine::synthetic_engine;
 use specmer::coordinator::GenEngine;
 use specmer::config::Method;
@@ -36,7 +38,7 @@ fn cfg(c: usize, gamma: usize, seed: u64, max_len: usize) -> GenConfig {
 #[test]
 fn lockstep_b4_mixed_lengths_equals_sequential() {
     let (_prof, msa) = generate_family("T", 40, 30, 5);
-    let table = KmerTable::build(&msa);
+    let table = Arc::new(KmerTable::build(&msa));
     // distinct draft/target so rejections and corrections actually occur
     let d = CpuModel::synthetic(2, 16, 2, 96, 7);
     let t = CpuModel::synthetic(2, 16, 2, 96, 8);
@@ -62,9 +64,9 @@ fn lockstep_b4_mixed_lengths_equals_sequential() {
     let items: Vec<SpecBatchItem<'_>> = ctxs
         .iter()
         .zip(&cfgs)
-        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: Some(table.clone()) })
         .collect();
-    let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+    let batch = speculative_generate_batch(&d, &t, &items);
 
     // the mixed max_lens must actually produce mixed-length outputs, or the
     // drop-out path was never exercised
@@ -106,9 +108,9 @@ fn lockstep_c1_no_table_equals_sequential() {
     let items: Vec<SpecBatchItem<'_>> = ctxs
         .iter()
         .zip(&cfgs)
-        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: None })
         .collect();
-    let batch = speculative_generate_batch(&d, &t, None, &items);
+    let batch = speculative_generate_batch(&d, &t, &items);
     for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
         assert_eq!(got.as_ref().unwrap().tokens, want.tokens, "seq {b} diverged");
     }
@@ -125,8 +127,7 @@ fn lockstep_b1_is_the_sequential_engine() {
     let got = speculative_generate_batch(
         &d,
         &t,
-        None,
-        &[SpecBatchItem { context: ctx, cfg: &c }],
+        &[SpecBatchItem { context: ctx, cfg: &c, table: None }],
     );
     assert_eq!(got.len(), 1);
     let out = got[0].as_ref().unwrap();
@@ -168,7 +169,7 @@ impl AdmissionHook for Scripted {
 #[test]
 fn round_boundary_admission_equals_sequential() {
     let (_prof, msa) = generate_family("T", 40, 30, 5);
-    let table = KmerTable::build(&msa);
+    let table = Arc::new(KmerTable::build(&msa));
     // distinct draft/target so rejections and corrections actually occur
     let d = CpuModel::synthetic(2, 16, 2, 96, 7);
     let t = CpuModel::synthetic(2, 16, 2, 96, 8);
@@ -201,14 +202,20 @@ fn round_boundary_admission_equals_sequential() {
             .zip(ctxs.iter().zip(&cfgs))
             .enumerate()
             .map(|(i, (&at, (ctx, cfg)))| {
-                (at, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: cfg.clone() })
+                let item = AdmitItem {
+                    ticket: i as u64,
+                    context: ctx.to_vec(),
+                    cfg: cfg.clone(),
+                    table: Some(table.clone()),
+                };
+                (at, item)
             })
             .collect(),
         boundary: 0,
         active_at_admission: Vec::new(),
         done: Vec::new(),
     };
-    speculative_generate_continuous(&d, &t, Some(&table), LockstepShape::of(&cfgs[0]), &mut hook);
+    speculative_generate_continuous(&d, &t, LockstepShape::of(&cfgs[0]), &mut hook);
 
     // the late arrivals must have found residents in flight, or this test
     // never exercised mid-flight admission
@@ -246,11 +253,114 @@ fn engine_batch_matches_serial_for_all_methods() {
             .collect();
         cfgs[1].gamma = 4; // forces two lockstep groups
         cfgs[3].max_len = 20;
-        let batch = eng.generate_batch("SynB", method, &cfgs);
-        for (i, (got, cfg)) in batch.iter().zip(&cfgs).enumerate() {
-            let want = eng.generate("SynB", method, cfg).unwrap();
+        let specs: Vec<_> =
+            cfgs.iter().map(|cfg| eng.spec("SynB", method, cfg).unwrap()).collect();
+        let batch = eng.generate_batch(&specs);
+        for (i, (got, spec)) in batch.iter().zip(&specs).enumerate() {
+            let want = eng.generate(spec).unwrap();
             let got = got.as_ref().expect("batch request failed");
             assert_eq!(got.tokens, want.tokens, "{method:?} req {i} diverged");
         }
+    }
+}
+
+/// The cross-key acceptance criterion (SeqSpec redesign): a B=4 lockstep
+/// group mixing two protein families (each sequence scoring against its
+/// *own* family's k-mer table), mixed `kset`s, and a different protein
+/// admitted mid-flight must produce token streams bitwise-identical to
+/// solo decodes of the same requests.
+#[test]
+fn mixed_protein_mixed_kset_group_equals_solo_decodes() {
+    let (_pa, msa_a) = generate_family("FamA", 40, 30, 5);
+    let (_pb, msa_b) = generate_family("FamB", 44, 30, 9);
+    let table_a = Arc::new(KmerTable::build(&msa_a));
+    let table_b = Arc::new(KmerTable::build(&msa_b));
+    // distinct draft/target so rejections and corrections actually occur
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+
+    let ctxs: [&[u8]; 4] = [
+        &[BOS, 5, 9],         // FamA
+        &[BOS, 7, 11, 4],     // FamB — different family, same round 0
+        &[BOS, 5, 9, 13],     // FamA
+        &[BOS, 6, 3],         // FamB — admitted mid-flight (boundary 2)
+    ];
+    let tables = [
+        Some(table_a.clone()),
+        Some(table_b.clone()),
+        Some(table_a.clone()),
+        Some(table_b.clone()),
+    ];
+    let mut cfgs = [
+        cfg(3, 5, 3, 48),
+        cfg(3, 5, 11, 44),
+        cfg(3, 5, 21, 48),
+        cfg(3, 5, 33, 40),
+    ];
+    cfgs[1].kset = KmerSet::new(true, false, false); // per-sequence ksets
+    cfgs[2].kmer_boundary = true;
+    let arrivals = [0usize, 0, 1, 2];
+
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .zip(&tables)
+        .map(|((ctx, cfg), table)| {
+            speculative_generate(&d, &t, table.as_deref(), ctx, cfg).unwrap()
+        })
+        .collect();
+
+    // batch entry point: all four in one call, two families in one group
+    let items: Vec<SpecBatchItem<'_>> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .zip(&tables)
+        .map(|((ctx, cfg), table)| SpecBatchItem { context: ctx, cfg, table: table.clone() })
+        .collect();
+    let batch = speculative_generate_batch(&d, &t, &items);
+    for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("mixed-family item failed");
+        assert_eq!(got.tokens, want.tokens, "batch seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "batch seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "batch seq {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "batch seq {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "batch seq {b}: rounds");
+    }
+
+    // continuous entry point: the FamB request at arrival 2 joins an
+    // in-flight group already mixing FamA and FamB sequences
+    let mut hook = Scripted {
+        pending: arrivals
+            .iter()
+            .zip(ctxs.iter().zip(&cfgs).zip(&tables))
+            .enumerate()
+            .map(|(i, (&at, ((ctx, cfg), table)))| {
+                let item = AdmitItem {
+                    ticket: i as u64,
+                    context: ctx.to_vec(),
+                    cfg: cfg.clone(),
+                    table: table.clone(),
+                };
+                (at, item)
+            })
+            .collect(),
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    speculative_generate_continuous(&d, &t, LockstepShape::of(&cfgs[0]), &mut hook);
+    assert!(
+        hook.active_at_admission[2..].iter().all(|&a| a > 0),
+        "late arrivals must join an in-flight group: {:?}",
+        hook.active_at_admission
+    );
+    assert_eq!(hook.done.len(), 4, "every admitted request completed");
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("admitted item failed");
+        assert_eq!(got.tokens, want.tokens, "admitted seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "admitted seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "admitted seq {b}: rejected");
+        assert_eq!(got.rounds, want.rounds, "admitted seq {b}: rounds");
     }
 }

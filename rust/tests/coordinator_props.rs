@@ -132,8 +132,8 @@ fn prop_engine_determinism() {
     check("engine determinism", 8, |g| {
         let cfg = rand_cfg(g);
         for m in [Method::TargetOnly, Method::Speculative, Method::SpecMer] {
-            let a = eng.generate("SynA", m, &cfg).unwrap();
-            let b = eng.generate("SynA", m, &cfg).unwrap();
+            let a = eng.generate_for("SynA", m, &cfg).unwrap();
+            let b = eng.generate_for("SynA", m, &cfg).unwrap();
             assert_eq!(a.tokens, b.tokens, "{m:?} nondeterministic");
         }
     });

@@ -12,7 +12,7 @@ use std::rc::Rc;
 use specmer::config::Method;
 use specmer::coordinator::{load_families, Engine, GenEngine};
 use specmer::decode::{speculative_generate, target_only_generate, GenConfig};
-use specmer::kmer::{KmerSet, KmerTable};
+use specmer::kmer::KmerSet;
 use specmer::params;
 use specmer::runtime::{CpuModel, HloKmerScorer, HloModel, ModelBackend, Runtime};
 use specmer::tokenizer::BOS;
@@ -118,7 +118,7 @@ fn hlo_kmer_kernel_matches_rust_scorer() {
     let Some(dir) = artifacts() else { return };
     let rt = Rc::new(Runtime::new(&dir).unwrap());
     let fams = load_families(&dir).unwrap();
-    let table = &fams[0].table;
+    let table = &*fams[0].table;
     let scorer = HloKmerScorer::new(rt);
     let cands: Vec<Vec<u8>> = vec![
         specmer::tokenizer::encode("MKTAY"),
@@ -146,7 +146,7 @@ fn end_to_end_speculative_decode_on_hlo() {
     let fams = load_families(&dir).unwrap();
     let fam = &fams[0];
     let cfg = GenConfig { gamma: 5, c: 3, max_len: 60, seed: 7, ..Default::default() };
-    let out = speculative_generate(&draft, &target, Some(&fam.table), &fam.context, &cfg).unwrap();
+    let out = speculative_generate(&draft, &target, Some(&*fam.table), &fam.context, &cfg).unwrap();
     assert!(out.tokens.len() > fam.context.len());
     assert!(out.accepted > 0, "trained draft/target should agree sometimes: {out:?}");
     let alpha = out.acceptance_ratio();
@@ -180,7 +180,7 @@ fn full_engine_all_methods_on_artifacts() {
     let cfg = GenConfig { gamma: 5, c: 3, max_len: 50, seed: 1, ..Default::default() };
     for m in [Method::TargetOnly, Method::DraftOnly, Method::Speculative, Method::SpecMer] {
         let protein = engine.families()[0].meta.name.clone();
-        let out = engine.generate(&protein, m, &cfg).unwrap();
+        let out = engine.generate_for(&protein, m, &cfg).unwrap();
         assert!(out.tokens.len() > out.context_len, "{m:?}");
     }
 }
@@ -196,9 +196,9 @@ fn cross_protein_tables_change_specmer_nll() {
     let fams = load_families(&dir).unwrap();
     assert!(fams.len() >= 2);
     let fam = &fams[0];
-    let other: KmerTable = fams[1].table.clone();
+    let other = fams[1].table.clone();
     let cfg = GenConfig { gamma: 5, c: 5, max_len: 50, seed: 21, ..Default::default() };
-    let a = speculative_generate(&draft, &target, Some(&fam.table), &fam.context, &cfg).unwrap();
-    let b = speculative_generate(&draft, &target, Some(&other), &fam.context, &cfg).unwrap();
+    let a = speculative_generate(&draft, &target, Some(&*fam.table), &fam.context, &cfg).unwrap();
+    let b = speculative_generate(&draft, &target, Some(&*other), &fam.context, &cfg).unwrap();
     assert!(a.tokens.len() > 2 && b.tokens.len() > 2);
 }

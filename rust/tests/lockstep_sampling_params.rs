@@ -33,7 +33,7 @@ fn cfg(seed: u64, temp: f32, top_p: f32) -> GenConfig {
 #[test]
 fn mixed_sampling_params_share_a_lockstep_batch() {
     let (_prof, msa) = generate_family("T", 40, 30, 5);
-    let table = KmerTable::build(&msa);
+    let table = std::sync::Arc::new(KmerTable::build(&msa));
     let d = CpuModel::synthetic(2, 16, 2, 96, 7);
     let t = CpuModel::synthetic(2, 16, 2, 96, 8);
     let ctxs: [&[u8]; 4] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13], &[BOS, 11, 3]];
@@ -52,9 +52,9 @@ fn mixed_sampling_params_share_a_lockstep_batch() {
     let items: Vec<SpecBatchItem<'_>> = ctxs
         .iter()
         .zip(&cfgs)
-        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg })
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: Some(table.clone()) })
         .collect();
-    let batch = speculative_generate_batch(&d, &t, Some(&table), &items);
+    let batch = speculative_generate_batch(&d, &t, &items);
 
     for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
         let got = got.as_ref().expect("mixed-sampling item failed");
@@ -112,14 +112,20 @@ fn continuous_admission_accepts_mixed_sampling_params() {
             .zip(&cfgs)
             .enumerate()
             .map(|(i, (&at, c))| {
-                (at, AdmitItem { ticket: i as u64, context: ctx.to_vec(), cfg: c.clone() })
+                let item = AdmitItem {
+                    ticket: i as u64,
+                    context: ctx.to_vec(),
+                    cfg: c.clone(),
+                    table: None,
+                };
+                (at, item)
             })
             .collect(),
         boundary: 0,
         active_at_admission: Vec::new(),
         done: Vec::new(),
     };
-    speculative_generate_continuous(&d, &t, None, LockstepShape::of(&cfgs[0]), &mut hook);
+    speculative_generate_continuous(&d, &t, LockstepShape::of(&cfgs[0]), &mut hook);
 
     assert!(
         hook.active_at_admission[1..].iter().any(|&a| a > 0),
@@ -148,9 +154,11 @@ fn engine_batch_with_mixed_sampling_params_matches_serial() {
     cfgs[3].temp = 1.1;
     cfgs[3].top_p = 1.0;
     for method in [Method::Speculative, Method::SpecMer] {
-        let batch = eng.generate_batch("SynA", method, &cfgs);
-        for (i, (got, cfg)) in batch.iter().zip(&cfgs).enumerate() {
-            let want = eng.generate("SynA", method, cfg).unwrap();
+        let specs: Vec<_> =
+            cfgs.iter().map(|cfg| eng.spec("SynA", method, cfg).unwrap()).collect();
+        let batch = eng.generate_batch(&specs);
+        for (i, (got, spec)) in batch.iter().zip(&specs).enumerate() {
+            let want = eng.generate(spec).unwrap();
             let got = got.as_ref().expect("batch request failed");
             assert_eq!(got.tokens, want.tokens, "{method:?} req {i} diverged");
         }

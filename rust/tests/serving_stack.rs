@@ -10,8 +10,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use specmer::config::{Config, Method};
-use specmer::coordinator::engine::synthetic_engine;
-use specmer::coordinator::{EngineFactory, GenEngine, Metrics, Router, Scheduler};
+use specmer::coordinator::engine::{synthetic_engine, synthetic_families};
+use specmer::coordinator::{EngineFactory, FamilyRegistry, GenEngine, Metrics, Router, Scheduler};
 use specmer::decode::GenConfig;
 use specmer::util::json::Json;
 
@@ -26,7 +26,8 @@ fn stack(workers: usize) -> (Arc<Router>, Arc<Metrics>) {
         factory,
         Arc::clone(&metrics),
     ));
-    (Arc::new(Router::new(sched)), metrics)
+    let registry = Arc::new(FamilyRegistry::new(synthetic_families(3)));
+    (Arc::new(Router::new(sched, registry)), metrics)
 }
 
 #[test]
@@ -117,6 +118,8 @@ fn http_server_full_roundtrip_with_metrics() {
     let mut out = String::new();
     s.read_to_string(&mut out).unwrap();
     assert!(out.contains("specmer_completed_total 3"), "{out}");
+    assert!(out.contains("specmer_cross_key_admitted_total"), "{out}");
+    assert!(out.contains("specmer_group_distinct_proteins_avg"), "{out}");
     handle.stop();
 }
 
@@ -146,7 +149,7 @@ fn throughput_under_sustained_load() {
     let mut count = 0;
     for resp in rx.iter() {
         count += 1;
-        if resp.protein == "SynB" {
+        if &*resp.protein == "SynB" {
             got_b = true;
         }
     }
@@ -165,8 +168,12 @@ fn real_artifacts_through_the_stack() {
     }
     let metrics = Arc::new(Metrics::new());
     let cfg = Config { artifacts: dir, ..Default::default() };
+    let registry = Arc::new(FamilyRegistry::load(&cfg.artifacts).unwrap());
     let cfg2 = cfg.clone();
-    let factory: EngineFactory = Arc::new(move || specmer::coordinator::build_engine(&cfg2));
+    let reg2 = Arc::clone(&registry);
+    let factory: EngineFactory = Arc::new(move || {
+        specmer::coordinator::build_engine_with(&cfg2, reg2.families().to_vec())
+    });
     let sched = Arc::new(Scheduler::start(
         1,
         4,
@@ -174,7 +181,7 @@ fn real_artifacts_through_the_stack() {
         factory,
         Arc::clone(&metrics),
     ));
-    let router = Router::new(sched);
+    let router = Router::new(sched, registry);
     let (tx, rx) = channel();
     for i in 0..3u64 {
         router.submit(
