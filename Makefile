@@ -4,22 +4,28 @@
 #                     tier-1 (release build + tests), the same test suite
 #                     again with SPECMER_FORCE_PORTABLE=1 (both SIMD
 #                     dispatch arms must stay green — the kernels pin
-#                     bitwise equality between them), plus a bench_micro
-#                     smoke run, which writes machine-readable round and
-#                     kernel latencies — including the scalar-vs-vectorized
-#                     GEMM and prepacked-logits-head speedups and the
-#                     batched-vs-serial B=4 decode throughput — to
-#                     rust/results/bench_micro.json (cargo runs bench
+#                     bitwise equality between them), the tree-speculation
+#                     suites as a named gate (degenerate chain-shaped trees
+#                     bitwise-identical to the flat driver, the seeded
+#                     distribution-identity test for genuine branching, and
+#                     the lockstep degenerate-tree batch pin), plus a
+#                     bench_micro smoke run, which writes machine-readable
+#                     round and kernel latencies — including the
+#                     scalar-vs-vectorized GEMM and prepacked-logits-head
+#                     speedups, the batched-vs-serial B=4 decode
+#                     throughput, and the tree-vs-flat acceptance entry —
+#                     to rust/results/bench_micro.json (cargo runs bench
 #                     binaries from the package root), so perf regressions
 #                     on the draft/verify/serving hot paths show up there,
 #                     not just in prose.
+#   make test-tree    just the tree-structured speculation suites.
 #   make bench-micro  full (non-smoke) micro benches.
 
 CARGO ?= cargo
 
-.PHONY: verify fmt-check lint build test test-portable bench-smoke bench-micro
+.PHONY: verify fmt-check lint build test test-portable test-tree bench-smoke bench-micro
 
-verify: fmt-check lint build test test-portable bench-smoke
+verify: fmt-check lint build test test-portable test-tree bench-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -37,6 +43,14 @@ test:
 # var once per process) so the non-AVX2 arm stays green everywhere
 test-portable:
 	SPECMER_FORCE_PORTABLE=1 $(CARGO) test -q
+
+# the tree-structured speculation suites, named so the bitwise degenerate
+# pin and the seeded distribution-identity test stay visible gates (they
+# also run as part of `test`; SPECMER_FORCE_PORTABLE in the environment
+# switches both invocations to the portable kernel arm)
+test-tree:
+	$(CARGO) test -q --test tree_speculation
+	$(CARGO) test -q --test batch_decode_equivalence lockstep_degenerate_tree
 
 bench-smoke:
 	SPECMER_BENCH_SMOKE=1 $(CARGO) bench --bench bench_micro

@@ -15,8 +15,11 @@
 //! submits): measured occupancy of continuous round-boundary admission vs
 //! run-to-completion dispatch, and — for mixed-family traffic (B=4
 //! staggered across 2 families) — **shape-keyed vs (protein, method)-keyed
-//! admission**, the SeqSpec redesign's cross-tenant occupancy lever. All
-//! numbers are emitted machine-readably to `results/bench_micro.json`.
+//! admission**, the SeqSpec redesign's cross-tenant occupancy lever —
+//! plus the tentpole question of the tree refactor: **tree-vs-flat
+//! speculation at equal draft FLOPs** (acceptance rate and tokens/s of a
+//! 14-node shared-prefix forest against 15 nodes of independent chains).
+//! All numbers are emitted machine-readably to `results/bench_micro.json`.
 //! Set `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
 use std::sync::Arc;
@@ -24,7 +27,7 @@ use std::time::Instant;
 
 use specmer::decode::{
     speculative_generate, speculative_generate_batch, speculative_generate_continuous,
-    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem,
+    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem, TreePolicy,
 };
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
@@ -547,6 +550,57 @@ fn main() {
          {occ_protein_keyed:.3}"
     );
 
+    // ---- tree-vs-flat speculation: acceptance at equal draft FLOPs ------
+    // The tentpole question of the tree refactor: does spending the same
+    // per-round draft budget on a shared-prefix forest — more root-to-leaf
+    // paths for the k-mer scorer to choose between — buy a higher
+    // acceptance rate than independent chains? Flat drafts c=3 chains of
+    // γ=5 (15 nodes/round, 3 scoreable candidates); the tree arm drafts
+    // c=2 roots with a 2-way split at depth 3 (1+1+1+2+2 = 7 nodes per
+    // root → 14 nodes/round, 4 scoreable paths). Both score against the
+    // same family k-mer table; acceptance is pooled over seeds.
+    println!("== tree-vs-flat speculation (equal draft FLOPs: 15 vs 14 nodes/round) ==");
+    let tree_seeds: u64 = if smoke { 3 } else { 10 };
+    let run_arm = |label: &str, c: usize, tree: TreePolicy| -> (f64, f64, f64) {
+        let (mut acc, mut rej, mut rounds, mut nodes) = (0u64, 0u64, 0u64, 0u64);
+        let mut toks = 0usize;
+        let t0 = Instant::now();
+        for s in 0..tree_seeds {
+            let cfg = GenConfig {
+                c,
+                gamma: 5,
+                max_len: 72,
+                seed: s * 13 + 5,
+                kset: KmerSet::new(true, true, true),
+                tree,
+                ..Default::default()
+            };
+            let out = speculative_generate(&bd, &bt, Some(&table), &bctx, &cfg).unwrap();
+            acc += out.accepted;
+            rej += out.rejected;
+            rounds += out.rounds;
+            nodes += out.tree_nodes;
+            toks += out.new_tokens();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let alpha = acc as f64 / (acc + rej).max(1) as f64;
+        let tps = toks as f64 / secs;
+        let npr = nodes as f64 / rounds.max(1) as f64;
+        println!("{label:<44} alpha {alpha:.3}  {tps:>9.1} tok/s  {npr:>5.1} nodes/round");
+        (alpha, tps, npr)
+    };
+    let (alpha_flat, tps_flat, npr_flat) =
+        run_arm("spec decode flat c=3 γ=5", 3, TreePolicy::default());
+    let (alpha_tree, tps_tree, npr_tree) = run_arm(
+        "spec decode tree c=2 γ=5 branch=2 split@3",
+        2,
+        TreePolicy { branch: 2, split_mask: 0b1000 },
+    );
+    println!(
+        "tree-vs-flat acceptance at equal draft FLOPs: {alpha_tree:.3} (tree, \
+         {npr_tree:.0} nodes) vs {alpha_flat:.3} (flat, {npr_flat:.0} nodes)"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str("synthetic L4 d64 h4 S256")),
         ("c", Json::num(c as f64)),
@@ -580,6 +634,12 @@ fn main() {
         ("streaming_b4_occupancy_run_to_completion", Json::num(occ_rtc)),
         ("streaming_mixed_b4_occupancy_shape_keyed", Json::num(occ_shape_keyed)),
         ("streaming_mixed_b4_occupancy_protein_keyed", Json::num(occ_protein_keyed)),
+        ("tree_vs_flat_alpha_flat_c3_g5", Json::num(alpha_flat)),
+        ("tree_vs_flat_alpha_tree_c2_b2_split3", Json::num(alpha_tree)),
+        ("tree_vs_flat_tokens_per_sec_flat", Json::num(tps_flat)),
+        ("tree_vs_flat_tokens_per_sec_tree", Json::num(tps_tree)),
+        ("tree_vs_flat_nodes_per_round_flat", Json::num(npr_flat)),
+        ("tree_vs_flat_nodes_per_round_tree", Json::num(npr_tree)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

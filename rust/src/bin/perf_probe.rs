@@ -3,7 +3,7 @@
 //! runtime) are available, otherwise probes the pure-Rust batched backend
 //! against the seed reference implementation so the tool always runs.
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use specmer::runtime::cpu_ref::{reference, CpuModel};
@@ -15,7 +15,7 @@ fn main() {
         std::env::var("SPECMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
     match Runtime::new(&dir) {
-        Ok(rt) => hlo_probe(Rc::new(rt), &dir),
+        Ok(rt) => hlo_probe(Arc::new(rt), &dir),
         Err(e) => {
             eprintln!("[perf_probe] no PJRT/artifacts ({e}); probing the cpu_ref backend");
             cpu_probe();
@@ -23,9 +23,9 @@ fn main() {
     }
 }
 
-fn hlo_probe(rt: Rc<Runtime>, dir: &std::path::Path) {
-    let draft = HloModel::load(Rc::clone(&rt), dir, "draft").unwrap();
-    let target = HloModel::load(Rc::clone(&rt), dir, "target").unwrap();
+fn hlo_probe(rt: Arc<Runtime>, dir: &std::path::Path) {
+    let draft = HloModel::load(Arc::clone(&rt), dir, "draft").unwrap();
+    let target = HloModel::load(Arc::clone(&rt), dir, "target").unwrap();
     let mut ctx = vec![BOS];
     ctx.extend(specmer::tokenizer::encode("MKTAYIAKQR"));
     // prefill timing

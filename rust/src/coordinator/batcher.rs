@@ -234,7 +234,7 @@ mod tests {
     }
 
     fn shape(c: usize, gamma: usize) -> LockstepShape {
-        LockstepShape { c, gamma }
+        LockstepShape { c, gamma, tree: Default::default() }
     }
 
     #[test]

@@ -11,7 +11,6 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -365,8 +364,8 @@ pub fn build_engine_with(cfg: &Config, families: Vec<Arc<Family>>) -> Result<Box
         let target = CpuModel::from_params(&t, manifest.vocab)?;
         Ok(Box::new(Engine::new(draft, target, families)))
     } else {
-        let rt = Rc::new(Runtime::new(&cfg.artifacts)?);
-        let draft = HloModel::load(Rc::clone(&rt), &cfg.artifacts, &cfg.draft_model)?;
+        let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+        let draft = HloModel::load(Arc::clone(&rt), &cfg.artifacts, &cfg.draft_model)?;
         let target = HloModel::load(rt, &cfg.artifacts, &cfg.target_model)?;
         Ok(Box::new(Engine::new(draft, target, families)))
     }

@@ -17,6 +17,12 @@ pub struct Metrics {
     pub bonus: AtomicU64,
     pub draft_calls: AtomicU64,
     pub target_calls: AtomicU64,
+    /// Decode rounds across completed requests (denominator of the
+    /// per-round gauges below).
+    pub rounds: AtomicU64,
+    /// Candidate tokens drafted across completed requests (`c · γ` per
+    /// flat round; the forest's node count per tree round).
+    pub tree_nodes: AtomicU64,
     pub prefill_hits: AtomicU64,
     /// Worker batch dispatches (one lockstep decode run each).
     pub batches: AtomicU64,
@@ -60,6 +66,8 @@ impl Metrics {
         self.bonus.fetch_add(out.bonus, Ordering::Relaxed);
         self.draft_calls.fetch_add(out.draft_calls, Ordering::Relaxed);
         self.target_calls.fetch_add(out.target_calls, Ordering::Relaxed);
+        self.rounds.fetch_add(out.rounds, Ordering::Relaxed);
+        self.tree_nodes.fetch_add(out.tree_nodes, Ordering::Relaxed);
         self.latencies.lock().unwrap().push(latency);
         *self.decode_seconds.lock().unwrap() += decode_s;
     }
@@ -159,6 +167,30 @@ impl Metrics {
         *self.decode_seconds.lock().unwrap()
     }
 
+    /// Mean candidate-tree size per decode round — `c · γ` while every
+    /// request runs flat chains; diverges from it once tree-shaped
+    /// speculation (branching `TreePolicy`) is in play.
+    pub fn tree_nodes_per_round_avg(&self) -> f64 {
+        let r = self.rounds.load(Ordering::Relaxed) as f64;
+        if r == 0.0 {
+            0.0
+        } else {
+            self.tree_nodes.load(Ordering::Relaxed) as f64 / r
+        }
+    }
+
+    /// Mean committed tokens per decode round (accept + reject-resample +
+    /// bonus) — the per-round speedup gauge the tree-vs-flat comparison
+    /// reads.
+    pub fn accepted_len_avg(&self) -> f64 {
+        let r = self.rounds.load(Ordering::Relaxed) as f64;
+        if r == 0.0 {
+            0.0
+        } else {
+            self.tokens_out.load(Ordering::Relaxed) as f64 / r
+        }
+    }
+
     /// Overall acceptance ratio (Eq. 6) across all completed requests.
     pub fn acceptance_ratio(&self) -> f64 {
         let a = self.accepted.load(Ordering::Relaxed) as f64;
@@ -208,6 +240,9 @@ impl Metrics {
              specmer_tokens_per_second {:.2}\n\
              specmer_draft_calls_total {}\n\
              specmer_target_calls_total {}\n\
+             specmer_rounds_total {}\n\
+             specmer_tree_nodes_per_round_avg {:.3}\n\
+             specmer_accepted_len_avg {:.3}\n\
              specmer_prefill_cache_hits_total {}\n\
              specmer_batches_total {}\n\
              specmer_batch_occupancy_avg {:.3}\n\
@@ -231,6 +266,9 @@ impl Metrics {
             self.tokens_per_second(),
             self.draft_calls.load(Ordering::Relaxed),
             self.target_calls.load(Ordering::Relaxed),
+            self.rounds.load(Ordering::Relaxed),
+            self.tree_nodes_per_round_avg(),
+            self.accepted_len_avg(),
             self.prefill_hits.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
@@ -323,6 +361,27 @@ mod tests {
         let dump = m.text_dump();
         assert!(dump.contains("specmer_cross_key_admitted_total 2"));
         assert!(dump.contains("specmer_group_distinct_proteins_avg 2.000"));
+    }
+
+    #[test]
+    fn tree_gauges_per_round() {
+        let m = Metrics::new();
+        assert_eq!(m.tree_nodes_per_round_avg(), 0.0);
+        assert_eq!(m.accepted_len_avg(), 0.0);
+        let mut a = out(9, 1, 12);
+        a.rounds = 3;
+        a.tree_nodes = 45; // flat c=3 γ=5: 15 nodes/round
+        let mut b = out(6, 2, 8);
+        b.rounds = 2;
+        b.tree_nodes = 28; // tree policy drafting 14 nodes/round
+        m.record(&a, 0.5, 0.4);
+        m.record(&b, 0.7, 0.6);
+        assert!((m.tree_nodes_per_round_avg() - 73.0 / 5.0).abs() < 1e-12);
+        assert!((m.accepted_len_avg() - 4.0).abs() < 1e-12);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_rounds_total 5"));
+        assert!(dump.contains("specmer_tree_nodes_per_round_avg 14.600"));
+        assert!(dump.contains("specmer_accepted_len_avg 4.000"));
     }
 
     #[test]

@@ -12,6 +12,93 @@ pub use target_only::target_only_generate;
 
 use crate::kmer::KmerSet;
 
+/// Shape of the shared-prefix candidate tree a speculation round drafts.
+///
+/// The default (`split_mask == 0`) is *off*: rounds draft `c` independent
+/// flat chains exactly as before, through the flat code path. With a
+/// non-zero mask, rounds draft a forest of `c` trees instead: bit `d`
+/// (1-based, `1 <= d < gamma`) set means every frontier node at depth
+/// `d - 1` spawns `branch` children at depth `d` (unset bits extend each
+/// node with a single child). `branch == 1` with a non-zero mask yields
+/// chain-shaped trees driven through the *tree* code path — the degenerate
+/// configuration the bitwise-equivalence tests pin against the flat oracle.
+///
+/// Node ids are assigned in DFS path order (a root's whole subtree before
+/// the next root), so for chain-shaped trees node `c_i * gamma + g_i` is
+/// flat candidate `c_i`'s token `g_i` — which is what lets the round's
+/// per-node uniforms line up with the flat driver's `u[ci*gamma + gi]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct TreePolicy {
+    /// Children per frontier node at split depths (>= 2 to actually branch).
+    pub branch: u8,
+    /// Bit `d` set ⇒ split when extending the frontier to depth `d`.
+    pub split_mask: u16,
+}
+
+impl TreePolicy {
+    /// Tree drafting enabled? Off ⇒ the flat chain path runs verbatim.
+    pub fn enabled(&self) -> bool {
+        self.split_mask != 0
+    }
+
+    /// Children each depth-`d - 1` frontier node spawns at depth `d`.
+    pub fn branch_at(&self, depth: usize) -> usize {
+        if depth < 16 && (self.split_mask >> depth) & 1 == 1 {
+            (self.branch as usize).max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Parent-pointer table of the round's candidate forest in DFS path
+    /// order: `c` roots, each grown to depth `gamma - 1`; `parents[i]`
+    /// is `None` for roots and always `< i` otherwise.
+    pub fn build_parents(&self, c: usize, gamma: usize) -> Vec<Option<usize>> {
+        fn grow(
+            parents: &mut Vec<Option<usize>>,
+            pol: &TreePolicy,
+            parent: Option<usize>,
+            depth: usize,
+            gamma: usize,
+        ) {
+            let id = parents.len();
+            parents.push(parent);
+            if depth + 1 < gamma {
+                for _ in 0..pol.branch_at(depth + 1) {
+                    grow(parents, pol, Some(id), depth + 1, gamma);
+                }
+            }
+        }
+        let mut parents = Vec::new();
+        for _ in 0..c {
+            grow(&mut parents, self, None, 0, gamma);
+        }
+        parents
+    }
+
+    /// Total nodes a round's forest drafts (`c * gamma` when disabled).
+    pub fn node_count(&self, c: usize, gamma: usize) -> usize {
+        let mut frontier = 1usize;
+        let mut per_root = 0usize;
+        for d in 0..gamma {
+            if d > 0 {
+                frontier *= self.branch_at(d);
+            }
+            per_root += frontier;
+        }
+        c * per_root
+    }
+
+    /// Root-to-leaf paths (= candidate blocks the k-mer scorer ranks).
+    pub fn leaf_count(&self, c: usize, gamma: usize) -> usize {
+        let mut frontier = 1usize;
+        for d in 1..gamma {
+            frontier *= self.branch_at(d);
+        }
+        c * frontier
+    }
+}
+
 /// One generation request's decoding configuration.
 #[derive(Clone, Debug)]
 pub struct GenConfig {
@@ -35,6 +122,9 @@ pub struct GenConfig {
     /// Target-only baseline chunk: 0 = largest exported scan-fused chunk;
     /// 1 = paper-faithful stepwise AR (one dispatch per token).
     pub ar_chunk: usize,
+    /// Shared-prefix candidate-tree drafting policy (default: off = flat
+    /// chains). See [`TreePolicy`].
+    pub tree: TreePolicy,
 }
 
 impl GenConfig {
@@ -67,6 +157,34 @@ impl GenConfig {
                 self.max_len
             );
         }
+        if self.tree.enabled() {
+            if self.tree.branch == 0 {
+                anyhow::bail!("GenConfig: tree branch must be >= 1 when splits are set");
+            }
+            // valid split bits are 1..gamma (roots are always the c candidates)
+            let valid = if self.gamma >= 16 { u16::MAX } else { (1u16 << self.gamma) - 2 };
+            if self.tree.split_mask & !valid != 0 {
+                anyhow::bail!(
+                    "GenConfig: tree split_mask {:#x} sets bits outside 1..gamma={}",
+                    self.tree.split_mask,
+                    self.gamma
+                );
+            }
+            let nodes = self.tree.node_count(self.c, self.gamma);
+            if nodes > 64 {
+                anyhow::bail!(
+                    "GenConfig: tree of {nodes} nodes exceeds the per-round budget of 64 \
+                     (c={}, gamma={}, branch={}, split_mask={:#x})",
+                    self.c,
+                    self.gamma,
+                    self.tree.branch,
+                    self.tree.split_mask
+                );
+            }
+            if self.probe_rate > 0.0 {
+                anyhow::bail!("GenConfig: misranking probes are not supported in tree mode");
+            }
+        }
         Ok(())
     }
 }
@@ -84,6 +202,7 @@ impl Default for GenConfig {
             kmer_boundary: false,
             probe_rate: 0.0,
             ar_chunk: 0,
+            tree: TreePolicy::default(),
         }
     }
 }
@@ -108,6 +227,10 @@ pub struct GenOutput {
     /// Target-model forward passes (≈ cost driver).
     pub target_calls: u64,
     pub draft_calls: u64,
+    /// Candidate tokens drafted across all rounds (`c * gamma` per flat
+    /// round; the forest's node count per tree round). Feeds the
+    /// `/metrics` tree_nodes_per_round gauge.
+    pub tree_nodes: u64,
 }
 
 impl GenOutput {
@@ -146,6 +269,57 @@ mod tests {
         o.accepted = 9;
         o.rejected = 1;
         assert!((o.acceptance_ratio() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_policy_shapes() {
+        let off = TreePolicy::default();
+        assert!(!off.enabled());
+        assert_eq!(off.node_count(3, 5), 15);
+        assert_eq!(off.leaf_count(3, 5), 3);
+        // chain-shaped through the tree path: branch 1, any split bit
+        let chain = TreePolicy { branch: 1, split_mask: 0b10 };
+        assert!(chain.enabled());
+        let parents = chain.build_parents(3, 4);
+        assert_eq!(parents.len(), 12);
+        // DFS path order: candidate ci owns ids ci*gamma .. (ci+1)*gamma
+        for ci in 0..3 {
+            assert_eq!(parents[ci * 4], None);
+            for gi in 1..4 {
+                assert_eq!(parents[ci * 4 + gi], Some(ci * 4 + gi - 1));
+            }
+        }
+        // a real split: 2 roots, 2-way branch into depth 2
+        let t = TreePolicy { branch: 2, split_mask: 0b100 };
+        assert_eq!(t.node_count(2, 4), 2 * (1 + 1 + 2 + 2));
+        assert_eq!(t.leaf_count(2, 4), 4);
+        assert_eq!(t.build_parents(2, 4).len(), t.node_count(2, 4));
+    }
+
+    #[test]
+    fn tree_policy_validation() {
+        let ctx = 4;
+        let cap = 64;
+        let mut cfg =
+            GenConfig { tree: TreePolicy { branch: 2, split_mask: 0b10 }, ..Default::default() };
+        assert!(cfg.validate(ctx, cap).is_ok());
+        // split bit at/above gamma is rejected
+        cfg.tree.split_mask = 1 << cfg.gamma;
+        assert!(cfg.validate(ctx, cap).is_err());
+        // branch 0 with splits set is rejected
+        cfg.tree = TreePolicy { branch: 0, split_mask: 0b10 };
+        assert!(cfg.validate(ctx, cap).is_err());
+        // node budget: 8 * (1+2+4+8+16) = 248 >> 64
+        cfg.c = 8;
+        cfg.tree = TreePolicy { branch: 2, split_mask: 0b11110 };
+        assert!(cfg.validate(ctx, cap).is_err());
+        // probes are flat-only
+        cfg = GenConfig {
+            tree: TreePolicy { branch: 2, split_mask: 0b10 },
+            probe_rate: 0.5,
+            ..Default::default()
+        };
+        assert!(cfg.validate(ctx, cap).is_err());
     }
 
     #[test]

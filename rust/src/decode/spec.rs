@@ -7,6 +7,17 @@
 //! with the highest Eq.-2 k-mer score, verify only that block with the
 //! target, and accept/correct tokens by token-level maximal coupling.
 //!
+//! A round may draft flat chains or — with a [`TreePolicy`] — a
+//! shared-prefix candidate *tree*: `c` roots branched top-k at the policy's
+//! split depths, drafted via [`ModelBackend::draft_tree`] (each shared
+//! prefix computed once), ranked by k-mer score over *root-to-leaf paths*,
+//! and verified in one tree-masked [`ModelBackend::verify_tree`] pass;
+//! maximal coupling then walks the selected path. With branching disabled
+//! the flat code path runs verbatim (the oracle); a chain-shaped tree
+//! (`branch == 1`, mask set) drives the tree path and is pinned bitwise
+//! against it. Tree mode re-feeds committed tokens through the next
+//! round's trunk (`target_fed`) because node KV is round-scratch.
+//!
 //! Cross-request serving is built on an explicit [`LockstepGroup`] state
 //! machine: B same-shape requests share each round's draft/verify
 //! dispatches, finished sequences retire at round boundaries, and — for
@@ -17,15 +28,18 @@
 //! and since the SeqSpec redesign the k-mer table itself — rides on the
 //! item ([`SpecBatchItem`]/[`AdmitItem`]), so a group may mix protein
 //! families and SpecMER/vanilla-speculative methods freely; only the
-//! dispatch shape `(c, gamma)` is shared.
+//! dispatch shape `(c, gamma, tree)` is shared. Tree rounds run their
+//! per-sequence draft/verify calls serially inside the round (cross-
+//! sequence tree batching is an open ROADMAP item), so a failing call
+//! retires only its own sequence instead of poisoning the group.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{GenConfig, GenOutput};
+use super::{GenConfig, GenOutput, TreePolicy};
 use crate::kmer::{score, KmerTable};
-use crate::runtime::{DraftSeq, ModelBackend, VerifySeq};
+use crate::runtime::{DraftSeq, ModelBackend, TokenTree, VerifySeq};
 use crate::sampling;
 use crate::tokenizer::EOS;
 use crate::util::rng::Pcg64;
@@ -34,8 +48,10 @@ use crate::util::rng::Pcg64;
 #[derive(Clone, Default)]
 pub struct SpecOptions {
     /// Use the exported Pallas k-mer kernel instead of the Rust scorer
-    /// (requires HLO runtime; for TPU-deployment parity runs).
-    pub hlo_kmer: Option<std::rc::Rc<crate::runtime::Runtime>>,
+    /// (requires HLO runtime; for TPU-deployment parity runs). `Arc` (the
+    /// runtime is `Mutex`-guarded internally) so `SpecOptions` is `Send`
+    /// and may ride into lockstep worker threads.
+    pub hlo_kmer: Option<Arc<crate::runtime::Runtime>>,
 }
 
 /// Generate one sequence with speculative decoding / SpecMER.
@@ -50,6 +66,23 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
 ) -> Result<GenOutput> {
     let model_cap = target.maxlen().min(draft.maxlen());
     cfg.validate(context.len(), model_cap)?;
+    // tree drafting shares the lockstep driver (a solo run is a group of
+    // one); the flat loop below stays the verbatim oracle path
+    if cfg.tree.enabled() {
+        let mut group = LockstepGroup::new(draft, target, LockstepShape::of(cfg));
+        group.admit(AdmitItem {
+            ticket: 0,
+            context: context.to_vec(),
+            cfg: cfg.clone(),
+            table: table.map(|t| Arc::new(t.clone())),
+        });
+        loop {
+            if let Some((_, r)) = group.drain_completed().pop() {
+                return r;
+            }
+            group.step_round();
+        }
+    }
     let max_len = cfg.max_len.min(model_cap);
     let gamma = cfg.gamma;
 
@@ -87,6 +120,7 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
             cfg.top_p,
         )?;
         out.draft_calls += 1;
+        out.tree_nodes += (cfg.c * gamma) as u64;
         draft_fed = committed;
 
         // ---- 2. k-mer scoring & selection ------------------------------
@@ -213,9 +247,10 @@ pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
     results.into_iter().map(|o| o.expect("every item decoded")).collect()
 }
 
-/// Dispatch-shape key of a lockstep group: the two knobs that fix the
-/// shapes of the shared draft/verify dispatches. Requests may share decode
-/// rounds iff `(c, gamma)` match; seed, `max_len`, context, the k-mer
+/// Dispatch-shape key of a lockstep group: the knobs that fix the shapes
+/// of the shared draft/verify dispatches. Requests may share decode rounds
+/// iff `(c, gamma, tree)` match — the tree policy fixes the round's node
+/// table, so it is part of the shape; seed, `max_len`, context, the k-mer
 /// *table* and selection knobs — per-sequence since the SeqSpec redesign,
 /// so different protein families and mixed SpecMER/vanilla methods splice
 /// into one group — and the sampling params (`temp`/`top_p` only gate the
@@ -226,16 +261,18 @@ pub fn speculative_generate_batch<D: ModelBackend, T: ModelBackend>(
 pub struct LockstepShape {
     pub c: usize,
     pub gamma: usize,
+    /// Candidate-tree drafting policy (default = flat chains).
+    pub tree: TreePolicy,
 }
 
 impl LockstepShape {
     pub fn of(cfg: &GenConfig) -> LockstepShape {
-        LockstepShape { c: cfg.c, gamma: cfg.gamma }
+        LockstepShape { c: cfg.c, gamma: cfg.gamma, tree: cfg.tree }
     }
 
     /// Whether a request with `cfg` may join a group of this shape.
     pub fn admits(&self, cfg: &GenConfig) -> bool {
-        cfg.c == self.c && cfg.gamma == self.gamma
+        cfg.c == self.c && cfg.gamma == self.gamma && cfg.tree == self.tree
     }
 }
 
@@ -318,6 +355,11 @@ struct LockSeq<DC, TC> {
     rng: Pcg64,
     out: GenOutput,
     draft_fed: usize,
+    /// Last target-fed frontier (tree mode): `verify_tree` only commits
+    /// trunk KV, so every token committed in a round is re-fed in the next
+    /// round's trunk `tokens[target_fed..committed]`. Unused by the flat
+    /// path, whose `verify` rewrites from `committed - 1` each round.
+    target_fed: usize,
     /// Per-sequence sampling params (free within a lockstep group: they
     /// only gate this sequence's `adjust_dist` rows).
     temp: f32,
@@ -375,6 +417,7 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
             ..Default::default()
         },
         draft_fed: context.len() - 1,
+        target_fed: context.len() - 1,
         temp: cfg.temp,
         top_p: cfg.top_p,
         eff_max,
@@ -402,6 +445,12 @@ struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
     target: &'m T,
     shape: LockstepShape,
     model_cap: usize,
+    /// The round's candidate-forest node table (tree mode; empty when the
+    /// policy is off). Fixed by the shape, so computed once per group.
+    tree_parents: Vec<Option<usize>>,
+    /// Root-to-leaf node-id paths of that forest — the candidate blocks
+    /// k-mer selection ranks and coupling walks.
+    tree_paths: Vec<Vec<usize>>,
     seqs: Vec<LockSeq<D::Cache, T::Cache>>,
     completed: Vec<(u64, Result<GenOutput>)>,
 }
@@ -409,11 +458,22 @@ struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
 impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
     fn new(draft: &'m D, target: &'m T, shape: LockstepShape) -> Self {
         let model_cap = target.maxlen().min(draft.maxlen());
+        let (tree_parents, tree_paths) = if shape.tree.enabled() {
+            let parents = shape.tree.build_parents(shape.c, shape.gamma);
+            let shape_tree =
+                TokenTree { tokens: vec![0; parents.len()], parents: parents.clone() };
+            let paths = shape_tree.paths();
+            (parents, paths)
+        } else {
+            (Vec::new(), Vec::new())
+        };
         LockstepGroup {
             draft,
             target,
             shape,
             model_cap,
+            tree_parents,
+            tree_paths,
             seqs: Vec::new(),
             completed: Vec::new(),
         }
@@ -480,6 +540,10 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
     /// (per-sequence work the dispatch was carrying is lost) and empties the
     /// group.
     fn step_round(&mut self) {
+        if self.shape.tree.enabled() {
+            self.step_round_tree();
+            return;
+        }
         let (c, gamma) = (self.shape.c, self.shape.gamma);
 
         // ---- round setup: draw round uniforms on each sequence's RNG ----
@@ -493,6 +557,7 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
                 s.u.push(s.rng.next_f32());
             }
             s.out.draft_calls += 1;
+            s.out.tree_nodes += (c * gamma) as u64;
         }
 
         // ---- 1. candidate construction: one lockstep draft dispatch -----
@@ -595,6 +660,138 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
         let mut still = Vec::with_capacity(self.seqs.len());
         for s in std::mem::take(&mut self.seqs) {
             if s.finished() {
+                self.completed.push((s.ticket, Ok(s.out)));
+            } else {
+                still.push(s);
+            }
+        }
+        self.seqs = still;
+    }
+
+    /// One tree-drafting round: per sequence, draft the shape's candidate
+    /// forest ([`ModelBackend::draft_tree`]), rank its root-to-leaf paths
+    /// by k-mer score, verify the whole tree in one tree-masked pass
+    /// ([`ModelBackend::verify_tree`]), and walk the selected path with
+    /// maximal coupling. The RNG stream order matches the flat round
+    /// (node uniforms up front, then coupling draws, then the bonus draw),
+    /// and for chain-shaped trees the per-node uniforms coincide with the
+    /// flat `u[ci*gamma + gi]` — the degenerate bitwise equivalence.
+    ///
+    /// The draft/verify calls are per-sequence (cross-sequence tree
+    /// batching is an open ROADMAP item), so a failing call retires only
+    /// its own sequence instead of poisoning the group.
+    fn step_round_tree(&mut self) {
+        let n_nodes = self.tree_parents.len();
+        let nseq = self.seqs.len();
+        let mut failed: Vec<Option<anyhow::Error>> = (0..nseq).map(|_| None).collect();
+        for (si, s) in self.seqs.iter_mut().enumerate() {
+            s.out.rounds += 1;
+            s.committed = s.out.tokens.len();
+            s.feed.clear();
+            s.feed.extend_from_slice(&s.out.tokens[s.draft_fed..]);
+            s.u.clear();
+            for _ in 0..n_nodes {
+                s.u.push(s.rng.next_f32());
+            }
+            s.out.draft_calls += 1;
+            s.out.tree_nodes += n_nodes as u64;
+
+            // ---- 1. draft the candidate forest (shared prefixes once) ----
+            let block = match self.draft.draft_tree(
+                &mut s.dcache,
+                &s.feed,
+                s.draft_fed,
+                &self.tree_parents,
+                &s.u,
+                s.temp,
+                s.top_p,
+            ) {
+                Ok(b) => b,
+                Err(e) => {
+                    failed[si] = Some(e);
+                    continue;
+                }
+            };
+            s.draft_fed = s.committed;
+            let tree = TokenTree { parents: self.tree_parents.clone(), tokens: block.tokens };
+
+            // ---- 2. k-mer selection over root-to-leaf candidate paths ----
+            let path_toks: Vec<Vec<u8>> = self
+                .tree_paths
+                .iter()
+                .map(|p| p.iter().map(|&q| tree.tokens[q]).collect())
+                .collect();
+            s.sel = match s.table.as_deref() {
+                Some(t) if path_toks.len() > 1 => {
+                    if s.kmer_boundary {
+                        let tail_len = s.kset.kmax() - 1;
+                        let tail = &s.out.tokens[s.committed.saturating_sub(tail_len)..];
+                        score::select_best_with_context(t, tail, &path_toks, s.kset)
+                    } else {
+                        score::select_best(t, &path_toks, s.kset)
+                    }
+                }
+                _ => 0,
+            };
+
+            // ---- 3. verify the whole tree in one tree-masked pass --------
+            s.vtoks.clear();
+            s.vtoks.extend_from_slice(&s.out.tokens[s.target_fed..s.committed]);
+            let vb = match self.target.verify_tree(
+                &mut s.tcache,
+                &s.vtoks,
+                s.target_fed,
+                &tree,
+                s.temp,
+                s.top_p,
+            ) {
+                Ok(v) => v,
+                Err(e) => {
+                    failed[si] = Some(e);
+                    continue;
+                }
+            };
+            s.out.target_calls += 1;
+            s.target_fed = s.committed;
+
+            // ---- 4. maximal coupling along the selected path -------------
+            let path = &self.tree_paths[s.sel];
+            let mut all_accepted = true;
+            for (i, &q) in path.iter().enumerate() {
+                let x = tree.tokens[q] as usize;
+                let qd = if i == 0 { &vb.root_dist } else { &vb.dists[path[i - 1]] };
+                let (acc, tok) = sampling::couple(&block.dists[q], qd, x, &mut s.rng);
+                s.out.online_nll_sum += sampling::nll_of(qd, tok);
+                s.out.tokens.push(tok as u8);
+                if acc {
+                    s.out.accepted += 1;
+                } else {
+                    s.out.rejected += 1;
+                    all_accepted = false;
+                }
+                if !acc || tok as u8 == EOS || s.out.tokens.len() >= s.eff_max {
+                    // stopping for any reason means no bonus token this round
+                    all_accepted = false;
+                    break;
+                }
+            }
+            if all_accepted && s.out.tokens.len() < s.eff_max {
+                // the selected leaf's dist is the bonus distribution
+                let bonus_dist = &vb.dists[*path.last().expect("paths are non-empty")];
+                let tok = sampling::sample(bonus_dist, s.rng.next_f32());
+                s.out.online_nll_sum += sampling::nll_of(bonus_dist, tok);
+                s.out.tokens.push(tok as u8);
+                s.out.bonus += 1;
+            }
+        }
+
+        // ---- retire failed and finished sequences ------------------------
+        let mut still = Vec::with_capacity(self.seqs.len());
+        for (si, s) in std::mem::take(&mut self.seqs).into_iter().enumerate() {
+            if let Some(e) = failed[si].take() {
+                self.completed
+                    .push((s.ticket, Err(anyhow::anyhow!("tree dispatch failed: {e:#}"))));
+            } else if s.finished() {
                 self.completed.push((s.ticket, Ok(s.out)));
             } else {
                 still.push(s);
@@ -1093,5 +1290,131 @@ mod tests {
         c.probe_rate = 1.0;
         let out = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
         assert!(!out.probes.is_empty());
+    }
+
+    #[test]
+    fn spec_options_is_send() {
+        // the Rc -> Arc move on hlo_kmer exists so coordinator workers can
+        // carry SpecOptions across threads; pin it at compile time
+        fn assert_send<T: Send>() {}
+        assert_send::<SpecOptions>();
+    }
+
+    #[test]
+    fn degenerate_chain_trees_match_flat_bitwise() {
+        // branch == 1 with a non-zero mask drives chain-shaped trees through
+        // the whole tree path (draft_tree, path scoring, verify_tree) and
+        // must reproduce the flat driver bit for bit
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        for seed in [3u64, 11, 29] {
+            let flat = cfg(3, 5, seed);
+            let mut chain = flat.clone();
+            chain.tree = TreePolicy { branch: 1, split_mask: 0b0110 };
+            let a = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &flat).unwrap();
+            let b = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &chain).unwrap();
+            assert_eq!(a.tokens, b.tokens, "seed {seed} tokens diverged");
+            assert_eq!(a.accepted, b.accepted, "seed {seed}");
+            assert_eq!(a.rejected, b.rejected, "seed {seed}");
+            assert_eq!(a.bonus, b.bonus, "seed {seed}");
+            assert_eq!(a.rounds, b.rounds, "seed {seed}");
+            assert_eq!(a.tree_nodes, b.tree_nodes, "chain trees draft c*gamma nodes");
+        }
+    }
+
+    #[test]
+    fn degenerate_chain_trees_match_flat_without_table() {
+        // no k-mer table: flat falls back to candidate 0, the tree path must
+        // fall back to path 0 of the same forest
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let flat = cfg(2, 5, 41);
+        let mut chain = flat.clone();
+        chain.tree = TreePolicy { branch: 1, split_mask: 0b10 };
+        let a = speculative_generate(&d, &t, None, &[BOS, 5, 9], &flat).unwrap();
+        let b = speculative_generate(&d, &t, None, &[BOS, 5, 9], &chain).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.rejected, b.rejected);
+    }
+
+    #[test]
+    fn branched_trees_account_and_stay_deterministic() {
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = KmerTable::build(&msa);
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let mut c = cfg(2, 5, 7);
+        // per root: 1+1+1+2+2 = 7 nodes, 2 leaves; forest: 14 nodes, 4 paths
+        c.tree = TreePolicy { branch: 2, split_mask: 0b1000 };
+        let a = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
+        let b = speculative_generate(&d, &t, Some(&table), &[BOS, 5, 9], &c).unwrap();
+        assert_eq!(a.tokens, b.tokens, "tree decoding must be deterministic in seed");
+        assert!(a.tokens.len() > 3);
+        let committed = (a.tokens.len() - a.context_len) as u64;
+        assert_eq!(committed, a.accepted + a.rejected + a.bonus, "accounting: {a:?}");
+        assert_eq!(a.tree_nodes, a.rounds * 14, "forest drafts 14 nodes per round");
+        assert_eq!(a.draft_calls, a.rounds);
+        assert_eq!(a.target_calls, a.rounds);
+    }
+
+    #[test]
+    fn tree_batch_matches_solo_tree_runs() {
+        // the lockstep invariant extends to tree shapes: B tree sequences in
+        // one group == B solo tree runs, token for token
+        let (_prof, msa) = generate_family("T", 40, 30, 5);
+        let table = Arc::new(KmerTable::build(&msa));
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let pol = TreePolicy { branch: 2, split_mask: 0b0100 };
+        let ctxs: [&[u8]; 3] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13]];
+        let mut cfgs = vec![cfg(2, 5, 11), cfg(2, 5, 23), cfg(2, 5, 31)];
+        for c in &mut cfgs {
+            c.tree = pol;
+        }
+        cfgs[1].max_len = 20; // finishes early and must drop out cleanly
+
+        let solo: Vec<GenOutput> = ctxs
+            .iter()
+            .zip(&cfgs)
+            .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+            .collect();
+        let items: Vec<SpecBatchItem<'_>> = ctxs
+            .iter()
+            .zip(&cfgs)
+            .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: Some(table.clone()) })
+            .collect();
+        let batch = speculative_generate_batch(&d, &t, &items);
+
+        assert_eq!(batch.len(), solo.len());
+        for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.tokens, want.tokens, "seq {b} tokens diverged");
+            assert_eq!(got.accepted, want.accepted, "seq {b}");
+            assert_eq!(got.rejected, want.rejected, "seq {b}");
+            assert_eq!(got.bonus, want.bonus, "seq {b}");
+            assert_eq!(got.rounds, want.rounds, "seq {b}");
+            assert_eq!(got.tree_nodes, want.tree_nodes, "seq {b}");
+        }
+    }
+
+    #[test]
+    fn tree_rejects_invalid_policies() {
+        let (d, t) = models();
+        let mut zero_branch = cfg(2, 5, 3);
+        zero_branch.tree = TreePolicy { branch: 0, split_mask: 0b10 };
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &zero_branch).is_err());
+        let mut out_of_range = cfg(2, 5, 3);
+        out_of_range.tree = TreePolicy { branch: 2, split_mask: 1 << 5 };
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &out_of_range).is_err());
+        let mut too_big = cfg(4, 5, 3);
+        too_big.tree = TreePolicy { branch: 2, split_mask: 0b11110 };
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &too_big).is_err());
+        let mut probing = cfg(2, 5, 3);
+        probing.tree = TreePolicy { branch: 2, split_mask: 0b100 };
+        probing.probe_rate = 1.0;
+        assert!(speculative_generate(&d, &t, None, &[BOS, 5], &probing).is_err());
     }
 }

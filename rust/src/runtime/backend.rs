@@ -31,8 +31,128 @@
 //! overrides them with genuinely batched dispatches. The contract either
 //! way: per-sequence results must be identical to B separate
 //! `generate`/`verify` calls over the same caches.
+//!
+//! `draft_tree`/`verify_tree` are the shared-prefix candidate-*tree* entry
+//! points: a round drafts a whole [`TokenTree`] (parent-pointer forest, node
+//! ids in DFS path order, shared prefixes materialized once) and verifies
+//! every node in one teacher-forced pass under an ancestor-visible
+//! attention mask. The default implementations *linearize*: `draft_tree`
+//! maps the tree's per-node uniforms onto a root-to-leaf chain matrix and
+//! calls flat `generate` (a deterministic backend resamples identical
+//! shared-prefix tokens from identical dists and uniforms, so the chains
+//! fold back into the tree losslessly), and `verify_tree` teacher-forces
+//! each root-to-leaf path through flat `verify`. That keeps the HLO/PJRT
+//! backend and [`super::prefill_cache::PrefillCached`] working untouched;
+//! `cpu_ref` overrides both with genuinely tree-shaped dispatches
+//! ([`super::cpu_ref::TreeTails`]). Cache contract for `verify_tree`:
+//! only the `trunk` rows (committed-but-unfed tokens) enter the committed
+//! cache — candidate-node KV is round-scratch, so the *next* round's trunk
+//! must re-feed every token committed since (the driver tracks this as
+//! `target_fed`).
 
 use anyhow::Result;
+
+/// A shared-prefix candidate tree (forest): `parents[i]` is `None` for the
+/// roots and otherwise a node id `< i`; `tokens[i]` is node `i`'s drafted
+/// token. Node ids are in DFS path order — each root's whole subtree
+/// precedes the next root — so chain-shaped trees enumerate exactly like
+/// flat candidate blocks (`id = ci * gamma + gi`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenTree {
+    pub parents: Vec<Option<usize>>,
+    pub tokens: Vec<u8>,
+}
+
+impl TokenTree {
+    pub fn len(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty()
+    }
+
+    /// Per-node depth (roots are depth 0).
+    pub fn depths(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.parents.len()];
+        for (i, p) in self.parents.iter().enumerate() {
+            if let Some(p) = *p {
+                d[i] = d[p] + 1;
+            }
+        }
+        d
+    }
+
+    /// Root-to-self node ids (inclusive of `i`).
+    pub fn ancestors(&self, i: usize) -> Vec<usize> {
+        let mut chain = vec![i];
+        let mut cur = i;
+        while let Some(p) = self.parents[cur] {
+            chain.push(p);
+            cur = p;
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// Dense ancestor-visibility mask, row-major `[n, n]`:
+    /// `mask[q * n + a]` ⇔ node `a` is an ancestor of `q` or `q` itself —
+    /// exactly the positions node `q`'s attention row may see among the
+    /// tree rows of a verify pass.
+    pub fn ancestor_mask(&self) -> Vec<bool> {
+        let n = self.parents.len();
+        let mut mask = vec![false; n * n];
+        for q in 0..n {
+            if let Some(p) = self.parents[q] {
+                let (pre, row) = mask.split_at_mut(q * n);
+                row[..n].copy_from_slice(&pre[p * n..p * n + n]);
+            }
+            mask[q * n + q] = true;
+        }
+        mask
+    }
+
+    /// Node ids with no children, in id order.
+    pub fn leaves(&self) -> Vec<usize> {
+        let n = self.parents.len();
+        let mut has_child = vec![false; n];
+        for p in self.parents.iter().flatten() {
+            has_child[*p] = true;
+        }
+        (0..n).filter(|&i| !has_child[i]).collect()
+    }
+
+    /// Root-to-leaf paths (node ids), one per leaf, in leaf order. For a
+    /// chain-shaped tree, path `ci` is flat candidate `ci`'s block.
+    pub fn paths(&self) -> Vec<Vec<usize>> {
+        self.leaves().iter().map(|&l| self.ancestors(l)).collect()
+    }
+
+    /// The token sequence along each root-to-leaf path (what the k-mer
+    /// scorer ranks).
+    pub fn path_tokens(&self) -> Vec<Vec<u8>> {
+        self.paths().iter().map(|p| p.iter().map(|&q| self.tokens[q]).collect()).collect()
+    }
+
+    /// Structural sanity: parents precede children, token table matches.
+    pub fn validate(&self) -> Result<()> {
+        if self.tokens.len() != self.parents.len() {
+            anyhow::bail!(
+                "TokenTree: {} tokens for {} nodes",
+                self.tokens.len(),
+                self.parents.len()
+            );
+        }
+        for (i, p) in self.parents.iter().enumerate() {
+            if let Some(p) = *p {
+                if p >= i {
+                    anyhow::bail!("TokenTree: node {i} has parent {p} (parents must precede)");
+                }
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Candidate tokens + the adjusted draft distributions they were sampled
 /// from (`p_i` of Algorithm 1): `tokens[c][g]`, `dists[c][g][vocab]`.
@@ -44,6 +164,24 @@ pub struct DraftBlock {
 /// Adjusted target distributions at gamma+1 positions: `dists[g][vocab]`
 /// (`dists[gamma]` is the bonus-token distribution).
 pub struct VerifyBlock {
+    pub dists: Vec<Vec<f32>>,
+}
+
+/// One drafted candidate tree: `tokens[i]` / `dists[i]` are node `i`'s
+/// sampled token and the adjusted draft distribution it was sampled from
+/// (`p_i` of Algorithm 1 along whichever root-to-leaf path `i` lies on).
+pub struct DraftTreeBlock {
+    pub tokens: Vec<u8>,
+    pub dists: Vec<Vec<f32>>,
+}
+
+/// Teacher-forced verification of a whole candidate tree.
+pub struct VerifyTreeBlock {
+    /// Adjusted target distribution after the trunk — what the root-level
+    /// token is accepted against (flat `dists[0]`).
+    pub root_dist: Vec<f32>,
+    /// Per-node adjusted target distribution — what node `i`'s *successor*
+    /// on a path is accepted against; at a leaf, the bonus distribution.
     pub dists: Vec<Vec<f32>>,
 }
 
@@ -79,10 +217,12 @@ pub trait ModelBackend {
     fn maxlen(&self) -> usize;
     fn vocab(&self) -> usize;
 
-    /// Which candidate counts the backend can draft in one call.
-    fn supported_c(&self) -> Vec<usize>;
-    /// Which draft lengths the backend supports.
-    fn supported_gamma(&self) -> Vec<usize>;
+    /// Which candidate counts the backend can draft in one call. Returns a
+    /// borrowed slice so per-request validation never allocates.
+    fn supported_c(&self) -> &[usize];
+    /// Which draft lengths the backend supports (borrowed, like
+    /// [`Self::supported_c`]).
+    fn supported_gamma(&self) -> &[usize];
 
     /// Feed the first `n-1` of `tokens` (n = tokens.len()); fresh cache.
     fn prefill(&self, tokens: &[u8]) -> Result<Self::Cache>;
@@ -143,6 +283,97 @@ pub trait ModelBackend {
             .collect()
     }
 
+    /// Feed `feed` (as in [`Self::generate`]) then draft one token per node
+    /// of the tree shaped by `parents` (DFS path order; see [`TokenTree`]).
+    /// Node `i` samples from the adjusted distribution of its parent's row
+    /// (the post-feed row for roots) using uniform `u[i]`; siblings share
+    /// the parent distribution and differ only in their uniform. Updates
+    /// the cache to the post-feed (committed) state; node KV is
+    /// round-scratch.
+    ///
+    /// The default linearizes to flat [`Self::generate`] with one chain per
+    /// leaf, replaying each node's uniform at its depth on every path
+    /// through it — identical dist + identical uniform resample identical
+    /// shared-prefix tokens on a deterministic backend, so the chains fold
+    /// back into the tree without ambiguity.
+    #[allow(clippy::too_many_arguments)]
+    fn draft_tree(
+        &self,
+        cache: &mut Self::Cache,
+        feed: &[u8],
+        pos: usize,
+        parents: &[Option<usize>],
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftTreeBlock> {
+        debug_assert_eq!(u.len(), parents.len());
+        let shape = TokenTree { parents: parents.to_vec(), tokens: vec![0; parents.len()] };
+        shape.validate()?;
+        let paths = shape.paths();
+        let gamma = paths.iter().map(|p| p.len()).max().unwrap_or(0);
+        if paths.iter().any(|p| p.len() != gamma) {
+            anyhow::bail!("draft_tree: default linearization needs equal-depth leaves");
+        }
+        let mut u_flat = Vec::with_capacity(paths.len() * gamma);
+        for p in &paths {
+            u_flat.extend(p.iter().map(|&q| u[q]));
+        }
+        let block = self.generate(cache, feed, pos, paths.len(), gamma, &u_flat, temp, top_p)?;
+        let mut tokens = vec![0u8; parents.len()];
+        let mut dists: Vec<Vec<f32>> = vec![Vec::new(); parents.len()];
+        for (li, p) in paths.iter().enumerate() {
+            for (d, &q) in p.iter().enumerate() {
+                if dists[q].is_empty() {
+                    tokens[q] = block.tokens[li][d];
+                    dists[q] = block.dists[li][d].clone();
+                }
+            }
+        }
+        Ok(DraftTreeBlock { tokens, dists })
+    }
+
+    /// Teacher-force the whole tree against this model in one conceptual
+    /// pass: feed `trunk` (every committed-but-unfed token, `trunk[0]` at
+    /// absolute position `pos`) into the committed cache, then evaluate
+    /// every tree node at position `pos + trunk.len() + depth` under an
+    /// ancestor-visible attention mask. Only trunk KV persists in the
+    /// cache; node KV is round-scratch, so the caller must re-feed tokens
+    /// committed this round in the next trunk.
+    ///
+    /// The default linearizes to one flat [`Self::verify`] per root-to-leaf
+    /// path (`toks = trunk ++ path`), which re-feeds the trunk each call
+    /// and leaves the cache in the required trunk-fed state.
+    fn verify_tree(
+        &self,
+        cache: &mut Self::Cache,
+        trunk: &[u8],
+        pos: usize,
+        tree: &TokenTree,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyTreeBlock> {
+        tree.validate()?;
+        debug_assert!(!trunk.is_empty());
+        let t = trunk.len();
+        let mut root_dist = Vec::new();
+        let mut dists: Vec<Vec<f32>> = vec![Vec::new(); tree.len()];
+        for p in tree.paths() {
+            let mut toks = trunk.to_vec();
+            toks.extend(p.iter().map(|&q| tree.tokens[q]));
+            let vb = self.verify(cache, &toks, pos, temp, top_p)?;
+            if root_dist.is_empty() {
+                root_dist = vb.dists[t - 1].clone();
+            }
+            for (d, &q) in p.iter().enumerate() {
+                if dists[q].is_empty() {
+                    dists[q] = vb.dists[t + d].clone();
+                }
+            }
+        }
+        Ok(VerifyTreeBlock { root_dist, dists })
+    }
+
     /// Per-position NLL of tokens[1..] under the raw model (no temp/top-p);
     /// index 0 is 0.0.
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>>;
@@ -157,4 +388,57 @@ pub trait ModelBackend {
     /// prefill cache) and restore it. Round-trip must be exact.
     fn cache_to_host(&self, cache: &Self::Cache) -> Result<Vec<f32>>;
     fn cache_from_host(&self, data: &[f32]) -> Result<Self::Cache>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    //        0         6
+    //       / \        |
+    //      1   4       7
+    //      |   |
+    //      2   5
+    //      |
+    //      3
+    fn two_root_tree() -> TokenTree {
+        TokenTree {
+            parents: vec![None, Some(0), Some(1), Some(2), Some(0), Some(4), None, Some(6)],
+            tokens: vec![10, 11, 12, 13, 14, 15, 16, 17],
+        }
+    }
+
+    #[test]
+    fn token_tree_structure_helpers() {
+        let t = two_root_tree();
+        t.validate().unwrap();
+        assert_eq!(t.depths(), vec![0, 1, 2, 3, 1, 2, 0, 1]);
+        assert_eq!(t.ancestors(3), vec![0, 1, 2, 3]);
+        assert_eq!(t.ancestors(5), vec![0, 4, 5]);
+        assert_eq!(t.leaves(), vec![3, 5, 7]);
+        assert_eq!(t.paths(), vec![vec![0, 1, 2, 3], vec![0, 4, 5], vec![6, 7]]);
+        let want: Vec<Vec<u8>> = vec![vec![10, 11, 12, 13], vec![10, 14, 15], vec![16, 17]];
+        assert_eq!(t.path_tokens(), want);
+    }
+
+    #[test]
+    fn ancestor_mask_matches_parent_chains() {
+        let t = two_root_tree();
+        let n = t.len();
+        let mask = t.ancestor_mask();
+        for q in 0..n {
+            let anc = t.ancestors(q);
+            for a in 0..n {
+                assert_eq!(mask[q * n + a], anc.contains(&a), "q={q} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn token_tree_rejects_forward_parents() {
+        let t = TokenTree { parents: vec![Some(1), None], tokens: vec![0, 0] };
+        assert!(t.validate().is_err());
+        let t = TokenTree { parents: vec![None, Some(0)], tokens: vec![0] };
+        assert!(t.validate().is_err());
+    }
 }

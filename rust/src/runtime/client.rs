@@ -5,9 +5,9 @@
 //! `run(args) -> Vec<Literal>` with helpers for building f32/i32 literals.
 //! Executables are compiled lazily and cached by artifact name.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -21,12 +21,16 @@ pub enum Arg<'a> {
 }
 
 /// Lazily-compiling program cache over one PJRT client.
+///
+/// Interior state is `Mutex`-guarded (not `RefCell`) so the runtime can be
+/// shared across worker threads behind an `Arc` — `SpecOptions` carries an
+/// `Arc<Runtime>` into lockstep workers.
 pub struct Runtime {
     client: PjRtClient,
     hlo_dir: PathBuf,
-    programs: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    programs: Mutex<HashMap<String, PjRtLoadedExecutable>>,
     /// (name, compile_seconds) log for EXPERIMENTS.md §Perf.
-    pub compile_log: RefCell<Vec<(String, f64)>>,
+    pub compile_log: Mutex<Vec<(String, f64)>>,
 }
 
 impl Runtime {
@@ -43,8 +47,8 @@ impl Runtime {
         Ok(Runtime {
             client,
             hlo_dir,
-            programs: RefCell::new(HashMap::new()),
-            compile_log: RefCell::new(Vec::new()),
+            programs: Mutex::new(HashMap::new()),
+            compile_log: Mutex::new(Vec::new()),
         })
     }
 
@@ -68,19 +72,19 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
         let dt = t0.elapsed().as_secs_f64();
-        self.compile_log.borrow_mut().push((name.to_string(), dt));
+        self.compile_log.lock().unwrap().push((name.to_string(), dt));
         crate::debug!("compiled {name} in {dt:.2}s");
-        self.programs.borrow_mut().insert(name.to_string(), exe);
+        self.programs.lock().unwrap().insert(name.to_string(), exe);
         Ok(())
     }
 
     /// Execute program `name` with the given literals; returns the
     /// decomposed output tuple (all exported programs return tuples).
     pub fn run(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
-        if !self.programs.borrow().contains_key(name) {
+        if !self.programs.lock().unwrap().contains_key(name) {
             self.compile(name)?;
         }
-        let programs = self.programs.borrow();
+        let programs = self.programs.lock().unwrap();
         let exe = programs.get(name).unwrap();
         let outs = exe
             .execute::<&Literal>(args)
@@ -93,7 +97,7 @@ impl Runtime {
 
     /// Number of compiled programs (diagnostics).
     pub fn compiled_count(&self) -> usize {
-        self.programs.borrow().len()
+        self.programs.lock().unwrap().len()
     }
 
     /// Upload host data to a persistent device buffer (perf: model params
@@ -106,7 +110,7 @@ impl Runtime {
     /// Execute with mixed buffer/literal arguments (literals are uploaded
     /// for this call only). Returns the decomposed output tuple.
     pub fn run_args(&self, name: &str, args: &[Arg]) -> Result<Vec<Literal>> {
-        if !self.programs.borrow().contains_key(name) {
+        if !self.programs.lock().unwrap().contains_key(name) {
             self.compile(name)?;
         }
         // upload literal args; keep them alive for the call
@@ -125,7 +129,7 @@ impl Runtime {
                 Arg::Lit(_) => t.as_ref().unwrap(),
             })
             .collect();
-        let programs = self.programs.borrow();
+        let programs = self.programs.lock().unwrap();
         let exe = programs.get(name).unwrap();
         let outs = exe
             .execute_b::<&PjRtBuffer>(&bufs)

@@ -26,6 +26,16 @@
 //!     rows (a `BranchedArena`: per-sequence cache slots + per-candidate
 //!     tails), and a `[Σ(γ+1), D]` verify — with per-row results bitwise
 //!     equal to B solo dispatches, so lockstep serving is lossless.
+//!   * **Candidate trees** (`draft_tree`/`verify_tree`): a [`TreeTails`]
+//!     arena stores one KV row per *node* of a shared-prefix candidate
+//!     forest (parent-pointer table, DFS path order). Drafting feeds one
+//!     `[frontier, D]` step per depth level; verification teacher-forces
+//!     every node in a single `[N, D]` dispatch where each row's attention
+//!     gathers exactly its root-to-self ancestor rows next to the committed
+//!     prefix — the ancestor-visible tree mask, realized as a K/V gather
+//!     instead of a dense mask. Chain-shaped forests (`branch == 1`) walk
+//!     the same node ids as flat candidate blocks (`ci·γ + gi`) and are
+//!     bitwise-identical to `generate`/`verify`, which the unit tests pin.
 //!
 //! The GEMM kernels (runtime-dispatched SIMD, see the `runtime` and
 //! [`super::simd`] module docs) accumulate bitwise-identically to the
@@ -47,7 +57,10 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
+use super::backend::{
+    DraftBlock, DraftSeq, DraftTreeBlock, ModelBackend, TokenTree, VerifyBlock, VerifySeq,
+    VerifyTreeBlock,
+};
 use super::{gemm, simd};
 use crate::params::{ModelDims, ModelParams, PackedWeights};
 use crate::sampling;
@@ -340,6 +353,131 @@ impl<'a> BranchedCache<'a> {
     #[inline]
     fn tail_base(&self, nh: usize, dh: usize, l: usize, kv: usize, ci: usize, hh: usize) -> usize {
         ((((l * 2 + kv) * self.c + ci) * nh + hh) * self.gamma) * dh
+    }
+}
+
+/// Parent-pointer node table for one candidate-*tree* round: the tree
+/// generalization of [`BranchedCache`]'s per-candidate tails. Every tree
+/// node owns exactly one scratch KV row (tail layout flat `[L, 2, N, H, Dh]`,
+/// slot = node id), so a prefix shared by several root-to-leaf candidate
+/// blocks is computed and cached exactly once instead of once per chain.
+/// Node `q` sits at absolute position `base_len + depth[q]`, and its
+/// attention row sees the committed prefix (read-only from `base`) plus its
+/// root-to-self ancestor rows — the tree's ancestor-visibility mask,
+/// realized by gathering the (non-contiguous) ancestor K/V rows per head
+/// into a contiguous scratch run feeding the same two-segment
+/// [`attend_one`] the chain tails use. The gather only *copies* rows, so
+/// score and accumulation order match a chain tail position-for-position —
+/// which is what keeps degenerate (chain-shaped) trees bitwise-equal to
+/// [`BranchedCache`] drafting.
+pub struct TreeTails<'a> {
+    base: &'a CpuCache,
+    /// Committed positions `0..base_len` are visible to every node.
+    base_len: usize,
+    n: usize,
+    depths: Vec<usize>,
+    /// Root-to-self node ids per node (the per-row gather list).
+    anc: Vec<Vec<usize>>,
+    tail: Vec<f32>,
+    // round-lifetime workspaces sized to the widest dispatch ([N, D] rows)
+    xs: Vec<f32>,
+    hbuf: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+    // per-head ancestor K/V gather runs, [max_depth+1, Dh]
+    gk: Vec<f32>,
+    gv: Vec<f32>,
+}
+
+impl<'a> TreeTails<'a> {
+    fn new(
+        m: &CpuModel,
+        base: &'a CpuCache,
+        base_len: usize,
+        parents: &[Option<usize>],
+        mut bufs: RoundBufs,
+    ) -> Self {
+        let d = m.dims.d_model;
+        let d_ff = m.dims.d_ff;
+        let nh = m.dims.n_head;
+        let dh = m.dims.d_head();
+        let n = parents.len();
+        let mut depths = vec![0usize; n];
+        let mut anc: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for (i, p) in parents.iter().enumerate() {
+            match *p {
+                Some(p) => {
+                    debug_assert!(p < i, "parents must precede children");
+                    depths[i] = depths[p] + 1;
+                    let mut chain = anc[p].clone();
+                    chain.push(i);
+                    anc.push(chain);
+                }
+                None => anc.push(vec![i]),
+            }
+        }
+        let gamma = depths.iter().max().map_or(0, |&m| m + 1);
+        grab(&mut bufs.tail, m.dims.n_layer * 2 * n * nh * dh);
+        grab(&mut bufs.xs, n * d);
+        grab(&mut bufs.hbuf, n * d);
+        grab(&mut bufs.q, n * d);
+        grab(&mut bufs.k, n * d);
+        grab(&mut bufs.v, n * d);
+        grab(&mut bufs.att, n * d);
+        grab(&mut bufs.proj, n * d);
+        grab(&mut bufs.ff, n * d_ff);
+        bufs.scores.clear();
+        TreeTails {
+            base,
+            base_len,
+            n,
+            depths,
+            anc,
+            tail: bufs.tail,
+            xs: bufs.xs,
+            hbuf: bufs.hbuf,
+            q: bufs.q,
+            k: bufs.k,
+            v: bufs.v,
+            att: bufs.att,
+            proj: bufs.proj,
+            ff: bufs.ff,
+            scores: bufs.scores,
+            gk: vec![0.0; gamma * dh],
+            gv: vec![0.0; gamma * dh],
+        }
+    }
+
+    /// Deepest level + 1 (the draft length the tree realizes).
+    fn gamma(&self) -> usize {
+        self.depths.iter().max().map_or(0, |&m| m + 1)
+    }
+
+    /// Release the node table, returning its pooled buffers.
+    fn into_bufs(self) -> RoundBufs {
+        RoundBufs {
+            tail: self.tail,
+            xs: self.xs,
+            hbuf: self.hbuf,
+            q: self.q,
+            k: self.k,
+            v: self.v,
+            att: self.att,
+            proj: self.proj,
+            ff: self.ff,
+            scores: self.scores,
+        }
+    }
+
+    /// Start offset of node `node`'s KV row for (layer, k/v, head).
+    #[inline]
+    fn tail_base(&self, nh: usize, dh: usize, l: usize, kv: usize, node: usize, hh: usize) -> usize {
+        (((l * 2 + kv) * self.n + node) * nh + hh) * dh
     }
 }
 
@@ -740,6 +878,121 @@ impl CpuModel {
         self.logits_rows(&br.hbuf, b)
     }
 
+    /// Forward a set of tree-node rows through all layers: `rows[i]` is a
+    /// node id with token `toks[i]`, embedded at absolute position
+    /// `base_len + depth[node]`; K/V land in the node's [`TreeTails`] slot
+    /// and each row attends the shared committed prefix plus its gathered
+    /// root-to-self ancestor rows (the tree-structured attention mask).
+    /// Two call shapes share this code: drafting feeds one *level* per call
+    /// (γ−1 `[F_d, D]` dispatches, ancestors persisted by earlier levels),
+    /// verification feeds *every* node in one `[N, D]` tree-masked ragged
+    /// dispatch (all K/V of a layer are written before any row attends, as
+    /// in [`Self::cached_forward`], so ancestor visibility is satisfied
+    /// within the single call). Returns next-token logits, flat
+    /// [rows.len(), V].
+    fn tree_step(&self, tt: &mut TreeTails, rows: &[usize], toks: &[u8]) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let d_ff = self.dims.d_ff;
+        let nh = self.dims.n_head;
+        let dh = self.dims.d_head();
+        let f = rows.len();
+        debug_assert_eq!(f, toks.len());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // embed: a node's token sits at the frontier + its depth
+        for (i, (&node, &t)) in rows.iter().zip(toks).enumerate() {
+            let qpos = tt.base_len + tt.depths[node];
+            assert!(
+                qpos < self.dims.maxlen(),
+                "tree node past maxlen: pos {qpos} >= {} (engines must leave \
+                 a full block of slack — see decode::spec)",
+                self.dims.maxlen()
+            );
+            let te = &self.tok_emb[t as usize * d..(t as usize + 1) * d];
+            let pe = &self.pos_emb[qpos * d..(qpos + 1) * d];
+            let row = &mut tt.xs[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+
+        for (l, lay) in self.layers.iter().enumerate() {
+            tt.hbuf[..f * d].copy_from_slice(&tt.xs[..f * d]);
+            for i in 0..f {
+                ln(&mut tt.hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
+            }
+            gemm::matmul(&tt.hbuf[..f * d], &lay.wq, f, d, d, &mut tt.q[..f * d]);
+            gemm::matmul(&tt.hbuf[..f * d], &lay.wk, f, d, d, &mut tt.k[..f * d]);
+            gemm::matmul(&tt.hbuf[..f * d], &lay.wv, f, d, d, &mut tt.v[..f * d]);
+            // write K/V into each node's own tail row
+            for (i, &node) in rows.iter().enumerate() {
+                for hh in 0..nh {
+                    let kb = tt.tail_base(nh, dh, l, 0, node, hh);
+                    let vb = tt.tail_base(nh, dh, l, 1, node, hh);
+                    let src = i * d + hh * dh;
+                    tt.tail[kb..kb + dh].copy_from_slice(&tt.k[src..src + dh]);
+                    tt.tail[vb..vb + dh].copy_from_slice(&tt.v[src..src + dh]);
+                }
+            }
+            // attention: committed prefix + gathered root-to-self ancestors
+            tt.att.fill(0.0);
+            for (i, &node) in rows.iter().enumerate() {
+                let na = tt.anc[node].len();
+                for hh in 0..nh {
+                    // gather the ancestor K/V rows (root..=self, depth order)
+                    // into contiguous runs; pure copies, so the two-segment
+                    // attend below accumulates exactly like a chain tail
+                    for (j, &aq) in tt.anc[node].iter().enumerate() {
+                        let kb = tt.tail_base(nh, dh, l, 0, aq, hh);
+                        let vb = tt.tail_base(nh, dh, l, 1, aq, hh);
+                        tt.gk[j * dh..(j + 1) * dh].copy_from_slice(&tt.tail[kb..kb + dh]);
+                        tt.gv[j * dh..(j + 1) * dh].copy_from_slice(&tt.tail[vb..vb + dh]);
+                    }
+                    let qh = &tt.q[i * d + hh * dh..i * d + (hh + 1) * dh];
+                    let kbase = self.cache_idx(l, 0, hh, 0);
+                    let vbase = self.cache_idx(l, 1, hh, 0);
+                    attend_one(
+                        qh,
+                        scale,
+                        dh,
+                        &tt.base.data[kbase..kbase + tt.base_len * dh],
+                        &tt.base.data[vbase..vbase + tt.base_len * dh],
+                        tt.base_len,
+                        &tt.gk[..na * dh],
+                        &tt.gv[..na * dh],
+                        na,
+                        &mut tt.att[i * d + hh * dh..i * d + (hh + 1) * dh],
+                        &mut tt.scores,
+                    );
+                }
+            }
+            gemm::matmul(&tt.att[..f * d], &lay.wo, f, d, d, &mut tt.proj[..f * d]);
+            simd::add_assign(&mut tt.xs[..f * d], &tt.proj[..f * d]);
+            tt.hbuf[..f * d].copy_from_slice(&tt.xs[..f * d]);
+            for i in 0..f {
+                ln(&mut tt.hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
+            }
+            gemm::matmul(&tt.hbuf[..f * d], &lay.w1, f, d, d_ff, &mut tt.ff[..f * d_ff]);
+            for i in 0..f {
+                let row = &mut tt.ff[i * d_ff..(i + 1) * d_ff];
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = gelu(*x + lay.b1[j]);
+                }
+            }
+            gemm::matmul(&tt.ff[..f * d_ff], &lay.w2, f, d_ff, d, &mut tt.proj[..f * d]);
+            for i in 0..f {
+                let xrow = &mut tt.xs[i * d..(i + 1) * d];
+                let prow = &tt.proj[i * d..(i + 1) * d];
+                simd::add2_assign(xrow, prow, &lay.b2);
+            }
+        }
+        tt.hbuf[..f * d].copy_from_slice(&tt.xs[..f * d]);
+        for i in 0..f {
+            ln(&mut tt.hbuf[i * d..(i + 1) * d], &self.lnf_g, &self.lnf_b);
+        }
+        self.logits_rows(&tt.hbuf[..f * d], f)
+    }
+
     /// Ragged teacher-forced forward over B sequences: item `b` feeds
     /// `items[b].1` at absolute positions starting from `items[b].2`,
     /// reading/writing its *own* cache (`items[b].0`). The union of all
@@ -1046,11 +1299,14 @@ impl ModelBackend for CpuModel {
     fn vocab(&self) -> usize {
         self.vocab
     }
-    fn supported_c(&self) -> Vec<usize> {
-        (1..=8).collect()
+    fn supported_c(&self) -> &[usize] {
+        const SUPPORTED_C: [usize; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+        &SUPPORTED_C
     }
-    fn supported_gamma(&self) -> Vec<usize> {
-        (1..=16).collect()
+    fn supported_gamma(&self) -> &[usize] {
+        const SUPPORTED_GAMMA: [usize; 16] =
+            [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16];
+        &SUPPORTED_GAMMA
     }
 
     fn prefill(&self, tokens: &[u8]) -> Result<CpuCache> {
@@ -1272,6 +1528,124 @@ impl ModelBackend for CpuModel {
             out.push(VerifyBlock { dists });
         }
         Ok(out)
+    }
+
+    /// Tree draft: feed the trunk, then walk the tree level by level —
+    /// one `[F_d, D]` tree dispatch per depth. A node samples from its
+    /// *parent's* adjusted distribution with its own uniform `u[node]`;
+    /// siblings share the parent distribution and differ only in the
+    /// uniform. For chain-shaped trees (node id `ci·γ+gi`) the levels, row
+    /// order and per-row adjustments coincide exactly with [`Self::generate`],
+    /// so results are bitwise identical to the flat path.
+    fn draft_tree(
+        &self,
+        cache: &mut CpuCache,
+        feed: &[u8],
+        pos: usize,
+        parents: &[Option<usize>],
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftTreeBlock> {
+        let n = parents.len();
+        debug_assert_eq!(u.len(), n);
+        let d = self.dims.d_model;
+        let v = self.vocab;
+        let g = feed.len();
+        // feed phase always runs (trait contract: post-feed committed state)
+        let hidden = self.cached_forward(cache, feed, pos);
+        if n == 0 {
+            return Ok(DraftTreeBlock { tokens: Vec::new(), dists: Vec::new() });
+        }
+        let last_logits = self.logits(&hidden[(g - 1) * d..g * d]);
+        let start = pos + g;
+        let dist0 = sampling::adjust_dist(&last_logits, temp, top_p);
+
+        let mut tt = TreeTails::new(self, cache, start, parents, self.pool.take());
+        let gamma = tt.gamma();
+        assert!(
+            start + gamma <= self.dims.maxlen(),
+            "draft tree past maxlen: start {start} + depth {gamma} > {}",
+            self.dims.maxlen()
+        );
+        // nodes by depth, in node-id order (id order == candidate order for
+        // chain trees — load-bearing for the bitwise flat equivalence)
+        let mut levels: Vec<Vec<usize>> = vec![Vec::new(); gamma];
+        for (i, &dp) in tt.depths.iter().enumerate() {
+            levels[dp].push(i);
+        }
+
+        let mut tokens = vec![0u8; n];
+        let mut dists: Vec<Vec<f32>> = vec![Vec::new(); n];
+        // depth 0: every root samples from the shared post-feed dist
+        for &r in &levels[0] {
+            tokens[r] = sampling::sample(&dist0, u[r]) as u8;
+            dists[r] = dist0.clone();
+        }
+        // depth d: feed level d−1, each child samples from its parent's row
+        let mut row_ix = vec![0usize; n];
+        for dp in 1..gamma {
+            let toks: Vec<u8> = levels[dp - 1].iter().map(|&q| tokens[q]).collect();
+            let logits = self.tree_step(&mut tt, &levels[dp - 1], &toks);
+            for (ri, &q) in levels[dp - 1].iter().enumerate() {
+                row_ix[q] = ri;
+            }
+            let pd: Vec<Vec<f32>> = (0..levels[dp - 1].len())
+                .map(|ri| sampling::adjust_dist(&logits[ri * v..(ri + 1) * v], temp, top_p))
+                .collect();
+            for &q in &levels[dp] {
+                let p = parents[q].expect("non-root node must have a parent");
+                let dist = &pd[row_ix[p]];
+                tokens[q] = sampling::sample(dist, u[q]) as u8;
+                dists[q] = dist.clone();
+            }
+        }
+        self.pool.put(tt.into_bufs());
+        Ok(DraftTreeBlock { tokens, dists })
+    }
+
+    /// Tree verification: feed the trunk into the committed cache, then
+    /// teacher-force *every* tree node in one tree-masked ragged `[N, D]`
+    /// dispatch (the ancestor-visible mask is realized by the per-row K/V
+    /// gather in [`Self::tree_step`]). Node K/V stays in round-scratch tail
+    /// slots — only the trunk advances the committed cache, which is the
+    /// [`ModelBackend::verify_tree`] cache contract.
+    fn verify_tree(
+        &self,
+        cache: &mut CpuCache,
+        trunk: &[u8],
+        pos: usize,
+        tree: &TokenTree,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyTreeBlock> {
+        tree.validate()?;
+        let d = self.dims.d_model;
+        let v = self.vocab;
+        let t = trunk.len();
+        debug_assert!(t > 0, "verify_tree needs a non-empty trunk");
+        let hidden = self.cached_forward(cache, trunk, pos);
+        let last_logits = self.logits(&hidden[(t - 1) * d..t * d]);
+        let root_dist = sampling::adjust_dist(&last_logits, temp, top_p);
+        let n = tree.len();
+        if n == 0 {
+            return Ok(VerifyTreeBlock { root_dist, dists: Vec::new() });
+        }
+        let start = pos + t;
+        let mut tt = TreeTails::new(self, cache, start, &tree.parents, self.pool.take());
+        assert!(
+            start + tt.gamma() <= self.dims.maxlen(),
+            "verify tree past maxlen: start {start} + depth {} > {}",
+            tt.gamma(),
+            self.dims.maxlen()
+        );
+        let rows: Vec<usize> = (0..n).collect();
+        let flat = self.tree_step(&mut tt, &rows, &tree.tokens);
+        self.pool.put(tt.into_bufs());
+        let dists = (0..n)
+            .map(|q| sampling::adjust_dist(&flat[q * v..(q + 1) * v], temp, top_p))
+            .collect();
+        Ok(VerifyTreeBlock { root_dist, dists })
     }
 
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
@@ -1729,5 +2103,171 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "pos {} {a} vs {b}", 5 + i);
             }
         }
+    }
+
+    /// Chain-per-root parent table: node `ci * gamma + gi`, the id layout
+    /// that must line a degenerate tree up with flat candidate blocks.
+    fn chain_parents(c: usize, gamma: usize) -> Vec<Option<usize>> {
+        let mut parents = Vec::with_capacity(c * gamma);
+        for ci in 0..c {
+            for gi in 0..gamma {
+                parents.push(if gi == 0 { None } else { Some(ci * gamma + gi - 1) });
+            }
+        }
+        parents
+    }
+
+    #[test]
+    fn chain_draft_tree_matches_flat_generate_bitwise() {
+        // the tentpole invariant at unit level: chain-shaped trees through
+        // TreeTails reproduce the flat branched-cache draft bit for bit
+        let m = tiny();
+        let (c, gamma) = (3usize, 4usize);
+        let u: Vec<f32> = (0..c * gamma).map(|i| (i as f32 * 0.37) % 1.0).collect();
+        let mut c1 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let flat = m.generate(&mut c1, &[13], 3, c, gamma, &u, 0.9, 0.95).unwrap();
+        let mut c2 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let parents = chain_parents(c, gamma);
+        let tree = m.draft_tree(&mut c2, &[13], 3, &parents, &u, 0.9, 0.95).unwrap();
+        for ci in 0..c {
+            for gi in 0..gamma {
+                let q = ci * gamma + gi;
+                assert_eq!(tree.tokens[q], flat.tokens[ci][gi], "node {q} token diverged");
+                assert_eq!(tree.dists[q], flat.dists[ci][gi], "node {q} dist diverged bitwise");
+            }
+        }
+        assert_eq!(c1.data, c2.data, "committed caches diverged");
+    }
+
+    #[test]
+    fn chain_verify_tree_matches_flat_verify_bitwise() {
+        let m = tiny();
+        let ctx = [1u8, 5, 9];
+        let chain = [4u8, 6, 8, 2];
+        let trunk = [9u8]; // re-feed the last committed token
+        let pos = 2;
+        let mut c1 = m.prefill(&ctx).unwrap();
+        let mut toks = trunk.to_vec();
+        toks.extend_from_slice(&chain);
+        let flat = m.verify(&mut c1, &toks, pos, 1.0, 0.95).unwrap();
+
+        let mut c2 = m.prefill(&ctx).unwrap();
+        let tree = TokenTree { parents: chain_parents(1, chain.len()), tokens: chain.to_vec() };
+        let got = m.verify_tree(&mut c2, &trunk, pos, &tree, 1.0, 0.95).unwrap();
+        assert_eq!(got.root_dist, flat.dists[0], "root dist diverged bitwise");
+        for depth in 0..chain.len() {
+            assert_eq!(got.dists[depth], flat.dists[1 + depth], "depth {depth} diverged");
+        }
+        // only the trunk may advance the committed cache: the tree cache must
+        // equal one where nothing but the trunk was ever verified
+        let mut c3 = m.prefill(&ctx).unwrap();
+        let _ = m.verify(&mut c3, &trunk, pos, 1.0, 0.95).unwrap();
+        assert_eq!(c2.data, c3.data, "verify_tree leaked node KV into the cache");
+    }
+
+    /// CpuModel minus its tree overrides: drives the trait-default
+    /// linearizations (chain-per-leaf draft, path-per-verify) instead.
+    struct Linearized<'a>(&'a CpuModel);
+
+    impl ModelBackend for Linearized<'_> {
+        type Cache = CpuCache;
+        fn maxlen(&self) -> usize {
+            self.0.maxlen()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn supported_c(&self) -> &[usize] {
+            self.0.supported_c()
+        }
+        fn supported_gamma(&self) -> &[usize] {
+            self.0.supported_gamma()
+        }
+        fn prefill(&self, tokens: &[u8]) -> Result<CpuCache> {
+            self.0.prefill(tokens)
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn generate(
+            &self,
+            cache: &mut CpuCache,
+            feed: &[u8],
+            pos: usize,
+            c: usize,
+            gamma: usize,
+            u: &[f32],
+            temp: f32,
+            top_p: f32,
+        ) -> Result<DraftBlock> {
+            self.0.generate(cache, feed, pos, c, gamma, u, temp, top_p)
+        }
+        fn verify(
+            &self,
+            cache: &mut CpuCache,
+            toks: &[u8],
+            pos: usize,
+            temp: f32,
+            top_p: f32,
+        ) -> Result<VerifyBlock> {
+            self.0.verify(cache, toks, pos, temp, top_p)
+        }
+        fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {
+            self.0.score(tokens)
+        }
+        fn cache_to_host(&self, cache: &CpuCache) -> Result<Vec<f32>> {
+            self.0.cache_to_host(cache)
+        }
+        fn cache_from_host(&self, data: &[f32]) -> Result<CpuCache> {
+            self.0.cache_from_host(data)
+        }
+    }
+
+    #[test]
+    fn branched_tree_matches_default_linearization() {
+        // a genuinely branching tree: 1 root, depth 4, split at depth 2
+        //   0 - 1 - 2 - 3
+        //         \ 4 - 5
+        let m = tiny();
+        let parents = vec![None, Some(0), Some(1), Some(2), Some(1), Some(4)];
+        let u: Vec<f32> = (0..parents.len()).map(|i| (i as f32 * 0.31 + 0.07) % 1.0).collect();
+
+        let mut c1 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let native = m.draft_tree(&mut c1, &[13], 3, &parents, &u, 0.9, 0.95).unwrap();
+        let lin = Linearized(&m);
+        let mut c2 = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let folded = lin.draft_tree(&mut c2, &[13], 3, &parents, &u, 0.9, 0.95).unwrap();
+        assert_eq!(native.tokens, folded.tokens, "draft tokens diverged");
+        for (q, (a, b)) in native.dists.iter().zip(&folded.dists).enumerate() {
+            assert_eq!(a, b, "node {q} draft dist diverged");
+        }
+        assert_eq!(c1.data, c2.data, "draft caches diverged");
+
+        // verify the drafted tree both ways (same trunk, same cache state)
+        let tree = TokenTree { parents, tokens: native.tokens.clone() };
+        let nat_v = m.verify_tree(&mut c1, &[13], 3, &tree, 0.9, 0.95).unwrap();
+        let lin_v = lin.verify_tree(&mut c2, &[13], 3, &tree, 0.9, 0.95).unwrap();
+        assert_eq!(nat_v.root_dist, lin_v.root_dist, "root dist diverged");
+        for (q, (a, b)) in nat_v.dists.iter().zip(&lin_v.dists).enumerate() {
+            assert_eq!(a, b, "node {q} verify dist diverged");
+        }
+        assert_eq!(c1.data, c2.data, "verify caches diverged");
+    }
+
+    #[test]
+    fn draft_tree_tokens_lie_in_parent_dists() {
+        // sampled node tokens must have nonzero mass in the dist they were
+        // drawn from, branching or not
+        let m = tiny();
+        let parents = vec![None, Some(0), Some(1), Some(1), None, Some(4), Some(5), Some(5)];
+        let u: Vec<f32> = (0..parents.len()).map(|i| (i as f32 * 0.23 + 0.11) % 1.0).collect();
+        let mut cache = m.prefill(&[1, 5, 9, 13]).unwrap();
+        let tb = m.draft_tree(&mut cache, &[13], 3, &parents, &u, 1.0, 0.95).unwrap();
+        assert_eq!(tb.tokens.len(), parents.len());
+        for q in 0..parents.len() {
+            assert!(tb.dists[q][tb.tokens[q] as usize] > 0.0, "node {q}");
+            let s: f32 = tb.dists[q].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "node {q} dist not normalized");
+        }
+        // siblings share the parent dist but differ in uniforms
+        assert_eq!(tb.dists[2], tb.dists[3], "siblings must share the parent dist");
     }
 }

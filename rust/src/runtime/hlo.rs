@@ -4,7 +4,7 @@
 //! shared [`Runtime`]; each call builds the small input literals, executes
 //! the corresponding artifact, and unpacks the output tuple.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 use xla::Literal;
@@ -16,7 +16,7 @@ use crate::params::{load_model, ModelDims};
 pub struct HloModel {
     pub name: String,
     pub dims: ModelDims,
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     /// Flat parameter vector, resident on device (uploaded once at load —
     /// saves a ~1.4 MB host->device copy per dispatch; EXPERIMENTS.md §Perf).
     params_buf: xla::PjRtBuffer,
@@ -27,7 +27,7 @@ pub struct HloModel {
 
 impl HloModel {
     /// Load checkpoint `name` ("draft" / "target" / "xl") from artifacts.
-    pub fn load(rt: Rc<Runtime>, artifacts: &std::path::Path, name: &str) -> Result<HloModel> {
+    pub fn load(rt: Arc<Runtime>, artifacts: &std::path::Path, name: &str) -> Result<HloModel> {
         let mp = load_model(artifacts, name)?;
         let manifest = crate::params::load_manifest(artifacts)?;
         let params_buf = rt.to_device_f32(&mp.flat, &[mp.flat.len()])?;
@@ -75,11 +75,11 @@ impl ModelBackend for HloModel {
     fn vocab(&self) -> usize {
         self.vocab
     }
-    fn supported_c(&self) -> Vec<usize> {
-        self.supported_c.clone()
+    fn supported_c(&self) -> &[usize] {
+        &self.supported_c
     }
-    fn supported_gamma(&self) -> Vec<usize> {
-        self.supported_g.clone()
+    fn supported_gamma(&self) -> &[usize] {
+        &self.supported_g
     }
 
     fn prefill(&self, tokens: &[u8]) -> Result<Literal> {
@@ -225,11 +225,11 @@ impl ModelBackend for HloModel {
 /// The exported k-mer Pallas kernel (TPU deployment path; the Rust-native
 /// scorer in `kmer::score` is the CPU hot path — tests assert equality).
 pub struct HloKmerScorer {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
 }
 
 impl HloKmerScorer {
-    pub fn new(rt: Rc<Runtime>) -> HloKmerScorer {
+    pub fn new(rt: Arc<Runtime>) -> HloKmerScorer {
         HloKmerScorer { rt }
     }
 

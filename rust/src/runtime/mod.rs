@@ -73,6 +73,24 @@
 //! this end to end. Backends without a batched implementation inherit
 //! serial-loop defaults, so lockstep serving degrades gracefully (the HLO
 //! backend currently loops; batched HLO programs are an open item).
+//!
+//! ## Tree-structured speculation (`draft_tree` / `verify_tree`)
+//!
+//! A round may draft a shared-prefix candidate *tree* instead of `c`
+//! independent chains (see [`backend::TokenTree`] and `decode::spec`):
+//! each node's KV is stored exactly once in a parent-pointer node table
+//! (`cpu_ref::TreeTails`, flat `[L, 2, N, H, Dh]`, slot = node id), so a
+//! prefix shared by many candidate blocks is computed and cached once.
+//! Drafting walks the tree level by level (one `[F_d, D]` dispatch per
+//! depth); verification teacher-forces every node in one tree-masked
+//! ragged `[N, D]` forward where a node row attends the committed prefix
+//! plus its gathered root-to-self ancestor rows — the ancestor-visible
+//! mask realized as a contiguous K/V gather feeding the same two-segment
+//! `attend_one` the branched caches use. With branching disabled the tree
+//! degenerates to chains whose node ids, uniforms and row order coincide
+//! with the flat path, so results stay bitwise identical
+//! (`tests/tree_speculation.rs` pins this; backends without a native tree
+//! implementation inherit defaults that linearize to the flat calls).
 
 pub mod backend;
 pub mod client;
@@ -82,7 +100,10 @@ pub mod hlo;
 pub mod prefill_cache;
 pub mod simd;
 
-pub use backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
+pub use backend::{
+    DraftBlock, DraftSeq, DraftTreeBlock, ModelBackend, TokenTree, VerifyBlock, VerifySeq,
+    VerifyTreeBlock,
+};
 pub use client::Runtime;
 pub use cpu_ref::CpuModel;
 pub use hlo::{HloKmerScorer, HloModel};

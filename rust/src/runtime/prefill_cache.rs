@@ -12,7 +12,10 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::backend::{DraftBlock, DraftSeq, ModelBackend, VerifyBlock, VerifySeq};
+use super::backend::{
+    DraftBlock, DraftSeq, DraftTreeBlock, ModelBackend, TokenTree, VerifyBlock, VerifySeq,
+    VerifyTreeBlock,
+};
 
 pub struct PrefillCached<B: ModelBackend> {
     inner: B,
@@ -45,10 +48,10 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
     fn vocab(&self) -> usize {
         self.inner.vocab()
     }
-    fn supported_c(&self) -> Vec<usize> {
+    fn supported_c(&self) -> &[usize] {
         self.inner.supported_c()
     }
-    fn supported_gamma(&self) -> Vec<usize> {
+    fn supported_gamma(&self) -> &[usize] {
         self.inner.supported_gamma()
     }
 
@@ -102,6 +105,33 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
 
     fn verify_batch(&self, seqs: &mut [VerifySeq<'_, Self::Cache>]) -> Result<Vec<VerifyBlock>> {
         self.inner.verify_batch(seqs)
+    }
+
+    // forward the tree entry points so the inner backend's tree-shaped
+    // dispatches are used (the trait defaults would linearize to chains)
+    fn draft_tree(
+        &self,
+        cache: &mut Self::Cache,
+        feed: &[u8],
+        pos: usize,
+        parents: &[Option<usize>],
+        u: &[f32],
+        temp: f32,
+        top_p: f32,
+    ) -> Result<DraftTreeBlock> {
+        self.inner.draft_tree(cache, feed, pos, parents, u, temp, top_p)
+    }
+
+    fn verify_tree(
+        &self,
+        cache: &mut Self::Cache,
+        trunk: &[u8],
+        pos: usize,
+        tree: &TokenTree,
+        temp: f32,
+        top_p: f32,
+    ) -> Result<VerifyTreeBlock> {
+        self.inner.verify_tree(cache, trunk, pos, tree, temp, top_p)
     }
 
     fn score(&self, tokens: &[u8]) -> Result<Vec<f32>> {

@@ -160,7 +160,15 @@ fn handle_conn(
 
 /// POST /generate body:
 /// {"protein":"GFP","method":"specmer","n":2,"c":3,"gamma":5,
-///  "temp":1.0,"top_p":0.95,"k":"1,3","seed":0}
+///  "temp":1.0,"top_p":0.95,"k":"1,3","seed":0,
+///  "tree_branch":2,"tree_splits":"3"}
+///
+/// `tree_branch`/`tree_splits` opt a request into tree-shaped speculation
+/// (see `decode::TreePolicy`): `tree_splits` is a comma-separated list of
+/// split depths `1 <= d < gamma` and `tree_branch` (default 2 once splits
+/// are given) is the children spawned per frontier node at each split.
+/// Omitting `tree_splits` keeps the flat-chain path; requests sharing a
+/// `(c, gamma, tree)` shape ride one lockstep group.
 fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<Json> {
     let req = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
     let protein = req
@@ -190,6 +198,23 @@ fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<
     }
     if let Some(k) = req.get("k").and_then(|v| v.as_str()) {
         cfg.kset = KmerSet::parse(k).ok_or_else(|| anyhow!("bad 'k'"))?;
+    }
+    if let Some(s) = req.get("tree_splits").and_then(|v| v.as_str()) {
+        let mut mask = 0u16;
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let d: u32 = part.parse().map_err(|_| anyhow!("bad 'tree_splits' depth {part:?}"))?;
+            if d == 0 || d >= 16 {
+                return Err(anyhow!("bad 'tree_splits': depth {d} out of range 1..16"));
+            }
+            mask |= 1 << d;
+        }
+        cfg.tree.split_mask = mask;
+        if mask != 0 && cfg.tree.branch < 2 {
+            cfg.tree.branch = 2;
+        }
+    }
+    if let Some(v) = req.get("tree_branch").and_then(|v| v.as_usize()) {
+        cfg.tree.branch = u8::try_from(v).map_err(|_| anyhow!("bad 'tree_branch'"))?;
     }
 
     let (tx, rx) = channel();
@@ -304,10 +329,36 @@ mod tests {
     }
 
     #[test]
+    fn generate_with_tree_policy() {
+        let (h, m) = start();
+        let r = post(
+            h.addr,
+            "/generate",
+            r#"{"protein":"SynA","method":"specmer","n":2,"c":2,"gamma":5,"seed":3,"tree_splits":"3","tree_branch":2}"#,
+        );
+        assert!(r.contains("200 OK"), "{r}");
+        let body = r.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.get("sequences").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        // tree rounds feed the per-round gauges
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_tree_nodes_per_round_avg"), "{dump}");
+        assert!(m.tree_nodes.load(Ordering::Relaxed) > 0);
+        h.stop();
+    }
+
+    #[test]
     fn bad_requests_rejected() {
         let (h, _m) = start();
         let r = post(h.addr, "/generate", "{notjson");
         assert!(r.contains("400"));
+        let r = post(
+            h.addr,
+            "/generate",
+            r#"{"protein":"SynA","tree_splits":"0"}"#,
+        );
+        assert!(r.contains("400") && r.contains("tree_splits"), "{r}");
         let r = post(h.addr, "/generate", r#"{"method":"specmer"}"#);
         assert!(r.contains("400") && r.contains("protein"));
         let r = request(h.addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");

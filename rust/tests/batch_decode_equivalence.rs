@@ -14,7 +14,7 @@ use specmer::coordinator::GenEngine;
 use specmer::config::Method;
 use specmer::decode::{
     speculative_generate, speculative_generate_batch, speculative_generate_continuous,
-    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem,
+    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem, TreePolicy,
 };
 use specmer::kmer::{KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
@@ -133,6 +133,50 @@ fn lockstep_b1_is_the_sequential_engine() {
     let out = got[0].as_ref().unwrap();
     assert_eq!(out.tokens, want.tokens);
     assert_eq!(out.accepted, want.accepted);
+}
+
+/// The degenerate-tree acceptance criterion (ISSUE 6): a lockstep batch
+/// whose shape carries a `branch == 1` chain-shaped [`TreePolicy`] runs the
+/// *tree* round driver — `draft_tree` forests, root-to-leaf path scoring,
+/// `verify_tree` with trunk re-feeding — and must still be bitwise
+/// identical to solo *flat* decodes with the same seeds.
+#[test]
+fn lockstep_degenerate_tree_equals_flat_sequential() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = Arc::new(KmerTable::build(&msa));
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+
+    let ctxs: [&[u8]; 3] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 5, 9, 13, 7, 4]];
+    let flat_cfgs = [cfg(3, 5, 3, 40), cfg(3, 5, 11, 24), cfg(3, 5, 21, 48)];
+    let chain = TreePolicy { branch: 1, split_mask: 0b110 };
+    let mut tree_cfgs = flat_cfgs.clone();
+    for c in &mut tree_cfgs {
+        c.tree = chain;
+    }
+
+    // the oracle is the *flat* sequential engine — no tree code at all
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&flat_cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+        .collect();
+    let items: Vec<SpecBatchItem<'_>> = ctxs
+        .iter()
+        .zip(&tree_cfgs)
+        .map(|(ctx, cfg)| SpecBatchItem { context: ctx, cfg, table: Some(table.clone()) })
+        .collect();
+    let batch = speculative_generate_batch(&d, &t, &items);
+
+    for (b, (got, want)) in batch.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("degenerate-tree item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "seq {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+        assert_eq!(got.tree_nodes, want.tree_nodes, "seq {b}: nodes drafted");
+    }
 }
 
 /// Scripted admission source for the continuous-batching driver: each item

@@ -7,7 +7,7 @@
 //! stays green on a fresh checkout.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use specmer::config::Method;
 use specmer::coordinator::{load_families, Engine, GenEngine};
@@ -29,10 +29,10 @@ fn artifacts() -> Option<PathBuf> {
     }
 }
 
-fn load(name: &str, dir: &PathBuf) -> (Rc<Runtime>, HloModel, CpuModel) {
-    let rt = Rc::new(Runtime::new(dir).expect("runtime"));
+fn load(name: &str, dir: &PathBuf) -> (Arc<Runtime>, HloModel, CpuModel) {
+    let rt = Arc::new(Runtime::new(dir).expect("runtime"));
     let manifest = params::load_manifest(dir).unwrap();
-    let hlo = HloModel::load(Rc::clone(&rt), dir, name).expect("hlo model");
+    let hlo = HloModel::load(Arc::clone(&rt), dir, name).expect("hlo model");
     let mp = params::load_model(dir, name).unwrap();
     let cpu = CpuModel::from_params(&mp, manifest.vocab).unwrap();
     (rt, hlo, cpu)
@@ -116,7 +116,7 @@ fn hlo_generate_matches_cpu_ref_tokens() {
 #[test]
 fn hlo_kmer_kernel_matches_rust_scorer() {
     let Some(dir) = artifacts() else { return };
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
     let fams = load_families(&dir).unwrap();
     let table = &*fams[0].table;
     let scorer = HloKmerScorer::new(rt);
@@ -140,8 +140,8 @@ fn hlo_kmer_kernel_matches_rust_scorer() {
 #[test]
 fn end_to_end_speculative_decode_on_hlo() {
     let Some(dir) = artifacts() else { return };
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
-    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Arc::clone(&rt), &dir, "draft").unwrap();
     let target = HloModel::load(rt, &dir, "target").unwrap();
     let fams = load_families(&dir).unwrap();
     let fam = &fams[0];
@@ -161,7 +161,7 @@ fn end_to_end_speculative_decode_on_hlo() {
 #[test]
 fn end_to_end_target_only_on_hlo() {
     let Some(dir) = artifacts() else { return };
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
     let target = HloModel::load(rt, &dir, "target").unwrap();
     let cfg = GenConfig { max_len: 50, seed: 3, ..Default::default() };
     let out = target_only_generate(&target, &ctx(), &cfg).unwrap();
@@ -172,8 +172,8 @@ fn end_to_end_target_only_on_hlo() {
 #[test]
 fn full_engine_all_methods_on_artifacts() {
     let Some(dir) = artifacts() else { return };
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
-    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Arc::clone(&rt), &dir, "draft").unwrap();
     let target = HloModel::load(rt, &dir, "target").unwrap();
     let fams = load_families(&dir).unwrap();
     let engine = Engine::new(draft, target, fams);
@@ -190,8 +190,8 @@ fn cross_protein_tables_change_specmer_nll() {
     // App. C sanity at integration level: using another family's k-mer
     // table must not crash and (weak check) changes candidate selection.
     let Some(dir) = artifacts() else { return };
-    let rt = Rc::new(Runtime::new(&dir).unwrap());
-    let draft = HloModel::load(Rc::clone(&rt), &dir, "draft").unwrap();
+    let rt = Arc::new(Runtime::new(&dir).unwrap());
+    let draft = HloModel::load(Arc::clone(&rt), &dir, "draft").unwrap();
     let target = HloModel::load(rt, &dir, "target").unwrap();
     let fams = load_families(&dir).unwrap();
     assert!(fams.len() >= 2);

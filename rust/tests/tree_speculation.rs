@@ -1,0 +1,194 @@
+//! Tree-structured speculation suite (ISSUE 6 tentpole): shared-prefix
+//! candidate trees from the arena to the scorer.
+//!
+//! Three layers of assurance:
+//!   * a property test that [`TokenTree::ancestor_mask`]'s incremental
+//!     row-copy construction agrees with brute-force per-path
+//!     recomputation on randomly grown forests;
+//!   * the degenerate guarantee — `branch == 1` chain-shaped trees drive
+//!     the whole tree code path (`draft_tree`, path scoring,
+//!     `verify_tree`, trunk re-feeding) and must be **bitwise identical**
+//!     to the flat-chain driver;
+//!   * the branching guarantee — with genuine branching the committed
+//!     token stream is no longer bitwise-comparable (the RNG draws one
+//!     uniform per *node*, and a forest has more nodes than c chains),
+//!     but speculative coupling keeps it exactly target-distributed, so a
+//!     seeded two-sample test over hundreds of generations must find the
+//!     same unigram token distribution and the same mean target NLL.
+
+use specmer::decode::{speculative_generate, GenConfig, TreePolicy};
+use specmer::kmer::KmerSet;
+use specmer::runtime::cpu_ref::CpuModel;
+use specmer::runtime::{ModelBackend, TokenTree};
+use specmer::tokenizer::BOS;
+use specmer::util::proptest::{check, Gen};
+
+fn cfg(c: usize, gamma: usize, seed: u64, max_len: usize) -> GenConfig {
+    GenConfig {
+        c,
+        gamma,
+        seed,
+        max_len,
+        kset: KmerSet::new(true, true, true),
+        ..Default::default()
+    }
+}
+
+/// Grow a random forest the way any driver would: node ids in DFS path
+/// order, every parent preceding its children.
+fn random_tree(g: &mut Gen) -> TokenTree {
+    fn grow(parents: &mut Vec<Option<usize>>, g: &mut Gen, parent: Option<usize>, depth: usize) {
+        let id = parents.len();
+        parents.push(parent);
+        if depth >= 4 || parents.len() >= 24 {
+            return;
+        }
+        let kids = g.usize_in(0..3);
+        for _ in 0..kids {
+            grow(parents, g, Some(id), depth + 1);
+        }
+    }
+    let mut parents = Vec::new();
+    let roots = g.usize_in(1..4);
+    for _ in 0..roots {
+        grow(&mut parents, g, None, 0);
+    }
+    let tokens = (0..parents.len()).map(|i| (i % 29) as u8).collect();
+    TokenTree { parents, tokens }
+}
+
+#[test]
+fn ancestor_mask_matches_per_path_recomputation() {
+    check("ancestor mask == per-path brute force", 300, |g| {
+        let tree = random_tree(g);
+        tree.validate().unwrap();
+        let n = tree.len();
+        let mask = tree.ancestor_mask();
+        // brute force: walk every root-to-leaf path; the mask row of the
+        // node at path position i must be exactly {path[0..=i]}
+        let mut covered = vec![false; n];
+        for path in tree.paths() {
+            for (i, &q) in path.iter().enumerate() {
+                covered[q] = true;
+                let visible: Vec<usize> =
+                    (0..n).filter(|&a| mask[q * n + a]).collect();
+                assert_eq!(visible, path[..=i].to_vec(), "node {q} on path {path:?}");
+            }
+        }
+        // every node lies on at least one root-to-leaf path
+        assert!(covered.iter().all(|&c| c), "paths() missed a node");
+    });
+}
+
+#[test]
+fn chain_policy_is_bitwise_identical_to_flat() {
+    // the tree driver with branch == 1 runs chain-shaped forests through
+    // draft_tree/verify_tree + trunk re-feeding and must reproduce the
+    // flat path bit for bit, across seeds and shapes
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx: &[u8] = &[BOS, 5, 9];
+    for (c, gamma, mask, seed) in
+        [(1usize, 5usize, 0b10u16, 3u64), (2, 5, 0b100, 17), (3, 5, 0b1010, 41), (2, 8, 0b1000, 9)]
+    {
+        let flat = cfg(c, gamma, seed, 48);
+        let mut chain = flat.clone();
+        chain.tree = TreePolicy { branch: 1, split_mask: mask };
+        let a = speculative_generate(&d, &t, None, ctx, &flat).unwrap();
+        let b = speculative_generate(&d, &t, None, ctx, &chain).unwrap();
+        assert_eq!(a.tokens, b.tokens, "c={c} gamma={gamma} seed={seed} diverged");
+        assert_eq!(a.accepted, b.accepted, "c={c} gamma={gamma} seed={seed}");
+        assert_eq!(a.rejected, b.rejected, "c={c} gamma={gamma} seed={seed}");
+        assert_eq!(a.bonus, b.bonus, "c={c} gamma={gamma} seed={seed}");
+        assert_eq!(a.rounds, b.rounds, "c={c} gamma={gamma} seed={seed}");
+    }
+}
+
+/// Mean per-token NLL of the committed tokens under the raw target model.
+fn mean_nll(t: &CpuModel, tokens: &[u8], context_len: usize) -> f64 {
+    let nll = t.score(tokens).unwrap();
+    let tail = &nll[context_len.max(1)..];
+    if tail.is_empty() {
+        return 0.0;
+    }
+    tail.iter().map(|&x| x as f64).sum::<f64>() / tail.len() as f64
+}
+
+#[test]
+fn branching_is_distribution_identical_to_flat() {
+    // speculative coupling is lossless for *any* drafting policy: with no
+    // k-mer table both arms walk candidate/path 0, so flat chains and
+    // branched trees must sample the same target distribution even though
+    // their RNG streams (one uniform per node) diverge immediately.
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx: &[u8] = &[BOS, 5, 9];
+    const RUNS: u64 = 250;
+    const VOCAB: usize = 32;
+
+    let mut counts = [[0u64; VOCAB]; 2];
+    let mut totals = [0u64; 2];
+    let mut nll_sum = [0.0f64; 2];
+    let mut first = [[0u64; VOCAB]; 2];
+    for seed in 0..RUNS {
+        for arm in 0..2 {
+            let mut cfg = cfg(2, 5, 0xBEEF ^ seed, 28);
+            if arm == 1 {
+                // 2 roots, split at depth 2: 16 nodes, 4 root-to-leaf paths
+                cfg.tree = TreePolicy { branch: 2, split_mask: 0b100 };
+            }
+            let out = speculative_generate(&d, &t, None, ctx, &cfg).unwrap();
+            assert_eq!(
+                (out.tokens.len() - out.context_len) as u64,
+                out.accepted + out.rejected + out.bonus,
+                "arm {arm} accounting"
+            );
+            for &tok in &out.tokens[out.context_len..] {
+                counts[arm][tok as usize] += 1;
+                totals[arm] += 1;
+            }
+            if out.tokens.len() > out.context_len {
+                first[arm][out.tokens[out.context_len] as usize] += 1;
+            }
+            nll_sum[arm] += mean_nll(&t, &out.tokens, out.context_len);
+        }
+    }
+
+    // unigram total-variation distance over all committed tokens: both
+    // arms pool thousands of samples, so sampling noise sits well under
+    // the 0.1 gate while any systematic drafting bias would blow past it
+    let tv = |a: &[u64; VOCAB], b: &[u64; VOCAB], na: f64, nb: f64| {
+        (0..VOCAB)
+            .map(|k| (a[k] as f64 / na - b[k] as f64 / nb).abs())
+            .sum::<f64>()
+            / 2.0
+    };
+    let tv_all = tv(&counts[0], &counts[1], totals[0] as f64, totals[1] as f64);
+    assert!(tv_all < 0.1, "unigram TV distance {tv_all:.4} (flat vs tree)");
+    let tv_first = tv(&first[0], &first[1], RUNS as f64, RUNS as f64);
+    assert!(tv_first < 0.2, "first-token TV distance {tv_first:.4}");
+
+    let mean = [nll_sum[0] / RUNS as f64, nll_sum[1] / RUNS as f64];
+    assert!(
+        (mean[0] - mean[1]).abs() < 0.12,
+        "mean target NLL diverged: flat {:.4} vs tree {:.4}",
+        mean[0],
+        mean[1]
+    );
+}
+
+#[test]
+fn branching_widens_the_drafted_forest() {
+    // sanity on the accounting surface the /metrics gauges read: the same
+    // (c, gamma) drafts more nodes per round once splits are enabled
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx: &[u8] = &[BOS, 5, 9];
+    let flat = cfg(2, 5, 77, 40);
+    let mut tree = flat.clone();
+    tree.tree = TreePolicy { branch: 2, split_mask: 0b100 };
+    let a = speculative_generate(&d, &t, None, ctx, &flat).unwrap();
+    let b = speculative_generate(&d, &t, None, ctx, &tree).unwrap();
+    assert_eq!(a.tree_nodes, a.rounds * 10, "flat: c*gamma nodes per round");
+    assert_eq!(b.tree_nodes, b.rounds * 16, "tree: 16-node forest per round");
+}
