@@ -19,13 +19,24 @@
 #                     on the draft/verify/serving hot paths show up there,
 #                     not just in prose.
 #   make test-tree    just the tree-structured speculation suites.
+#   make test-fast    the SPECMER_FAST tier: the accuracy-bounded suites
+#                     (quantization pins, fast-tier ulp/tolerance bounds)
+#                     plus the self-comparing equivalence suites under
+#                     SPECMER_FAST=1 (lockstep and tree pins compare the
+#                     model against itself, so they must hold within any
+#                     one tier; the f32-scalar-reference pins stay on the
+#                     default tier, which is the only bitwise one).
+#   make test-bf16    the same env-robust suites under
+#                     SPECMER_WEIGHT_DTYPE=bf16 (the narrow-dtype arm of
+#                     the CI matrix; per-dtype bitwise contract).
 #   make bench-micro  full (non-smoke) micro benches.
 
 CARGO ?= cargo
 
-.PHONY: verify fmt-check lint build test test-portable test-tree bench-smoke bench-micro
+.PHONY: verify fmt-check lint build test test-portable test-tree test-fast test-bf16 \
+	bench-smoke bench-micro
 
-verify: fmt-check lint build test test-portable test-tree bench-smoke
+verify: fmt-check lint build test test-portable test-tree test-fast bench-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -51,6 +62,22 @@ test-portable:
 test-tree:
 	$(CARGO) test -q --test tree_speculation
 	$(CARGO) test -q --test batch_decode_equivalence lockstep_degenerate_tree
+
+# the fast tier is accuracy-bounded, not bitwise: run its dedicated bound
+# suites plus the suites that compare the model against itself (those pins
+# hold within any single tier) with SPECMER_FAST=1 in the environment; the
+# scalar-reference pins (cpu_batched_equivalence, kernel_equivalence) are
+# exact-tier-only by design and keep running in `test`/`test-portable`
+test-fast:
+	SPECMER_FAST=1 $(CARGO) test -q --test quantization --test fast_tier
+	SPECMER_FAST=1 $(CARGO) test -q --test batch_decode_equivalence --test tree_speculation
+
+# narrow-dtype arm: the bitwise contract is per dtype (AVX2 == portable ==
+# dequant oracle), not vs the f32 tier, so the same env-robust suites run
+# with bf16 weight panels selected by env
+test-bf16:
+	SPECMER_WEIGHT_DTYPE=bf16 $(CARGO) test -q --test quantization --test fast_tier
+	SPECMER_WEIGHT_DTYPE=bf16 $(CARGO) test -q --test batch_decode_equivalence --test tree_speculation
 
 bench-smoke:
 	SPECMER_BENCH_SMOKE=1 $(CARGO) bench --bench bench_micro

@@ -18,8 +18,14 @@
 //! admission**, the SeqSpec redesign's cross-tenant occupancy lever —
 //! plus the tentpole question of the tree refactor: **tree-vs-flat
 //! speculation at equal draft FLOPs** (acceptance rate and tokens/s of a
-//! 14-node shared-prefix forest against 15 nodes of independent chains).
-//! All numbers are emitted machine-readably to `results/bench_micro.json`.
+//! 14-node shared-prefix forest against 15 nodes of independent chains) —
+//! plus the weight-traffic question of the quantized panels: **per-dtype
+//! decode rounds** (f32 vs bf16 vs int8, default vs `SPECMER_FAST`) on a
+//! memory-bound shape, reporting tokens/s, weight bytes per token and
+//! effective GB/s. All numbers are emitted machine-readably to
+//! `results/bench_micro.json`, tagged with the resolved kernel dispatch,
+//! weight dtype and fast-tier flag so perf trajectories are attributable
+//! to the configuration that produced them.
 //! Set `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
 use std::sync::Arc;
@@ -31,7 +37,7 @@ use specmer::decode::{
 };
 use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
-use specmer::params::PackedWeights;
+use specmer::params::{PackedWeights, WeightDtype};
 use specmer::runtime::cpu_ref::{reference, CpuModel};
 use specmer::runtime::{gemm, simd, ModelBackend};
 use specmer::sampling;
@@ -550,6 +556,71 @@ fn main() {
          {occ_protein_keyed:.3}"
     );
 
+    // ---- per-dtype decode rounds: quantized weight panels ----------------
+    // The weight-traffic question of the quantized-panel work: one verify
+    // round (γ=5 → 6 teacher-forced rows) on a deliberately memory-bound
+    // shape — L4 d256 h4 keeps ~12.6 MiB of weight matrices against a
+    // six-row activation block, so the round streams weights from memory.
+    // Models are built per (dtype, fast) pair via `synthetic_with`, so one
+    // bench process covers every tier regardless of the environment.
+    // bytes/token divides the full panel footprint by the 6 committed rows;
+    // effective GB/s divides it by the measured round time.
+    println!("== per-dtype decode rounds (L4 d256 h4, verify γ=5, memory-bound) ==");
+    let dt_iters: u64 = if smoke { 2 } else { 20 };
+    let dt_toks = vtoks.len() as f64;
+    let mut dtype_rows: Vec<Json> = Vec::new();
+    let mut dt_summary: Vec<(String, f64)> = Vec::new();
+    for (dname, dtype) in
+        [("f32", WeightDtype::F32), ("bf16", WeightDtype::Bf16), ("int8", WeightDtype::Int8)]
+    {
+        for fast in [false, true] {
+            let md = CpuModel::synthetic_with(4, 256, 4, 256, 42, dtype, fast);
+            let mut cache_d = md.prefill(&ctx).unwrap();
+            let tier = if fast { "+fast" } else { "" };
+            let label = format!("verify round d256 {dname}{tier}");
+            let ns = bench(&label, dt_iters, || {
+                std::hint::black_box(md.verify(&mut cache_d, &vtoks, pos, 1.0, 0.95).unwrap());
+            });
+            let wbytes = md.weight_bytes() as f64;
+            let tps = dt_toks / (ns / 1e9);
+            let bytes_per_tok = wbytes / dt_toks;
+            let gbps = wbytes / (ns / 1e9) / 1e9;
+            dtype_rows.push(Json::obj(vec![
+                ("dtype", Json::str(dname)),
+                ("fast", Json::Bool(fast)),
+                ("round_ns", Json::num(ns)),
+                ("tokens_per_sec", Json::num(tps)),
+                ("weight_bytes_per_token", Json::num(bytes_per_tok)),
+                ("effective_gbps", Json::num(gbps)),
+            ]));
+            if !fast {
+                dt_summary.push((dname.to_string(), bytes_per_tok));
+                dt_summary.push((format!("{dname}_tps"), tps));
+            }
+        }
+    }
+    let dt_lookup = |key: &str| -> f64 {
+        dt_summary.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
+    };
+    let (bpt_f32, bpt_bf16, bpt_int8) = (dt_lookup("f32"), dt_lookup("bf16"), dt_lookup("int8"));
+    let (tps_f32, tps_bf16) = (dt_lookup("f32_tps"), dt_lookup("bf16_tps"));
+    println!(
+        "weight bytes/token: f32 {bpt_f32:.0}, bf16 {bpt_bf16:.0} \
+         ({:.1}% cut), int8 {bpt_int8:.0} ({:.1}% cut)",
+        (1.0 - bpt_bf16 / bpt_f32) * 100.0,
+        (1.0 - bpt_int8 / bpt_f32) * 100.0
+    );
+    println!(
+        "decode tokens/s: f32 {tps_f32:.1}, bf16 {tps_bf16:.1} ({:.2}x)",
+        tps_bf16 / tps_f32
+    );
+    // storage cut is a property of the formats, not the machine: safe to pin
+    assert!(
+        bpt_bf16 <= 0.55 * bpt_f32,
+        "bf16 panels must cut weight bytes/token by >=45% vs f32: \
+         {bpt_bf16:.0} vs {bpt_f32:.0}"
+    );
+
     // ---- tree-vs-flat speculation: acceptance at equal draft FLOPs ------
     // The tentpole question of the tree refactor: does spending the same
     // per-round draft budget on a shared-prefix forest — more root-to-leaf
@@ -607,6 +678,8 @@ fn main() {
         ("gamma", Json::num(gamma as f64)),
         ("kernel_dispatch", Json::str(simd::active().name())),
         ("kernel_threads", Json::num(compute_threads() as f64)),
+        ("weight_dtype", Json::str(simd::weight_dtype().name())),
+        ("fast_tier", Json::Bool(simd::fast_tier())),
         ("gemm_st_8x256x256_ns_scalar_ref", Json::num(gemm_scalar_ns)),
         ("gemm_st_8x256x256_ns_vectorized", Json::num(gemm_simd_ns)),
         ("gemm_st_speedup_vs_scalar", Json::num(gemm_st_speedup)),
@@ -640,6 +713,12 @@ fn main() {
         ("tree_vs_flat_tokens_per_sec_tree", Json::num(tps_tree)),
         ("tree_vs_flat_nodes_per_round_flat", Json::num(npr_flat)),
         ("tree_vs_flat_nodes_per_round_tree", Json::num(npr_tree)),
+        ("decode_rounds_by_dtype", Json::Arr(dtype_rows)),
+        ("decode_round_weight_bytes_per_token_f32", Json::num(bpt_f32)),
+        ("decode_round_weight_bytes_per_token_bf16", Json::num(bpt_bf16)),
+        ("decode_round_weight_bytes_per_token_int8", Json::num(bpt_int8)),
+        ("decode_round_tokens_per_sec_f32", Json::num(tps_f32)),
+        ("decode_round_tokens_per_sec_bf16", Json::num(tps_bf16)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

@@ -227,8 +227,16 @@ impl Metrics {
             .unwrap()
             .map(|s| s.elapsed().as_secs_f64())
             .unwrap_or(0.0);
+        // Resolved dispatch configuration (kernel tier, weight dtype, fast
+        // tier), so perf trajectories scraped from /metrics are attributable
+        // to the configuration that produced them.
+        let kernel = crate::runtime::simd::active().name();
+        let dtype = crate::runtime::simd::weight_dtype().name();
+        let fast = crate::runtime::simd::fast_tier() as u8;
         format!(
-            "specmer_uptime_seconds {uptime:.1}\n\
+            "specmer_kernel_info{{kernel=\"{kernel}\",weight_dtype=\"{dtype}\"}} 1\n\
+             specmer_fast_tier {fast}\n\
+             specmer_uptime_seconds {uptime:.1}\n\
              specmer_requests_total {}\n\
              specmer_completed_total {}\n\
              specmer_failed_total {}\n\
@@ -319,6 +327,16 @@ mod tests {
         assert_eq!(m.tokens_per_second(), 0.0);
         assert_eq!(m.batch_occupancy(), 0.0);
         assert!(m.text_dump().contains("specmer_requests_total 0"));
+    }
+
+    #[test]
+    fn dump_names_dispatch_config() {
+        let dump = Metrics::new().text_dump();
+        // the exact kernel/dtype depend on host + env; the labels must be
+        // present and drawn from the known vocabularies either way
+        assert!(dump.contains("specmer_kernel_info{kernel=\""));
+        assert!(dump.contains("weight_dtype=\""));
+        assert!(dump.contains("specmer_fast_tier "));
     }
 
     #[test]

@@ -1,10 +1,30 @@
-//! Model parameter loading: `manifest.json` + `params_<model>.bin`.
+//! Model parameter loading (`manifest.json` + `params_<model>.bin`) and the
+//! dtype-tagged weight panel store for the CPU runtime.
 //!
 //! aot.py serializes each checkpoint as one flat little-endian f32 vector;
 //! the manifest records the model hyperparameters, per-tensor offsets and
 //! the KV-cache shape. The flat vector is argument 0 of every exported HLO
 //! program, so Rust never needs to understand the tensor layout — but the
 //! pure-Rust reference model (runtime::cpu_ref) does, via [`ModelParams::tensor`].
+//!
+//! # Weight panels and dtypes
+//!
+//! Decode on CPU is memory-bandwidth-bound on weight traffic, so the weight
+//! matrices the GEMM kernels stream every round — the per-layer QKV/O and
+//! MLP projections plus the prepacked logits head — are held in a
+//! [`Panel`]: a dtype-tagged store quantized **once at model load**
+//! ([`WeightDtype`], selected by `SPECMER_WEIGHT_DTYPE`). Narrow dtypes
+//! (`bf16`, `f16`, `int8` + per-row f32 scales) never touch memory as f32;
+//! the kernels dequantize in registers and accumulate in f32
+//! ([`crate::runtime::gemm::matmul_panel`]).
+//!
+//! Tier contract: the default `f32` panel tier is **bitwise-pinned** to the
+//! seed scalar path. Narrow tiers change values (quantization rounds the
+//! weights) and are pinned differently: dequantization is deterministic and
+//! identical across kernel arms, so for a fixed dtype the AVX2 arm, the
+//! portable arm, and a dequantize-then-f32 oracle stay bitwise-equal to
+//! *each other* (`tests/quantization.rs`), while accuracy vs f32 is bounded
+//! by the end-to-end tolerance suites (`tests/fast_tier.rs`).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -103,6 +123,268 @@ pub struct Manifest {
     pub models: BTreeMap<String, ModelDims>,
 }
 
+/// Storage dtype of a weight [`Panel`] (see module docs for the tier
+/// contract). Selected per model at load; `SPECMER_WEIGHT_DTYPE` sets the
+/// process default (resolved by [`crate::runtime::simd::weight_dtype`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum WeightDtype {
+    /// 4 bytes/weight; the bitwise-exact default tier.
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range, 8-bit mantissa, 2 bytes/weight.
+    /// Dequant is an exact shift-widen — every bf16 value is exactly
+    /// representable in f32.
+    Bf16,
+    /// IEEE half: 5-bit exponent, 11-bit mantissa, 2 bytes/weight. Exact
+    /// dequant, but weights outside ±65504 saturate at quantization.
+    F16,
+    /// int8 with one f32 scale per `k` row (`scale = max_abs(row)/127`),
+    /// ~1 byte/weight. Dequant folds the scale into the broadcast input.
+    Int8,
+}
+
+impl WeightDtype {
+    /// Stable name for logs / metrics / bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::Bf16 => "bf16",
+            WeightDtype::F16 => "f16",
+            WeightDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse an env/config spelling; `None` for unrecognized values.
+    pub fn parse(s: &str) -> Option<WeightDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" | "" => Some(WeightDtype::F32),
+            "bf16" | "bfloat16" => Some(WeightDtype::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Some(WeightDtype::F16),
+            "int8" | "i8" | "q8" => Some(WeightDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// f32 → bf16, round-to-nearest-even (NaN forced quiet so the payload
+/// truncation can't produce an infinity bit pattern).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    let round = ((b >> 16) & 1) + 0x7fff;
+    ((b.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 → f32: exact (bf16 is f32 with the low 16 mantissa bits dropped).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → IEEE binary16, round-to-nearest-even, with subnormal halves and
+/// overflow-to-infinity handled (the `half` crate is unavailable offline
+/// and core's `f16` is unstable, so the bit manipulation lives here).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let mant32 = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN; keep NaN payloads nonzero after truncation.
+        let payload = if mant32 == 0 { 0 } else { 0x0200 | (((mant32 >> 13) as u16) & 0x03ff) };
+        return sign | 0x7c00 | payload;
+    }
+    let exp = exp32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // below half the smallest subnormal → ±0
+        }
+        // Subnormal half: shift the (implicit-bit-restored) mantissa so the
+        // result exponent field is 0, rounding half-to-even on the cut.
+        let mant = mant32 | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = 1u32 << (shift - 1);
+        let rest = mant & ((half << 1) - 1);
+        let mut h = (mant >> shift) as u16;
+        if rest > half || (rest == half && (h & 1) == 1) {
+            h += 1; // carry into the exponent field is correct rounding
+        }
+        return sign | h;
+    }
+    let mut h = (((exp as u32) << 10) | (mant32 >> 13)) as u16;
+    let rest = mant32 & 0x1fff;
+    if rest > 0x1000 || (rest == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1); // may carry to ±inf; that is the rounded value
+    }
+    sign | h
+}
+
+/// IEEE binary16 → f32: exact for every half value (normal, subnormal,
+/// ±inf; NaN payloads are widened left-aligned).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half = mant · 2⁻²⁴: normalize into an f32 exponent.
+            let p = 31 - mant.leading_zeros(); // MSB position, 0..=9
+            let biased = p + 103; // (p - 24) + 127
+            sign | (biased << 23) | ((mant << (23 - p)) & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// One dtype-tagged `[k, n]` row-major weight matrix, quantized once at
+/// model load. Kernels consume it through [`Panel::view`].
+#[derive(Clone, Debug)]
+pub enum Panel {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    F16(Vec<u16>),
+    /// Row-major quantized values + one scale per `k` row (`scales.len()`
+    /// = `k`; an all-zero row gets scale 0 so dequant stays exact).
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+/// Borrowed view of a [`Panel`], the type the GEMM entry points take (lets
+/// one code path serve both layer weights and the packed logits head).
+#[derive(Clone, Copy, Debug)]
+pub enum PanelRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    F16(&'a [u16]),
+    Int8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl Panel {
+    /// Quantize a `[k, n]` row-major f32 matrix into `dtype` storage.
+    /// `k` is the shared GEMM dimension: int8 scales are per `k` row.
+    pub fn quantize(w: &[f32], k: usize, n: usize, dtype: WeightDtype) -> Panel {
+        debug_assert_eq!(w.len(), k * n);
+        match dtype {
+            WeightDtype::F32 => Panel::F32(w.to_vec()),
+            WeightDtype::Bf16 => Panel::Bf16(w.iter().map(|&x| f32_to_bf16(x)).collect()),
+            WeightDtype::F16 => Panel::F16(w.iter().map(|&x| f32_to_f16(x)).collect()),
+            WeightDtype::Int8 => {
+                let mut q = vec![0i8; w.len()];
+                let mut scales = vec![0.0f32; k];
+                for i in 0..k {
+                    let row = &w[i * n..(i + 1) * n];
+                    let maxabs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    if maxabs > 0.0 {
+                        let scale = maxabs / 127.0;
+                        scales[i] = scale;
+                        let inv = 127.0 / maxabs;
+                        for (qe, &x) in q[i * n..(i + 1) * n].iter_mut().zip(row) {
+                            *qe = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                }
+                Panel::Int8 { q, scales }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        match self {
+            Panel::F32(_) => WeightDtype::F32,
+            Panel::Bf16(_) => WeightDtype::Bf16,
+            Panel::F16(_) => WeightDtype::F16,
+            Panel::Int8 { .. } => WeightDtype::Int8,
+        }
+    }
+
+    /// Bytes of weight storage streamed per full pass over the panel
+    /// (includes int8 scales — they are read traffic too).
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            Panel::F32(w) => w.len() * 4,
+            Panel::Bf16(w) | Panel::F16(w) => w.len() * 2,
+            Panel::Int8 { q, scales } => q.len() + scales.len() * 4,
+        }
+    }
+
+    /// Borrowed view for the GEMM entry points (named `view`, not
+    /// `as_ref`, to stay clear of the `AsRef` trait convention).
+    pub fn view(&self) -> PanelRef<'_> {
+        match self {
+            Panel::F32(w) => PanelRef::F32(w),
+            Panel::Bf16(w) => PanelRef::Bf16(w),
+            Panel::F16(w) => PanelRef::F16(w),
+            Panel::Int8 { q, scales } => PanelRef::Int8 { q, scales },
+        }
+    }
+
+    /// The f32 storage when this is an f32 panel (the scalar reference path
+    /// requires the exact tier; narrow panels return `None`).
+    pub fn f32_slice(&self) -> Option<&[f32]> {
+        match self {
+            Panel::F32(w) => Some(w),
+            _ => None,
+        }
+    }
+
+    /// Dequantize back to a dense f32 matrix. For bf16/f16 this is exact
+    /// (the oracle `matmul` over this output is bitwise-equal to the fused
+    /// kernels); for int8 it reconstructs `q · scale` per element.
+    pub fn to_f32(&self, k: usize, n: usize) -> Vec<f32> {
+        match self {
+            Panel::F32(w) => w.clone(),
+            Panel::Bf16(w) => w.iter().map(|&h| bf16_to_f32(h)).collect(),
+            Panel::F16(w) => w.iter().map(|&h| f16_to_f32(h)).collect(),
+            Panel::Int8 { q, scales } => {
+                let mut out = vec![0.0f32; k * n];
+                for i in 0..k {
+                    let s = scales[i];
+                    let row = &q[i * n..(i + 1) * n];
+                    for (o, &qe) in out[i * n..(i + 1) * n].iter_mut().zip(row) {
+                        *o = qe as f32 * s;
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+impl PanelRef<'_> {
+    pub fn dtype(&self) -> WeightDtype {
+        match self {
+            PanelRef::F32(_) => WeightDtype::F32,
+            PanelRef::Bf16(_) => WeightDtype::Bf16,
+            PanelRef::F16(_) => WeightDtype::F16,
+            PanelRef::Int8 { .. } => WeightDtype::Int8,
+        }
+    }
+
+    /// Element count of the underlying `[k, n]` matrix.
+    pub fn len(&self) -> usize {
+        match self {
+            PanelRef::F32(w) => w.len(),
+            PanelRef::Bf16(w) | PanelRef::F16(w) => w.len(),
+            PanelRef::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Prepacked weight panels for the CPU runtime's column-vectorized kernels,
 /// built **once at model load** (`CpuModel::from_params` / `synthetic`).
 ///
@@ -122,8 +404,12 @@ pub struct Manifest {
 /// Projection weights are exported row-major `[in, out]` — already the
 /// column-lane orientation — so only the tied head needs a packed panel.
 pub struct PackedWeights {
-    /// Transposed tied embedding, row-major `[D, V_pad]`.
+    /// Transposed tied embedding, row-major `[D, V_pad]` — the f32-tier
+    /// storage. Empty when a narrow dtype is packed (see `quant`).
     pub emb_t: Vec<f32>,
+    /// Narrow-dtype storage of the same `[D, V_pad]` panel; `None` on the
+    /// f32 tier so the head is never held twice.
+    pub quant: Option<Panel>,
     /// Columns in the packed panel (`vocab` rounded up to `lanes`).
     pub v_pad: usize,
     /// Real vocab width (columns `vocab..v_pad` are zero padding).
@@ -132,7 +418,7 @@ pub struct PackedWeights {
 
 impl PackedWeights {
     /// Transpose the first `vocab` rows of a `[V, D]` embedding into a
-    /// `[D, V_pad]` panel aligned to `lanes` columns.
+    /// `[D, V_pad]` panel aligned to `lanes` columns (f32 tier).
     pub fn pack(tok_emb: &[f32], vocab: usize, d: usize, lanes: usize) -> PackedWeights {
         let lanes = lanes.max(1);
         let v_pad = (vocab + lanes - 1) / lanes * lanes;
@@ -142,7 +428,44 @@ impl PackedWeights {
                 emb_t[i * v_pad + t] = tok_emb[t * d + i];
             }
         }
-        PackedWeights { emb_t, v_pad, vocab }
+        PackedWeights { emb_t, quant: None, v_pad, vocab }
+    }
+
+    /// [`PackedWeights::pack`] then quantize the panel into `dtype`
+    /// storage. `F32` keeps the transposed f32 panel unchanged.
+    pub fn pack_dtype(
+        tok_emb: &[f32],
+        vocab: usize,
+        d: usize,
+        lanes: usize,
+        dtype: WeightDtype,
+    ) -> PackedWeights {
+        let mut p = Self::pack(tok_emb, vocab, d, lanes);
+        if dtype != WeightDtype::F32 {
+            p.quant = Some(Panel::quantize(&p.emb_t, d, p.v_pad, dtype));
+            p.emb_t = Vec::new();
+        }
+        p
+    }
+
+    /// The `[D, V_pad]` head panel on whichever tier is packed.
+    pub fn head(&self) -> PanelRef<'_> {
+        match &self.quant {
+            Some(p) => p.view(),
+            None => PanelRef::F32(&self.emb_t),
+        }
+    }
+
+    pub fn dtype(&self) -> WeightDtype {
+        self.quant.as_ref().map_or(WeightDtype::F32, |p| p.dtype())
+    }
+
+    /// Weight bytes streamed by one full pass over the head panel.
+    pub fn weight_bytes(&self) -> usize {
+        match &self.quant {
+            Some(p) => p.weight_bytes(),
+            None => self.emb_t.len() * 4,
+        }
     }
 }
 

@@ -62,7 +62,7 @@ use super::backend::{
     VerifyTreeBlock,
 };
 use super::{gemm, simd};
-use crate::params::{ModelDims, ModelParams, PackedWeights};
+use crate::params::{ModelDims, ModelParams, PackedWeights, Panel, WeightDtype};
 use crate::sampling;
 use crate::util::rng::Pcg64;
 
@@ -117,19 +117,22 @@ fn grab(v: &mut Vec<f32>, len: usize) {
     v.resize(len, 0.0);
 }
 
-/// One transformer block's weights.
+/// One transformer block's weights. The projection/MLP matrices are stored
+/// as dtype-tagged [`Panel`]s (quantized once at load when a narrow
+/// [`WeightDtype`] is selected); layernorm params and biases stay f32 —
+/// they are O(D) per layer and contribute nothing to weight traffic.
 struct Layer {
     ln1_g: Vec<f32>,
     ln1_b: Vec<f32>,
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
-    wo: Vec<f32>,
+    wq: Panel,
+    wk: Panel,
+    wv: Panel,
+    wo: Panel,
     ln2_g: Vec<f32>,
     ln2_b: Vec<f32>,
-    w1: Vec<f32>,
+    w1: Panel,
     b1: Vec<f32>,
-    w2: Vec<f32>,
+    w2: Panel,
     b2: Vec<f32>,
 }
 
@@ -146,6 +149,13 @@ pub struct CpuModel {
     /// logits head runs on the column-vectorized GEMM kernel instead of
     /// per-vocab-entry transposed dot products (see [`PackedWeights`]).
     packed: PackedWeights,
+    /// Weight storage dtype shared by the layer panels and the logits head
+    /// (resolved once at construction; see [`simd::weight_dtype`]).
+    dtype: WeightDtype,
+    /// Opt-in fast dispatch tier: FMA micro-kernels plus polynomial
+    /// exp/tanh in softmax/GELU. Off the bitwise contract (see
+    /// [`simd::fast_tier`]); the [`reference`] oracle never uses it.
+    fast: bool,
     /// Round-workspace pool (see [`BufPool`]).
     pool: BufPool,
 }
@@ -493,10 +503,21 @@ fn ln(x: &mut [f32], g: &[f32], b: &[f32]) {
 }
 
 /// tanh-approximated GELU (matches jax.nn.gelu's default approximate=True).
+/// The exact arm is bitwise-identical to the seed implementation: same
+/// expression, same operation order, libm `tanh`. The fast arm swaps in
+/// [`simd::tanh_fast`] and is only reachable under `SPECMER_FAST=1`.
+#[inline]
+fn gelu_with(x: f32, fast: bool) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    let t = C * (x + 0.044_715 * x * x * x);
+    let th = if fast { simd::tanh_fast(t) } else { t.tanh() };
+    0.5 * x * (1.0 + th)
+}
+
+/// Exact-tier GELU, used by the [`reference`] oracle.
 #[inline]
 fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+    gelu_with(x, false)
 }
 
 /// One query head's attention over two contiguous KV segments (committed
@@ -506,7 +527,9 @@ fn gelu(x: f32) -> f32 {
 /// softmax normalizer are single-accumulator reductions (and `exp` is a
 /// libm call), so they stay scalar in index order; the weighted-V inner
 /// loop has independent output slots per `dh` lane and rides
-/// [`simd::axpy`].
+/// [`simd::axpy`]. With `fast` set the softmax exponentials run on the
+/// polynomial [`simd::exp_fast`] instead of libm `exp` (accuracy-bounded,
+/// not bitwise — see the fast-tier notes in the `runtime` module docs).
 #[allow(clippy::too_many_arguments)]
 fn attend_one(
     qh: &[f32],
@@ -520,6 +543,7 @@ fn attend_one(
     n2: usize,
     out: &mut [f32],
     scores: &mut Vec<f32>,
+    fast: bool,
 ) {
     scores.clear();
     let mut max = f32::NEG_INFINITY;
@@ -539,7 +563,7 @@ fn attend_one(
     }
     let mut z = 0.0f32;
     for sc in scores.iter_mut() {
-        *sc = (*sc - max).exp();
+        *sc = if fast { simd::exp_fast(*sc - max) } else { (*sc - max).exp() };
         z += *sc;
     }
     for (s, &w) in scores.iter().take(n1).enumerate() {
@@ -553,33 +577,50 @@ fn attend_one(
 }
 
 impl CpuModel {
+    /// Load from exported params using the process-wide dispatch config
+    /// (`SPECMER_WEIGHT_DTYPE` / `SPECMER_FAST`, resolved once per process).
     pub fn from_params(mp: &ModelParams, vocab: usize) -> Result<CpuModel> {
+        Self::from_params_with(mp, vocab, simd::weight_dtype(), simd::fast_tier())
+    }
+
+    /// Load from exported params with an explicit weight dtype and fast-tier
+    /// flag. Weights are quantized once here; the hot paths never widen them
+    /// back to an f32 buffer (dequant happens in-register inside the GEMM
+    /// kernels).
+    pub fn from_params_with(
+        mp: &ModelParams,
+        vocab: usize,
+        dtype: WeightDtype,
+        fast: bool,
+    ) -> Result<CpuModel> {
         let t = |name: &str| -> Result<Vec<f32>> { Ok(mp.tensor(name)?.0.to_vec()) };
+        let d = mp.dims.d_model;
+        let d_ff = mp.dims.d_ff;
+        let q = |w: &[f32], k: usize, n: usize| Panel::quantize(w, k, n, dtype);
         let mut layers = Vec::new();
         for l in 0..mp.dims.n_layer {
             let p = |s: &str| format!("l{l}.{s}");
             layers.push(Layer {
                 ln1_g: t(&p("ln1_g"))?,
                 ln1_b: t(&p("ln1_b"))?,
-                wq: t(&p("wq"))?,
-                wk: t(&p("wk"))?,
-                wv: t(&p("wv"))?,
-                wo: t(&p("wo"))?,
+                wq: q(&t(&p("wq"))?, d, d),
+                wk: q(&t(&p("wk"))?, d, d),
+                wv: q(&t(&p("wv"))?, d, d),
+                wo: q(&t(&p("wo"))?, d, d),
                 ln2_g: t(&p("ln2_g"))?,
                 ln2_b: t(&p("ln2_b"))?,
-                w1: t(&p("w1"))?,
+                w1: q(&t(&p("w1"))?, d, d_ff),
                 b1: t(&p("b1"))?,
-                w2: t(&p("w2"))?,
+                w2: q(&t(&p("w2"))?, d_ff, d),
                 b2: t(&p("b2"))?,
             });
         }
         let tok_emb = t("tok_emb")?;
-        let d = mp.dims.d_model;
         // exact-width [D, V] panel: the column-vectorized kernels handle a
         // non-lane-multiple trailing tile themselves, so padding here would
         // only buy wasted multiply-adds against zero columns plus a per-call
         // truncation copy in `logits_rows`
-        let packed = PackedWeights::pack(&tok_emb[..vocab * d], vocab, d, 1);
+        let packed = PackedWeights::pack_dtype(&tok_emb[..vocab * d], vocab, d, 1, dtype);
         Ok(CpuModel {
             name: mp.name.clone(),
             dims: mp.dims.clone(),
@@ -590,13 +631,40 @@ impl CpuModel {
             lnf_g: t("lnf_g")?,
             lnf_b: t("lnf_b")?,
             packed,
+            dtype,
+            fast,
             pool: BufPool::default(),
         })
     }
 
     /// Randomly-initialized model for tests that need a backend without
-    /// artifacts (deterministic in `seed`).
+    /// artifacts (deterministic in `seed`). Uses the process-wide dispatch
+    /// config like [`CpuModel::from_params`].
     pub fn synthetic(n_layer: usize, d_model: usize, n_head: usize, maxlen: usize, seed: u64) -> CpuModel {
+        Self::synthetic_with(
+            n_layer,
+            d_model,
+            n_head,
+            maxlen,
+            seed,
+            simd::weight_dtype(),
+            simd::fast_tier(),
+        )
+    }
+
+    /// [`CpuModel::synthetic`] with an explicit weight dtype and fast-tier
+    /// flag, so accuracy-bounded tests can build exact/fast model pairs in
+    /// one process regardless of the environment.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_with(
+        n_layer: usize,
+        d_model: usize,
+        n_head: usize,
+        maxlen: usize,
+        seed: u64,
+        dtype: WeightDtype,
+        fast: bool,
+    ) -> CpuModel {
         let vocab = crate::tokenizer::VOCAB;
         let d_ff = d_model * 4;
         let mut rng = Pcg64::new(seed);
@@ -607,20 +675,20 @@ impl CpuModel {
             .map(|_| Layer {
                 ln1_g: vec![1.0; d_model],
                 ln1_b: vec![0.0; d_model],
-                wq: w(d_model * d_model, 0.05),
-                wk: w(d_model * d_model, 0.05),
-                wv: w(d_model * d_model, 0.05),
-                wo: w(d_model * d_model, 0.05),
+                wq: Panel::quantize(&w(d_model * d_model, 0.05), d_model, d_model, dtype),
+                wk: Panel::quantize(&w(d_model * d_model, 0.05), d_model, d_model, dtype),
+                wv: Panel::quantize(&w(d_model * d_model, 0.05), d_model, d_model, dtype),
+                wo: Panel::quantize(&w(d_model * d_model, 0.05), d_model, d_model, dtype),
                 ln2_g: vec![1.0; d_model],
                 ln2_b: vec![0.0; d_model],
-                w1: w(d_model * d_ff, 0.05),
+                w1: Panel::quantize(&w(d_model * d_ff, 0.05), d_model, d_ff, dtype),
                 b1: vec![0.0; d_ff],
-                w2: w(d_ff * d_model, 0.05),
+                w2: Panel::quantize(&w(d_ff * d_model, 0.05), d_ff, d_model, dtype),
                 b2: vec![0.0; d_model],
             })
             .collect();
         let tok_emb = w(vocab * d_model, 0.3);
-        let packed = PackedWeights::pack(&tok_emb, vocab, d_model, 1);
+        let packed = PackedWeights::pack_dtype(&tok_emb, vocab, d_model, 1, dtype);
         CpuModel {
             name: "synthetic".into(),
             dims: ModelDims {
@@ -638,8 +706,41 @@ impl CpuModel {
             lnf_g: vec![1.0; d_model],
             lnf_b: vec![0.0; d_model],
             packed,
+            dtype,
+            fast,
             pool: BufPool::default(),
         }
+    }
+
+    /// Weight storage dtype the model was built with.
+    pub fn weight_dtype(&self) -> WeightDtype {
+        self.dtype
+    }
+
+    /// Whether the accuracy-bounded fast tier is active for this model.
+    pub fn fast_tier(&self) -> bool {
+        self.fast
+    }
+
+    /// Bytes of weight-matrix storage read per full decode forward: the
+    /// per-layer projection/MLP panels plus the logits head panel. Biases
+    /// and layernorm params are excluded (O(D) per layer, noise next to the
+    /// O(D²) matrices). Used by `bench_micro` to derive bytes/token and
+    /// effective bandwidth per dtype.
+    pub fn weight_bytes(&self) -> usize {
+        let per_layer: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.wq.weight_bytes()
+                    + l.wk.weight_bytes()
+                    + l.wv.weight_bytes()
+                    + l.wo.weight_bytes()
+                    + l.w1.weight_bytes()
+                    + l.w2.weight_bytes()
+            })
+            .sum();
+        per_layer + self.packed.weight_bytes()
     }
 
     pub fn empty_cache(&self) -> CpuCache {
@@ -707,9 +808,9 @@ impl CpuModel {
             for i in 0..g {
                 ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
             }
-            gemm::matmul(&hbuf, &lay.wq, g, d, d, &mut q);
-            gemm::matmul(&hbuf, &lay.wk, g, d, d, &mut kbuf);
-            gemm::matmul(&hbuf, &lay.wv, g, d, d, &mut vbuf);
+            gemm::matmul_panel(&hbuf, lay.wq.view(), g, d, d, &mut q, true, self.fast);
+            gemm::matmul_panel(&hbuf, lay.wk.view(), g, d, d, &mut kbuf, true, self.fast);
+            gemm::matmul_panel(&hbuf, lay.wv.view(), g, d, d, &mut vbuf, true, self.fast);
             for i in 0..g {
                 for hh in 0..nh {
                     let kslot = self.cache_idx(l, 0, hh, pos + i);
@@ -742,25 +843,26 @@ impl CpuModel {
                         0,
                         &mut att[i * d + hh * dh..i * d + (hh + 1) * dh],
                         &mut scores,
+                        self.fast,
                     );
                 }
             }
             // out projection + residual (batched)
-            gemm::matmul(&att, &lay.wo, g, d, d, &mut proj);
+            gemm::matmul_panel(&att, lay.wo.view(), g, d, d, &mut proj, true, self.fast);
             simd::add_assign(&mut xs, &proj);
             // MLP (batched)
             hbuf.copy_from_slice(&xs);
             for i in 0..g {
                 ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
             }
-            gemm::matmul(&hbuf, &lay.w1, g, d, d_ff, &mut ff);
+            gemm::matmul_panel(&hbuf, lay.w1.view(), g, d, d_ff, &mut ff, true, self.fast);
             for i in 0..g {
                 let row = &mut ff[i * d_ff..(i + 1) * d_ff];
                 for (j, f) in row.iter_mut().enumerate() {
-                    *f = gelu(*f + lay.b1[j]);
+                    *f = gelu_with(*f + lay.b1[j], self.fast);
                 }
             }
-            gemm::matmul(&ff, &lay.w2, g, d_ff, d, &mut proj);
+            gemm::matmul_panel(&ff, lay.w2.view(), g, d_ff, d, &mut proj, true, self.fast);
             for i in 0..g {
                 let xrow = &mut xs[i * d..(i + 1) * d];
                 let prow = &proj[i * d..(i + 1) * d];
@@ -813,9 +915,9 @@ impl CpuModel {
             for ci in 0..b {
                 ln(&mut br.hbuf[ci * d..(ci + 1) * d], &lay.ln1_g, &lay.ln1_b);
             }
-            gemm::matmul(&br.hbuf, &lay.wq, b, d, d, &mut br.q);
-            gemm::matmul(&br.hbuf, &lay.wk, b, d, d, &mut br.k);
-            gemm::matmul(&br.hbuf, &lay.wv, b, d, d, &mut br.v);
+            gemm::matmul_panel(&br.hbuf, lay.wq.view(), b, d, d, &mut br.q, true, self.fast);
+            gemm::matmul_panel(&br.hbuf, lay.wk.view(), b, d, d, &mut br.k, true, self.fast);
+            gemm::matmul_panel(&br.hbuf, lay.wv.view(), b, d, d, &mut br.v, true, self.fast);
             // write K/V into each candidate's private tail slot
             for ci in 0..b {
                 for hh in 0..nh {
@@ -848,23 +950,24 @@ impl CpuModel {
                         slot + 1,
                         &mut br.att[ci * d + hh * dh..ci * d + (hh + 1) * dh],
                         &mut br.scores,
+                        self.fast,
                     );
                 }
             }
-            gemm::matmul(&br.att, &lay.wo, b, d, d, &mut br.proj);
+            gemm::matmul_panel(&br.att, lay.wo.view(), b, d, d, &mut br.proj, true, self.fast);
             simd::add_assign(&mut br.xs, &br.proj);
             br.hbuf.copy_from_slice(&br.xs);
             for ci in 0..b {
                 ln(&mut br.hbuf[ci * d..(ci + 1) * d], &lay.ln2_g, &lay.ln2_b);
             }
-            gemm::matmul(&br.hbuf, &lay.w1, b, d, d_ff, &mut br.ff);
+            gemm::matmul_panel(&br.hbuf, lay.w1.view(), b, d, d_ff, &mut br.ff, true, self.fast);
             for ci in 0..b {
                 let row = &mut br.ff[ci * d_ff..(ci + 1) * d_ff];
                 for (j, f) in row.iter_mut().enumerate() {
-                    *f = gelu(*f + lay.b1[j]);
+                    *f = gelu_with(*f + lay.b1[j], self.fast);
                 }
             }
-            gemm::matmul(&br.ff, &lay.w2, b, d_ff, d, &mut br.proj);
+            gemm::matmul_panel(&br.ff, lay.w2.view(), b, d_ff, d, &mut br.proj, true, self.fast);
             for ci in 0..b {
                 let xrow = &mut br.xs[ci * d..(ci + 1) * d];
                 let prow = &br.proj[ci * d..(ci + 1) * d];
@@ -921,9 +1024,36 @@ impl CpuModel {
             for i in 0..f {
                 ln(&mut tt.hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
             }
-            gemm::matmul(&tt.hbuf[..f * d], &lay.wq, f, d, d, &mut tt.q[..f * d]);
-            gemm::matmul(&tt.hbuf[..f * d], &lay.wk, f, d, d, &mut tt.k[..f * d]);
-            gemm::matmul(&tt.hbuf[..f * d], &lay.wv, f, d, d, &mut tt.v[..f * d]);
+            gemm::matmul_panel(
+                &tt.hbuf[..f * d],
+                lay.wq.view(),
+                f,
+                d,
+                d,
+                &mut tt.q[..f * d],
+                true,
+                self.fast,
+            );
+            gemm::matmul_panel(
+                &tt.hbuf[..f * d],
+                lay.wk.view(),
+                f,
+                d,
+                d,
+                &mut tt.k[..f * d],
+                true,
+                self.fast,
+            );
+            gemm::matmul_panel(
+                &tt.hbuf[..f * d],
+                lay.wv.view(),
+                f,
+                d,
+                d,
+                &mut tt.v[..f * d],
+                true,
+                self.fast,
+            );
             // write K/V into each node's own tail row
             for (i, &node) in rows.iter().enumerate() {
                 for hh in 0..nh {
@@ -963,23 +1093,51 @@ impl CpuModel {
                         na,
                         &mut tt.att[i * d + hh * dh..i * d + (hh + 1) * dh],
                         &mut tt.scores,
+                        self.fast,
                     );
                 }
             }
-            gemm::matmul(&tt.att[..f * d], &lay.wo, f, d, d, &mut tt.proj[..f * d]);
+            gemm::matmul_panel(
+                &tt.att[..f * d],
+                lay.wo.view(),
+                f,
+                d,
+                d,
+                &mut tt.proj[..f * d],
+                true,
+                self.fast,
+            );
             simd::add_assign(&mut tt.xs[..f * d], &tt.proj[..f * d]);
             tt.hbuf[..f * d].copy_from_slice(&tt.xs[..f * d]);
             for i in 0..f {
                 ln(&mut tt.hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
             }
-            gemm::matmul(&tt.hbuf[..f * d], &lay.w1, f, d, d_ff, &mut tt.ff[..f * d_ff]);
+            gemm::matmul_panel(
+                &tt.hbuf[..f * d],
+                lay.w1.view(),
+                f,
+                d,
+                d_ff,
+                &mut tt.ff[..f * d_ff],
+                true,
+                self.fast,
+            );
             for i in 0..f {
                 let row = &mut tt.ff[i * d_ff..(i + 1) * d_ff];
                 for (j, x) in row.iter_mut().enumerate() {
-                    *x = gelu(*x + lay.b1[j]);
+                    *x = gelu_with(*x + lay.b1[j], self.fast);
                 }
             }
-            gemm::matmul(&tt.ff[..f * d_ff], &lay.w2, f, d_ff, d, &mut tt.proj[..f * d]);
+            gemm::matmul_panel(
+                &tt.ff[..f * d_ff],
+                lay.w2.view(),
+                f,
+                d_ff,
+                d,
+                &mut tt.proj[..f * d],
+                true,
+                self.fast,
+            );
             for i in 0..f {
                 let xrow = &mut tt.xs[i * d..(i + 1) * d];
                 let prow = &tt.proj[i * d..(i + 1) * d];
@@ -1065,9 +1223,9 @@ impl CpuModel {
             for i in 0..rt {
                 ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln1_g, &lay.ln1_b);
             }
-            gemm::matmul(&hbuf, &lay.wq, rt, d, d, &mut q);
-            gemm::matmul(&hbuf, &lay.wk, rt, d, d, &mut kbuf);
-            gemm::matmul(&hbuf, &lay.wv, rt, d, d, &mut vbuf);
+            gemm::matmul_panel(&hbuf, lay.wq.view(), rt, d, d, &mut q, true, self.fast);
+            gemm::matmul_panel(&hbuf, lay.wk.view(), rt, d, d, &mut kbuf, true, self.fast);
+            gemm::matmul_panel(&hbuf, lay.wv.view(), rt, d, d, &mut vbuf, true, self.fast);
             // K/V into each sequence's own cache at its own positions
             for (b, it) in items.iter_mut().enumerate() {
                 let (toks, pos) = (it.1, it.2);
@@ -1109,26 +1267,27 @@ impl CpuModel {
                             0,
                             &mut att[row * d + hh * dh..row * d + (hh + 1) * dh],
                             &mut scores,
+                            self.fast,
                         );
                     }
                 }
             }
             // out projection + residual (batched over the union of rows)
-            gemm::matmul(&att, &lay.wo, rt, d, d, &mut proj);
+            gemm::matmul_panel(&att, lay.wo.view(), rt, d, d, &mut proj, true, self.fast);
             simd::add_assign(&mut xs, &proj);
             // MLP (batched)
             hbuf.copy_from_slice(&xs);
             for i in 0..rt {
                 ln(&mut hbuf[i * d..(i + 1) * d], &lay.ln2_g, &lay.ln2_b);
             }
-            gemm::matmul(&hbuf, &lay.w1, rt, d, d_ff, &mut ff);
+            gemm::matmul_panel(&hbuf, lay.w1.view(), rt, d, d_ff, &mut ff, true, self.fast);
             for i in 0..rt {
                 let row = &mut ff[i * d_ff..(i + 1) * d_ff];
                 for (j, f) in row.iter_mut().enumerate() {
-                    *f = gelu(*f + lay.b1[j]);
+                    *f = gelu_with(*f + lay.b1[j], self.fast);
                 }
             }
-            gemm::matmul(&ff, &lay.w2, rt, d_ff, d, &mut proj);
+            gemm::matmul_panel(&ff, lay.w2.view(), rt, d_ff, d, &mut proj, true, self.fast);
             for i in 0..rt {
                 let xrow = &mut xs[i * d..(i + 1) * d];
                 let prow = &proj[i * d..(i + 1) * d];
@@ -1190,9 +1349,9 @@ impl CpuModel {
             for r in 0..rows {
                 ln(&mut ar.hbuf[r * d..(r + 1) * d], &lay.ln1_g, &lay.ln1_b);
             }
-            gemm::matmul(&ar.hbuf, &lay.wq, rows, d, d, &mut ar.q);
-            gemm::matmul(&ar.hbuf, &lay.wk, rows, d, d, &mut ar.k);
-            gemm::matmul(&ar.hbuf, &lay.wv, rows, d, d, &mut ar.v);
+            gemm::matmul_panel(&ar.hbuf, lay.wq.view(), rows, d, d, &mut ar.q, true, self.fast);
+            gemm::matmul_panel(&ar.hbuf, lay.wk.view(), rows, d, d, &mut ar.k, true, self.fast);
+            gemm::matmul_panel(&ar.hbuf, lay.wv.view(), rows, d, d, &mut ar.v, true, self.fast);
             // write K/V into each (sequence, candidate) private tail slot
             for b in 0..bn {
                 for ci in 0..c {
@@ -1231,24 +1390,25 @@ impl CpuModel {
                             slot + 1,
                             &mut ar.att[row * d + hh * dh..row * d + (hh + 1) * dh],
                             &mut ar.scores,
+                            self.fast,
                         );
                     }
                 }
             }
-            gemm::matmul(&ar.att, &lay.wo, rows, d, d, &mut ar.proj);
+            gemm::matmul_panel(&ar.att, lay.wo.view(), rows, d, d, &mut ar.proj, true, self.fast);
             simd::add_assign(&mut ar.xs, &ar.proj);
             ar.hbuf.copy_from_slice(&ar.xs);
             for r in 0..rows {
                 ln(&mut ar.hbuf[r * d..(r + 1) * d], &lay.ln2_g, &lay.ln2_b);
             }
-            gemm::matmul(&ar.hbuf, &lay.w1, rows, d, d_ff, &mut ar.ff);
+            gemm::matmul_panel(&ar.hbuf, lay.w1.view(), rows, d, d_ff, &mut ar.ff, true, self.fast);
             for r in 0..rows {
                 let row = &mut ar.ff[r * d_ff..(r + 1) * d_ff];
                 for (j, f) in row.iter_mut().enumerate() {
-                    *f = gelu(*f + lay.b1[j]);
+                    *f = gelu_with(*f + lay.b1[j], self.fast);
                 }
             }
-            gemm::matmul(&ar.ff, &lay.w2, rows, d_ff, d, &mut ar.proj);
+            gemm::matmul_panel(&ar.ff, lay.w2.view(), rows, d_ff, d, &mut ar.proj, true, self.fast);
             for r in 0..rows {
                 let xrow = &mut ar.xs[r * d..(r + 1) * d];
                 let prow = &ar.proj[r * d..(r + 1) * d];
@@ -1276,7 +1436,7 @@ impl CpuModel {
         let v = self.vocab;
         debug_assert_eq!(self.packed.v_pad, v, "head panel is packed at exact vocab width");
         let mut out = vec![0.0f32; rows * v];
-        gemm::matmul_dense(h, &self.packed.emb_t, rows, d, v, &mut out);
+        gemm::matmul_panel(h, self.packed.head(), rows, d, v, &mut out, false, self.fast);
         out
     }
 
@@ -1693,6 +1853,14 @@ impl ModelBackend for CpuModel {
 pub mod reference {
     use super::*;
 
+    /// The oracle runs on the exact f32 tier only: equivalence pins compare
+    /// the batched hot path against this scalar path bitwise, which is only
+    /// meaningful when both read identical f32 weights.
+    fn pf(p: &Panel) -> &[f32] {
+        p.f32_slice()
+            .expect("reference oracle requires the f32 weight tier (unset SPECMER_WEIGHT_DTYPE)")
+    }
+
     /// Seed scalar LayerNorm, kept independent of [`super::simd`] so the
     /// oracle cannot inherit a bug from the vectorized helpers it exists
     /// to check (the hot path's `ln` shares `simd::ln_apply`).
@@ -1751,9 +1919,9 @@ pub mod reference {
             for (i, x) in xs.iter().enumerate() {
                 let mut h = x.clone();
                 ln_scalar(&mut h, &lay.ln1_g, &lay.ln1_b);
-                let q = matvec(&h, &lay.wq, d);
-                let k = matvec(&h, &lay.wk, d);
-                let v = matvec(&h, &lay.wv, d);
+                let q = matvec(&h, pf(&lay.wq), d);
+                let k = matvec(&h, pf(&lay.wk), d);
+                let v = matvec(&h, pf(&lay.wv), d);
                 for hh in 0..nh {
                     let kslot = m.cache_idx(l, 0, hh, pos + i);
                     let vslot = m.cache_idx(l, 1, hh, pos + i);
@@ -1792,17 +1960,17 @@ pub mod reference {
                         }
                     }
                 }
-                let proj = matvec(&att_out, &lay.wo, d);
+                let proj = matvec(&att_out, pf(&lay.wo), d);
                 for j in 0..d {
                     x[j] += proj[j];
                 }
                 let mut h = x.clone();
                 ln_scalar(&mut h, &lay.ln2_g, &lay.ln2_b);
-                let mut ff = matvec(&h, &lay.w1, m.dims.d_ff);
+                let mut ff = matvec(&h, pf(&lay.w1), m.dims.d_ff);
                 for (j, f) in ff.iter_mut().enumerate() {
                     *f = gelu(*f + lay.b1[j]);
                 }
-                let mut out2 = matvec(&ff, &lay.w2, d);
+                let mut out2 = matvec(&ff, pf(&lay.w2), d);
                 for j in 0..d {
                     out2[j] += lay.b2[j];
                     x[j] += out2[j];

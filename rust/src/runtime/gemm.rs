@@ -11,22 +11,47 @@
 //!
 //! Both entry points dispatch once per process ([`super::simd::active`]):
 //! an explicit AVX2 arm (register-tiled 4-row × 16-column micro-kernel,
-//! separate mul + add — never FMA) when the CPU supports it, and a portable
-//! chunked-lane arm that is the same code path on every architecture.
-//! `SPECMER_FORCE_PORTABLE` pins the portable arm for CI. The seed scalar
-//! kernels are kept verbatim ([`matmul_scalar`], [`matmul_dense_scalar`],
-//! [`matmul_nt`]) as the equivalence oracle and bench baseline.
+//! separate mul + add — never FMA on the default tier) when the CPU
+//! supports it, and a portable chunked-lane arm that is the same code path
+//! on every architecture. `SPECMER_FORCE_PORTABLE` pins the portable arm
+//! for CI. The seed scalar kernels are kept verbatim ([`matmul_scalar`],
+//! [`matmul_dense_scalar`], [`matmul_nt`]) as the equivalence oracle and
+//! bench baseline.
+//!
+//! On top of the arm dispatch sit two orthogonal tiers, both reached
+//! through [`matmul_panel`] (which takes a dtype-tagged
+//! [`crate::params::PanelRef`] instead of an f32 slice):
+//!
+//!   * **Weight dtype** (`SPECMER_WEIGHT_DTYPE`): narrow panels (bf16 /
+//!     f16 / int8 + per-row scales) are dequantized **in registers**
+//!     inside the inner loop — shift-widen for bf16, `_mm256_cvtph_ps`
+//!     (F16C) for f16, `cvtepi8` widening with the per-`k`-row scale
+//!     folded into the broadcast input for int8 — so narrow weights never
+//!     touch memory as f32. Accumulation stays f32. Since bf16/f16 dequant
+//!     is exact and both arms keep the per-element order and separate
+//!     mul + add, the AVX2 arm, the portable arm, and a
+//!     dequantize-then-f32 oracle stay bitwise-equal to each other for a
+//!     fixed dtype (`tests/quantization.rs`); accuracy vs the f32 tier is
+//!     a property of quantization, bounded end to end in
+//!     `tests/fast_tier.rs`.
+//!   * **Fast tier** (`SPECMER_FAST`): the AVX2 micro-kernel switches to
+//!     `_mm256_fmadd_ps` (when the FMA feature is present), rounding once
+//!     per multiply-accumulate instead of twice — off the bitwise
+//!     contract, validated by accuracy bounds only. The portable arm keeps
+//!     separate mul + add even on the fast tier (portable `mul_add`
+//!     without hardware FMA is a slow libm call, the opposite of fast).
 //!
 //! # Properties the rest of the runtime relies on
 //!
-//!   * **Bitwise-stable accumulation.** Each output element accumulates
-//!     over the shared `k` dimension strictly in index order with a single
-//!     accumulator, exactly like the seed scalar mat-vec (including its
-//!     skip of zero inputs; the `_dense` variants match the seed logits
-//!     head, which has no skip). Vector lanes run across *independent
-//!     output columns* and every multiply-accumulate is a separate IEEE
-//!     mul then add, so all tiers — and row partitioning across threads —
-//!     are bit-identical to the per-position reference path.
+//!   * **Bitwise-stable accumulation (default tier).** With f32 panels and
+//!     the fast tier off, each output element accumulates over the shared
+//!     `k` dimension strictly in index order with a single accumulator,
+//!     exactly like the seed scalar mat-vec (including its skip of zero
+//!     inputs; the `_dense` variants match the seed logits head, which has
+//!     no skip). Vector lanes run across *independent output columns* and
+//!     every multiply-accumulate is a separate IEEE mul then add, so all
+//!     arms — and row partitioning across threads — are bit-identical to
+//!     the per-position reference path.
 //!     `tests/cpu_batched_equivalence.rs` and `tests/kernel_equivalence.rs`
 //!     assert this.
 //!   * **Bounded threading.** Row-parallelism (via
@@ -37,6 +62,7 @@
 //!     resolved once per process (`SPECMER_THREADS` overrides it).
 
 use super::simd::{self, Kernel};
+use crate::params::PanelRef;
 use crate::util::threadpool::{compute_threads, parallel_chunks_mut};
 
 /// 2·m·k·n below this runs single-threaded (pool handoff ≫ work).
@@ -144,6 +170,180 @@ pub fn matmul_dense_st_with(
         return;
     }
     rows_dispatch(kernel, a, b, k, n, out, false);
+}
+
+/// `out[m,n] = a[m,k] × panel[k,n]` over a dtype-tagged weight panel, with
+/// fused dequant-in-register for narrow dtypes (see module docs). `skip`
+/// selects the seed mat-vec's zero-input skip ([`matmul`] semantics) vs
+/// the dense logits-head accumulation ([`matmul_dense`] semantics); `fast`
+/// enables the FMA micro-kernel on the AVX2 arm. With an f32 panel and
+/// `fast` off this routes through [`matmul`]/[`matmul_dense`] unchanged —
+/// byte-identical to the pre-panel hot path, threading included.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_panel(
+    a: &[f32],
+    b: PanelRef<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+    fast: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if let PanelRef::F32(w) = b {
+        if !fast {
+            if skip {
+                return matmul(a, w, m, k, n, out);
+            }
+            return matmul_dense(a, w, m, k, n, out);
+        }
+    }
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        rows_dispatch_panel(simd::active(), a, b, k, n, out, skip, fast);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    parallel_chunks_mut(out, rows_per * n, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let rows = chunk.len() / n;
+        rows_dispatch_panel(
+            simd::active(),
+            &a[r0 * k..(r0 + rows) * k],
+            b,
+            k,
+            n,
+            chunk,
+            skip,
+            fast,
+        );
+    });
+}
+
+/// Single-threaded [`matmul_panel`] on an explicit kernel arm (the
+/// cross-arm bitwise pins in `tests/quantization.rs` compare these).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_panel_st_with(
+    kernel: Kernel,
+    a: &[f32],
+    b: PanelRef<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+    fast: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    rows_dispatch_panel(kernel, a, b, k, n, out, skip, fast);
+}
+
+/// Row-block dispatch over a dtype-tagged panel. Narrow dtypes get fused
+/// dequant kernels on each arm; f16 additionally needs the F16C feature on
+/// the AVX2 arm (falls back to the portable dequant loop without it).
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn rows_dispatch_panel(
+    kernel: Kernel,
+    a: &[f32],
+    b: PanelRef<'_>,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+    fast: bool,
+) {
+    let on_avx2 = kernel == Kernel::Avx2 && simd::has_avx2();
+    let fma = fast && simd::has_fma();
+    match b {
+        PanelRef::F32(w) => {
+            if on_avx2 {
+                // SAFETY: AVX2 (and FMA where taken) confirmed at runtime.
+                unsafe {
+                    if fma {
+                        avx2::rows_f32_fma(a, w, k, n, out, skip)
+                    } else {
+                        avx2::matmul_rows(a, w, k, n, out, skip)
+                    }
+                }
+            } else {
+                portable::matmul_rows(a, w, k, n, out, skip)
+            }
+        }
+        PanelRef::Bf16(w) => {
+            if on_avx2 {
+                // SAFETY: AVX2 (and FMA where taken) confirmed at runtime.
+                unsafe {
+                    if fma {
+                        avx2::rows_bf16_fma(a, w, k, n, out, skip)
+                    } else {
+                        avx2::rows_bf16(a, w, k, n, out, skip)
+                    }
+                }
+            } else {
+                portable::rows_u16(a, w, k, n, out, skip, crate::params::bf16_to_f32)
+            }
+        }
+        PanelRef::F16(w) => {
+            if on_avx2 && simd::has_f16c() {
+                // SAFETY: AVX2 + F16C (and FMA where taken) confirmed.
+                unsafe {
+                    if fma {
+                        avx2::rows_f16_fma(a, w, k, n, out, skip)
+                    } else {
+                        avx2::rows_f16(a, w, k, n, out, skip)
+                    }
+                }
+            } else {
+                portable::rows_u16(a, w, k, n, out, skip, crate::params::f16_to_f32)
+            }
+        }
+        PanelRef::Int8 { q, scales } => {
+            if on_avx2 {
+                // SAFETY: AVX2 (and FMA where taken) confirmed at runtime.
+                unsafe {
+                    if fma {
+                        avx2::rows_i8_fma(a, q, scales, k, n, out, skip)
+                    } else {
+                        avx2::rows_i8(a, q, scales, k, n, out, skip)
+                    }
+                }
+            } else {
+                portable::rows_i8(a, q, scales, k, n, out, skip)
+            }
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+fn rows_dispatch_panel(
+    _kernel: Kernel,
+    a: &[f32],
+    b: PanelRef<'_>,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    skip: bool,
+    _fast: bool,
+) {
+    match b {
+        PanelRef::F32(w) => portable::matmul_rows(a, w, k, n, out, skip),
+        PanelRef::Bf16(w) => portable::rows_u16(a, w, k, n, out, skip, crate::params::bf16_to_f32),
+        PanelRef::F16(w) => portable::rows_u16(a, w, k, n, out, skip, crate::params::f16_to_f32),
+        PanelRef::Int8 { q, scales } => portable::rows_i8(a, q, scales, k, n, out, skip),
+    }
 }
 
 /// Row-block kernel dispatch (see module docs for the tier map).
@@ -292,6 +492,135 @@ mod portable {
             }
         }
     }
+
+    /// Fused-dequant arm for 16-bit float panels (bf16/f16 — `cvt` is the
+    /// exact widening, monomorphized per dtype). Same lane structure and
+    /// per-element `i` order as [`matmul_rows`], so for a fixed panel this
+    /// is bitwise-equal to the AVX2 dequant kernel and to [`matmul_rows`]
+    /// over the dequantized panel.
+    pub fn rows_u16(
+        a: &[f32],
+        w: &[u16],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        skip: bool,
+        cvt: impl Fn(u16) -> f32 + Copy,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            let mut jb = 0usize;
+            while jb + LANES <= n {
+                let mut acc = [0.0f32; LANES];
+                for (i, &x) in arow.iter().enumerate() {
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let wtile = &w[i * n + jb..i * n + jb + LANES];
+                    for (l, acc_l) in acc.iter_mut().enumerate() {
+                        *acc_l += x * cvt(wtile[l]);
+                    }
+                }
+                orow[jb..jb + LANES].copy_from_slice(&acc);
+                jb += LANES;
+            }
+            if jb < n {
+                tail_u16(arow, w, n, jb, &mut orow[jb..], skip, cvt);
+            }
+        }
+    }
+
+    /// Scalar dequant tail for the `n % LANES` trailing columns.
+    pub fn tail_u16(
+        arow: &[f32],
+        w: &[u16],
+        n: usize,
+        jb: usize,
+        out: &mut [f32],
+        skip: bool,
+        cvt: impl Fn(u16) -> f32 + Copy,
+    ) {
+        out.fill(0.0);
+        for (i, &x) in arow.iter().enumerate() {
+            if skip && x == 0.0 {
+                continue;
+            }
+            let wtile = &w[i * n + jb..i * n + n];
+            for (o, &h) in out.iter_mut().zip(wtile) {
+                *o += x * cvt(h);
+            }
+        }
+    }
+
+    /// Fused-dequant arm for int8 panels: the per-`k`-row scale is folded
+    /// into the broadcast input once per `i` step (`xs = x · scale_i`), so
+    /// the inner loop is one widen + mul + add per lane. The AVX2 kernel
+    /// uses the identical fold, keeping the arms bitwise-equal.
+    pub fn rows_i8(
+        a: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        skip: bool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            let mut jb = 0usize;
+            while jb + LANES <= n {
+                let mut acc = [0.0f32; LANES];
+                for (i, &x) in arow.iter().enumerate() {
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let xs = x * scales[i];
+                    let qtile = &q[i * n + jb..i * n + jb + LANES];
+                    for (l, acc_l) in acc.iter_mut().enumerate() {
+                        *acc_l += xs * qtile[l] as f32;
+                    }
+                }
+                orow[jb..jb + LANES].copy_from_slice(&acc);
+                jb += LANES;
+            }
+            if jb < n {
+                tail_i8(arow, q, scales, n, jb, &mut orow[jb..], skip);
+            }
+        }
+    }
+
+    /// Scalar dequant tail for int8 trailing columns (same scale fold).
+    pub fn tail_i8(
+        arow: &[f32],
+        q: &[i8],
+        scales: &[f32],
+        n: usize,
+        jb: usize,
+        out: &mut [f32],
+        skip: bool,
+    ) {
+        out.fill(0.0);
+        for (i, &x) in arow.iter().enumerate() {
+            if skip && x == 0.0 {
+                continue;
+            }
+            let xs = x * scales[i];
+            let qtile = &q[i * n + jb..i * n + n];
+            for (o, &qe) in out.iter_mut().zip(qtile) {
+                *o += xs * qe as f32;
+            }
+        }
+    }
 }
 
 /// AVX2 arm: register-tiled micro-kernel, 4 rows × 16 columns of
@@ -432,6 +761,252 @@ mod avx2 {
         }
         if jb < n {
             super::portable::tail_cols(arow, b, n, jb, &mut out[jb..], skip);
+        }
+    }
+
+    // --- fused dequant-in-register kernels (narrow weight panels) and the
+    // --- fast-tier FMA micro-kernel. Single-row blocked: decode-round `m`
+    // --- is small and the weight stream, not register reuse, is the
+    // --- bottleneck these tiers exist to shrink.
+
+    /// Widen 8 bf16 values to f32 lanes: zero-extend u16→u32, shift left
+    /// 16 into the f32 bit layout. Bit-exact dequantization.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_bf16(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16))
+    }
+
+    /// Widen 8 IEEE half values to f32 lanes (F16C; exact).
+    #[target_feature(enable = "avx2,f16c")]
+    unsafe fn load_f16(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// Widen 8 int8 values to f32 lanes (exact — i8 fits f32's mantissa).
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_i8(p: *const i8) -> __m256 {
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+    }
+
+    /// Generates one u16-panel (bf16/f16) row kernel per (feature set,
+    /// accumulate op). The `$fma` arm folds each multiply-accumulate into
+    /// `_mm256_fmadd_ps` (fast tier); the exact arm keeps separate
+    /// mul + add so it stays bitwise-equal to the portable dequant loop.
+    /// Scalar column tails reuse the portable tail with the scalar `$cvt`,
+    /// which performs the identical exact widening.
+    macro_rules! rows_u16_kernel {
+        ($fname:ident, $feat:literal, $fma:expr, $load:ident, $cvt:path) => {
+            /// # Safety
+            /// Caller must have verified the listed features at runtime.
+            #[target_feature(enable = $feat)]
+            pub unsafe fn $fname(
+                a: &[f32],
+                w: &[u16],
+                k: usize,
+                n: usize,
+                out: &mut [f32],
+                skip: bool,
+            ) {
+                const FMA: bool = $fma;
+                if n == 0 {
+                    return;
+                }
+                let rows = out.len() / n;
+                for r in 0..rows {
+                    let arow = &a[r * k..(r + 1) * k];
+                    let orow = &mut out[r * n..(r + 1) * n];
+                    let mut jb = 0usize;
+                    while jb + 16 <= n {
+                        let mut acc0 = _mm256_setzero_ps();
+                        let mut acc1 = _mm256_setzero_ps();
+                        for i in 0..k {
+                            let x = *arow.get_unchecked(i);
+                            if skip && x == 0.0 {
+                                continue;
+                            }
+                            let xv = _mm256_set1_ps(x);
+                            let w0 = $load(w.as_ptr().add(i * n + jb));
+                            let w1 = $load(w.as_ptr().add(i * n + jb + 8));
+                            if FMA {
+                                acc0 = _mm256_fmadd_ps(xv, w0, acc0);
+                                acc1 = _mm256_fmadd_ps(xv, w1, acc1);
+                            } else {
+                                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, w0));
+                                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, w1));
+                            }
+                        }
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                        jb += 16;
+                    }
+                    while jb + 8 <= n {
+                        let mut acc = _mm256_setzero_ps();
+                        for i in 0..k {
+                            let x = *arow.get_unchecked(i);
+                            if skip && x == 0.0 {
+                                continue;
+                            }
+                            let xv = _mm256_set1_ps(x);
+                            let w0 = $load(w.as_ptr().add(i * n + jb));
+                            if FMA {
+                                acc = _mm256_fmadd_ps(xv, w0, acc);
+                            } else {
+                                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, w0));
+                            }
+                        }
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                        jb += 8;
+                    }
+                    if jb < n {
+                        super::portable::tail_u16(arow, w, n, jb, &mut orow[jb..], skip, $cvt);
+                    }
+                }
+            }
+        };
+    }
+
+    rows_u16_kernel!(rows_bf16, "avx2", false, load_bf16, crate::params::bf16_to_f32);
+    rows_u16_kernel!(rows_bf16_fma, "avx2,fma", true, load_bf16, crate::params::bf16_to_f32);
+    rows_u16_kernel!(rows_f16, "avx2,f16c", false, load_f16, crate::params::f16_to_f32);
+    rows_u16_kernel!(rows_f16_fma, "avx2,f16c,fma", true, load_f16, crate::params::f16_to_f32);
+
+    /// Generates the int8 row kernels: per-`k`-row scale folded into the
+    /// broadcast input (`xs = x · scale_i`, one scalar mul per `i` step),
+    /// then widen-convert + multiply-accumulate per lane — the identical
+    /// fold order as `portable::rows_i8`, keeping the arms bitwise-equal
+    /// on the exact tier.
+    macro_rules! rows_i8_kernel {
+        ($fname:ident, $feat:literal, $fma:expr) => {
+            /// # Safety
+            /// Caller must have verified the listed features at runtime.
+            #[target_feature(enable = $feat)]
+            pub unsafe fn $fname(
+                a: &[f32],
+                q: &[i8],
+                scales: &[f32],
+                k: usize,
+                n: usize,
+                out: &mut [f32],
+                skip: bool,
+            ) {
+                const FMA: bool = $fma;
+                if n == 0 {
+                    return;
+                }
+                let rows = out.len() / n;
+                for r in 0..rows {
+                    let arow = &a[r * k..(r + 1) * k];
+                    let orow = &mut out[r * n..(r + 1) * n];
+                    let mut jb = 0usize;
+                    while jb + 16 <= n {
+                        let mut acc0 = _mm256_setzero_ps();
+                        let mut acc1 = _mm256_setzero_ps();
+                        for i in 0..k {
+                            let x = *arow.get_unchecked(i);
+                            if skip && x == 0.0 {
+                                continue;
+                            }
+                            let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
+                            let q0 = load_i8(q.as_ptr().add(i * n + jb));
+                            let q1 = load_i8(q.as_ptr().add(i * n + jb + 8));
+                            if FMA {
+                                acc0 = _mm256_fmadd_ps(xv, q0, acc0);
+                                acc1 = _mm256_fmadd_ps(xv, q1, acc1);
+                            } else {
+                                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, q0));
+                                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, q1));
+                            }
+                        }
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                        jb += 16;
+                    }
+                    while jb + 8 <= n {
+                        let mut acc = _mm256_setzero_ps();
+                        for i in 0..k {
+                            let x = *arow.get_unchecked(i);
+                            if skip && x == 0.0 {
+                                continue;
+                            }
+                            let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
+                            let q0 = load_i8(q.as_ptr().add(i * n + jb));
+                            if FMA {
+                                acc = _mm256_fmadd_ps(xv, q0, acc);
+                            } else {
+                                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, q0));
+                            }
+                        }
+                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                        jb += 8;
+                    }
+                    if jb < n {
+                        super::portable::tail_i8(arow, q, scales, n, jb, &mut orow[jb..], skip);
+                    }
+                }
+            }
+        };
+    }
+
+    rows_i8_kernel!(rows_i8, "avx2", false);
+    rows_i8_kernel!(rows_i8_fma, "avx2,fma", true);
+
+    /// FMA variant of the f32 micro-kernel (fast tier only): one rounding
+    /// per multiply-accumulate instead of two — deliberately off the
+    /// bitwise contract, bounded by `tests/fast_tier.rs`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 + FMA support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rows_f32_fma(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        skip: bool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            let mut jb = 0usize;
+            while jb + 16 <= n {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                for i in 0..k {
+                    let x = *arow.get_unchecked(i);
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let xv = _mm256_set1_ps(x);
+                    acc0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc0);
+                    acc1 =
+                        _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8)), acc1);
+                }
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                jb += 16;
+            }
+            while jb + 8 <= n {
+                let mut acc = _mm256_setzero_ps();
+                for i in 0..k {
+                    let x = *arow.get_unchecked(i);
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let xv = _mm256_set1_ps(x);
+                    acc = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc);
+                }
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                jb += 8;
+            }
+            if jb < n {
+                super::portable::tail_cols(arow, b, n, jb, &mut orow[jb..], skip);
+            }
         }
     }
 }

@@ -45,20 +45,44 @@
 //! column-vectorized kernel could serve. `CpuModel` now transposes the
 //! tied embedding once at model load into an exact-width `[D, V]` panel
 //! (`params::PackedWeights`; the kernels' scalar column tails handle a
-//! non-lane-multiple vocab), so the head is a plain `gemm::matmul_dense`
-//! call sharing the projection kernels.
+//! non-lane-multiple vocab), so the head shares the projection kernels.
 //!
-//! **Why this stays bitwise-stable:** lanes run across *independent output
-//! columns* while each output element accumulates over the shared `k`
-//! dimension strictly in index order with a single accumulator, and every
-//! multiply-accumulate is a separate IEEE mul then add (never FMA). So
-//! vectorization only reorders work across elements, never within one —
-//! batched results are bitwise identical to the seed scalar path (kept as
-//! `cpu_ref::reference`; `tests/cpu_batched_equivalence.rs` and
-//! `tests/kernel_equivalence.rs` enforce the equivalence). Reductions with
-//! one serial accumulator (LN statistics, attention QK dots, softmax
-//! normalizers) and transcendentals (`tanh`, `exp`) stay scalar for the
-//! same reason — see the [`simd`] module docs.
+//! **Quantized weight panels:** decode is memory-bandwidth-bound on weight
+//! traffic, so every weight matrix the GEMMs read — the logits head panel
+//! *and* the per-layer QKV/out/MLP matrices — is stored as a dtype-tagged
+//! `params::Panel` (`f32` | `bf16` | `f16` | `int8`+per-row-scales),
+//! quantized once at model load and selected by `SPECMER_WEIGHT_DTYPE`.
+//! The kernels dequantize **in register** inside the inner loop
+//! (shift-widen for bf16, `vcvtph2ps` for f16, `cvtepi8`+scale broadcast
+//! for int8), so narrow weights never round-trip through an f32 buffer.
+//! Activations, accumulators, KV cache and outputs stay f32 throughout.
+//!
+//! **Compute tiers and what each guarantees:**
+//!
+//!   * **Default f32 tier (bitwise-pinned):** lanes run across
+//!     *independent output columns* while each output element accumulates
+//!     over the shared `k` dimension strictly in index order with a single
+//!     accumulator, and every multiply-accumulate is a separate IEEE mul
+//!     then add (never FMA). Vectorization only reorders work across
+//!     elements, never within one — batched results are bitwise identical
+//!     to the seed scalar path (kept as `cpu_ref::reference`;
+//!     `tests/cpu_batched_equivalence.rs` and `tests/kernel_equivalence.rs`
+//!     enforce the equivalence). Reductions with one serial accumulator
+//!     (LN statistics, attention QK dots, softmax normalizers) and
+//!     transcendentals (`tanh`, `exp`) stay scalar for the same reason —
+//!     see the [`simd`] module docs.
+//!   * **Narrow dtypes (bitwise-pinned per dtype, not vs f32):** bf16/f16
+//!     dequant is exact and int8's scale fold is ordered identically in
+//!     both kernel arms, so for a fixed dtype the AVX2 arm, the portable
+//!     arm, and a dequantize-then-f32-matmul oracle agree bitwise
+//!     (`tests/quantization.rs`). Results differ from the f32 tier only by
+//!     the one-time storage rounding.
+//!   * **`SPECMER_FAST=1` (accuracy-bounded):** opts the GEMM inner loops
+//!     into hardware FMA and softmax/GELU into polynomial `exp`/`tanh`
+//!     ([`simd::exp_fast`]/[`simd::tanh_fast`]). This tier is deliberately
+//!     *off* the bitwise contract; `tests/fast_tier.rs` bounds it by
+//!     per-kernel max-ulp and end-to-end logit-delta/acceptance-rate
+//!     tolerances instead.
 //!
 //! ## Cross-sequence lockstep (`generate_batch` / `verify_batch`)
 //!

@@ -35,7 +35,29 @@
 //! lane-wise identical to their scalar counterparts, so both arms produce
 //! bit-identical results — pinned by proptests in this module, in
 //! [`super::gemm`], and in `tests/kernel_equivalence.rs`.
+//!
+//! # Beyond the bitwise contract: weight dtype and the fast tier
+//!
+//! Two further process-wide dispatch axes resolve here and deliberately
+//! step outside the bitwise pin:
+//!
+//!   * [`weight_dtype`] (`SPECMER_WEIGHT_DTYPE`) selects the storage dtype
+//!     of the weight panels ([`crate::params::WeightDtype`]). Narrow
+//!     dtypes round the weights once at load, so results differ from f32
+//!     *by construction*; what stays pinned is cross-arm determinism — for
+//!     a fixed dtype, the AVX2 and portable arms are bitwise-equal to each
+//!     other and to a dequantize-then-f32 oracle (`tests/quantization.rs`).
+//!   * [`fast_tier`] (`SPECMER_FAST`) enables FMA in the GEMM micro-kernel
+//!     and the polynomial [`exp_fast`]/[`tanh_fast`] in softmax/GELU. FMA
+//!     rounds once where the exact tier rounds twice and the polynomials
+//!     replace libm, so this tier is validated by **accuracy bounds**
+//!     (per-kernel max-ulp, end-to-end logit-delta / acceptance-rate
+//!     tolerance in `tests/fast_tier.rs`), never bit-pins.
+//!
+//! Both default off: with `SPECMER_WEIGHT_DTYPE` unset and `SPECMER_FAST`
+//! off, every path is the bitwise-exact tier described above.
 
+use crate::params::WeightDtype;
 use std::sync::OnceLock;
 
 /// f32 lanes per vector step (one AVX2 register).
@@ -70,21 +92,97 @@ pub fn has_avx2() -> bool {
     false
 }
 
+/// Whether the f16 half→single vector conversion (`_mm256_cvtph_ps`) is
+/// available — F16C is a separate CPUID bit from AVX2.
+#[cfg(target_arch = "x86_64")]
+pub fn has_f16c() -> bool {
+    std::arch::is_x86_feature_detected!("f16c")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn has_f16c() -> bool {
+    false
+}
+
+/// Whether the fused multiply-add arm of the fast tier can run.
+#[cfg(target_arch = "x86_64")]
+pub fn has_fma() -> bool {
+    std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn has_fma() -> bool {
+    false
+}
+
+/// Parse a boolean-ish env flag. `Some(true)` for "1"/"true"/"on"/"yes",
+/// `Some(false)` for ""/"0"/"false"/"off"/"no" (case-insensitive), `None`
+/// for anything else so the caller can warn instead of guessing.
+pub(crate) fn parse_flag(raw: &str) -> Option<bool> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "" | "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Resolve a flag env var once, warning (once, by construction — callers
+/// cache in a `OnceLock`) when the value is unparsable and names the
+/// fallback actually taken.
+fn flag_env(var: &str, default: bool) -> bool {
+    match std::env::var(var) {
+        Ok(raw) => parse_flag(&raw).unwrap_or_else(|| {
+            eprintln!(
+                "[specmer] {var}={raw:?} is not a recognized flag value \
+                 (1/true/on/yes or 0/false/off/no); falling back to {var}={}",
+                if default { "1" } else { "0" }
+            );
+            default
+        }),
+        Err(_) => default,
+    }
+}
+
 /// The process-wide kernel arm, resolved once: `SPECMER_FORCE_PORTABLE`
-/// (non-empty, not "0") pins the portable arm; otherwise AVX2 when
-/// detected, portable everywhere else.
+/// pins the portable arm (unparsable values warn once and fall back to the
+/// default dispatch); otherwise AVX2 when detected, portable everywhere
+/// else.
 pub fn active() -> Kernel {
     static ACTIVE: OnceLock<Kernel> = OnceLock::new();
     *ACTIVE.get_or_init(|| {
-        let forced = std::env::var("SPECMER_FORCE_PORTABLE")
-            .map(|v| !v.is_empty() && v != "0")
-            .unwrap_or(false);
-        if !forced && has_avx2() {
+        if !flag_env("SPECMER_FORCE_PORTABLE", false) && has_avx2() {
             Kernel::Avx2
         } else {
             Kernel::Portable
         }
     })
+}
+
+/// The process-wide weight-panel storage dtype, resolved once from
+/// `SPECMER_WEIGHT_DTYPE` (`f32` | `bf16` | `f16` | `int8`). Unparsable
+/// values warn once and fall back to the bitwise-exact f32 tier. Model
+/// constructors take this as their default; tests/benches override per
+/// model via the `*_with` constructors.
+pub fn weight_dtype() -> WeightDtype {
+    static DTYPE: OnceLock<WeightDtype> = OnceLock::new();
+    *DTYPE.get_or_init(|| match std::env::var("SPECMER_WEIGHT_DTYPE") {
+        Ok(raw) => WeightDtype::parse(&raw).unwrap_or_else(|| {
+            eprintln!(
+                "[specmer] SPECMER_WEIGHT_DTYPE={raw:?} is not a recognized dtype \
+                 (f32|bf16|f16|int8); falling back to f32"
+            );
+            WeightDtype::F32
+        }),
+        Err(_) => WeightDtype::F32,
+    })
+}
+
+/// Whether the accuracy-bounded fast tier (`SPECMER_FAST`) is on for this
+/// process: FMA in the GEMM micro-kernel plus polynomial exp/tanh. Off by
+/// default — the default tier keeps the bitwise-equivalence contract.
+pub fn fast_tier() -> bool {
+    static FAST: OnceLock<bool> = OnceLock::new();
+    *FAST.get_or_init(|| flag_env("SPECMER_FAST", false))
 }
 
 /// Clamp a requested arm to what this machine can execute (callers may ask
@@ -279,6 +377,72 @@ pub fn axpy_with(kernel: Kernel, w: f32, v: &[f32], out: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fast-tier transcendentals (accuracy-bounded; never on the default tier).
+//
+// Branch-light scalar polynomials: no lookup tables, no data-dependent
+// branches in the hot range, so LLVM can unroll/auto-vectorize them inside
+// the GELU row loop and the softmax pass. Deterministic on every
+// architecture (pure IEEE f32 arithmetic) — what they are *not* is
+// bit-identical to libm, which is why the fast tier is validated by the
+// max-ulp and end-to-end tolerance suites in `tests/fast_tier.rs`.
+// ---------------------------------------------------------------------------
+
+/// Polynomial `e^x`: range reduction `x = k·ln2 + r` (two-part ln2,
+/// `|r| ≤ ln2/2`), degree-6 Taylor core, exponent reassembled via bits.
+/// Clamped to the finite f32 range; see `tests/fast_tier.rs` for the
+/// pinned max-ulp bound vs libm.
+#[inline]
+pub fn exp_fast(x: f32) -> f32 {
+    // Outside the f32-normal result range: flush to 0 / saturate to inf
+    // (subnormal exp results round to a softmax weight of zero anyway).
+    if x < -87.336_54 {
+        return 0.0;
+    }
+    if x > 88.722_83 {
+        return f32::INFINITY;
+    }
+    // Two-part ln2 split (musl's expf constants, spelled in bits so the
+    // hi part's low mantissa is exactly zero and `kf * ln2_hi` is exact).
+    let ln2_hi = f32::from_bits(0x3f31_7200); // 6.9314575e-1
+    let ln2_lo = f32::from_bits(0x35bf_be8e); // 1.4286068e-6
+    let kf = (x * std::f32::consts::LOG2_E).round();
+    let r = (x - kf * ln2_hi) - kf * ln2_lo;
+    // Degree-6 Taylor for e^r on |r| <= ln2/2 (truncation ~3e-8 relative).
+    let c6 = 1.0 / 720.0;
+    let c5 = 1.0 / 120.0;
+    let c4 = 1.0 / 24.0;
+    let c3 = 1.0 / 6.0;
+    let p = 1.0 + r * (1.0 + r * (0.5 + r * (c3 + r * (c4 + r * (c5 + r * c6)))));
+    // 2^k via exponent bits; k >= -126 holds for every x past the flush
+    // threshold, but keep the subnormal split in case rounding lands -127.
+    let k = kf as i32;
+    if k >= -126 {
+        f32::from_bits(((k + 127) as u32) << 23) * p
+    } else {
+        f32::from_bits(1u32 << 23) * f32::from_bits(((k + 253) as u32) << 23) * p
+    }
+}
+
+/// Polynomial `tanh(x)`: odd Taylor core near zero (avoids the
+/// `(e^{2x}-1)` cancellation), `(e^{2x}-1)/(e^{2x}+1)` via [`exp_fast`]
+/// elsewhere, saturating to ±1 past the f32 tanh saturation point.
+#[inline]
+pub fn tanh_fast(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax < 0.25 {
+        let x2 = x * x;
+        // tanh x = x - x³/3 + 2x⁵/15 - 17x⁷/315 + O(x⁹)
+        return x * (1.0 + x2 * (-1.0 / 3.0 + x2 * (2.0 / 15.0 + x2 * (-17.0 / 315.0))));
+    }
+    if ax > 9.02 {
+        // tanh saturates to ±1 in f32 beyond ~9.02
+        return 1.0f32.copysign(x);
+    }
+    let e = exp_fast(2.0 * ax);
+    ((e - 1.0) / (e + 1.0)).copysign(x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,5 +517,35 @@ mod tests {
         if !has_avx2() {
             assert_eq!(executable(Kernel::Avx2), Kernel::Portable);
         }
+    }
+
+    /// The env-flag parse path behind `SPECMER_FORCE_PORTABLE` /
+    /// `SPECMER_FAST`: recognized spellings on both sides, `None` (→ warn
+    /// + fallback) for anything else.
+    #[test]
+    fn flag_parse_accepts_known_spellings_and_rejects_garbage() {
+        for s in ["1", "true", "TRUE", "on", "Yes", " 1 "] {
+            assert_eq!(parse_flag(s), Some(true), "{s:?}");
+        }
+        for s in ["", "0", "false", "Off", "no", " 0 "] {
+            assert_eq!(parse_flag(s), Some(false), "{s:?}");
+        }
+        for s in ["2", "portable", "yes!", "enable", "-1"] {
+            assert_eq!(parse_flag(s), None, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn weight_dtype_parse_covers_spellings() {
+        use crate::params::WeightDtype as W;
+        assert_eq!(W::parse("bf16"), Some(W::Bf16));
+        assert_eq!(W::parse("BFLOAT16"), Some(W::Bf16));
+        assert_eq!(W::parse("f16"), Some(W::F16));
+        assert_eq!(W::parse("half"), Some(W::F16));
+        assert_eq!(W::parse("int8"), Some(W::Int8));
+        assert_eq!(W::parse("f32"), Some(W::F32));
+        assert_eq!(W::parse(""), Some(W::F32));
+        assert_eq!(W::parse("fp8"), None);
+        assert_eq!(W::parse("4bit"), None);
     }
 }

@@ -87,21 +87,37 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Parse a `SPECMER_THREADS` value: a positive thread count, or an error
+/// naming what was wrong (so the resolver can warn instead of silently
+/// ignoring a typo'd override).
+pub(crate) fn parse_threads(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err("thread count must be positive".into()),
+        Ok(n) => Ok(n),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
 /// Process-wide compute thread budget, resolved **once** (the GEMM entry
 /// points used to re-query `available_parallelism()` on every call): the
 /// `SPECMER_THREADS` env override (for reproducible benching) wins,
-/// otherwise `available_parallelism`.
+/// otherwise `available_parallelism`. An unparsable override warns once —
+/// resolution is cached in the `OnceLock` — naming the fallback taken.
 pub fn compute_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("SPECMER_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                if n > 0 {
-                    return n;
-                }
-            }
+        let auto = || thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+        match std::env::var("SPECMER_THREADS") {
+            Ok(raw) => parse_threads(&raw).unwrap_or_else(|why| {
+                let n = auto();
+                eprintln!(
+                    "[specmer] SPECMER_THREADS={raw:?} ignored ({why}); \
+                     falling back to available_parallelism = {n}"
+                );
+                n
+            }),
+            Err(_) => auto(),
         }
-        thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
     })
 }
 
@@ -489,5 +505,20 @@ mod tests {
         let b = compute_threads();
         assert!(a >= 1);
         assert_eq!(a, b, "resolved once, stable across calls");
+    }
+
+    /// The `SPECMER_THREADS` parse path: positive counts accepted (with
+    /// whitespace), zero and garbage rejected with a reason (the resolver
+    /// warns and falls back instead of silently ignoring the override).
+    #[test]
+    fn threads_parse_accepts_positive_counts_and_names_failures() {
+        assert_eq!(parse_threads("4"), Ok(4));
+        assert_eq!(parse_threads(" 16 "), Ok(16));
+        assert_eq!(parse_threads("1"), Ok(1));
+        assert!(parse_threads("0").is_err(), "zero threads is not a budget");
+        assert!(parse_threads("-2").is_err());
+        assert!(parse_threads("four").is_err());
+        assert!(parse_threads("4.5").is_err());
+        assert!(parse_threads("").is_err());
     }
 }

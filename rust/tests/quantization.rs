@@ -1,0 +1,296 @@
+//! Quantization-layer pins for the dtype-tagged weight panels
+//! (`params::Panel`) and the fused dequant-in-register GEMM kernels
+//! (`gemm::matmul_panel`), using the in-repo mini-proptest.
+//!
+//! Contract under test (see the `runtime` module docs):
+//!
+//!   * bf16/f16 round-trips are **exact** on representable values, and the
+//!     conversions round to nearest-even elsewhere;
+//!   * int8 per-row scales reconstruct every element within one scale step
+//!     (|x − q·s| ≤ s/2 ≤ one scale-ulp), with zero rows and single-element
+//!     rows exact;
+//!   * for a fixed dtype, the AVX2 arm, the portable arm, and the oracle
+//!     `matmul` over the dequantized panel are **bitwise-equal** — the
+//!     narrow tiers trade values once at quantization, never per arm —
+//!     across lane-tail widths that don't divide the SIMD lane count.
+
+use specmer::params::{
+    bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Panel, PanelRef, WeightDtype,
+};
+use specmer::runtime::gemm;
+use specmer::runtime::simd::Kernel;
+use specmer::util::proptest::{check, Gen};
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// ---------------------------------------------------------------------------
+// Scalar conversion pins
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bf16_round_trip_exact_on_representable_values() {
+    check("bf16 representable round-trip", 200, |g| {
+        // construct a representable bf16 by truncating a random f32
+        let x = g.f64_in(-1e6..1e6) as f32;
+        let h = f32_to_bf16(x);
+        let back = bf16_to_f32(h);
+        // back is representable by construction: converting again is lossless
+        assert_eq!(f32_to_bf16(back), h);
+        assert_eq!(bf16_to_f32(f32_to_bf16(back)).to_bits(), back.to_bits());
+        // rounding moved x by at most one bf16 ulp (2^-8 relative)
+        if x.is_finite() && x != 0.0 {
+            assert!(((back - x) / x).abs() <= 1.0 / 256.0, "{x} -> {back}");
+        }
+    });
+}
+
+#[test]
+fn f16_round_trip_exact_on_representable_values() {
+    check("f16 representable round-trip", 200, |g| {
+        // keep inside the f16 normal range so quantization can't saturate
+        let x = g.f64_in(-60000.0..60000.0) as f32;
+        let h = f32_to_f16(x);
+        let back = f16_to_f32(h);
+        assert_eq!(f32_to_f16(back), h, "{x} -> {h:#06x} -> {back}");
+        assert_eq!(f16_to_f32(f32_to_f16(back)).to_bits(), back.to_bits());
+        // f16 has a 10-bit stored mantissa: normals round within 2^-11 rel.
+        if x.abs() >= 6.2e-5 {
+            assert!(((back - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {back}");
+        }
+    });
+}
+
+#[test]
+fn f16_edge_values_pin() {
+    // exact cardinal values of the binary16 format
+    assert_eq!(f32_to_f16(0.0), 0x0000);
+    assert_eq!(f32_to_f16(-0.0), 0x8000);
+    assert_eq!(f32_to_f16(1.0), 0x3c00);
+    assert_eq!(f32_to_f16(-2.0), 0xc000);
+    assert_eq!(f32_to_f16(65504.0), 0x7bff); // largest finite half
+    assert_eq!(f32_to_f16(65520.0), 0x7c00); // rounds up to +inf
+    assert_eq!(f32_to_f16(1e9), 0x7c00); // overflow → +inf
+    assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+    assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+    assert_eq!(f32_to_f16(6.103_515_6e-5), 0x0400); // smallest normal half
+    assert_eq!(f32_to_f16(5.960_464_5e-8), 0x0001); // smallest subnormal half
+    assert_eq!(f32_to_f16(1e-10), 0x0000); // below half-subnormal → +0
+    assert_eq!(f16_to_f32(0x0001), 5.960_464_5e-8);
+    assert_eq!(f16_to_f32(0x0400), 6.103_515_6e-5);
+    assert_eq!(f16_to_f32(0x3c00), 1.0);
+    assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+    assert!(f16_to_f32(0x7e00).is_nan());
+    assert!(f32_to_f16(f32::NAN) & 0x7c00 == 0x7c00 && f32_to_f16(f32::NAN) & 0x03ff != 0);
+}
+
+#[test]
+fn bf16_edge_values_pin() {
+    assert_eq!(bf16_to_f32(f32_to_bf16(0.0)), 0.0);
+    assert_eq!(f32_to_bf16(1.0), 0x3f80);
+    assert_eq!(bf16_to_f32(0x3f80), 1.0);
+    // round-to-nearest-even at the halfway point: 1.0 + 2^-9 is exactly
+    // between two bf16 values and must round to the even mantissa (1.0)
+    let halfway = f32::from_bits(0x3f80_8000);
+    assert_eq!(f32_to_bf16(halfway), 0x3f80);
+    // one ulp above halfway rounds up
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_8001)), 0x3f81);
+    assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    let qnan = f32_to_bf16(f32::NAN);
+    assert!(qnan & 0x7f80 == 0x7f80 && qnan & 0x007f != 0, "NaN must stay NaN: {qnan:#06x}");
+}
+
+// ---------------------------------------------------------------------------
+// Panel::quantize pins
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_per_row_scale_reconstruction_within_one_scale_step() {
+    check("int8 row reconstruction", 120, |g| {
+        let k = g.usize_in(1..8);
+        let n = g.usize_in(1..40);
+        let w: Vec<f32> = (0..k * n).map(|_| g.f64_in(-3.0..3.0) as f32).collect();
+        let p = Panel::quantize(&w, k, n, WeightDtype::Int8);
+        let back = p.to_f32(k, n);
+        let scales = match &p {
+            Panel::Int8 { scales, .. } => scales.clone(),
+            _ => unreachable!(),
+        };
+        for i in 0..k {
+            let s = scales[i];
+            let row = &w[i * n..(i + 1) * n];
+            let maxabs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert!((s - maxabs / 127.0).abs() <= f32::EPSILON * maxabs, "scale formula");
+            for (j, (&x, &r)) in row.iter().zip(&back[i * n..(i + 1) * n]).enumerate() {
+                // round-to-nearest quantization: within half a scale step,
+                // padded to one step to absorb the f32 rounding of x·inv
+                assert!(
+                    (x - r).abs() <= s * 0.5 + s * 1e-3,
+                    "row {i} col {j}: {x} vs {r} (scale {s})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn int8_zero_row_and_single_element_edge_cases() {
+    // an all-zero row gets scale 0 and reconstructs exactly
+    let w = vec![0.0f32; 6];
+    let p = Panel::quantize(&w, 2, 3, WeightDtype::Int8);
+    assert_eq!(p.to_f32(2, 3), w);
+    match &p {
+        Panel::Int8 { q, scales } => {
+            assert!(q.iter().all(|&x| x == 0));
+            assert_eq!(scales, &vec![0.0, 0.0]);
+        }
+        _ => unreachable!(),
+    }
+    // a single-element row is its own maxabs: reconstructs exactly (q=±127)
+    let w = vec![0.75f32, -1.5];
+    let p = Panel::quantize(&w, 2, 1, WeightDtype::Int8);
+    let back = p.to_f32(2, 1);
+    assert!((back[0] - 0.75).abs() < 1e-6);
+    assert!((back[1] + 1.5).abs() < 1e-6);
+    // mixed: one zero row between nonzero rows stays exact
+    let w = vec![1.0f32, 2.0, 0.0, 0.0, -4.0, 3.0];
+    let p = Panel::quantize(&w, 3, 2, WeightDtype::Int8);
+    let back = p.to_f32(3, 2);
+    assert_eq!(&back[2..4], &[0.0, 0.0]);
+}
+
+#[test]
+fn narrow_dtype_dequant_is_exact_for_16bit_floats() {
+    check("bf16/f16 panel dequant exact", 60, |g| {
+        let k = g.usize_in(1..6);
+        let n = g.usize_in(1..30);
+        let w: Vec<f32> = (0..k * n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+        for dtype in [WeightDtype::Bf16, WeightDtype::F16] {
+            let p = Panel::quantize(&w, k, n, dtype);
+            let d1 = p.to_f32(k, n);
+            // dequantized values are representable: re-quantizing loses nothing
+            let p2 = Panel::quantize(&d1, k, n, dtype);
+            let d2 = p2.to_f32(k, n);
+            assert!(bits_eq(&d1, &d2), "{dtype:?} second trip changed bits");
+        }
+    });
+}
+
+#[test]
+fn panel_weight_bytes_accounting() {
+    let w = vec![0.5f32; 4 * 10];
+    assert_eq!(Panel::quantize(&w, 4, 10, WeightDtype::F32).weight_bytes(), 160);
+    assert_eq!(Panel::quantize(&w, 4, 10, WeightDtype::Bf16).weight_bytes(), 80);
+    assert_eq!(Panel::quantize(&w, 4, 10, WeightDtype::F16).weight_bytes(), 80);
+    // int8: 40 q bytes + 4 row scales × 4 bytes
+    assert_eq!(Panel::quantize(&w, 4, 10, WeightDtype::Int8).weight_bytes(), 56);
+}
+
+// ---------------------------------------------------------------------------
+// Fused-kernel bitwise pins (per dtype, across arms and lane tails)
+// ---------------------------------------------------------------------------
+
+/// For every dtype: the AVX2 arm, the portable arm, and the oracle f32
+/// `matmul` over `Panel::to_f32` agree bitwise, across shapes straddling
+/// the 8-lane and 16-column tile boundaries, both skip modes, and inputs
+/// with exact zeros (the skip edge).
+#[test]
+fn fused_dequant_kernels_bitwise_equal_across_arms() {
+    check("panel kernels bitwise equal", 60, |g| {
+        let m = g.usize_in(1..7);
+        let k = g.usize_in(1..24);
+        let n = g.usize_in(1..52); // crosses 8/16 tiles and scalar tails
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if g.f64_in(0.0..1.0) < 0.25 { 0.0 } else { g.f64_in(-2.0..2.0) as f32 })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+        for dtype in
+            [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::F16, WeightDtype::Int8]
+        {
+            let p = Panel::quantize(&w, k, n, dtype);
+            let dense = p.to_f32(k, n);
+            for skip in [true, false] {
+                // oracle: the bitwise-pinned f32 kernel over the dequantized
+                // panel (same per-element order as the fused kernels)
+                let mut want = vec![0.0f32; m * n];
+                if skip {
+                    gemm::matmul_st_with(Kernel::Portable, &a, &dense, m, k, n, &mut want);
+                } else {
+                    gemm::matmul_dense_st_with(Kernel::Portable, &a, &dense, m, k, n, &mut want);
+                }
+                for kernel in [Kernel::Avx2, Kernel::Portable] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm::matmul_panel_st_with(
+                        kernel,
+                        &a,
+                        p.view(),
+                        m,
+                        k,
+                        n,
+                        &mut got,
+                        skip,
+                        false,
+                    );
+                    assert!(
+                        bits_eq(&got, &want),
+                        "{dtype:?} {kernel:?} skip={skip} ({m},{k},{n})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Threaded `matmul_panel` must match the single-threaded kernel bitwise
+/// (row partitioning keeps each element's serial accumulator), including
+/// for narrow panels on a shape large enough to engage the pool.
+#[test]
+fn threaded_panel_matmul_bitwise_equal_single_thread() {
+    let (m, k, n) = (16usize, 256usize, 520usize);
+    let mut g = Gen::new(17);
+    let a: Vec<f32> = (0..m * k).map(|_| g.f64_in(-1.0..1.0) as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| g.f64_in(-1.0..1.0) as f32).collect();
+    for dtype in [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::Int8] {
+        let p = Panel::quantize(&w, k, n, dtype);
+        let mut par = vec![0.0f32; m * n];
+        gemm::matmul_panel(&a, p.view(), m, k, n, &mut par, true, false);
+        let mut st = vec![0.0f32; m * n];
+        gemm::matmul_panel_st_with(
+            specmer::runtime::simd::active(),
+            &a,
+            p.view(),
+            m,
+            k,
+            n,
+            &mut st,
+            true,
+            false,
+        );
+        assert!(bits_eq(&par, &st), "{dtype:?} row partitioning changed bits");
+    }
+}
+
+/// `matmul_panel` over an f32 panel with the fast tier off must be
+/// byte-identical to the plain `matmul`/`matmul_dense` hot path it routes
+/// through — the no-env-set compatibility guarantee.
+#[test]
+fn f32_panel_routes_through_exact_hot_path() {
+    let (m, k, n) = (5usize, 33usize, 47usize);
+    let mut g = Gen::new(23);
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if g.f64_in(0.0..1.0) < 0.3 { 0.0 } else { g.f64_in(-2.0..2.0) as f32 })
+        .collect();
+    let w: Vec<f32> = (0..k * n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+    let pr = PanelRef::F32(&w);
+    let mut via_panel = vec![0.0f32; m * n];
+    gemm::matmul_panel(&a, pr, m, k, n, &mut via_panel, true, false);
+    let mut direct = vec![0.0f32; m * n];
+    gemm::matmul(&a, &w, m, k, n, &mut direct);
+    assert!(bits_eq(&via_panel, &direct), "skip route");
+    let mut via_panel_d = vec![0.0f32; m * n];
+    gemm::matmul_panel(&a, pr, m, k, n, &mut via_panel_d, false, false);
+    let mut direct_d = vec![0.0f32; m * n];
+    gemm::matmul_dense(&a, &w, m, k, n, &mut direct_d);
+    assert!(bits_eq(&via_panel_d, &direct_d), "dense route");
+}
