@@ -30,19 +30,33 @@
 #                     SPECMER_WEIGHT_DTYPE=bf16 (the narrow-dtype arm of
 #                     the CI matrix; per-dtype bitwise contract).
 #   make bench-micro  full (non-smoke) micro benches.
+#   make lint-specmer the repo-native static analyzer (rust/lint): SAFETY
+#                     comments on every unsafe, no nondeterminism in
+#                     runtime/decode, the bitwise-accumulation contract in
+#                     the kernels, no panics on the serving path, module
+#                     headers. Policy: docs/unsafe-policy.md.
 
 CARGO ?= cargo
 
-.PHONY: verify fmt-check lint build test test-portable test-tree test-fast test-bf16 \
-	bench-smoke bench-micro
+.PHONY: verify fmt-check lint lint-specmer build test test-portable test-tree test-fast \
+	test-bf16 bench-smoke bench-micro
 
-verify: fmt-check lint build test test-portable test-tree test-fast bench-smoke
+verify: fmt-check lint lint-specmer build test test-portable test-tree test-fast bench-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
 
+# clippy at -D warnings, plus the unsafe-hygiene gates backing
+# docs/unsafe-policy.md (the crate root also sets
+# #![deny(unsafe_op_in_unsafe_fn)] so local builds catch it without clippy)
 lint:
-	$(CARGO) clippy -q -- -D warnings
+	$(CARGO) clippy -q -- -D warnings \
+		-D clippy::undocumented_unsafe_blocks \
+		-D unsafe_op_in_unsafe_fn
+
+# repo-native rules clippy can't express (see docs/unsafe-policy.md)
+lint-specmer:
+	$(CARGO) run -q -p specmer-lint
 
 build:
 	$(CARGO) build --release

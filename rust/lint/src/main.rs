@@ -1,0 +1,932 @@
+//! specmer-lint: repo-native static analysis for the SpecMER workspace.
+//!
+//! The correctness story of speculative decoding rests on contracts the Rust
+//! compiler cannot see: verification is only lossless when draft and verify
+//! kernels are bitwise-deterministic, `unsafe` kernel code is only sound under
+//! invariants argued in prose, and the serving path must degrade to error
+//! responses rather than panics. This binary scans `rust/src/**/*.rs` at the
+//! token/line level (dependency-free — the offline build image has no registry
+//! crates) and enforces five rules:
+//!
+//! 1. **unsafe-safety** — every `unsafe` block / fn / impl carries an adjacent
+//!    `// SAFETY:` comment or a `# Safety` doc section.
+//! 2. **nondeterminism** — kernel and decode modules (`runtime/`, `decode/`)
+//!    may not use `Instant`, `SystemTime`, `RandomState`, `HashMap`, or
+//!    `HashSet` (hash iteration order is randomized per-process) outside
+//!    explicitly annotated metrics sites.
+//! 3. **accumulation** — `runtime/gemm.rs` and `runtime/simd.rs` may not use
+//!    f32 `.sum()` / `.fold(` / `.mul_add(` reductions, and FMA intrinsics
+//!    are confined to `SPECMER_FAST`-gated paths (`if FMA { .. }` regions or
+//!    functions whose name contains `fma`).
+//! 4. **serving-panic** — no `unwrap` / `expect` / `panic!`-family macros on
+//!    the serving request path (`server/`, `coordinator/`), excepting the
+//!    lock-poisoning idiom (`.lock()` / `.wait()` / `.join()` receivers, which
+//!    only fail once another thread has already panicked).
+//! 5. **module-header** — every `src` module opens with a `//!` header.
+//!
+//! Escape hatches (all require a non-empty justification, and a bare marker
+//! is itself a violation):
+//!
+//! - `// lint:allow(<rule>): <reason>` on the offending line or the comment
+//!   block directly above it.
+//! - `// PANIC-OK: <reason>` for rule 4 specifically.
+//!
+//! `#[cfg(test)]` regions are skipped entirely. The policy this tool encodes
+//! is written out in `docs/unsafe-policy.md`.
+//!
+//! Exit status: 0 when the tree is clean, 1 with one line per violation
+//! otherwise. Run via `make lint-specmer` or `cargo run -p specmer-lint`.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Violations
+// ---------------------------------------------------------------------------
+
+/// A single rule violation, addressed by path relative to `rust/src`.
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rust/src/{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexical stripping
+// ---------------------------------------------------------------------------
+
+/// Per-line view of a source file after lexical stripping: `code` holds the
+/// source with comments and string/char literal *contents* blanked out (so
+/// brace counting and token matching never trip over literal text), `com`
+/// holds the comment text of each line, and `test` marks lines inside
+/// `#[cfg(test)]` items.
+struct FileView {
+    code: Vec<String>,
+    com: Vec<String>,
+    test: Vec<bool>,
+}
+
+/// Split source into parallel per-line code / comment streams.
+///
+/// Handles line comments, nested block comments, string literals with escape
+/// sequences (including the `\<newline>` continuation), raw strings
+/// (`r"…"`, `r#"…"#`, with optional `b` prefix), byte strings, char literals,
+/// and lifetimes (`'a` is not a char literal).
+fn strip(src: &str) -> (Vec<String>, Vec<String>) {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        CharLit,
+    }
+    let cs: Vec<char> = src.chars().collect();
+    let mut code_lines = Vec::new();
+    let mut com_lines = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            code_lines.push(std::mem::take(&mut code));
+            com_lines.push(std::mem::take(&mut com));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = cs.get(i + 1).copied();
+                let prev_ident = i > 0 && is_ident(cs[i - 1]);
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push(' ');
+                    st = St::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal (`'x'`, `'\n'`) vs. lifetime (`'a`).
+                    let is_char = match next {
+                        Some('\\') => true,
+                        Some(n) => n != '\'' && cs.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    code.push(' ');
+                    if is_char {
+                        st = St::CharLit;
+                    }
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // Possible raw / byte string: r"…", r#"…"#, br"…", b"…",
+                    // or byte char b'…'.
+                    let mut j = i;
+                    if cs[j] == 'b' {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    if cs.get(j) == Some(&'r') {
+                        j += 1;
+                        while cs.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if cs.get(j) == Some(&'"') {
+                            code.push(' ');
+                            st = St::RawStr(hashes);
+                            i = j + 1;
+                            continue;
+                        }
+                    } else if c == 'b' && cs.get(j) == Some(&'"') {
+                        code.push(' ');
+                        st = St::Str;
+                        i = j + 1;
+                        continue;
+                    } else if c == 'b' && cs.get(j) == Some(&'\'') {
+                        code.push(' ');
+                        st = St::CharLit;
+                        i = j + 1;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                com.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                let next = cs.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else {
+                    com.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Skip the escaped char, but never swallow a newline:
+                    // `\<newline>` is a line continuation and the outer loop
+                    // must still see the `\n` to keep line numbers aligned.
+                    if cs.get(i + 1).is_some_and(|&n| n != '\n') {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push(' ');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && (1..=h as usize).all(|k| cs.get(i + k) == Some(&'#')) {
+                    code.push(' ');
+                    st = St::Code;
+                    i += 1 + h as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !src.is_empty() && !src.ends_with('\n') {
+        code_lines.push(code);
+        com_lines.push(com);
+    }
+    (code_lines, com_lines)
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mark every line that belongs to a `#[cfg(test)]` item (module, fn, or a
+/// braceless item like `use`). Brace depth is tracked over the blanked code
+/// stream so literal braces cannot desynchronize it.
+fn mark_tests(code: &[String]) -> Vec<bool> {
+    let mut test = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut armed = false;
+    let mut region_base: Option<i64> = None;
+    for (ln, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        let mut hit = armed || region_base.is_some();
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if armed && region_base.is_none() {
+                        region_base = Some(depth);
+                        armed = false;
+                        hit = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if region_base.is_some_and(|b| depth <= b) {
+                        region_base = None;
+                    }
+                }
+                ';' => {
+                    // `#[cfg(test)]` on a braceless item ends at its `;`.
+                    if armed && region_base.is_none() {
+                        armed = false;
+                    }
+                }
+                _ => {}
+            }
+            if region_base.is_some() {
+                hit = true;
+            }
+        }
+        test[ln] = hit;
+    }
+    test
+}
+
+fn view(src: &str) -> FileView {
+    let (code, com) = strip(src);
+    let test = mark_tests(&code);
+    FileView { code, com, test }
+}
+
+// ---------------------------------------------------------------------------
+// Shared matching helpers
+// ---------------------------------------------------------------------------
+
+/// True when `w` occurs in `s` as a standalone word (no identifier characters
+/// on either side).
+fn has_word(s: &str, w: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = s[start..].find(w) {
+        let a = start + p;
+        let z = a + w.len();
+        let pre = a == 0 || !is_ident(s.as_bytes()[a - 1] as char);
+        let post = z >= s.len() || !is_ident(s.as_bytes()[z] as char);
+        if pre && post {
+            return true;
+        }
+        start = a + 1;
+    }
+    false
+}
+
+/// Comment text adjacent above line `ln`: the run of pure-comment, attribute,
+/// or doc lines directly preceding it, newest-last. A blank line or a line of
+/// real code terminates the run — adjacency is the point.
+fn leading_comment(v: &FileView, ln: usize) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let code = v.code[i].trim();
+        let com = v.com[i].trim();
+        let attr_only = code.starts_with("#[") || code.starts_with("#![");
+        if code.is_empty() && com.is_empty() {
+            break;
+        }
+        if code.is_empty() || attr_only {
+            parts.push(com);
+        } else {
+            break;
+        }
+    }
+    parts.reverse();
+    parts.join("\n")
+}
+
+/// Look for `lint:allow(<rule>): reason` on the line itself or its adjacent
+/// comment block. Returns `None` when absent, `Some(true)` when present with
+/// a justification, `Some(false)` for a bare marker.
+fn allow_marker(v: &FileView, ln: usize, rule: &str) -> Option<bool> {
+    let pat = format!("lint:allow({rule})");
+    marker_with_reason(v, ln, &pat)
+}
+
+fn marker_with_reason(v: &FileView, ln: usize, pat: &str) -> Option<bool> {
+    let above = leading_comment(v, ln);
+    for text in [v.com[ln].as_str(), above.as_str()] {
+        if let Some(p) = text.find(pat) {
+            let rest = &text[p + pat.len()..];
+            let reason = rest
+                .trim_start()
+                .strip_prefix(':')
+                .map(|r| r.lines().next().unwrap_or("").trim())
+                .unwrap_or("");
+            return Some(!reason.is_empty());
+        }
+    }
+    None
+}
+
+/// Apply an allow-marker to a candidate violation: marker with reason
+/// suppresses it, a bare marker converts it into a marker-hygiene violation.
+fn apply_marker(
+    v: &FileView,
+    ln: usize,
+    rule: &'static str,
+    file: &str,
+    msg: String,
+    out: &mut Vec<Violation>,
+) {
+    match allow_marker(v, ln, rule) {
+        Some(true) => {}
+        Some(false) => out.push(Violation {
+            file: file.into(),
+            line: ln + 1,
+            rule,
+            msg: format!("bare `lint:allow({rule})` marker requires a justification"),
+        }),
+        None => out.push(Violation { file: file.into(), line: ln + 1, rule, msg }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe sites need adjacent SAFETY comments
+// ---------------------------------------------------------------------------
+
+fn rule_unsafe_safety(file: &str, v: &FileView, out: &mut Vec<Violation>) {
+    for ln in 0..v.code.len() {
+        if v.test[ln] || !has_word(&v.code[ln], "unsafe") {
+            continue;
+        }
+        let near = leading_comment(v, ln);
+        let ok = v.com[ln].contains("SAFETY:")
+            || near.contains("SAFETY:")
+            || near.contains("# Safety");
+        if !ok {
+            out.push(Violation {
+                file: file.into(),
+                line: ln + 1,
+                rule: "unsafe-safety",
+                msg: "`unsafe` without an adjacent `// SAFETY:` comment or `# Safety` doc \
+                      section"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: no nondeterminism in kernel / decode modules
+// ---------------------------------------------------------------------------
+
+const NONDET_TOKENS: [&str; 5] = ["Instant", "SystemTime", "RandomState", "HashMap", "HashSet"];
+
+fn rule_nondeterminism(file: &str, v: &FileView, out: &mut Vec<Violation>) {
+    for ln in 0..v.code.len() {
+        if v.test[ln] {
+            continue;
+        }
+        for tok in NONDET_TOKENS {
+            if has_word(&v.code[ln], tok) {
+                apply_marker(
+                    v,
+                    ln,
+                    "nondeterminism",
+                    file,
+                    format!(
+                        "`{tok}` in a kernel/decode module breaks bitwise reproducibility \
+                         (wall clocks and randomized hash iteration order are \
+                         nondeterministic); use BTreeMap/BTreeSet or annotate a metrics \
+                         site with `lint:allow(nondeterminism): <reason>`"
+                    ),
+                    out,
+                );
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: bitwise-accumulation contract in runtime::{gemm, simd}
+// ---------------------------------------------------------------------------
+
+fn rule_accumulation(file: &str, v: &FileView, out: &mut Vec<Violation>) {
+    // Track which lines sit inside an `if FMA { … }` region or a function
+    // whose name contains "fma" — the SPECMER_FAST-gated paths where fused
+    // multiply-add is part of the contract rather than a violation of it.
+    let mut depth: i64 = 0;
+    let mut pending_fn_fma: Option<bool> = None;
+    let mut pending_if_fma = false;
+    let mut fn_regions: Vec<(i64, bool)> = Vec::new();
+    let mut if_regions: Vec<i64> = Vec::new();
+    for ln in 0..v.code.len() {
+        let line = &v.code[ln];
+        if let Some(name) = fn_name(line) {
+            pending_fn_fma = Some(name.contains("fma"));
+        }
+        if has_word(line, "if") && has_word(line, "FMA") {
+            pending_if_fma = true;
+        }
+        let fma_ok_at_entry = !if_regions.is_empty()
+            || fn_regions.iter().any(|&(_, f)| f)
+            || pending_fn_fma == Some(true)
+            || pending_if_fma;
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending_if_fma {
+                        if_regions.push(depth);
+                        pending_if_fma = false;
+                    } else if let Some(f) = pending_fn_fma.take() {
+                        fn_regions.push((depth, f));
+                    }
+                }
+                '}' => {
+                    if if_regions.last() == Some(&depth) {
+                        if_regions.pop();
+                    }
+                    if fn_regions.last().map(|&(d, _)| d) == Some(depth) {
+                        fn_regions.pop();
+                    }
+                    depth -= 1;
+                }
+                ';' => {
+                    // A braceless `fn` declaration (trait method) or a
+                    // statement boundary: any pending markers are dead.
+                    pending_fn_fma = None;
+                    pending_if_fma = false;
+                }
+                _ => {}
+            }
+        }
+        if v.test[ln] {
+            continue;
+        }
+        for tok in [".sum()", ".fold(", ".mul_add("] {
+            if line.contains(tok) {
+                apply_marker(
+                    v,
+                    ln,
+                    "accumulation",
+                    file,
+                    format!(
+                        "`{tok}` in a bitwise-deterministic kernel module: reductions must \
+                         be explicit serial loops in fixed k-order (see \
+                         docs/unsafe-policy.md)"
+                    ),
+                    out,
+                );
+            }
+        }
+        if line.contains("fmadd") && !fma_ok_at_entry {
+            apply_marker(
+                v,
+                ln,
+                "accumulation",
+                file,
+                "FMA intrinsic outside a SPECMER_FAST-gated path (`if FMA { .. }` or a \
+                 `*fma*`-named function): fused rounding diverges from the scalar \
+                 reference"
+                    .into(),
+                out,
+            );
+        }
+    }
+}
+
+/// Extract the identifier after `fn ` on a declaration line, if any.
+fn fn_name(line: &str) -> Option<&str> {
+    let p = line.find("fn ")?;
+    // Require a token boundary before `fn` (skip e.g. `pub fn`, reject idents
+    // like `my_fn `).
+    if p > 0 && is_ident(line.as_bytes()[p - 1] as char) {
+        return None;
+    }
+    let rest = line[p + 3..].trim_start();
+    let end = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+    if end == 0 {
+        None
+    } else {
+        Some(&rest[..end])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: no panics on the serving request path
+// ---------------------------------------------------------------------------
+
+const PANIC_TOKENS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Receivers whose failure already implies a panic elsewhere (poisoned lock /
+/// condvar, or joining a panicked thread): unwrapping them only propagates an
+/// existing panic, which is the documented idiom in this repo.
+const LOCK_IDIOM: [&str; 4] = [".lock(", ".wait(", ".wait_timeout(", ".join("];
+
+fn rule_serving_panic(file: &str, v: &FileView, out: &mut Vec<Violation>) {
+    for ln in 0..v.code.len() {
+        if v.test[ln] {
+            continue;
+        }
+        let line = &v.code[ln];
+        let hit = PANIC_TOKENS.iter().find(|t| line.contains(*t));
+        let Some(tok) = hit else { continue };
+        // Lock-poisoning idiom: the receiver is on the same line or — for
+        // split method chains — the nearest preceding code line.
+        let prev = (0..ln)
+            .rev()
+            .map(|j| v.code[j].trim())
+            .find(|l| !l.is_empty())
+            .unwrap_or("");
+        if LOCK_IDIOM.iter().any(|p| line.contains(p) || prev.contains(p)) {
+            continue;
+        }
+        match marker_with_reason(v, ln, "PANIC-OK") {
+            Some(true) => {}
+            Some(false) => out.push(Violation {
+                file: file.into(),
+                line: ln + 1,
+                rule: "serving-panic",
+                msg: "bare `PANIC-OK` marker requires a justification".into(),
+            }),
+            None => out.push(Violation {
+                file: file.into(),
+                line: ln + 1,
+                rule: "serving-panic",
+                msg: format!(
+                    "`{tok}` on the serving request path: convert to an error response \
+                     (anyhow::Result) or annotate with `// PANIC-OK: <reason>`"
+                ),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: module headers
+// ---------------------------------------------------------------------------
+
+fn rule_module_header(file: &str, src: &str, out: &mut Vec<Violation>) {
+    let first = src.lines().find(|l| !l.trim().is_empty());
+    let ok = first.is_some_and(|l| l.trim_start().starts_with("//!"));
+    if !ok {
+        out.push(Violation {
+            file: file.into(),
+            line: 1,
+            rule: "module-header",
+            msg: "module must open with a `//!` header documenting its role".into(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Scan one file's source. `rel` is the path relative to `rust/src`, with
+/// forward slashes; it selects which rules apply.
+fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
+    let v = view(src);
+    let mut out = Vec::new();
+    rule_module_header(rel, src, &mut out);
+    rule_unsafe_safety(rel, &v, &mut out);
+    if rel.starts_with("runtime/") || rel.starts_with("decode/") {
+        rule_nondeterminism(rel, &v, &mut out);
+    }
+    if rel == "runtime/gemm.rs" || rel == "runtime/simd.rs" {
+        rule_accumulation(rel, &v, &mut out);
+    }
+    if rel.starts_with("server/") || rel.starts_with("coordinator/") {
+        rule_serving_panic(rel, &v, &mut out);
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("specmer-lint: cannot read {}: {e}", dir.display());
+            std::process::exit(2);
+        }
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            walk(&p, files);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            files.push(p);
+        }
+    }
+}
+
+fn main() {
+    // The lint crate lives at <repo>/rust/lint, so the tree under scan is
+    // two levels up from the manifest.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(Path::parent)
+        .expect("specmer-lint must live at <repo>/rust/lint");
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&src, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(&src)
+            .expect("walked file is under rust/src")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = match std::fs::read_to_string(f) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("specmer-lint: cannot read {}: {e}", f.display());
+                std::process::exit(2);
+            }
+        };
+        violations.extend(scan_source(&rel, &text));
+    }
+    if violations.is_empty() {
+        println!("specmer-lint: {} files clean", files.len());
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("specmer-lint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: each rule must fire on a violating snippet and stay quiet on
+// a conforming one.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    // -- lexer ------------------------------------------------------------
+
+    #[test]
+    fn strip_blanks_strings_and_comments() {
+        let (code, com) = strip("let s = \"un{safe}\"; // unsafe note\nlet t = 'x';\n");
+        assert!(!code[0].contains("un{safe}"), "string contents must be blanked");
+        assert!(code[0].contains("let s ="));
+        assert!(com[0].contains("unsafe note"));
+        assert!(!code[1].contains('x') || code[1].contains("let t"));
+    }
+
+    #[test]
+    fn strip_handles_lifetimes_and_raw_strings() {
+        let (code, _) = strip("fn f<'a>(x: &'a str) { let r = r#\"{ } \"#; }\n");
+        // Lifetimes must not open a char literal and raw-string braces must
+        // not leak into the code stream.
+        let braces = code[0].matches('{').count();
+        assert_eq!(braces, 1, "only the fn body brace survives: {:?}", code[0]);
+    }
+
+    #[test]
+    fn strip_handles_block_comments_and_escapes() {
+        let (code, com) = strip("a /* b { */ c\nlet q = \"\\\"{\"; d\n");
+        assert!(code[0].contains('a') && code[0].contains('c') && !code[0].contains('{'));
+        assert!(com[0].contains('b'));
+        assert!(!code[1].contains('{'), "escaped quote must not end the string early");
+        assert!(code[1].contains('d'));
+    }
+
+    #[test]
+    fn test_regions_are_marked() {
+        let src = "//! m\nfn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap() }\n}\nfn live2() {}\n";
+        let v = view(src);
+        assert!(!v.test[1]);
+        assert!(v.test[2] && v.test[3] && v.test[4] && v.test[5]);
+        assert!(!v.test[6]);
+    }
+
+    // -- rule 1 -----------------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let src = "//! m\nfn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        assert!(rules_hit("runtime/x.rs", src).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn unsafe_with_adjacent_safety_passes() {
+        let src = "//! m\nfn f(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(!rules_hit("runtime/x.rs", src).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn unsafe_fn_with_safety_doc_section_passes() {
+        let src = "//! m\n/// Does things.\n///\n/// # Safety\n/// `p` must be valid.\npub unsafe fn f(p: *const f32) -> f32 {\n    // SAFETY: p valid per contract.\n    unsafe { *p }\n}\n";
+        assert!(!rules_hit("runtime/x.rs", src).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn unsafe_in_test_region_is_skipped() {
+        let src = "//! m\n#[cfg(test)]\nmod tests {\n    fn f(p: *const f32) -> f32 {\n        unsafe { *p }\n    }\n}\n";
+        assert!(!rules_hit("runtime/x.rs", src).contains(&"unsafe-safety"));
+    }
+
+    #[test]
+    fn unsafe_inside_string_is_ignored() {
+        let src = "//! m\nfn f() -> &'static str {\n    \"unsafe\"\n}\n";
+        assert!(!rules_hit("runtime/x.rs", src).contains(&"unsafe-safety"));
+    }
+
+    // -- rule 2 -----------------------------------------------------------
+
+    #[test]
+    fn hashmap_in_runtime_fires() {
+        let src = "//! m\nuse std::collections::HashMap;\n";
+        assert!(rules_hit("runtime/x.rs", src).contains(&"nondeterminism"));
+    }
+
+    #[test]
+    fn instant_with_reasoned_allow_passes() {
+        let src = "//! m\n// lint:allow(nondeterminism): compile-timing metrics site\nuse std::time::Instant;\n";
+        assert!(!rules_hit("runtime/x.rs", src).contains(&"nondeterminism"));
+    }
+
+    #[test]
+    fn bare_allow_marker_fires() {
+        let src = "//! m\n// lint:allow(nondeterminism)\nuse std::time::Instant;\n";
+        let v = scan_source("runtime/x.rs", src);
+        assert!(v.iter().any(|v| v.rule == "nondeterminism" && v.msg.contains("justification")));
+    }
+
+    #[test]
+    fn hashmap_outside_scope_passes() {
+        let src = "//! m\nuse std::collections::HashMap;\n";
+        assert!(!rules_hit("util/x.rs", src).contains(&"nondeterminism"));
+    }
+
+    // -- rule 3 -----------------------------------------------------------
+
+    #[test]
+    fn sum_in_gemm_fires() {
+        let src = "//! m\nfn f(x: &[f32]) -> f32 {\n    x.iter().sum()\n}\n";
+        assert!(rules_hit("runtime/gemm.rs", src).contains(&"accumulation"));
+    }
+
+    #[test]
+    fn fmadd_outside_gate_fires() {
+        let src = "//! m\nunsafe fn f() {\n    // SAFETY: test fixture.\n    let acc = _mm256_fmadd_ps(a, b, c);\n}\n";
+        assert!(rules_hit("runtime/gemm.rs", src).contains(&"accumulation"));
+    }
+
+    #[test]
+    fn fmadd_inside_if_fma_region_passes() {
+        let src = "//! m\nfn f() {\n    const FMA: bool = true;\n    if FMA {\n        let acc = _mm256_fmadd_ps(a, b, c);\n    } else {\n        let acc = add(mul(a, b), c);\n    }\n}\n";
+        assert!(!rules_hit("runtime/gemm.rs", src).contains(&"accumulation"));
+    }
+
+    #[test]
+    fn fmadd_after_if_fma_region_fires() {
+        let src = "//! m\nfn f() {\n    if FMA {\n        let acc = _mm256_fmadd_ps(a, b, c);\n    }\n    let bad = _mm256_fmadd_ps(a, b, c);\n}\n";
+        assert!(rules_hit("runtime/gemm.rs", src).contains(&"accumulation"));
+    }
+
+    #[test]
+    fn fmadd_in_fma_named_fn_passes() {
+        let src = "//! m\npub unsafe fn rows_f32_fma() {\n    // SAFETY: test fixture.\n    let acc = _mm256_fmadd_ps(a, b, c);\n}\n";
+        assert!(!rules_hit("runtime/gemm.rs", src).contains(&"accumulation"));
+    }
+
+    #[test]
+    fn sum_outside_kernel_modules_passes() {
+        let src = "//! m\nfn f(x: &[f32]) -> f32 {\n    x.iter().sum()\n}\n";
+        assert!(!rules_hit("runtime/cpu_ref.rs", src).contains(&"accumulation"));
+    }
+
+    // -- rule 4 -----------------------------------------------------------
+
+    #[test]
+    fn unwrap_on_request_path_fires() {
+        let src = "//! m\nfn handle(r: Request) -> u32 {\n    r.field.unwrap()\n}\n";
+        assert!(rules_hit("server/x.rs", src).contains(&"serving-panic"));
+        assert!(rules_hit("coordinator/x.rs", src).contains(&"serving-panic"));
+    }
+
+    #[test]
+    fn lock_idiom_same_line_passes() {
+        let src = "//! m\nfn f(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"serving-panic"));
+    }
+
+    #[test]
+    fn lock_idiom_split_chain_passes() {
+        let src = "//! m\nfn f(m: &Mutex<u32>) -> u32 {\n    *m\n        .lock()\n        .unwrap()\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"serving-panic"));
+    }
+
+    #[test]
+    fn panic_ok_with_reason_passes() {
+        let src = "//! m\nfn boot() {\n    // PANIC-OK: thread spawn failure at startup is fatal by design.\n    spawn().expect(\"spawn worker\");\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"serving-panic"));
+    }
+
+    #[test]
+    fn bare_panic_ok_fires() {
+        let src = "//! m\nfn boot() {\n    // PANIC-OK\n    spawn().expect(\"spawn worker\");\n}\n";
+        let v = scan_source("coordinator/x.rs", src);
+        assert!(v.iter().any(|v| v.rule == "serving-panic" && v.msg.contains("justification")));
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "//! m\nfn f(x: Option<u32>) -> u32 {\n    x.unwrap_or(0)\n}\n";
+        assert!(!rules_hit("server/x.rs", src).contains(&"serving-panic"));
+    }
+
+    #[test]
+    fn unwrap_in_tests_passes() {
+        let src = "//! m\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) -> u32 {\n        x.unwrap()\n    }\n}\n";
+        assert!(!rules_hit("server/x.rs", src).contains(&"serving-panic"));
+    }
+
+    // -- rule 5 -----------------------------------------------------------
+
+    #[test]
+    fn missing_module_header_fires() {
+        assert!(rules_hit("util/x.rs", "fn f() {}\n").contains(&"module-header"));
+    }
+
+    #[test]
+    fn module_header_passes() {
+        assert!(!rules_hit("util/x.rs", "//! A module.\nfn f() {}\n").contains(&"module-header"));
+    }
+
+    // -- the real tree ----------------------------------------------------
+
+    #[test]
+    fn repo_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .and_then(Path::parent)
+            .expect("lint crate location");
+        let src = root.join("rust").join("src");
+        let mut files = Vec::new();
+        walk(&src, &mut files);
+        files.sort();
+        assert!(!files.is_empty(), "expected sources under {}", src.display());
+        let mut bad = Vec::new();
+        for f in &files {
+            let rel =
+                f.strip_prefix(&src).unwrap().to_string_lossy().replace('\\', "/");
+            let text = std::fs::read_to_string(f).unwrap();
+            bad.extend(scan_source(&rel, &text));
+        }
+        assert!(
+            bad.is_empty(),
+            "repo tree has lint violations:\n{}",
+            bad.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

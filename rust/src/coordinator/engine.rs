@@ -310,7 +310,18 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
                 results[i] = Some(out);
             }
         }
-        results.into_iter().map(|o| o.expect("every request answered")).collect()
+        // a slot left unanswered is an engine bug, but on the serving path it
+        // must surface as that request's error, never a worker panic
+        results
+            .into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| {
+                    Err(anyhow::anyhow!(
+                        "internal: batch slot left unanswered by the grouped decode"
+                    ))
+                })
+            })
+            .collect()
     }
 
     fn lockstep_shape(&self, spec: &SeqSpec) -> Option<LockstepShape> {
@@ -555,5 +566,21 @@ mod tests {
         assert_eq!(a.context, b.context);
         assert!(Arc::ptr_eq(a.table.as_ref().unwrap(), b.table.as_ref().unwrap()));
         assert!(reg.spec("Nope", Method::SpecMer, &cfg).is_err());
+    }
+
+    #[test]
+    fn batch_answers_every_slot_even_on_per_item_errors() {
+        // regression: a failing request must come back as its own Err slot —
+        // the serving path never panics over a batch slot (the old code
+        // `expect`ed every slot answered)
+        let eng = synthetic_engine(3);
+        let base = GenConfig { max_len: 26, gamma: 5, c: 1, seed: 0, ..Default::default() };
+        let good = eng.spec("SynA", Method::Speculative, &base).unwrap();
+        let mut bad = eng.spec("SynB", Method::Speculative, &base).unwrap();
+        bad.cfg.gamma = 0; // invalid: rejected per-item inside its group
+        let outs = eng.generate_batch(&[good, bad]);
+        assert_eq!(outs.len(), 2, "every slot answered");
+        assert!(outs[0].is_ok(), "valid request unaffected");
+        assert!(outs[1].is_err(), "invalid request fails alone");
     }
 }

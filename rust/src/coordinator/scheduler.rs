@@ -85,6 +85,9 @@ impl Scheduler {
                 let handle = std::thread::Builder::new()
                     .name(format!("specmer-worker-{wid}"))
                     .spawn(move || worker_loop(s2, f, m))
+                    // PANIC-OK: worker-thread spawn happens once at scheduler
+                    // construction, before any request is accepted; an OS
+                    // refusing to create threads is a fatal startup error.
                     .expect("spawn worker");
                 Worker { shared, handle: Some(handle) }
             })

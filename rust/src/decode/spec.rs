@@ -487,6 +487,76 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
         std::mem::take(&mut self.completed)
     }
 
+    /// Check the group's slot-liveness, ticket-uniqueness, feed-accounting
+    /// and tree-table invariants. Always compiled — the seeded-corruption
+    /// tests call it directly — while the round-boundary call site in
+    /// [`Self::step_round`] is `cfg!(debug_assertions)` +
+    /// `SPECMER_VALIDATE`-gated. The error message names the invariant.
+    fn debug_validate(&self) -> Result<(), String> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if !seen.insert(s.ticket) {
+                return Err(format!(
+                    "LockstepGroup slot liveness invariant broken (double-freed slot): \
+                     ticket {} is resident in more than one slot",
+                    s.ticket
+                ));
+            }
+            if s.finished() {
+                return Err(format!(
+                    "LockstepGroup slot liveness invariant broken: slot {i} (ticket {}) is \
+                     already finished but still resident",
+                    s.ticket
+                ));
+            }
+            let len = s.out.tokens.len();
+            if s.committed > len || s.draft_fed > len || s.target_fed > len {
+                return Err(format!(
+                    "LockstepGroup feed accounting invariant broken: slot {i} (ticket {}) \
+                     has committed {} / draft_fed {} / target_fed {} beyond its {len} tokens",
+                    s.ticket, s.committed, s.draft_fed, s.target_fed
+                ));
+            }
+        }
+        for (ticket, _) in &self.completed {
+            if seen.contains(ticket) {
+                return Err(format!(
+                    "LockstepGroup slot liveness invariant broken (double-freed slot): \
+                     ticket {ticket} is both resident and completed"
+                ));
+            }
+        }
+        for (i, p) in self.tree_parents.iter().enumerate() {
+            if let Some(p) = *p {
+                if p >= i {
+                    return Err(format!(
+                        "LockstepGroup tree parent table invariant broken (cycle risk): \
+                         node {i} lists parent {p}, but parents must precede children"
+                    ));
+                }
+            }
+        }
+        for (pi, path) in self.tree_paths.iter().enumerate() {
+            let rooted = match path.first() {
+                Some(&r) => self.tree_parents.get(r) == Some(&None),
+                None => false,
+            };
+            let mut linked = true;
+            for w in path.windows(2) {
+                if self.tree_parents.get(w[1]) != Some(&Some(w[0])) {
+                    linked = false;
+                }
+            }
+            if !rooted || !linked {
+                return Err(format!(
+                    "LockstepGroup tree path table invariant broken: path {pi} ({path:?}) is \
+                     not a root-to-leaf chain of the parent table"
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Admit one request at the current round boundary. A shape mismatch,
     /// probing config, invalid config or failed prefill completes the
     /// ticket with an error (never poisons residents); a context already at
@@ -540,6 +610,12 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
     /// (per-sequence work the dispatch was carrying is lost) and empties the
     /// group.
     fn step_round(&mut self) {
+        // round boundary: both the flat and tree variants pass through here
+        if cfg!(debug_assertions) && crate::runtime::simd::validate_enabled() {
+            if let Err(e) = self.debug_validate() {
+                panic!("SPECMER_VALIDATE: LockstepGroup invariant violated: {e}");
+            }
+        }
         if self.shape.tree.enabled() {
             self.step_round_tree();
             return;
@@ -1416,5 +1492,72 @@ mod tests {
         probing.tree = TreePolicy { branch: 2, split_mask: 0b100 };
         probing.probe_rate = 1.0;
         assert!(speculative_generate(&d, &t, None, &[BOS, 5], &probing).is_err());
+    }
+
+    // ---- seeded-corruption tests: each mutates exactly one invariant and
+    // asserts debug_validate trips with a message naming that invariant ----
+
+    #[test]
+    fn lockstep_validator_trips_on_seeded_corruption() {
+        let (d, t) = models();
+        let c = cfg(2, 3, 5);
+        let mut group = LockstepGroup::new(&d, &t, LockstepShape::of(&c));
+        group.admit(AdmitItem {
+            ticket: 1,
+            context: vec![BOS, 5, 9],
+            cfg: c.clone(),
+            table: None,
+        });
+        group.admit(AdmitItem {
+            ticket: 2,
+            context: vec![BOS, 5, 9],
+            cfg: c.clone(),
+            table: None,
+        });
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: a retired slot handed out twice (duplicate ticket)
+        let saved_ticket = group.seqs[1].ticket;
+        group.seqs[1].ticket = group.seqs[0].ticket;
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("double-freed"), "got: {err}");
+        group.seqs[1].ticket = saved_ticket;
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: stale feed accounting (frontier beyond the token stream)
+        let saved_fed = group.seqs[0].draft_fed;
+        group.seqs[0].draft_fed = group.seqs[0].out.tokens.len() + 1;
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("feed accounting"), "got: {err}");
+        group.seqs[0].draft_fed = saved_fed;
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: a finished sequence left resident in its slot
+        group.seqs[0].stop_at = 0;
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("slot liveness"), "got: {err}");
+    }
+
+    #[test]
+    fn lockstep_validator_trips_on_tree_table_corruption() {
+        let (d, t) = models();
+        let mut c = cfg(2, 3, 5);
+        c.tree = TreePolicy { branch: 2, split_mask: 0b10 };
+        let mut group = LockstepGroup::new(&d, &t, LockstepShape::of(&c));
+        assert!(!group.tree_parents.is_empty());
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: back-edge in the parent table (cycle)
+        let saved = group.tree_parents[1];
+        group.tree_parents[1] = Some(group.tree_parents.len() - 1);
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("tree parent table"), "got: {err}");
+        group.tree_parents[1] = saved;
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: a ranked path that no longer chains through the table
+        group.tree_paths[0].reverse();
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("tree path table"), "got: {err}");
     }
 }

@@ -10,6 +10,17 @@
 //!     scheduler, k-mer guidance, metrics, HTTP server, experiment harness.
 //!   * L2/L1 (python/compile, build-time only): JAX transformer + Pallas
 //!     kernels, AOT-lowered to HLO text consumed by [`runtime`].
+//!
+//! ## Unsafe code and determinism policy
+//!
+//! Every `unsafe` site carries an adjacent `// SAFETY:` justification, and
+//! the kernel modules obey a bitwise-determinism contract (no FMA outside the
+//! opt-in fast tier, no wall clocks or hash-ordered iteration in kernel or
+//! decode code). The policy is written out in `docs/unsafe-policy.md` and
+//! mechanically enforced by the `specmer-lint` workspace member
+//! (`make lint-specmer`).
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod config;
 pub mod coordinator;

@@ -5,9 +5,10 @@
 //! `run(args) -> Vec<Literal>` with helpers for building f32/i32 literals.
 //! Executables are compiled lazily and cached by artifact name.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+// lint:allow(nondeterminism): compile-timing metrics site (compile_log only).
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -28,7 +29,7 @@ pub enum Arg<'a> {
 pub struct Runtime {
     client: PjRtClient,
     hlo_dir: PathBuf,
-    programs: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    programs: Mutex<BTreeMap<String, PjRtLoadedExecutable>>,
     /// (name, compile_seconds) log for EXPERIMENTS.md §Perf.
     pub compile_log: Mutex<Vec<(String, f64)>>,
 }
@@ -47,7 +48,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             hlo_dir,
-            programs: Mutex::new(HashMap::new()),
+            programs: Mutex::new(BTreeMap::new()),
             compile_log: Mutex::new(Vec::new()),
         })
     }
@@ -63,6 +64,8 @@ impl Runtime {
 
     fn compile(&self, name: &str) -> Result<()> {
         let path = self.hlo_dir.join(format!("{name}.hlo.txt"));
+        // lint:allow(nondeterminism): compile-timing metrics site — the wall
+        // clock feeds compile_log (EXPERIMENTS.md §Perf), never decode state.
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing {}", path.display()))?;

@@ -300,6 +300,67 @@ impl<'a> BranchedArena<'a> {
     ) -> usize {
         b * self.seq_stride + ((((l * 2 + kv) * self.c + ci) * nh + hh) * self.gamma) * dh
     }
+
+    /// Check the arena's sizing and KV-row-accounting invariants against the
+    /// owning model's dimensions. Always compiled — the seeded-corruption
+    /// tests call it directly — while the hot-path call site is
+    /// `cfg!(debug_assertions)` + `SPECMER_VALIDATE`-gated (see
+    /// [`validate_on`]). The error message names the broken invariant.
+    fn debug_validate(&self, dims: &ModelDims) -> Result<(), String> {
+        let nh = dims.n_head;
+        let dh = dims.d_head();
+        let want = dims.n_layer * 2 * self.c * nh * self.gamma * dh;
+        if self.seq_stride != want {
+            return Err(format!(
+                "BranchedArena seq_stride invariant broken: stride {} != L*2*c*H*gamma*Dh = {want}",
+                self.seq_stride
+            ));
+        }
+        if self.tail.len() != self.bases.len() * self.seq_stride {
+            return Err(format!(
+                "BranchedArena tail sizing invariant broken: {} floats for {} sequences x \
+                 stride {}",
+                self.tail.len(),
+                self.bases.len(),
+                self.seq_stride
+            ));
+        }
+        for (b, &(cache, base_len)) in self.bases.iter().enumerate() {
+            if cache.data.len() != dims.cache_len() {
+                return Err(format!(
+                    "BranchedArena KV row accounting invariant broken: seq {b} cache holds {} \
+                     floats, dims say {}",
+                    cache.data.len(),
+                    dims.cache_len()
+                ));
+            }
+            if base_len + self.gamma > dims.maxlen() {
+                return Err(format!(
+                    "BranchedArena KV row accounting invariant broken: seq {b} committed length \
+                     {base_len} + gamma {} overruns maxlen {}",
+                    self.gamma,
+                    dims.maxlen()
+                ));
+            }
+        }
+        let rows = self.bases.len() * self.c;
+        if self.xs.len() != rows * dims.d_model || self.ff.len() != rows * dims.d_ff {
+            return Err(format!(
+                "BranchedArena workspace sizing invariant broken: xs {} / ff {} for {rows} rows",
+                self.xs.len(),
+                self.ff.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Whether the opt-in runtime validators should run at this call site:
+/// compiled away in release builds, and gated on `SPECMER_VALIDATE=1` in
+/// debug builds (see [`simd::validate_enabled`]).
+#[inline]
+fn validate_on() -> bool {
+    cfg!(debug_assertions) && simd::validate_enabled()
 }
 
 impl<'a> BranchedCache<'a> {
@@ -385,6 +446,8 @@ pub struct TreeTails<'a> {
     /// Committed positions `0..base_len` are visible to every node.
     base_len: usize,
     n: usize,
+    /// Topologically-ordered parent table (kept for [`Self::debug_validate`]).
+    parents: Vec<Option<usize>>,
     depths: Vec<usize>,
     /// Root-to-self node ids per node (the per-row gather list).
     anc: Vec<Vec<usize>>,
@@ -446,6 +509,7 @@ impl<'a> TreeTails<'a> {
             base,
             base_len,
             n,
+            parents: parents.to_vec(),
             depths,
             anc,
             tail: bufs.tail,
@@ -488,6 +552,92 @@ impl<'a> TreeTails<'a> {
     #[inline]
     fn tail_base(&self, nh: usize, dh: usize, l: usize, kv: usize, node: usize, hh: usize) -> usize {
         (((l * 2 + kv) * self.n + node) * nh + hh) * dh
+    }
+
+    /// Check the node table's structural invariants — parent-pointer order
+    /// (acyclicity), depth/ancestor-chain consistency, tail sizing, and KV
+    /// row accounting against the base cache. Always compiled — the
+    /// seeded-corruption tests call it directly — while hot-path call sites
+    /// are gated behind [`validate_on`]. The error names the invariant.
+    fn debug_validate(&self, dims: &ModelDims) -> Result<(), String> {
+        let n = self.n;
+        if self.parents.len() != n || self.depths.len() != n || self.anc.len() != n {
+            return Err(format!(
+                "TreeTails table sizing invariant broken: n {n} vs parents {} / depths {} / \
+                 anc {}",
+                self.parents.len(),
+                self.depths.len(),
+                self.anc.len()
+            ));
+        }
+        for i in 0..self.n {
+            match self.parents[i] {
+                Some(p) => {
+                    if p >= i {
+                        return Err(format!(
+                            "TreeTails parent-pointer order invariant broken (cycle risk): \
+                             node {i} lists parent {p}, but parents must precede children"
+                        ));
+                    }
+                    if self.depths[i] != self.depths[p] + 1 {
+                        return Err(format!(
+                            "TreeTails depth accounting invariant broken: node {i} at depth {} \
+                             under parent {p} at depth {}",
+                            self.depths[i], self.depths[p]
+                        ));
+                    }
+                    let plen = self.anc[p].len();
+                    if self.anc[i].len() != plen + 1
+                        || self.anc[i][..plen] != self.anc[p][..]
+                        || self.anc[i][plen] != i
+                    {
+                        return Err(format!(
+                            "TreeTails ancestor-chain (DFS path order) invariant broken: \
+                             node {i} chain {:?} does not extend parent {p} chain {:?}",
+                            self.anc[i], self.anc[p]
+                        ));
+                    }
+                }
+                None => {
+                    if self.depths[i] != 0 || self.anc[i] != [i] {
+                        return Err(format!(
+                            "TreeTails ancestor-chain (DFS path order) invariant broken: \
+                             root node {i} has depth {} and chain {:?}",
+                            self.depths[i], self.anc[i]
+                        ));
+                    }
+                }
+            }
+        }
+        let nh = dims.n_head;
+        let dh = dims.d_head();
+        if self.tail.len() != dims.n_layer * 2 * self.n * nh * dh {
+            return Err(format!(
+                "TreeTails tail sizing invariant broken: {} floats for {} nodes (want \
+                 L*2*N*H*Dh = {})",
+                self.tail.len(),
+                self.n,
+                dims.n_layer * 2 * self.n * nh * dh
+            ));
+        }
+        if self.base.data.len() != dims.cache_len() {
+            return Err(format!(
+                "TreeTails KV row accounting invariant broken: base cache holds {} floats, \
+                 dims say {}",
+                self.base.data.len(),
+                dims.cache_len()
+            ));
+        }
+        if self.base_len + self.gamma() > dims.maxlen() {
+            return Err(format!(
+                "TreeTails KV row accounting invariant broken: committed length {} + tree \
+                 depth {} overruns maxlen {}",
+                self.base_len,
+                self.gamma(),
+                dims.maxlen()
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -1634,6 +1784,11 @@ impl ModelBackend for CpuModel {
                 .map(|(it, &start)| (&*it.0, start))
                 .collect();
             let mut ar = BranchedArena::new(self, bases, c, gamma, self.pool.take());
+            if validate_on() {
+                if let Err(e) = ar.debug_validate(&self.dims) {
+                    panic!("SPECMER_VALIDATE: BranchedArena invariant violated: {e}");
+                }
+            }
             for gi in 1..gamma {
                 let logits = self.arena_step(&mut ar, &cur, gi - 1);
                 for b in 0..bn {
@@ -1722,6 +1877,11 @@ impl ModelBackend for CpuModel {
         let dist0 = sampling::adjust_dist(&last_logits, temp, top_p);
 
         let mut tt = TreeTails::new(self, cache, start, parents, self.pool.take());
+        if validate_on() {
+            if let Err(e) = tt.debug_validate(&self.dims) {
+                panic!("SPECMER_VALIDATE: TreeTails invariant violated: {e}");
+            }
+        }
         let gamma = tt.gamma();
         assert!(
             start + gamma <= self.dims.maxlen(),
@@ -1793,6 +1953,11 @@ impl ModelBackend for CpuModel {
         }
         let start = pos + t;
         let mut tt = TreeTails::new(self, cache, start, &tree.parents, self.pool.take());
+        if validate_on() {
+            if let Err(e) = tt.debug_validate(&self.dims) {
+                panic!("SPECMER_VALIDATE: TreeTails invariant violated: {e}");
+            }
+        }
         assert!(
             start + tt.gamma() <= self.dims.maxlen(),
             "verify tree past maxlen: start {start} + depth {} > {}",
@@ -2437,5 +2602,90 @@ mod tests {
         }
         // siblings share the parent dist but differ in uniforms
         assert_eq!(tb.dists[2], tb.dists[3], "siblings must share the parent dist");
+    }
+
+    // ---- seeded-corruption tests: each mutates exactly one invariant and
+    // asserts debug_validate trips with a message naming that invariant ----
+
+    fn fresh_cache(m: &CpuModel) -> CpuCache {
+        CpuCache { data: vec![0.0; m.dims.cache_len()] }
+    }
+
+    #[test]
+    fn tree_validator_clean_then_parent_cycle() {
+        let m = tiny();
+        let cache = fresh_cache(&m);
+        let parents = vec![None, Some(0), Some(1)];
+        let mut tt = TreeTails::new(&m, &cache, 4, &parents, m.pool.take());
+        assert_eq!(tt.debug_validate(&m.dims), Ok(()));
+        // corrupt: node 1 now claims a later node as parent — a back-edge
+        // that would make the parent table cyclic
+        tt.parents[1] = Some(2);
+        let err = tt.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("parent-pointer order"), "got: {err}");
+    }
+
+    #[test]
+    fn tree_validator_trips_on_depth_and_chain_corruption() {
+        let m = tiny();
+        let cache = fresh_cache(&m);
+        let parents = vec![None, Some(0), Some(1)];
+        let mut tt = TreeTails::new(&m, &cache, 4, &parents, m.pool.take());
+        tt.depths[2] = 5;
+        let err = tt.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("depth accounting"), "got: {err}");
+        tt.depths[2] = 2;
+        tt.anc[2] = vec![2];
+        let err = tt.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("ancestor-chain"), "got: {err}");
+    }
+
+    #[test]
+    fn tree_validator_trips_on_stale_kv_rows() {
+        let m = tiny();
+        let cache = fresh_cache(&m);
+        let parents = vec![None, Some(0), Some(1)];
+        // committed length 30 + tree depth 3 overruns maxlen 32: the KV row
+        // count the table believes is committed is stale
+        let tt = TreeTails::new(&m, &cache, 30, &parents, m.pool.take());
+        let err = tt.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("KV row accounting"), "got: {err}");
+    }
+
+    #[test]
+    fn tree_validator_trips_on_tail_truncation() {
+        let m = tiny();
+        let cache = fresh_cache(&m);
+        let parents = vec![None, Some(0)];
+        let mut tt = TreeTails::new(&m, &cache, 4, &parents, m.pool.take());
+        let n = tt.tail.len();
+        tt.tail.truncate(n - 1);
+        let err = tt.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("tail sizing"), "got: {err}");
+    }
+
+    #[test]
+    fn arena_validator_clean_then_corrupted() {
+        let m = tiny();
+        let c1 = fresh_cache(&m);
+        let c2 = fresh_cache(&m);
+        let bases: Vec<(&CpuCache, usize)> = vec![(&c1, 4), (&c2, 6)];
+        let mut ar = BranchedArena::new(&m, bases, 2, 3, m.pool.take());
+        assert_eq!(ar.debug_validate(&m.dims), Ok(()));
+        // corrupt: stride no longer matches L*2*c*H*gamma*Dh
+        ar.seq_stride += 1;
+        let err = ar.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("seq_stride"), "got: {err}");
+    }
+
+    #[test]
+    fn arena_validator_trips_on_stale_committed_length() {
+        let m = tiny();
+        let c1 = fresh_cache(&m);
+        let bases: Vec<(&CpuCache, usize)> = vec![(&c1, 31)];
+        // committed length 31 + gamma 3 overruns maxlen 32
+        let ar = BranchedArena::new(&m, bases, 1, 3, m.pool.take());
+        let err = ar.debug_validate(&m.dims).unwrap_err();
+        assert!(err.contains("KV row accounting"), "got: {err}");
     }
 }

@@ -648,75 +648,93 @@ mod avx2 {
         }
         let rows = out.len() / n;
         let mut r = 0usize;
-        while r + 4 <= rows {
-            row_block4(&a[r * k..(r + 4) * k], b, k, n, &mut out[r * n..(r + 4) * n], skip);
-            r += 4;
-        }
-        while r < rows {
-            row_block1(&a[r * k..(r + 1) * k], b, k, n, &mut out[r * n..(r + 1) * n], skip);
-            r += 1;
+        // SAFETY: AVX2 is present per the fn contract; each block call gets
+        // matching row slices of `a` and `out` (bounds enforced by the slice
+        // indexing itself), satisfying the block kernels' contracts.
+        unsafe {
+            while r + 4 <= rows {
+                row_block4(&a[r * k..(r + 4) * k], b, k, n, &mut out[r * n..(r + 4) * n], skip);
+                r += 4;
+            }
+            while r < rows {
+                row_block1(&a[r * k..(r + 1) * k], b, k, n, &mut out[r * n..(r + 1) * n], skip);
+                r += 1;
+            }
         }
     }
 
     /// 4 rows × 16 columns per tile: 8 ymm accumulators, each weight tile
     /// loaded once and reused by all four rows.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime and pass
+    /// `a.len() >= 4 * k`, `b.len() >= k * n`, `out.len() >= 4 * n`.
     #[target_feature(enable = "avx2")]
     unsafe fn row_block4(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32], skip: bool) {
-        let mut jb = 0usize;
-        while jb + 16 <= n {
-            let mut acc = [_mm256_setzero_ps(); 8];
-            for i in 0..k {
-                // in-bounds: jb + 16 <= n, so i*n + jb + 16 <= (i+1)*n <= k*n
-                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
-                let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
+        // SAFETY: loads stay in bounds — `jb + 16 <= n` (resp. `jb + 8`)
+        // gives `i*n + jb + 16 <= (i+1)*n <= k*n <= b.len()`, row indices
+        // `rr * k + i < 4 * k <= a.len()`, stores `rr * n + jb + 16 <=
+        // (rr+1)*n <= out.len()`; avx2 is present per the fn contract.
+        unsafe {
+            let mut jb = 0usize;
+            while jb + 16 <= n {
+                let mut acc = [_mm256_setzero_ps(); 8];
+                for i in 0..k {
+                    let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                    let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
+                    for rr in 0..4 {
+                        let x = *a.get_unchecked(rr * k + i);
+                        if skip && x == 0.0 {
+                            continue; // per-(row, i) skip, same as the seed path
+                        }
+                        let xv = _mm256_set1_ps(x);
+                        acc[rr * 2] = _mm256_add_ps(acc[rr * 2], _mm256_mul_ps(xv, b0));
+                        acc[rr * 2 + 1] = _mm256_add_ps(acc[rr * 2 + 1], _mm256_mul_ps(xv, b1));
+                    }
+                }
                 for rr in 0..4 {
-                    let x = *a.get_unchecked(rr * k + i);
-                    if skip && x == 0.0 {
-                        continue; // per-(row, i) skip, same as the seed path
-                    }
-                    let xv = _mm256_set1_ps(x);
-                    acc[rr * 2] = _mm256_add_ps(acc[rr * 2], _mm256_mul_ps(xv, b0));
-                    acc[rr * 2 + 1] = _mm256_add_ps(acc[rr * 2 + 1], _mm256_mul_ps(xv, b1));
+                    _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), acc[rr * 2]);
+                    _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb + 8), acc[rr * 2 + 1]);
                 }
+                jb += 16;
             }
-            for rr in 0..4 {
-                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), acc[rr * 2]);
-                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb + 8), acc[rr * 2 + 1]);
-            }
-            jb += 16;
-        }
-        while jb + 8 <= n {
-            let mut acc = [_mm256_setzero_ps(); 4];
-            for i in 0..k {
-                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
-                for (rr, acc_r) in acc.iter_mut().enumerate() {
-                    let x = *a.get_unchecked(rr * k + i);
-                    if skip && x == 0.0 {
-                        continue;
+            while jb + 8 <= n {
+                let mut acc = [_mm256_setzero_ps(); 4];
+                for i in 0..k {
+                    let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                    for (rr, acc_r) in acc.iter_mut().enumerate() {
+                        let x = *a.get_unchecked(rr * k + i);
+                        if skip && x == 0.0 {
+                            continue;
+                        }
+                        *acc_r = _mm256_add_ps(*acc_r, _mm256_mul_ps(_mm256_set1_ps(x), b0));
                     }
-                    *acc_r = _mm256_add_ps(*acc_r, _mm256_mul_ps(_mm256_set1_ps(x), b0));
                 }
+                for (rr, acc_r) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), *acc_r);
+                }
+                jb += 8;
             }
-            for (rr, acc_r) in acc.iter().enumerate() {
-                _mm256_storeu_ps(out.as_mut_ptr().add(rr * n + jb), *acc_r);
-            }
-            jb += 8;
-        }
-        if jb < n {
-            for rr in 0..4 {
-                super::portable::tail_cols(
-                    &a[rr * k..(rr + 1) * k],
-                    b,
-                    n,
-                    jb,
-                    &mut out[rr * n + jb..rr * n + n],
-                    skip,
-                );
+            if jb < n {
+                for rr in 0..4 {
+                    super::portable::tail_cols(
+                        &a[rr * k..(rr + 1) * k],
+                        b,
+                        n,
+                        jb,
+                        &mut out[rr * n + jb..rr * n + n],
+                        skip,
+                    );
+                }
             }
         }
     }
 
     /// Single-row kernel for the `rows % 4` remainder.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime and pass
+    /// `arow.len() >= k`, `b.len() >= k * n`, `out.len() >= n`.
     #[target_feature(enable = "avx2")]
     unsafe fn row_block1(
         arow: &[f32],
@@ -726,41 +744,46 @@ mod avx2 {
         out: &mut [f32],
         skip: bool,
     ) {
-        let mut jb = 0usize;
-        while jb + 16 <= n {
-            let mut acc0 = _mm256_setzero_ps();
-            let mut acc1 = _mm256_setzero_ps();
-            for i in 0..k {
-                let x = *arow.get_unchecked(i);
-                if skip && x == 0.0 {
-                    continue;
+        // SAFETY: `jb + 16 <= n` (resp. `jb + 8`) keeps weight loads inside
+        // `b[..k*n]` and stores inside `out[..n]`; `i < k <= arow.len()`
+        // bounds the row reads; avx2 is present per the fn contract.
+        unsafe {
+            let mut jb = 0usize;
+            while jb + 16 <= n {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                for i in 0..k {
+                    let x = *arow.get_unchecked(i);
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let xv = _mm256_set1_ps(x);
+                    let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                    let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, b0));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, b1));
                 }
-                let xv = _mm256_set1_ps(x);
-                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
-                let b1 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8));
-                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, b0));
-                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, b1));
+                _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc0);
+                _mm256_storeu_ps(out.as_mut_ptr().add(jb + 8), acc1);
+                jb += 16;
             }
-            _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc0);
-            _mm256_storeu_ps(out.as_mut_ptr().add(jb + 8), acc1);
-            jb += 16;
-        }
-        while jb + 8 <= n {
-            let mut acc = _mm256_setzero_ps();
-            for i in 0..k {
-                let x = *arow.get_unchecked(i);
-                if skip && x == 0.0 {
-                    continue;
+            while jb + 8 <= n {
+                let mut acc = _mm256_setzero_ps();
+                for i in 0..k {
+                    let x = *arow.get_unchecked(i);
+                    if skip && x == 0.0 {
+                        continue;
+                    }
+                    let xv = _mm256_set1_ps(x);
+                    let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, b0));
                 }
-                let xv = _mm256_set1_ps(x);
-                let b0 = _mm256_loadu_ps(b.as_ptr().add(i * n + jb));
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, b0));
+                _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc);
+                jb += 8;
             }
-            _mm256_storeu_ps(out.as_mut_ptr().add(jb), acc);
-            jb += 8;
-        }
-        if jb < n {
-            super::portable::tail_cols(arow, b, n, jb, &mut out[jb..], skip);
+            if jb < n {
+                super::portable::tail_cols(arow, b, n, jb, &mut out[jb..], skip);
+            }
         }
     }
 
@@ -771,22 +794,39 @@ mod avx2 {
 
     /// Widen 8 bf16 values to f32 lanes: zero-extend u16→u32, shift left
     /// 16 into the f32 bit layout. Bit-exact dequantization.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime; `p` must be valid
+    /// for reading 8 `u16` values (16 bytes, unaligned ok).
     #[target_feature(enable = "avx2")]
     unsafe fn load_bf16(p: *const u16) -> __m256 {
-        let h = _mm_loadu_si128(p as *const __m128i);
-        _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16))
+        // SAFETY: unaligned 16-byte read from `p`, valid per the fn contract.
+        unsafe {
+            let h = _mm_loadu_si128(p as *const __m128i);
+            _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16))
+        }
     }
 
     /// Widen 8 IEEE half values to f32 lanes (F16C; exact).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 + F16C support at runtime; `p` must be
+    /// valid for reading 8 `u16` values (16 bytes, unaligned ok).
     #[target_feature(enable = "avx2,f16c")]
     unsafe fn load_f16(p: *const u16) -> __m256 {
-        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+        // SAFETY: unaligned 16-byte read from `p`, valid per the fn contract.
+        unsafe { _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i)) }
     }
 
     /// Widen 8 int8 values to f32 lanes (exact — i8 fits f32's mantissa).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime; `p` must be valid
+    /// for reading 8 `i8` values (8 bytes, unaligned ok).
     #[target_feature(enable = "avx2")]
     unsafe fn load_i8(p: *const i8) -> __m256 {
-        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+        // SAFETY: unaligned 8-byte read from `p`, valid per the fn contract.
+        unsafe { _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))) }
     }
 
     /// Generates one u16-panel (bf16/f16) row kernel per (feature set,
@@ -813,53 +853,59 @@ mod avx2 {
                     return;
                 }
                 let rows = out.len() / n;
-                for r in 0..rows {
-                    let arow = &a[r * k..(r + 1) * k];
-                    let orow = &mut out[r * n..(r + 1) * n];
-                    let mut jb = 0usize;
-                    while jb + 16 <= n {
-                        let mut acc0 = _mm256_setzero_ps();
-                        let mut acc1 = _mm256_setzero_ps();
-                        for i in 0..k {
-                            let x = *arow.get_unchecked(i);
-                            if skip && x == 0.0 {
-                                continue;
+                // SAFETY: `jb + 16 <= n` (resp. `jb + 8`) keeps panel loads
+                // inside `w[..k*n]` and stores inside the `orow` slice;
+                // `i < k` bounds the `arow` reads; the listed target
+                // features are present per the fn contract.
+                unsafe {
+                    for r in 0..rows {
+                        let arow = &a[r * k..(r + 1) * k];
+                        let orow = &mut out[r * n..(r + 1) * n];
+                        let mut jb = 0usize;
+                        while jb + 16 <= n {
+                            let mut acc0 = _mm256_setzero_ps();
+                            let mut acc1 = _mm256_setzero_ps();
+                            for i in 0..k {
+                                let x = *arow.get_unchecked(i);
+                                if skip && x == 0.0 {
+                                    continue;
+                                }
+                                let xv = _mm256_set1_ps(x);
+                                let w0 = $load(w.as_ptr().add(i * n + jb));
+                                let w1 = $load(w.as_ptr().add(i * n + jb + 8));
+                                if FMA {
+                                    acc0 = _mm256_fmadd_ps(xv, w0, acc0);
+                                    acc1 = _mm256_fmadd_ps(xv, w1, acc1);
+                                } else {
+                                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, w0));
+                                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, w1));
+                                }
                             }
-                            let xv = _mm256_set1_ps(x);
-                            let w0 = $load(w.as_ptr().add(i * n + jb));
-                            let w1 = $load(w.as_ptr().add(i * n + jb + 8));
-                            if FMA {
-                                acc0 = _mm256_fmadd_ps(xv, w0, acc0);
-                                acc1 = _mm256_fmadd_ps(xv, w1, acc1);
-                            } else {
-                                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, w0));
-                                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, w1));
-                            }
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                            jb += 16;
                         }
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
-                        jb += 16;
-                    }
-                    while jb + 8 <= n {
-                        let mut acc = _mm256_setzero_ps();
-                        for i in 0..k {
-                            let x = *arow.get_unchecked(i);
-                            if skip && x == 0.0 {
-                                continue;
+                        while jb + 8 <= n {
+                            let mut acc = _mm256_setzero_ps();
+                            for i in 0..k {
+                                let x = *arow.get_unchecked(i);
+                                if skip && x == 0.0 {
+                                    continue;
+                                }
+                                let xv = _mm256_set1_ps(x);
+                                let w0 = $load(w.as_ptr().add(i * n + jb));
+                                if FMA {
+                                    acc = _mm256_fmadd_ps(xv, w0, acc);
+                                } else {
+                                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, w0));
+                                }
                             }
-                            let xv = _mm256_set1_ps(x);
-                            let w0 = $load(w.as_ptr().add(i * n + jb));
-                            if FMA {
-                                acc = _mm256_fmadd_ps(xv, w0, acc);
-                            } else {
-                                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, w0));
-                            }
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                            jb += 8;
                         }
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
-                        jb += 8;
-                    }
-                    if jb < n {
-                        super::portable::tail_u16(arow, w, n, jb, &mut orow[jb..], skip, $cvt);
+                        if jb < n {
+                            super::portable::tail_u16(arow, w, n, jb, &mut orow[jb..], skip, $cvt);
+                        }
                     }
                 }
             }
@@ -895,53 +941,59 @@ mod avx2 {
                     return;
                 }
                 let rows = out.len() / n;
-                for r in 0..rows {
-                    let arow = &a[r * k..(r + 1) * k];
-                    let orow = &mut out[r * n..(r + 1) * n];
-                    let mut jb = 0usize;
-                    while jb + 16 <= n {
-                        let mut acc0 = _mm256_setzero_ps();
-                        let mut acc1 = _mm256_setzero_ps();
-                        for i in 0..k {
-                            let x = *arow.get_unchecked(i);
-                            if skip && x == 0.0 {
-                                continue;
+                // SAFETY: `jb + 16 <= n` (resp. `jb + 8`) keeps panel loads
+                // inside `q[..k*n]` and stores inside the `orow` slice;
+                // `i < k` bounds the `arow` and `scales` reads; the listed
+                // target features are present per the fn contract.
+                unsafe {
+                    for r in 0..rows {
+                        let arow = &a[r * k..(r + 1) * k];
+                        let orow = &mut out[r * n..(r + 1) * n];
+                        let mut jb = 0usize;
+                        while jb + 16 <= n {
+                            let mut acc0 = _mm256_setzero_ps();
+                            let mut acc1 = _mm256_setzero_ps();
+                            for i in 0..k {
+                                let x = *arow.get_unchecked(i);
+                                if skip && x == 0.0 {
+                                    continue;
+                                }
+                                let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
+                                let q0 = load_i8(q.as_ptr().add(i * n + jb));
+                                let q1 = load_i8(q.as_ptr().add(i * n + jb + 8));
+                                if FMA {
+                                    acc0 = _mm256_fmadd_ps(xv, q0, acc0);
+                                    acc1 = _mm256_fmadd_ps(xv, q1, acc1);
+                                } else {
+                                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, q0));
+                                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, q1));
+                                }
                             }
-                            let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
-                            let q0 = load_i8(q.as_ptr().add(i * n + jb));
-                            let q1 = load_i8(q.as_ptr().add(i * n + jb + 8));
-                            if FMA {
-                                acc0 = _mm256_fmadd_ps(xv, q0, acc0);
-                                acc1 = _mm256_fmadd_ps(xv, q1, acc1);
-                            } else {
-                                acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, q0));
-                                acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, q1));
-                            }
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                            jb += 16;
                         }
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
-                        jb += 16;
-                    }
-                    while jb + 8 <= n {
-                        let mut acc = _mm256_setzero_ps();
-                        for i in 0..k {
-                            let x = *arow.get_unchecked(i);
-                            if skip && x == 0.0 {
-                                continue;
+                        while jb + 8 <= n {
+                            let mut acc = _mm256_setzero_ps();
+                            for i in 0..k {
+                                let x = *arow.get_unchecked(i);
+                                if skip && x == 0.0 {
+                                    continue;
+                                }
+                                let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
+                                let q0 = load_i8(q.as_ptr().add(i * n + jb));
+                                if FMA {
+                                    acc = _mm256_fmadd_ps(xv, q0, acc);
+                                } else {
+                                    acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, q0));
+                                }
                             }
-                            let xv = _mm256_set1_ps(x * *scales.get_unchecked(i));
-                            let q0 = load_i8(q.as_ptr().add(i * n + jb));
-                            if FMA {
-                                acc = _mm256_fmadd_ps(xv, q0, acc);
-                            } else {
-                                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, q0));
-                            }
+                            _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                            jb += 8;
                         }
-                        _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
-                        jb += 8;
-                    }
-                    if jb < n {
-                        super::portable::tail_i8(arow, q, scales, n, jb, &mut orow[jb..], skip);
+                        if jb < n {
+                            super::portable::tail_i8(arow, q, scales, n, jb, &mut orow[jb..], skip);
+                        }
                     }
                 }
             }
@@ -970,42 +1022,51 @@ mod avx2 {
             return;
         }
         let rows = out.len() / n;
-        for r in 0..rows {
-            let arow = &a[r * k..(r + 1) * k];
-            let orow = &mut out[r * n..(r + 1) * n];
-            let mut jb = 0usize;
-            while jb + 16 <= n {
-                let mut acc0 = _mm256_setzero_ps();
-                let mut acc1 = _mm256_setzero_ps();
-                for i in 0..k {
-                    let x = *arow.get_unchecked(i);
-                    if skip && x == 0.0 {
-                        continue;
+        // SAFETY: `jb + 16 <= n` (resp. `jb + 8`) keeps weight loads inside
+        // `b[..k*n]` and stores inside the `orow` slice; `i < k` bounds the
+        // `arow` reads; AVX2 + FMA are present per the fn contract.
+        unsafe {
+            for r in 0..rows {
+                let arow = &a[r * k..(r + 1) * k];
+                let orow = &mut out[r * n..(r + 1) * n];
+                let mut jb = 0usize;
+                while jb + 16 <= n {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    for i in 0..k {
+                        let x = *arow.get_unchecked(i);
+                        if skip && x == 0.0 {
+                            continue;
+                        }
+                        let xv = _mm256_set1_ps(x);
+                        acc0 =
+                            _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc0);
+                        acc1 = _mm256_fmadd_ps(
+                            xv,
+                            _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8)),
+                            acc1,
+                        );
                     }
-                    let xv = _mm256_set1_ps(x);
-                    acc0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc0);
-                    acc1 =
-                        _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb + 8)), acc1);
+                    _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
+                    _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
+                    jb += 16;
                 }
-                _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc0);
-                _mm256_storeu_ps(orow.as_mut_ptr().add(jb + 8), acc1);
-                jb += 16;
-            }
-            while jb + 8 <= n {
-                let mut acc = _mm256_setzero_ps();
-                for i in 0..k {
-                    let x = *arow.get_unchecked(i);
-                    if skip && x == 0.0 {
-                        continue;
+                while jb + 8 <= n {
+                    let mut acc = _mm256_setzero_ps();
+                    for i in 0..k {
+                        let x = *arow.get_unchecked(i);
+                        if skip && x == 0.0 {
+                            continue;
+                        }
+                        let xv = _mm256_set1_ps(x);
+                        acc = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc);
                     }
-                    let xv = _mm256_set1_ps(x);
-                    acc = _mm256_fmadd_ps(xv, _mm256_loadu_ps(b.as_ptr().add(i * n + jb)), acc);
+                    _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
+                    jb += 8;
                 }
-                _mm256_storeu_ps(orow.as_mut_ptr().add(jb), acc);
-                jb += 8;
-            }
-            if jb < n {
-                super::portable::tail_cols(arow, b, n, jb, &mut orow[jb..], skip);
+                if jb < n {
+                    super::portable::tail_cols(arow, b, n, jb, &mut orow[jb..], skip);
+                }
             }
         }
     }

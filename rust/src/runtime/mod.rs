@@ -1,6 +1,7 @@
 //! Runtime layer: PJRT client wrapper, HLO-backed and pure-Rust model
 //! backends, and the GEMM kernels the pure-Rust path runs on. See
-//! DESIGN.md §2.
+//! DESIGN.md §2. Unsafe kernel code and the layer's determinism contract
+//! follow docs/unsafe-policy.md, enforced by `make lint-specmer`.
 //!
 //! # Cache and batching conventions
 //!

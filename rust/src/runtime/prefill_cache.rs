@@ -8,7 +8,7 @@
 //! Everything else delegates.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -19,7 +19,7 @@ use super::backend::{
 
 pub struct PrefillCached<B: ModelBackend> {
     inner: B,
-    memo: RefCell<HashMap<Vec<u8>, Vec<f32>>>,
+    memo: RefCell<BTreeMap<Vec<u8>, Vec<f32>>>,
     pub hits: RefCell<u64>,
     pub misses: RefCell<u64>,
 }
@@ -28,7 +28,7 @@ impl<B: ModelBackend> PrefillCached<B> {
     pub fn new(inner: B) -> Self {
         PrefillCached {
             inner,
-            memo: RefCell::new(HashMap::new()),
+            memo: RefCell::new(BTreeMap::new()),
             hits: RefCell::new(0),
             misses: RefCell::new(0),
         }

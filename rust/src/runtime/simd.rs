@@ -185,6 +185,16 @@ pub fn fast_tier() -> bool {
     *FAST.get_or_init(|| flag_env("SPECMER_FAST", false))
 }
 
+/// Whether the opt-in runtime invariant validators (`SPECMER_VALIDATE`) are
+/// on for this process. Debug builds call `debug_validate()` on the decode
+/// data structures (`BranchedArena`, `TreeTails`, `LockstepGroup`) at round
+/// boundaries when this is set; release builds compile the call sites out.
+/// Off by default — validation walks every parent chain and KV row count.
+pub fn validate_enabled() -> bool {
+    static VALIDATE: OnceLock<bool> = OnceLock::new();
+    *VALIDATE.get_or_init(|| flag_env("SPECMER_VALIDATE", false))
+}
+
 /// Clamp a requested arm to what this machine can execute (callers may ask
 /// for [`Kernel::Avx2`] unconditionally, e.g. tests comparing both arms).
 fn executable(kernel: Kernel) -> Kernel {
@@ -199,14 +209,23 @@ mod avx2 {
     use std::arch::x86_64::*;
 
     /// out[j] += s[j]
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is present on this CPU
+    /// (the dispatch sites check [`super::has_avx2`]) and that
+    /// `s.len() >= out.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn add_assign(out: &mut [f32], s: &[f32]) {
         let n = out.len();
         let mut j = 0;
         while j + 8 <= n {
-            let o = _mm256_loadu_ps(out.as_ptr().add(j));
-            let x = _mm256_loadu_ps(s.as_ptr().add(j));
-            _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, x));
+            // SAFETY: `j + 8 <= n` keeps every 8-lane load/store inside
+            // `out[..n]` and `s[..n]`; avx2 is present per the fn contract.
+            unsafe {
+                let o = _mm256_loadu_ps(out.as_ptr().add(j));
+                let x = _mm256_loadu_ps(s.as_ptr().add(j));
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(o, x));
+            }
             j += 8;
         }
         while j < n {
@@ -216,18 +235,26 @@ mod avx2 {
     }
 
     /// x[j] += p[j] + b[j]  (inner add first, exactly like the scalar code)
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is present on this CPU
+    /// and that `p.len() >= x.len()` and `b.len() >= x.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn add2_assign(x: &mut [f32], p: &[f32], b: &[f32]) {
         let n = x.len();
         let mut j = 0;
         while j + 8 <= n {
-            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
-            let pv = _mm256_loadu_ps(p.as_ptr().add(j));
-            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
-            _mm256_storeu_ps(
-                x.as_mut_ptr().add(j),
-                _mm256_add_ps(xv, _mm256_add_ps(pv, bv)),
-            );
+            // SAFETY: `j + 8 <= n` keeps every 8-lane load/store inside
+            // `x[..n]`, `p[..n]`, `b[..n]`; avx2 per the fn contract.
+            unsafe {
+                let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                let pv = _mm256_loadu_ps(p.as_ptr().add(j));
+                let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    x.as_mut_ptr().add(j),
+                    _mm256_add_ps(xv, _mm256_add_ps(pv, bv)),
+                );
+            }
             j += 8;
         }
         while j < n {
@@ -238,44 +265,62 @@ mod avx2 {
 
     /// x[j] = (x[j] - mu) * inv * g[j] + b[j]
     /// (mul, mul, add — no FMA, same chain as the scalar LN application)
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is present on this CPU
+    /// and that `g.len() >= x.len()` and `b.len() >= x.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn ln_apply(x: &mut [f32], g: &[f32], b: &[f32], mu: f32, inv: f32) {
-        let n = x.len();
-        let muv = _mm256_set1_ps(mu);
-        let invv = _mm256_set1_ps(inv);
-        let mut j = 0;
-        while j + 8 <= n {
-            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
-            let gv = _mm256_loadu_ps(g.as_ptr().add(j));
-            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
-            let t = _mm256_mul_ps(_mm256_mul_ps(_mm256_sub_ps(xv, muv), invv), gv);
-            _mm256_storeu_ps(x.as_mut_ptr().add(j), _mm256_add_ps(t, bv));
-            j += 8;
-        }
-        while j < n {
-            x[j] = (x[j] - mu) * inv * g[j] + b[j];
-            j += 1;
+        // SAFETY: `j + 8 <= n` keeps every 8-lane load/store inside `x[..n]`,
+        // `g[..n]`, `b[..n]`; the scalar tail uses checked indexing; avx2 is
+        // present per the fn contract.
+        unsafe {
+            let n = x.len();
+            let muv = _mm256_set1_ps(mu);
+            let invv = _mm256_set1_ps(inv);
+            let mut j = 0;
+            while j + 8 <= n {
+                let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+                let gv = _mm256_loadu_ps(g.as_ptr().add(j));
+                let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+                let t = _mm256_mul_ps(_mm256_mul_ps(_mm256_sub_ps(xv, muv), invv), gv);
+                _mm256_storeu_ps(x.as_mut_ptr().add(j), _mm256_add_ps(t, bv));
+                j += 8;
+            }
+            while j < n {
+                x[j] = (x[j] - mu) * inv * g[j] + b[j];
+                j += 1;
+            }
         }
     }
 
     /// out[j] += w * v[j]  (attention weighted-V accumulation; mul then add)
+    ///
+    /// # Safety
+    /// Caller must ensure the `avx2` target feature is present on this CPU
+    /// and that `v.len() >= out.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(w: f32, v: &[f32], out: &mut [f32]) {
-        let n = out.len();
-        let wv = _mm256_set1_ps(w);
-        let mut j = 0;
-        while j + 8 <= n {
-            let o = _mm256_loadu_ps(out.as_ptr().add(j));
-            let x = _mm256_loadu_ps(v.as_ptr().add(j));
-            _mm256_storeu_ps(
-                out.as_mut_ptr().add(j),
-                _mm256_add_ps(o, _mm256_mul_ps(wv, x)),
-            );
-            j += 8;
-        }
-        while j < n {
-            out[j] += w * v[j];
-            j += 1;
+        // SAFETY: `j + 8 <= n` keeps every 8-lane load/store inside
+        // `out[..n]` and `v[..n]`; the scalar tail uses checked indexing;
+        // avx2 is present per the fn contract.
+        unsafe {
+            let n = out.len();
+            let wv = _mm256_set1_ps(w);
+            let mut j = 0;
+            while j + 8 <= n {
+                let o = _mm256_loadu_ps(out.as_ptr().add(j));
+                let x = _mm256_loadu_ps(v.as_ptr().add(j));
+                _mm256_storeu_ps(
+                    out.as_mut_ptr().add(j),
+                    _mm256_add_ps(o, _mm256_mul_ps(wv, x)),
+                );
+                j += 8;
+            }
+            while j < n {
+                out[j] += w * v[j];
+                j += 1;
+            }
         }
     }
 }

@@ -1,5 +1,9 @@
 //! Infrastructure substrates built in-repo (the offline image has no
 //! tokio/clap/serde/rand/criterion — see DESIGN.md §3).
+//!
+//! Unsafe code in this layer (the [`threadpool`] lifetime erasure and
+//! `SendPtr`) follows the repo policy in docs/unsafe-policy.md, enforced by
+//! `make lint-specmer`.
 
 pub mod cli;
 pub mod json;

@@ -252,10 +252,17 @@ impl ScopedPool {
             }
             return;
         }
-        // SAFETY: the closure reference is lent to the workers only for the
-        // duration of this call — `run` joins every claimed task (below)
-        // before returning, and unclaimed copies of the reference are never
-        // dereferenced — so extending the lifetime to 'static is sound.
+        // SAFETY: this transmute only extends the *lifetime* argument of the
+        // reference (`&'a dyn Fn(usize) + Sync` → `&'static dyn Fn(usize) +
+        // Sync`); the pointee type and fat-pointer layout are unchanged. The
+        // forged 'static is never acted on: the reference is lent to the
+        // workers only for the duration of this call — the wait loop below
+        // blocks until `done == total`, i.e. every claimed task has finished
+        // running `f`, before `run` returns and the true lifetime 'a ends —
+        // and the job slot is cleared under the lock before the borrow
+        // expires, so no unclaimed copy of the reference survives either.
+        // Workers can observe the Arc'd `JobInner` after that, but its
+        // `TaskFn` is never invoked again once `next >= total`.
         let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         let job = Arc::new(JobInner {
             f: TaskFn(f_static),
@@ -309,8 +316,17 @@ impl Drop for ScopedPool {
 /// the single construction site in [`parallel_chunks_mut`].
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: SendPtr crosses threads only so that each pool task can carve out
+// its own disjoint `&mut [T]` chunk, which is moving `T` values to another
+// thread in all but name — hence the `T: Send` bound (a bare `T` would let
+// e.g. `Rc` migrate). The pointer itself is never dereferenced without the
+// per-task disjointness argument at the construction site.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: tasks receive SendPtr by copy through a `Fn + Sync` closure, so the
+// shared `&SendPtr` must be usable from many threads; all access goes through
+// the copied raw pointer into disjoint chunks (same argument as `Send`), and
+// `T: Send` is required for the same reason as above.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Scoped data-parallel helper for the compute kernels (`runtime::gemm`):
 /// split `data` into `chunk_len`-sized mutable chunks and run `f(i, chunk)`
