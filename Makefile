@@ -30,18 +30,25 @@
 #                     SPECMER_WEIGHT_DTYPE=bf16 (the narrow-dtype arm of
 #                     the CI matrix; per-dtype bitwise contract).
 #   make bench-micro  full (non-smoke) micro benches.
+#   make bench-serve-smoke  open-loop serving-stack load smoke (fixed seed,
+#                     trivial load; pins the results/bench_serve.json
+#                     schema and zero sheds / zero deadline misses). Part
+#                     of `verify`; `make bench-serve` is the full 2x-
+#                     overload run. See docs/serving.md.
 #   make lint-specmer the repo-native static analyzer (rust/lint): SAFETY
 #                     comments on every unsafe, no nondeterminism in
 #                     runtime/decode, the bitwise-accumulation contract in
-#                     the kernels, no panics on the serving path, module
-#                     headers. Policy: docs/unsafe-policy.md.
+#                     the kernels, no panics and no unbounded growth
+#                     primitives on the serving path, module headers.
+#                     Policy: docs/unsafe-policy.md.
 
 CARGO ?= cargo
 
 .PHONY: verify fmt-check lint lint-specmer build test test-portable test-tree test-fast \
-	test-bf16 bench-smoke bench-micro
+	test-bf16 bench-smoke bench-micro bench-serve-smoke bench-serve
 
-verify: fmt-check lint lint-specmer build test test-portable test-tree test-fast bench-smoke
+verify: fmt-check lint lint-specmer build test test-portable test-tree test-fast bench-smoke \
+	bench-serve-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -98,3 +105,14 @@ bench-smoke:
 
 bench-micro:
 	$(CARGO) bench --bench bench_micro
+
+# serving-stack load harness smoke: fixed-seed open-loop run at trivial
+# load; asserts the results/bench_serve.json schema and that nothing was
+# shed and no deadline was missed (docs/serving.md)
+bench-serve-smoke:
+	SPECMER_BENCH_SMOKE=1 $(CARGO) bench --bench bench_serve
+
+# full open-loop run: calibrates the sustainable rate, then offers 2x it —
+# the stack must shed (bounded queues) instead of growing memory
+bench-serve:
+	$(CARGO) bench --bench bench_serve

@@ -1,0 +1,277 @@
+//! Open-loop load harness for the hardened serving stack (criterion is
+//! unavailable offline; this is a plain `fn main()` bench like its
+//! siblings). It drives the real Router → Scheduler → worker pipeline —
+//! synthetic engines, no artifacts — with **Poisson arrivals** at a fixed
+//! offered rate, the defining property of an open-loop benchmark: arrivals
+//! do not wait for completions, so overload shows up as shed/deadline-miss
+//! counts instead of silently stretching a closed loop's think time.
+//!
+//! Traffic is a deterministic seeded mix over both synthetic families
+//! (SynA/SynB), methods (SpecMER, vanilla speculative, draft-only),
+//! lengths, and tree policies (flat vs branch-2 split@3), each request
+//! carrying a completion deadline. Two phases:
+//!
+//! 1. **Calibration** — a burst of requests run to completion measures the
+//!    sustainable completion rate of this machine's stack.
+//! 2. **Measured run** — open-loop arrivals at `2x` the sustainable rate
+//!    (full mode), so the stack must shed: bounded queues answer 429-style
+//!    typed `Overloaded`, expired requests answer `DeadlineExceeded`, and
+//!    memory stays flat (`queue_depth_peak` reports the high-water mark
+//!    against the configured capacity).
+//!
+//! Results go to `results/bench_serve.json`: p50/p95/p99 TTFT (the stack
+//! answers whole sequences, so time-to-first-token equals completion
+//! latency), per-token latency percentiles, shed rate, deadline-miss rate,
+//! tokens/s, and the queue-depth high-water mark.
+//!
+//! `SPECMER_BENCH_SMOKE=1` (CI: `make bench-serve-smoke`) runs a short
+//! fixed-seed pass at trivial load instead, asserts that *nothing* was
+//! shed and *no* deadline was missed, and re-parses the written JSON to
+//! pin the schema.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use specmer::config::Method;
+use specmer::coordinator::{
+    synthetic_engine, synthetic_families, EngineFactory, FamilyRegistry, GenEngine, GenError,
+    Metrics, Router, Scheduler, SchedulerOpts,
+};
+use specmer::decode::{GenConfig, TreePolicy};
+use specmer::kmer::KmerSet;
+use specmer::util::json::Json;
+use specmer::util::rng::Pcg64;
+use specmer::util::stats::percentile;
+
+/// One request of the traffic mix, derived deterministically from its index.
+fn mix_request(i: usize) -> (&'static str, Method, GenConfig) {
+    let protein = ["SynA", "SynB"][i % 2];
+    let method =
+        [Method::SpecMer, Method::Speculative, Method::SpecMer, Method::DraftOnly][i % 4];
+    let max_len = [24usize, 32, 48][i % 3];
+    // every other SpecMER request drafts a branch-2 tree split at depth 3
+    let tree = if method == Method::SpecMer && i % 8 == 0 {
+        TreePolicy { branch: 2, split_mask: 0b1000 }
+    } else {
+        TreePolicy::default()
+    };
+    let cfg = GenConfig {
+        c: 3,
+        gamma: 5,
+        max_len,
+        seed: i as u64 * 13 + 5,
+        kset: KmerSet::new(true, true, true),
+        tree,
+        ..Default::default()
+    };
+    (protein, method, cfg)
+}
+
+fn pct(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, q)
+    }
+}
+
+struct RunStats {
+    offered: usize,
+    completed: usize,
+    shed: usize,
+    deadline_missed: usize,
+    other_errors: usize,
+    ttft_ms: Vec<f64>,
+    per_token_ms: Vec<f64>,
+    tokens: usize,
+    elapsed_s: f64,
+    queue_depth_peak: u64,
+}
+
+/// Open-loop run: `n` mixed requests with exponential inter-arrival times
+/// at `rate_rps`, each carrying a `timeout` deadline. Returns once every
+/// request has been answered (shed and expired requests answer too — the
+/// hardened stack never leaves a client hanging).
+fn run_open_loop(
+    router: &Router,
+    metrics: &Metrics,
+    n: usize,
+    rate_rps: f64,
+    timeout: Duration,
+    arrival_seed: u64,
+) -> RunStats {
+    let mut rng = Pcg64::new(arrival_seed);
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    let mut queue_depth_peak = 0u64;
+    for i in 0..n {
+        let (protein, method, cfg) = mix_request(i);
+        let deadline = Some(Instant::now() + timeout);
+        router.submit_with_deadline(protein, method, cfg, deadline, tx.clone());
+        queue_depth_peak = queue_depth_peak.max(metrics.queue_depth.load(Ordering::Relaxed));
+        // exponential inter-arrival: open loop, independent of completions
+        let dt = -(1.0 - rng.next_f64()).ln() / rate_rps;
+        std::thread::sleep(Duration::from_secs_f64(dt.min(1.0)));
+    }
+    drop(tx);
+
+    let mut s = RunStats {
+        offered: n,
+        completed: 0,
+        shed: 0,
+        deadline_missed: 0,
+        other_errors: 0,
+        ttft_ms: Vec::new(),
+        per_token_ms: Vec::new(),
+        tokens: 0,
+        elapsed_s: 0.0,
+        queue_depth_peak,
+    };
+    for _ in 0..n {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("hardened stack must answer every request");
+        match &resp.result {
+            Ok(out) => {
+                s.completed += 1;
+                s.tokens += out.new_tokens();
+                s.ttft_ms.push(resp.latency * 1e3);
+                if out.new_tokens() > 0 {
+                    s.per_token_ms.push(resp.latency * 1e3 / out.new_tokens() as f64);
+                }
+            }
+            Err(e) => match GenError::of(e) {
+                Some(GenError::Overloaded { .. }) => s.shed += 1,
+                Some(GenError::DeadlineExceeded) => s.deadline_missed += 1,
+                None => s.other_errors += 1,
+            },
+        }
+    }
+    s.elapsed_s = t0.elapsed().as_secs_f64();
+    s
+}
+
+fn main() {
+    let smoke = std::env::var("SPECMER_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+
+    let registry = Arc::new(FamilyRegistry::new(synthetic_families(7)));
+    let factory: EngineFactory =
+        Arc::new(|| Ok(Box::new(synthetic_engine(7)) as Box<dyn GenEngine>));
+    let opts = SchedulerOpts {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        // small queues: the overload run must hit the admission bound and
+        // shed, not absorb the backlog in memory
+        queue_capacity: if smoke { 256 } else { 32 },
+        fault: None,
+    };
+    let metrics = Arc::new(Metrics::new());
+    let sched = Arc::new(Scheduler::start_with(2, opts, factory, Arc::clone(&metrics)));
+    let router = Router::new(Arc::clone(&sched), registry);
+
+    // ---- phase 1: calibration — sustainable completion rate --------------
+    // A burst run to completion (deadline far away, rate high enough that
+    // the queues, not the arrival process, pace the workers).
+    let (cal_n, cal_rate) = if smoke { (8, 200.0) } else { (64, 2000.0) };
+    let cal = run_open_loop(&router, &metrics, cal_n, cal_rate, Duration::from_secs(60), 11);
+    let sustainable_rps = cal.completed as f64 / cal.elapsed_s.max(1e-9);
+    println!(
+        "[bench_serve] calibration: {} reqs in {:.2}s -> sustainable {:.1} req/s",
+        cal.completed, cal.elapsed_s, sustainable_rps
+    );
+
+    // ---- phase 2: measured open-loop run ---------------------------------
+    // Smoke: trivial load (half the sustainable rate, generous deadline) —
+    // nothing may be shed or expire. Full: 2x sustainable with a deadline
+    // around the calibrated service time — the stack must shed gracefully.
+    let (n, rate_rps, timeout) = if smoke {
+        (8usize, (sustainable_rps * 0.5).max(1.0), Duration::from_secs(30))
+    } else {
+        (400usize, sustainable_rps * 2.0, Duration::from_millis(2000))
+    };
+    println!("[bench_serve] open loop: {n} reqs at {rate_rps:.1} req/s, deadline {timeout:?}");
+    let s = run_open_loop(&router, &metrics, n, rate_rps, timeout, 23);
+
+    let shed_rate = s.shed as f64 / s.offered as f64;
+    let miss_rate = s.deadline_missed as f64 / s.offered as f64;
+    println!(
+        "[bench_serve] offered {} completed {} shed {} ({:.1}%) missed {} ({:.1}%) other {}",
+        s.offered,
+        s.completed,
+        s.shed,
+        shed_rate * 100.0,
+        s.deadline_missed,
+        miss_rate * 100.0,
+        s.other_errors
+    );
+    println!(
+        "[bench_serve] ttft p50/p95/p99 = {:.1}/{:.1}/{:.1} ms, queue depth peak {}",
+        pct(&s.ttft_ms, 50.0),
+        pct(&s.ttft_ms, 95.0),
+        pct(&s.ttft_ms, 99.0),
+        s.queue_depth_peak
+    );
+
+    let json = Json::obj(vec![
+        ("workers", Json::num(2.0)),
+        ("sustainable_rps", Json::num(sustainable_rps)),
+        ("rate_rps", Json::num(rate_rps)),
+        ("deadline_ms", Json::num(timeout.as_secs_f64() * 1e3)),
+        ("offered", Json::num(s.offered as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("shed", Json::num(s.shed as f64)),
+        ("deadline_missed", Json::num(s.deadline_missed as f64)),
+        ("other_errors", Json::num(s.other_errors as f64)),
+        ("shed_rate", Json::num(shed_rate)),
+        ("deadline_miss_rate", Json::num(miss_rate)),
+        ("ttft_ms_p50", Json::num(pct(&s.ttft_ms, 50.0))),
+        ("ttft_ms_p95", Json::num(pct(&s.ttft_ms, 95.0))),
+        ("ttft_ms_p99", Json::num(pct(&s.ttft_ms, 99.0))),
+        ("per_token_ms_p50", Json::num(pct(&s.per_token_ms, 50.0))),
+        ("per_token_ms_p95", Json::num(pct(&s.per_token_ms, 95.0))),
+        ("per_token_ms_p99", Json::num(pct(&s.per_token_ms, 99.0))),
+        ("tokens", Json::num(s.tokens as f64)),
+        ("tokens_per_sec", Json::num(s.tokens as f64 / s.elapsed_s.max(1e-9))),
+        ("queue_depth_peak", Json::num(s.queue_depth_peak as f64)),
+        ("smoke", Json::Bool(smoke)),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    let path = "results/bench_serve.json";
+    std::fs::write(path, format!("{json}\n")).expect("write results/bench_serve.json");
+    println!("[bench_serve] wrote {path}");
+
+    if smoke {
+        // schema pin: the written artifact must round-trip and carry every
+        // field downstream dashboards key on
+        let text = std::fs::read_to_string(path).expect("re-read bench_serve.json");
+        let parsed = Json::parse(&text).expect("bench_serve.json must be valid JSON");
+        for key in [
+            "sustainable_rps",
+            "rate_rps",
+            "offered",
+            "completed",
+            "shed",
+            "deadline_missed",
+            "shed_rate",
+            "deadline_miss_rate",
+            "ttft_ms_p50",
+            "ttft_ms_p95",
+            "ttft_ms_p99",
+            "per_token_ms_p50",
+            "tokens_per_sec",
+            "queue_depth_peak",
+            "smoke",
+        ] {
+            assert!(parsed.get(key).is_some(), "bench_serve.json missing key '{key}'");
+        }
+        assert_eq!(s.shed, 0, "trivial load must not shed");
+        assert_eq!(s.deadline_missed, 0, "trivial load must not miss deadlines");
+        assert_eq!(s.other_errors, 0, "trivial load must not error");
+        assert_eq!(s.completed, s.offered, "every request answered Ok at trivial load");
+        println!("[bench_serve] smoke assertions passed");
+    }
+}

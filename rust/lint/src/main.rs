@@ -6,7 +6,7 @@
 //! invariants argued in prose, and the serving path must degrade to error
 //! responses rather than panics. This binary scans `rust/src/**/*.rs` at the
 //! token/line level (dependency-free — the offline build image has no registry
-//! crates) and enforces five rules:
+//! crates) and enforces six rules:
 //!
 //! 1. **unsafe-safety** — every `unsafe` block / fn / impl carries an adjacent
 //!    `// SAFETY:` comment or a `# Safety` doc section.
@@ -23,6 +23,11 @@
 //!    lock-poisoning idiom (`.lock()` / `.wait()` / `.join()` receivers, which
 //!    only fail once another thread has already panicked).
 //! 5. **module-header** — every `src` module opens with a `//!` header.
+//! 6. **unbounded** — no unbounded growth primitives on the serving path
+//!    (`server/`, `coordinator/`): `VecDeque::new`, unbounded `channel()`
+//!    construction, and `self.`-rooted `.push(` / `.push_back(` accumulators
+//!    (state that outlives one call) must carry a
+//!    `lint:allow(unbounded): <reason>` arguing the actual bound.
 //!
 //! Escape hatches (all require a non-empty justification, and a bare marker
 //! is itself a violation):
@@ -602,6 +607,109 @@ fn rule_serving_panic(file: &str, v: &FileView, out: &mut Vec<Violation>) {
 }
 
 // ---------------------------------------------------------------------------
+// Rule 6: no unbounded growth primitives on the serving path
+// ---------------------------------------------------------------------------
+
+/// Append-style calls that grow a collection by one element.
+const GROW_CALLS: [&str; 3] = [".push(", ".push_back(", ".push_front("];
+
+/// True when `line` constructs an unbounded mpsc channel: the word
+/// `channel` immediately followed by `(`. `sync_channel(` (bounded) has an
+/// identifier character before the match and never fires.
+fn channel_call(line: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = line[start..].find("channel(") {
+        let a = start + p;
+        if a == 0 || !is_ident(line.as_bytes()[a - 1] as char) {
+            return true;
+        }
+        start = a + 1;
+    }
+    false
+}
+
+/// Whether the method chain ending at byte offset `dot` (the `.` of a
+/// `.push(`-style call) is rooted at `self` — i.e. grows state that
+/// outlives the enclosing call, rather than a local accumulator.
+fn chain_rooted_at_self(line: &str, dot: usize) -> bool {
+    let bytes = line.as_bytes();
+    let mut i = dot;
+    while i > 0 {
+        let c = bytes[i - 1] as char;
+        if is_ident(c) || matches!(c, '.' | '(' | ')' | '[' | ']') {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    line[i..dot].starts_with("self.")
+}
+
+fn rule_unbounded(file: &str, v: &FileView, out: &mut Vec<Violation>) {
+    for ln in 0..v.code.len() {
+        if v.test[ln] {
+            continue;
+        }
+        let line = &v.code[ln];
+        if line.contains("VecDeque::new") {
+            apply_marker(
+                v,
+                ln,
+                "unbounded",
+                file,
+                "`VecDeque::new` on the serving path has no capacity bound: overload must \
+                 shed, not grow memory; enforce a bound and annotate it with \
+                 `lint:allow(unbounded): <reason>`"
+                    .into(),
+                out,
+            );
+            continue;
+        }
+        if channel_call(line) {
+            apply_marker(
+                v,
+                ln,
+                "unbounded",
+                file,
+                "unbounded `channel()` on the serving path: senders can outrun the \
+                 receiver without backpressure; bound the producers and annotate with \
+                 `lint:allow(unbounded): <reason>`"
+                    .into(),
+                out,
+            );
+            continue;
+        }
+        for tok in GROW_CALLS {
+            let mut start = 0;
+            let mut hit = false;
+            while let Some(p) = line[start..].find(tok) {
+                let dot = start + p;
+                if chain_rooted_at_self(line, dot) {
+                    hit = true;
+                    break;
+                }
+                start = dot + 1;
+            }
+            if hit {
+                apply_marker(
+                    v,
+                    ln,
+                    "unbounded",
+                    file,
+                    format!(
+                        "`{tok}` onto `self.`-rooted state on the serving path is an \
+                         accumulator that outlives this call: argue its bound with \
+                         `lint:allow(unbounded): <reason>`"
+                    ),
+                    out,
+                );
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Rule 5: module headers
 // ---------------------------------------------------------------------------
 
@@ -637,6 +745,7 @@ fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
     }
     if rel.starts_with("server/") || rel.starts_with("coordinator/") {
         rule_serving_panic(rel, &v, &mut out);
+        rule_unbounded(rel, &v, &mut out);
     }
     out
 }
@@ -889,6 +998,64 @@ mod tests {
     fn unwrap_in_tests_passes() {
         let src = "//! m\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) -> u32 {\n        x.unwrap()\n    }\n}\n";
         assert!(!rules_hit("server/x.rs", src).contains(&"serving-panic"));
+    }
+
+    // -- rule 6 -----------------------------------------------------------
+
+    #[test]
+    fn vecdeque_new_on_serving_path_fires() {
+        let src = "//! m\nfn f() -> VecDeque<u32> {\n    VecDeque::new()\n}\n";
+        assert!(rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
+        assert!(rules_hit("server/x.rs", src).contains(&"unbounded"));
+    }
+
+    #[test]
+    fn vecdeque_with_reasoned_allow_passes() {
+        let src = "//! m\nfn f() -> VecDeque<u32> {\n    // lint:allow(unbounded): capacity enforced in try_push\n    VecDeque::new()\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
+    }
+
+    #[test]
+    fn unbounded_channel_fires_but_sync_channel_passes() {
+        let src = "//! m\nfn f() {\n    let (tx, rx) = channel();\n}\n";
+        assert!(rules_hit("server/x.rs", src).contains(&"unbounded"));
+        let src = "//! m\nfn f() {\n    let (tx, rx) = mpsc::channel();\n}\n";
+        assert!(rules_hit("server/x.rs", src).contains(&"unbounded"));
+        let src = "//! m\nfn f() {\n    let (tx, rx) = sync_channel(8);\n}\n";
+        assert!(!rules_hit("server/x.rs", src).contains(&"unbounded"));
+    }
+
+    #[test]
+    fn self_rooted_push_fires_but_local_push_passes() {
+        let src = "//! m\nimpl S {\n    fn f(&mut self, v: u32) {\n        self.items.push(v);\n    }\n}\n";
+        assert!(rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
+        // chained self receiver still fires
+        let src = "//! m\nimpl S {\n    fn f(&mut self, v: f64) {\n        self.latencies.lock().unwrap().push(v);\n    }\n}\n";
+        assert!(rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
+        // a local accumulator fed *from* self is not an accumulator on self
+        let src = "//! m\nimpl S {\n    fn f(&mut self) {\n        let mut batch = Vec::new();\n        batch.push(self.queue.pop_front());\n    }\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
+    }
+
+    #[test]
+    fn bare_unbounded_marker_fires() {
+        let src = "//! m\nfn f() {\n    // lint:allow(unbounded)\n    let (tx, rx) = channel();\n}\n";
+        let v = scan_source("server/x.rs", src);
+        assert!(v.iter().any(|v| v.rule == "unbounded" && v.msg.contains("justification")));
+    }
+
+    #[test]
+    fn unbounded_outside_serving_path_passes() {
+        let src = "//! m\nfn f() -> VecDeque<u32> {\n    VecDeque::new()\n}\n";
+        assert!(!rules_hit("util/x.rs", src).contains(&"unbounded"));
+        let src = "//! m\nimpl S {\n    fn f(&mut self, v: u32) {\n        self.items.push(v);\n    }\n}\n";
+        assert!(!rules_hit("decode/x.rs", src).contains(&"unbounded"));
+    }
+
+    #[test]
+    fn unbounded_in_test_region_passes() {
+        let src = "//! m\n#[cfg(test)]\nmod tests {\n    fn t() {\n        let (tx, rx) = channel();\n    }\n}\n";
+        assert!(!rules_hit("coordinator/x.rs", src).contains(&"unbounded"));
     }
 
     // -- rule 5 -----------------------------------------------------------

@@ -51,6 +51,13 @@ pub struct Config {
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait_ms: u64,
+    /// Per-worker queue bound: submissions past it are shed (429).
+    pub queue_cap: usize,
+    /// Router-level outstanding-request limit; 0 = unlimited.
+    pub max_inflight: usize,
+    /// Default per-request deadline applied by the HTTP server when the
+    /// client sends no `timeout_ms`; 0 = no deadline.
+    pub timeout_ms: u64,
     pub port: u16,
     pub gen: GenConfig,
 }
@@ -66,6 +73,9 @@ impl Default for Config {
             workers: 1,
             max_batch: 8,
             max_wait_ms: 5,
+            queue_cap: 256,
+            max_inflight: 0,
+            timeout_ms: 0,
             port: 7878,
             gen: GenConfig::default(),
         }
@@ -90,6 +100,9 @@ impl Config {
         c.workers = args.usize_or("workers", c.workers)?;
         c.max_batch = args.usize_or("max-batch", c.max_batch)?;
         c.max_wait_ms = args.u64_or("max-wait-ms", c.max_wait_ms)?;
+        c.queue_cap = args.usize_or("queue-cap", c.queue_cap)?;
+        c.max_inflight = args.usize_or("max-inflight", c.max_inflight)?;
+        c.timeout_ms = args.u64_or("timeout-ms", c.timeout_ms)?;
         c.port = args.usize_or("port", c.port as usize)? as u16;
         c.gen.gamma = args.usize_or("gamma", c.gen.gamma)?;
         c.gen.c = args.usize_or("c", c.gen.c)?;
@@ -129,6 +142,18 @@ mod tests {
         assert!(c.gen.kset.k1 && c.gen.kset.k3 && !c.gen.kset.k5);
         assert_eq!(c.workers, 2);
         assert!(c.cpu_ref);
+    }
+
+    #[test]
+    fn serving_hardening_knobs() {
+        let c = parse("--queue-cap 32 --max-inflight 64 --timeout-ms 1500");
+        assert_eq!(c.queue_cap, 32);
+        assert_eq!(c.max_inflight, 64);
+        assert_eq!(c.timeout_ms, 1500);
+        let d = Config::default();
+        assert_eq!(d.queue_cap, 256);
+        assert_eq!(d.max_inflight, 0, "unlimited by default");
+        assert_eq!(d.timeout_ms, 0, "no default deadline");
     }
 
     #[test]

@@ -23,19 +23,52 @@ use std::time::{Duration, Instant};
 use crate::coordinator::request::GenRequest;
 use crate::decode::LockstepShape;
 
+/// Default per-worker queue capacity when the caller doesn't pick one.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
 pub struct Batcher {
+    // lint:allow(unbounded): growth is bounded by `capacity`, enforced in try_push
     queue: VecDeque<GenRequest>,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound: [`Self::try_push`] refuses beyond this depth.
+    capacity: usize,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
-        Batcher { queue: VecDeque::new(), max_batch: max_batch.max(1), max_wait }
+        Batcher::bounded(max_batch, max_wait, DEFAULT_QUEUE_CAPACITY)
     }
 
-    pub fn push(&mut self, req: GenRequest) {
+    pub fn bounded(max_batch: usize, max_wait: Duration, capacity: usize) -> Batcher {
+        Batcher {
+            // lint:allow(unbounded): growth is bounded by `capacity`, enforced in try_push
+            queue: VecDeque::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Bounded enqueue: hands the request back when the queue is at
+    /// capacity so the caller can shed it (answer `GenError::Overloaded`)
+    /// instead of growing memory without limit.
+    pub fn try_push(&mut self, req: GenRequest) -> Result<(), GenRequest> {
+        if self.queue.len() >= self.capacity {
+            return Err(req);
+        }
+        // lint:allow(unbounded): capacity checked in the line above
         self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Test convenience: bounded push that panics past capacity (production
+    /// callers shed through [`Self::try_push`]).
+    #[cfg(test)]
+    fn push(&mut self, req: GenRequest) {
+        if self.try_push(req).is_err() {
+            panic!("test enqueue past capacity");
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -44,6 +77,14 @@ impl Batcher {
 
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Key under which requests may share a batch: the lockstep dispatch
@@ -226,6 +267,7 @@ mod tests {
             spec: spec(protein, method, c, gamma),
             reply: tx,
             submitted: Instant::now() - Duration::from_millis(age_ms),
+            deadline: None,
         }
     }
 
@@ -235,6 +277,21 @@ mod tests {
 
     fn shape(c: usize, gamma: usize) -> LockstepShape {
         LockstepShape { c, gamma, tree: Default::default() }
+    }
+
+    #[test]
+    fn try_push_sheds_past_capacity() {
+        let mut b = Batcher::bounded(8, Duration::from_millis(0), 2);
+        assert!(b.try_push(req(1, "GFP", Method::SpecMer, 0)).is_ok());
+        assert!(b.try_push(req(2, "GFP", Method::SpecMer, 0)).is_ok());
+        assert!(b.is_full());
+        // the refused request comes back intact for the caller to answer
+        let back = b.try_push(req(3, "GFP", Method::SpecMer, 0)).unwrap_err();
+        assert_eq!(back.id, 3);
+        assert_eq!(b.len(), 2);
+        // popping frees capacity again
+        b.next_batch(Instant::now(), true).unwrap();
+        assert!(b.try_push(req(4, "GFP", Method::SpecMer, 0)).is_ok());
     }
 
     #[test]

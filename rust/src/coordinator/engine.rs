@@ -131,6 +131,14 @@ pub trait RequestSource {
     fn admit(&mut self, active: usize) -> Vec<(u64, SeqSpec)>;
     /// Delivers one request's final result (exactly once per ticket).
     fn complete(&mut self, ticket: u64, result: Result<GenOutput>);
+    /// Called at each round boundary with the resident tickets; returns the
+    /// sequences to cancel mid-group (deadline enforcement, injected
+    /// faults) and the error each is answered with via [`Self::complete`].
+    /// Defaults to cancelling nothing.
+    fn cancel(&mut self, resident: &[u64]) -> Vec<(u64, anyhow::Error)> {
+        let _ = resident;
+        Vec::new()
+    }
 }
 
 /// Object-safe engine interface used by the scheduler, server and benches.
@@ -173,7 +181,8 @@ pub trait GenEngine {
     /// method — and completing each the moment it finishes. Returns when a
     /// boundary finds the group empty and the source has nothing to admit.
     /// The default serves requests serially (still re-polling the source
-    /// between requests) for engines without a lockstep decode path.
+    /// between requests, and offering each ticket for cancellation before
+    /// decoding it) for engines without a lockstep decode path.
     fn generate_continuous(&self, shape: &LockstepShape, source: &mut dyn RequestSource) {
         let _ = shape;
         loop {
@@ -182,6 +191,10 @@ pub trait GenEngine {
                 return;
             }
             for (ticket, spec) in items {
+                if let Some((_, err)) = source.cancel(&[ticket]).into_iter().next() {
+                    source.complete(ticket, Err(err));
+                    continue;
+                }
                 source.complete(ticket, self.generate(&spec));
             }
         }
@@ -233,6 +246,10 @@ impl decode::AdmissionHook for SourceAdapter<'_> {
 
     fn complete(&mut self, ticket: u64, result: Result<GenOutput>) {
         self.source.complete(ticket, result);
+    }
+
+    fn cancel(&mut self, resident: &[u64]) -> Vec<(u64, anyhow::Error)> {
+        self.source.cancel(resident)
     }
 }
 

@@ -1,0 +1,57 @@
+//! Typed serving errors for the hardened request path.
+//!
+//! Load shedding and deadline enforcement need the HTTP layer to answer
+//! with *specific* status codes (429 + `Retry-After`, 504), so these
+//! conditions travel as a concrete [`GenError`] inside `anyhow::Error`
+//! (recovered with `downcast_ref`) rather than as message strings.
+
+use std::fmt;
+
+/// Why the serving stack refused or abandoned a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GenError {
+    /// Admission was refused: the target worker queue is at capacity, the
+    /// router's in-flight concurrency limit is reached, or the server is
+    /// draining. The client should back off for `retry_after_ms`.
+    Overloaded { retry_after_ms: u64 },
+    /// The request's deadline passed — at submission, at batch pop, or at
+    /// a lockstep round boundary mid-group.
+    DeadlineExceeded,
+}
+
+impl GenError {
+    /// Classify an opaque error from a [`GenResponse`](crate::coordinator::GenResponse).
+    pub fn of(err: &anyhow::Error) -> Option<GenError> {
+        err.downcast_ref::<GenError>().copied()
+    }
+}
+
+impl fmt::Display for GenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GenError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: retry after {retry_after_ms}ms")
+            }
+            GenError::DeadlineExceeded => f.write_str("deadline exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for GenError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_through_anyhow_with_context() {
+        let e = anyhow::Error::from(GenError::Overloaded { retry_after_ms: 250 })
+            .context("submitting request");
+        assert_eq!(GenError::of(&e), Some(GenError::Overloaded { retry_after_ms: 250 }));
+        assert_eq!(format!("{e:#}"), "submitting request: overloaded: retry after 250ms");
+
+        let e = anyhow::Error::from(GenError::DeadlineExceeded);
+        assert_eq!(GenError::of(&e), Some(GenError::DeadlineExceeded));
+        assert_eq!(GenError::of(&anyhow::anyhow!("deadline exceeded")), None);
+    }
+}

@@ -1,0 +1,127 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! A seeded [`FaultPlan`] describes *which* faults to inject; each worker
+//! derives a [`FaultState`] (plan + per-worker Pcg64 stream) so a given
+//! `(seed, worker)` pair always fails at the same points. Faults are
+//! injected at three places in the worker loop:
+//!
+//!   * **engine build** — the worker's engine factory is failed before it
+//!     runs, exercising the dead-worker requeue path;
+//!   * **round error** — at a lockstep round boundary every resident
+//!     sequence is failed, modelling a verify-dispatch error poisoning
+//!     the group;
+//!   * **round delay** — extra latency added at each round boundary so
+//!     deadline enforcement can be driven without slow models.
+//!
+//! Plans come from the environment (`SPECMER_FAULT_*`) for CLI chaos runs,
+//! or are passed explicitly through `SchedulerOpts` in tests.
+
+use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+/// Seeded description of the faults to inject. All-zero = no faults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed; each worker draws from `Pcg64::new(seed ^ worker_id)`.
+    pub seed: u64,
+    /// Probability that a worker's engine build is failed outright.
+    pub engine_build_fail: f64,
+    /// Per-round-boundary probability of failing the resident group.
+    pub round_error: f64,
+    /// Extra latency injected at every round boundary.
+    pub round_delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// Read a plan from `SPECMER_FAULT_SEED`, `SPECMER_FAULT_ENGINE_FAIL`,
+    /// `SPECMER_FAULT_ROUND_ERROR`, `SPECMER_FAULT_ROUND_DELAY_MS`.
+    /// Returns `None` when no fault knob is set (the production default).
+    pub fn from_env() -> Option<FaultPlan> {
+        fn f64_env(key: &str) -> f64 {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(0.0)
+        }
+        fn u64_env(key: &str) -> u64 {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+        }
+        let plan = FaultPlan {
+            seed: u64_env("SPECMER_FAULT_SEED"),
+            engine_build_fail: f64_env("SPECMER_FAULT_ENGINE_FAIL"),
+            round_error: f64_env("SPECMER_FAULT_ROUND_ERROR"),
+            round_delay_ms: u64_env("SPECMER_FAULT_ROUND_DELAY_MS"),
+        };
+        let armed =
+            plan.engine_build_fail > 0.0 || plan.round_error > 0.0 || plan.round_delay_ms > 0;
+        armed.then_some(plan)
+    }
+
+    /// The deterministic per-worker fault stream.
+    pub fn state_for(&self, worker: usize) -> FaultState {
+        FaultState { plan: *self, rng: Pcg64::new(self.seed ^ (worker as u64).wrapping_add(1)) }
+    }
+}
+
+/// A worker's live fault stream: consults the plan with seeded draws.
+pub struct FaultState {
+    plan: FaultPlan,
+    rng: Pcg64,
+}
+
+impl FaultState {
+    /// Consulted once, before the engine factory runs.
+    pub fn engine_build_fails(&mut self) -> bool {
+        self.plan.engine_build_fail > 0.0 && self.rng.next_f64() < self.plan.engine_build_fail
+    }
+
+    /// Consulted at each lockstep round boundary with resident sequences.
+    pub fn round_error_fires(&mut self) -> bool {
+        self.plan.round_error > 0.0 && self.rng.next_f64() < self.plan.round_error
+    }
+
+    /// Extra latency to sleep at each round boundary, if any.
+    pub fn round_delay(&self) -> Option<Duration> {
+        (self.plan.round_delay_ms > 0).then(|| Duration::from_millis(self.plan.round_delay_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_deterministic_per_worker() {
+        let plan =
+            FaultPlan { seed: 7, engine_build_fail: 0.5, round_error: 0.5, round_delay_ms: 0 };
+        let a: Vec<bool> = {
+            let mut s = plan.state_for(0);
+            (0..16).map(|_| s.round_error_fires()).collect()
+        };
+        let b: Vec<bool> = {
+            let mut s = plan.state_for(0);
+            (0..16).map(|_| s.round_error_fires()).collect()
+        };
+        assert_eq!(a, b);
+        // different workers see different streams
+        let c: Vec<bool> = {
+            let mut s = plan.state_for(1);
+            (0..16).map(|_| s.round_error_fires()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn certain_faults_always_fire_and_zero_never_does() {
+        let hot =
+            FaultPlan { seed: 1, engine_build_fail: 1.0, round_error: 1.0, round_delay_ms: 3 };
+        let mut s = hot.state_for(0);
+        assert!(s.engine_build_fails());
+        assert!(s.round_error_fires());
+        assert_eq!(s.round_delay(), Some(Duration::from_millis(3)));
+
+        let cold =
+            FaultPlan { seed: 1, engine_build_fail: 0.0, round_error: 0.0, round_delay_ms: 0 };
+        let mut s = cold.state_for(0);
+        assert!(!s.engine_build_fails());
+        assert!(!s.round_error_fires());
+        assert_eq!(s.round_delay(), None);
+    }
+}

@@ -37,9 +37,22 @@ pub struct Metrics {
     /// shape-keyed admission redesign unlocked. Under the old
     /// `(protein, method)`-keyed batcher this counter could never move.
     pub cross_key_admitted: AtomicU64,
-    /// Worker engine-construction failures (each marks a dead worker that
-    /// answers its queue with errors).
+    /// Worker engine-construction failures (each marks a dead worker whose
+    /// queued requests are requeued to survivors).
     pub engine_failures: AtomicU64,
+    /// Requests refused at admission (queue at capacity, concurrency limit
+    /// reached, or draining) — answered with `GenError::Overloaded`.
+    pub shed: AtomicU64,
+    /// Requests answered with `GenError::DeadlineExceeded` (at submission,
+    /// batch pop, or mid-group at a round boundary).
+    pub deadline_exceeded: AtomicU64,
+    /// Queued requests moved from a dead worker to a survivor.
+    pub requeued: AtomicU64,
+    /// Gauge: requests currently queued across all workers (the scheduler
+    /// keeps it in step with every enqueue/pop).
+    pub queue_depth: AtomicU64,
+    // lint:allow(unbounded): full-history latency reservoir for percentile
+    // gauges; reset with the process, same lifecycle as the counters
     latencies: Mutex<Vec<f64>>,
     decode_seconds: Mutex<f64>,
     queue_wait_seconds: Mutex<f64>,
@@ -68,6 +81,8 @@ impl Metrics {
         self.target_calls.fetch_add(out.target_calls, Ordering::Relaxed);
         self.rounds.fetch_add(out.rounds, Ordering::Relaxed);
         self.tree_nodes.fetch_add(out.tree_nodes, Ordering::Relaxed);
+        // lint:allow(unbounded): full-history latency reservoir; growth is one
+        // f64 per completed request and is read back for end-of-run percentiles
         self.latencies.lock().unwrap().push(latency);
         *self.decode_seconds.lock().unwrap() += decode_s;
     }
@@ -123,6 +138,34 @@ impl Metrics {
     /// Record a worker whose engine factory failed.
     pub fn record_engine_failure(&self) {
         self.engine_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request refused at admission (also counts as failed —
+    /// shed requests are answered with an error).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request whose deadline passed before it completed.
+    /// Callers on the worker path also run the normal failure accounting;
+    /// this only moves the deadline counter.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one queued request moved off a dead worker to a survivor.
+    pub fn record_requeue(&self) {
+        self.requeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Move the queued-requests gauge (+delta on enqueue, -delta on pop).
+    pub fn queue_depth_add(&self, delta: i64) {
+        if delta >= 0 {
+            self.queue_depth.fetch_add(delta as u64, Ordering::Relaxed);
+        } else {
+            self.queue_depth.fetch_sub((-delta) as u64, Ordering::Relaxed);
+        }
     }
 
     /// Record one decode round: how many sequences were in flight and how
@@ -258,6 +301,10 @@ impl Metrics {
              specmer_cross_key_admitted_total {}\n\
              specmer_group_distinct_proteins_avg {:.3}\n\
              specmer_engine_failures_total {}\n\
+             specmer_shed_total {}\n\
+             specmer_deadline_exceeded_total {}\n\
+             specmer_requeued_total {}\n\
+             specmer_queue_depth {}\n\
              specmer_occupancy_time_weighted {:.3}\n\
              specmer_queue_wait_seconds_total {:.4}\n\
              specmer_decode_seconds_total {:.4}\n\
@@ -284,6 +331,10 @@ impl Metrics {
             self.cross_key_admitted.load(Ordering::Relaxed),
             self.group_distinct_proteins_avg(),
             self.engine_failures.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
+            self.requeued.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
             self.occupancy_time_weighted(),
             self.queue_wait_total(),
             self.decode_seconds_total(),
@@ -400,6 +451,26 @@ mod tests {
         assert!(dump.contains("specmer_rounds_total 5"));
         assert!(dump.contains("specmer_tree_nodes_per_round_avg 14.600"));
         assert!(dump.contains("specmer_accepted_len_avg 4.000"));
+    }
+
+    #[test]
+    fn overload_counters_and_queue_gauge() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_deadline_exceeded();
+        m.record_requeue();
+        m.queue_depth_add(3);
+        m.queue_depth_add(-2);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2);
+        // shed requests are answered with errors, so they count as failed
+        assert_eq!(m.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.deadline_exceeded.load(Ordering::Relaxed), 1);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_shed_total 2"));
+        assert!(dump.contains("specmer_deadline_exceeded_total 1"));
+        assert!(dump.contains("specmer_requeued_total 1"));
+        assert!(dump.contains("specmer_queue_depth 1"));
     }
 
     #[test]

@@ -1,10 +1,24 @@
 //! L3 coordinator: the serving system around the decode engines —
 //! per-worker engines, shape-keyed dynamic batching over per-sequence
 //! [`SeqSpec`] scoring plans, protein-affinity routing, metrics. See
-//! DESIGN.md §5 for the request path.
+//! DESIGN.md §5 for the request path and docs/serving.md for the
+//! overload semantics.
+//!
+//! The request path is hardened end to end: admission is bounded (each
+//! worker queue has a capacity, the router an in-flight concurrency
+//! limit) and refusals travel as a typed [`GenError::Overloaded`] rather
+//! than queueing without limit; every [`GenRequest`] may carry a
+//! deadline, enforced at submission, at batch pop, and at each lockstep
+//! round boundary (mid-group cancellation that leaves batchmates'
+//! streams bitwise untouched); a dying worker requeues its *queued*
+//! requests to surviving workers; and a seeded [`FaultPlan`] can inject
+//! engine-build failures, round errors, and round latency for
+//! deterministic chaos tests.
 
 pub mod batcher;
 pub mod engine;
+pub mod error;
+pub mod fault;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -14,7 +28,9 @@ pub use engine::{
     build_engine, build_engine_with, engine_for_bench, load_families, synthetic_engine,
     synthetic_families, Engine, Family, FamilyRegistry, GenEngine, RequestSource,
 };
+pub use error::GenError;
+pub use fault::{FaultPlan, FaultState};
 pub use metrics::Metrics;
 pub use request::{GenRequest, GenResponse, SeqSpec};
 pub use router::Router;
-pub use scheduler::{EngineFactory, Scheduler};
+pub use scheduler::{EngineFactory, Scheduler, SchedulerOpts};

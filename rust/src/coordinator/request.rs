@@ -95,6 +95,17 @@ pub struct GenRequest {
     /// Where to deliver the result.
     pub reply: Sender<GenResponse>,
     pub submitted: Instant,
+    /// Latest instant by which the request must complete. Checked at
+    /// submission, at batch pop, and at every lockstep round boundary;
+    /// past it the request is answered with `GenError::DeadlineExceeded`.
+    pub deadline: Option<Instant>,
+}
+
+impl GenRequest {
+    /// Whether the deadline (if any) has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// Result of one request.

@@ -11,6 +11,13 @@
 //! worker's in-flight group happily mixes whatever proteins land on it.
 //! When the affinity target is overloaded relative to the least-loaded
 //! worker, the router spills.
+//!
+//! Overload hardening: submission enforces a router-level **in-flight
+//! concurrency limit** (`max_inflight`; on top of the per-worker queue
+//! bounds) — requests past it are shed with a typed
+//! [`GenError::Overloaded`](crate::coordinator::GenError) reply — and an
+//! optional per-request **deadline**, refused right here when already
+//! expired. See docs/serving.md.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -18,6 +25,7 @@ use std::time::Instant;
 
 use crate::config::Method;
 use crate::coordinator::engine::FamilyRegistry;
+use crate::coordinator::error::GenError;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::scheduler::Scheduler;
 use crate::decode::GenConfig;
@@ -29,6 +37,9 @@ pub struct Router {
     next_id: AtomicU64,
     /// Spill when affinity worker has this many more queued than the min.
     pub spill_threshold: usize,
+    /// Concurrency limit: total outstanding (queued + in-flight) requests
+    /// across all workers; submissions past it are shed. 0 = unlimited.
+    pub max_inflight: usize,
 }
 
 fn fnv1a(s: &str) -> u64 {
@@ -42,7 +53,19 @@ fn fnv1a(s: &str) -> u64 {
 
 impl Router {
     pub fn new(scheduler: Arc<Scheduler>, registry: Arc<FamilyRegistry>) -> Router {
-        Router { scheduler, registry, next_id: AtomicU64::new(1), spill_threshold: 4 }
+        Router {
+            scheduler,
+            registry,
+            next_id: AtomicU64::new(1),
+            spill_threshold: 4,
+            max_inflight: 0,
+        }
+    }
+
+    /// Builder-style concurrency limit (0 = unlimited).
+    pub fn with_max_inflight(mut self, max_inflight: usize) -> Router {
+        self.max_inflight = max_inflight;
+        self
     }
 
     /// Pick a worker for `protein` (exposed for tests). Dead workers (a
@@ -83,14 +106,42 @@ impl Router {
         cfg: GenConfig,
         reply: std::sync::mpsc::Sender<GenResponse>,
     ) -> u64 {
+        self.submit_with_deadline(protein, method, cfg, None, reply)
+    }
+
+    /// [`Self::submit`] with a completion deadline. An already-expired
+    /// deadline is refused here (typed `DeadlineExceeded`, no worker
+    /// touched); the concurrency limit sheds here too. Later enforcement
+    /// (batch pop, round boundaries) happens inside the scheduler.
+    pub fn submit_with_deadline(
+        &self,
+        protein: &str,
+        method: Method,
+        cfg: GenConfig,
+        deadline: Option<Instant>,
+        reply: std::sync::mpsc::Sender<GenResponse>,
+    ) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         match self.registry.spec(protein, method, &cfg) {
             Ok(spec) => {
-                let w = self.place(protein);
-                self.scheduler.submit_to(
-                    w,
-                    GenRequest { id, spec, reply, submitted: Instant::now() },
-                );
+                let req = GenRequest { id, spec, reply, submitted: Instant::now(), deadline };
+                let metrics = &self.scheduler.metrics;
+                if req.expired(Instant::now()) {
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_deadline_exceeded();
+                    metrics.record_failure();
+                    Self::answer(req, GenError::DeadlineExceeded.into());
+                } else if self.max_inflight > 0
+                    && self.scheduler.loads().iter().sum::<usize>() >= self.max_inflight
+                {
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    self.scheduler.shed(req);
+                } else {
+                    let w = self.place(protein);
+                    // bounded admission: submit_to sheds internally at
+                    // queue capacity, so the client is answered either way
+                    self.scheduler.submit_to(w, req);
+                }
             }
             Err(e) => {
                 self.scheduler.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -106,6 +157,17 @@ impl Router {
             }
         }
         id
+    }
+
+    fn answer(req: GenRequest, err: anyhow::Error) {
+        let _ = req.reply.send(GenResponse {
+            id: req.id,
+            protein: req.spec.protein,
+            method: req.spec.method,
+            result: Err(err),
+            latency: 0.0,
+            decode_seconds: 0.0,
+        });
     }
 }
 
@@ -221,6 +283,58 @@ mod tests {
         }
     }
 
+    #[test]
+    fn concurrency_limit_sheds_at_submission() {
+        use crate::coordinator::scheduler::SchedulerOpts;
+        // huge max_wait keeps the accepted submissions queued (batch never
+        // fires), so the third deterministically sees the in-flight limit
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let opts = SchedulerOpts { max_wait: Duration::from_secs(3600), ..Default::default() };
+        let sched = Arc::new(Scheduler::start_with(1, opts, factory, Arc::new(Metrics::new())));
+        let r = Router::new(sched, Arc::new(FamilyRegistry::new(synthetic_families(3))))
+            .with_max_inflight(2);
+        let (tx, rx) = channel();
+        for seed in 0..3u64 {
+            r.submit(
+                "SynA",
+                Method::SpecMer,
+                GenConfig { max_len: 16, seed, ..Default::default() },
+                tx.clone(),
+            );
+        }
+        // the shed reply is synchronous; the two accepted are still queued
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = resp.result.unwrap_err();
+        assert!(
+            matches!(GenError::of(&err), Some(GenError::Overloaded { .. })),
+            "expected typed Overloaded, got {err:#}"
+        );
+        assert_eq!(r.scheduler.metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(r.scheduler.loads(), vec![2]);
+        drop(tx);
+        drop(r); // scheduler shutdown flush serves the two queued requests
+        assert_eq!(rx.iter().filter(|resp| resp.result.is_ok()).count(), 2);
+    }
+
+    #[test]
+    fn expired_deadline_refused_at_submission() {
+        let r = router(1);
+        let (tx, rx) = channel();
+        r.submit_with_deadline(
+            "SynA",
+            Method::SpecMer,
+            GenConfig { max_len: 16, ..Default::default() },
+            Some(Instant::now() - Duration::from_millis(5)),
+            tx,
+        );
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = resp.result.unwrap_err();
+        assert_eq!(GenError::of(&err), Some(GenError::DeadlineExceeded), "{err:#}");
+        assert_eq!(r.scheduler.loads(), vec![0], "nothing was enqueued");
+        assert_eq!(r.scheduler.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+    }
+
     /// Property: placement spills away from a hot worker.
     #[test]
     fn spills_when_overloaded() {
@@ -246,6 +360,7 @@ mod tests {
                     spec,
                     reply: tx.clone(),
                     submitted: Instant::now(),
+                    deadline: None,
                 },
             );
         }

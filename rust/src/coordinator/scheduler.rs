@@ -16,10 +16,24 @@
 //! foreign proteins. Baselines and probe items batch under the `None` key
 //! and go through the plain [`GenEngine::generate_batch`] dispatch.
 //! Queued and in-flight work are tracked separately (the router's
-//! least-loaded signal is their sum), a worker whose engine factory fails
-//! marks itself dead and answers its queue with errors instead of hanging
-//! clients, and workers with queued but not-yet-aged work sleep on the
-//! condvar until the oldest request's `max_wait` deadline.
+//! least-loaded signal is their sum), and workers with queued but
+//! not-yet-aged work sleep on the condvar until the oldest request's
+//! `max_wait` deadline.
+//!
+//! The path is hardened for overload (docs/serving.md): worker queues are
+//! **bounded** — [`Scheduler::submit_to`] sheds with a typed
+//! [`GenError::Overloaded`] reply at capacity instead of enqueueing
+//! without limit; request **deadlines** are enforced at batch pop and, via
+//! [`RequestSource::cancel`], at every lockstep round boundary (mid-group
+//! cancellation through the group's normal retirement path, so surviving
+//! batchmates stay bitwise identical to their solo runs); a worker whose
+//! engine factory fails marks itself dead and **requeues its queued
+//! requests to surviving workers** (error-answering only when none is
+//! live); [`Scheduler::begin_drain`] switches the fleet to graceful
+//! shutdown — in-flight groups finish (or hit their deadlines), queued and
+//! new requests are shed; and a seeded [`FaultPlan`] injects engine-build
+//! failures, round errors, and round latency for deterministic chaos
+//! tests.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -29,8 +43,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, DEFAULT_QUEUE_CAPACITY};
 use super::engine::{GenEngine, RequestSource};
+use super::error::GenError;
+use super::fault::{FaultPlan, FaultState};
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SeqSpec};
 use crate::config::Method;
@@ -39,6 +55,9 @@ use crate::decode::GenOutput;
 /// Send-able engine constructor run inside each worker thread.
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn GenEngine>> + Send + Sync>;
 
+/// `Retry-After` hint attached to shed responses.
+pub const SHED_RETRY_AFTER_MS: u64 = 250;
+
 struct WorkerShared {
     batcher: Mutex<Batcher>,
     cv: Condvar,
@@ -46,9 +65,12 @@ struct WorkerShared {
     queued: AtomicUsize,
     /// Requests popped from the queue but not yet answered.
     inflight: AtomicUsize,
-    /// Set when the worker's engine factory failed: the worker only drains
-    /// its queue with error responses, and the router stops selecting it.
+    /// Set when the worker's engine factory failed: the worker requeues its
+    /// queue to survivors, and the router stops selecting it.
     dead: AtomicBool,
+    /// Graceful-shutdown mode: new and queued requests are shed, in-flight
+    /// groups run to completion (or their deadlines).
+    draining: AtomicBool,
 }
 
 pub struct Worker {
@@ -56,8 +78,31 @@ pub struct Worker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Construction-time knobs beyond the worker count (all defaulted).
+#[derive(Clone, Copy)]
+pub struct SchedulerOpts {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Per-worker queue bound: submissions past it are shed.
+    pub queue_capacity: usize,
+    /// Deterministic fault injection (chaos tests / `SPECMER_FAULT_*`).
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> SchedulerOpts {
+        SchedulerOpts {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            fault: None,
+        }
+    }
+}
+
 pub struct Scheduler {
     workers: Vec<Worker>,
+    queue_capacity: usize,
     pub metrics: Arc<Metrics>,
 }
 
@@ -69,30 +114,62 @@ impl Scheduler {
         factory: EngineFactory,
         metrics: Arc<Metrics>,
     ) -> Scheduler {
-        let workers = (0..n_workers.max(1))
-            .map(|wid| {
-                let shared = Arc::new(WorkerShared {
-                    batcher: Mutex::new(Batcher::new(max_batch, max_wait)),
-                    cv: Condvar::new(),
-                    stop: AtomicBool::new(false),
-                    queued: AtomicUsize::new(0),
-                    inflight: AtomicUsize::new(0),
-                    dead: AtomicBool::new(false),
-                });
-                let s2 = Arc::clone(&shared);
+        let opts = SchedulerOpts {
+            max_batch,
+            max_wait,
+            fault: FaultPlan::from_env(),
+            ..Default::default()
+        };
+        Scheduler::start_with(n_workers, opts, factory, metrics)
+    }
+
+    pub fn start_with(
+        n_workers: usize,
+        opts: SchedulerOpts,
+        factory: EngineFactory,
+        metrics: Arc<Metrics>,
+    ) -> Scheduler {
+        let queue_capacity = opts.queue_capacity.max(1);
+        // every worker sees the whole fleet: a dying worker requeues its
+        // queued requests to survivors
+        let shareds: Arc<Vec<Arc<WorkerShared>>> = Arc::new(
+            (0..n_workers.max(1))
+                .map(|_| {
+                    Arc::new(WorkerShared {
+                        batcher: Mutex::new(Batcher::bounded(
+                            opts.max_batch,
+                            opts.max_wait,
+                            queue_capacity,
+                        )),
+                        cv: Condvar::new(),
+                        stop: AtomicBool::new(false),
+                        queued: AtomicUsize::new(0),
+                        inflight: AtomicUsize::new(0),
+                        dead: AtomicBool::new(false),
+                        draining: AtomicBool::new(false),
+                    })
+                })
+                .collect(),
+        );
+        let workers = shareds
+            .iter()
+            .enumerate()
+            .map(|(wid, shared)| {
+                let all = Arc::clone(&shareds);
                 let f = Arc::clone(&factory);
                 let m = Arc::clone(&metrics);
+                let fault = opts.fault.map(|p| p.state_for(wid));
                 let handle = std::thread::Builder::new()
                     .name(format!("specmer-worker-{wid}"))
-                    .spawn(move || worker_loop(s2, f, m))
+                    .spawn(move || worker_loop(wid, all, f, m, fault))
                     // PANIC-OK: worker-thread spawn happens once at scheduler
                     // construction, before any request is accepted; an OS
                     // refusing to create threads is a fatal startup error.
                     .expect("spawn worker");
-                Worker { shared, handle: Some(handle) }
+                Worker { shared: Arc::clone(shared), handle: Some(handle) }
             })
             .collect();
-        Scheduler { workers, metrics }
+        Scheduler { workers, queue_capacity, metrics }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -137,14 +214,98 @@ impl Scheduler {
             .collect()
     }
 
-    /// Submit a request to a specific worker.
-    pub fn submit_to(&self, worker: usize, req: GenRequest) {
+    /// The per-worker queue bound submissions are shed past.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// Submit a request to a specific worker. Bounded admission: when the
+    /// worker's queue is at capacity (or the scheduler is draining) the
+    /// request is **shed** — answered immediately with
+    /// [`GenError::Overloaded`] — and `false` is returned.
+    pub fn submit_to(&self, worker: usize, req: GenRequest) -> bool {
         let w = &self.workers[worker % self.workers.len()];
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        w.shared.queued.fetch_add(1, Ordering::Relaxed);
-        w.shared.batcher.lock().unwrap().push(req);
-        w.shared.cv.notify_one();
+        if w.shared.draining.load(Ordering::SeqCst) {
+            self.shed(req);
+            return false;
+        }
+        let pushed = {
+            let mut b = w.shared.batcher.lock().unwrap();
+            // count before the lock drops: the worker's pop-side decrement
+            // can't run while we hold the batcher, so the gauge never
+            // underflows
+            match b.try_push(req) {
+                Ok(()) => {
+                    w.shared.queued.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.queue_depth_add(1);
+                    Ok(())
+                }
+                Err(req) => Err(req),
+            }
+        };
+        match pushed {
+            Ok(()) => {
+                w.shared.cv.notify_one();
+                true
+            }
+            Err(req) => {
+                self.shed(req);
+                false
+            }
+        }
     }
+
+    /// Answer `req` with a typed overload refusal (counts toward
+    /// `shed_total`). Used by bounded admission here and by the router's
+    /// concurrency limit.
+    pub fn shed(&self, req: GenRequest) {
+        self.metrics.record_shed();
+        answer(req, GenError::Overloaded { retry_after_ms: SHED_RETRY_AFTER_MS }.into());
+    }
+
+    /// Switch to graceful shutdown: every worker sheds its *queued*
+    /// requests (typed Overloaded replies) and refuses new ones, while
+    /// in-flight groups run to completion or their deadlines. Idempotent.
+    pub fn begin_drain(&self) {
+        for w in &self.workers {
+            w.shared.draining.store(true, Ordering::SeqCst);
+            w.shared.cv.notify_all();
+        }
+    }
+
+    /// Whether the scheduler is draining (graceful shutdown in progress).
+    pub fn draining(&self) -> bool {
+        self.workers.first().is_some_and(|w| w.shared.draining.load(Ordering::SeqCst))
+    }
+
+    /// Block until no queued or in-flight work remains, up to `timeout`.
+    /// Returns whether the fleet went idle.
+    pub fn await_idle(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        loop {
+            if self.loads().iter().sum::<usize>() == 0 {
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Answer one request with an error reply (shed, deadline, dead worker).
+fn answer(req: GenRequest, err: anyhow::Error) {
+    let latency = req.submitted.elapsed().as_secs_f64();
+    let _ = req.reply.send(GenResponse {
+        id: req.id,
+        protein: req.spec.protein,
+        method: req.spec.method,
+        result: Err(err),
+        latency,
+        decode_seconds: 0.0,
+    });
 }
 
 impl Drop for Scheduler {
@@ -161,14 +322,23 @@ impl Drop for Scheduler {
     }
 }
 
-fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<Metrics>) {
-    let engine = match factory() {
+fn worker_loop(
+    wid: usize,
+    shareds: Arc<Vec<Arc<WorkerShared>>>,
+    factory: EngineFactory,
+    metrics: Arc<Metrics>,
+    mut fault: Option<FaultState>,
+) {
+    let shared = Arc::clone(&shareds[wid]);
+    let injected_fail = fault.as_mut().map_or(false, |f| f.engine_build_fails());
+    let built = if injected_fail { Err(anyhow!("injected engine-build fault")) } else { factory() };
+    let engine = match built {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("[specmer] worker failed to build engine: {e:#}");
+            eprintln!("[specmer] worker {wid} failed to build engine: {e:#}");
             metrics.record_engine_failure();
             shared.dead.store(true, Ordering::SeqCst);
-            drain_dead(&shared, &metrics, &format!("{e:#}"));
+            drain_dead(wid, &shareds, &metrics, &format!("{e:#}"));
             return;
         }
     };
@@ -179,6 +349,22 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
         let batch = {
             let mut b = shared.batcher.lock().unwrap();
             loop {
+                if shared.draining.load(Ordering::SeqCst) && !b.is_empty() {
+                    // graceful shutdown: queued (never-started) requests are
+                    // shed, not decoded — only in-flight groups finish
+                    while let Some(batch) = b.next_batch(Instant::now(), true) {
+                        shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+                        metrics.queue_depth_add(-(batch.len() as i64));
+                        for req in batch {
+                            metrics.record_shed();
+                            answer(
+                                req,
+                                GenError::Overloaded { retry_after_ms: SHED_RETRY_AFTER_MS }
+                                    .into(),
+                            );
+                        }
+                    }
+                }
                 if shared.stop.load(Ordering::SeqCst) && b.is_empty() {
                     return;
                 }
@@ -198,37 +384,98 @@ fn worker_loop(shared: Arc<WorkerShared>, factory: EngineFactory, metrics: Arc<M
             }
         };
         shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+        metrics.queue_depth_add(-(batch.len() as i64));
         shared.inflight.fetch_add(batch.len(), Ordering::Relaxed);
-        dispatch(&shared, engine.as_ref(), &metrics, batch, max_batch);
+        // deadline check at batch pop: a request that expired while queued
+        // never reaches the engine
+        let now = Instant::now();
+        let (live, expired): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|r| !r.expired(now));
+        for req in expired {
+            metrics.record_deadline_exceeded();
+            metrics.record_failure();
+            answer(req, GenError::DeadlineExceeded.into());
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+        if live.is_empty() {
+            continue;
+        }
+        dispatch(&shared, engine.as_ref(), &metrics, live, max_batch, &mut fault);
     }
 }
 
-/// A worker whose engine never came up must still answer its queue: every
-/// queued (and future) request gets an error response instead of a client
-/// hanging on a reply channel whose sender is never dropped. Runs until
-/// shutdown.
-fn drain_dead(shared: &WorkerShared, metrics: &Metrics, err: &str) {
+/// A worker whose engine never came up must still empty its queue: queued
+/// (never-started) requests are **requeued to surviving workers** — the
+/// client keeps its place in line instead of eating an error for a failure
+/// that never touched its request — and error-answered only when no
+/// survivor can take them. Runs until shutdown.
+fn drain_dead(wid: usize, shareds: &[Arc<WorkerShared>], metrics: &Metrics, err: &str) {
+    let shared = &shareds[wid];
     let mut b = shared.batcher.lock().unwrap();
     loop {
         while let Some(batch) = b.next_batch(Instant::now(), true) {
             shared.queued.fetch_sub(batch.len(), Ordering::Relaxed);
+            metrics.queue_depth_add(-(batch.len() as i64));
             for req in batch {
-                metrics.record_failure();
-                let latency = req.submitted.elapsed().as_secs_f64();
-                let _ = req.reply.send(GenResponse {
-                    id: req.id,
-                    protein: req.spec.protein,
-                    method: req.spec.method,
-                    result: Err(anyhow!("worker engine unavailable: {err}")),
-                    latency,
-                    decode_seconds: 0.0,
-                });
+                if req.expired(Instant::now()) {
+                    metrics.record_deadline_exceeded();
+                    metrics.record_failure();
+                    answer(req, GenError::DeadlineExceeded.into());
+                } else if shared.draining.load(Ordering::SeqCst) {
+                    metrics.record_shed();
+                    answer(
+                        req,
+                        GenError::Overloaded { retry_after_ms: SHED_RETRY_AFTER_MS }.into(),
+                    );
+                } else if let Err(req) = requeue(wid, shareds, metrics, req) {
+                    metrics.record_failure();
+                    answer(req, anyhow!("worker engine unavailable: {err}"));
+                }
             }
         }
         if shared.stop.load(Ordering::SeqCst) {
             return;
         }
         b = shared.cv.wait(b).unwrap();
+    }
+}
+
+/// Move one queued request from dead worker `wid` to the least-loaded
+/// surviving worker with queue headroom; hands it back if none exists.
+fn requeue(
+    wid: usize,
+    shareds: &[Arc<WorkerShared>],
+    metrics: &Metrics,
+    req: GenRequest,
+) -> Result<(), GenRequest> {
+    let target = shareds
+        .iter()
+        .enumerate()
+        .filter(|(i, s)| {
+            *i != wid && !s.dead.load(Ordering::SeqCst) && !s.draining.load(Ordering::SeqCst)
+        })
+        .min_by_key(|(_, s)| s.queued.load(Ordering::Relaxed) + s.inflight.load(Ordering::Relaxed));
+    let Some((_, target)) = target else {
+        return Err(req);
+    };
+    let pushed = {
+        let mut b = target.batcher.lock().unwrap();
+        match b.try_push(req) {
+            Ok(()) => {
+                target.queued.fetch_add(1, Ordering::Relaxed);
+                metrics.queue_depth_add(1);
+                Ok(())
+            }
+            Err(req) => Err(req),
+        }
+    };
+    match pushed {
+        Ok(()) => {
+            metrics.record_requeue();
+            target.cv.notify_one();
+            Ok(())
+        }
+        Err(req) => Err(req),
     }
 }
 
@@ -245,6 +492,7 @@ fn dispatch(
     metrics: &Metrics,
     batch: Vec<GenRequest>,
     max_batch: usize,
+    fault: &mut Option<FaultState>,
 ) {
     let now = Instant::now();
     let queue_wait: f64 = batch
@@ -266,6 +514,7 @@ fn dispatch(
             round_active: 0,
             anchor: None,
             distinct_proteins: Vec::new(),
+            fault: fault.as_mut(),
         };
         engine.generate_continuous(&shape, &mut source);
         // defensive: an engine that abandons the group must not hang clients
@@ -336,6 +585,8 @@ struct WorkerSource<'a> {
     anchor: Option<(Arc<str>, Method)>,
     /// Every distinct protein that rode this group (gauge numerator).
     distinct_proteins: Vec<Arc<str>>,
+    /// Injected faults, consulted at round boundaries (chaos tests).
+    fault: Option<&'a mut FaultState>,
 }
 
 impl WorkerSource<'_> {
@@ -376,6 +627,8 @@ impl WorkerSource<'_> {
             }
         }
         if !self.distinct_proteins.iter().any(|p| **p == *req.spec.protein) {
+            // lint:allow(unbounded): bounded by the distinct proteins in one
+            // lockstep group, which holds at most max_batch members
             self.distinct_proteins.push(Arc::clone(&req.spec.protein));
         }
     }
@@ -410,7 +663,12 @@ impl RequestSource for WorkerSource<'_> {
         // initial members first, then splice in whatever shape-compatible
         // work arrived while the group was decoding
         let mut reqs = std::mem::take(&mut self.initial);
-        let free = self.max_batch.saturating_sub(active + reqs.len());
+        // draining: the resident group finishes, but nothing new joins it
+        let free = if self.shared.draining.load(Ordering::SeqCst) {
+            0
+        } else {
+            self.max_batch.saturating_sub(active + reqs.len())
+        };
         if free > 0 {
             let prefer = self.majority_protein();
             let taken = {
@@ -419,6 +677,7 @@ impl RequestSource for WorkerSource<'_> {
             };
             if !taken.is_empty() {
                 self.shared.queued.fetch_sub(taken.len(), Ordering::Relaxed);
+                self.metrics.queue_depth_add(-(taken.len() as i64));
                 self.shared.inflight.fetch_add(taken.len(), Ordering::Relaxed);
                 let now = Instant::now();
                 for r in &taken {
@@ -467,6 +726,36 @@ impl RequestSource for WorkerSource<'_> {
         });
         self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
     }
+
+    fn cancel(&mut self, resident: &[u64]) -> Vec<(u64, anyhow::Error)> {
+        // injected faults first: a round error models a failed verify
+        // dispatch poisoning the whole group
+        if let Some(fault) = self.fault.as_deref_mut() {
+            if let Some(delay) = fault.round_delay() {
+                std::thread::sleep(delay);
+            }
+            if fault.round_error_fires() {
+                return resident
+                    .iter()
+                    .map(|&t| (t, anyhow!("injected fault: verify round error")))
+                    .collect();
+            }
+        }
+        // deadline enforcement at the round boundary: wall-clock policy
+        // stays here in the coordinator; the lockstep driver just retires
+        // the tickets we hand back (batchmates' streams are untouched)
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for &t in resident {
+            if let Some((req, _)) = self.inflight.get(&t) {
+                if req.expired(now) {
+                    self.metrics.record_deadline_exceeded();
+                    out.push((t, GenError::DeadlineExceeded.into()));
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -494,6 +783,7 @@ mod tests {
             spec: reg.spec(protein, method, &cfg).unwrap(),
             reply,
             submitted: Instant::now(),
+            deadline: None,
         }
     }
 
@@ -712,6 +1002,205 @@ mod tests {
         drop(tx);
         drop(s); // shutdown flush answers both
         assert_eq!(rx.iter().count(), 2);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_overload() {
+        use crate::coordinator::error::GenError;
+        // a worker that can never pop (huge max_wait, tiny queue): the
+        // third submission must be shed, typed, instead of growing the queue
+        let reg = registry();
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let metrics = Arc::new(Metrics::new());
+        let opts = SchedulerOpts {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            queue_capacity: 2,
+            fault: None,
+        };
+        let s = Scheduler::start_with(1, opts, factory, Arc::clone(&metrics));
+        let (tx, rx) = channel();
+        let cfg = GenConfig { max_len: 16, ..Default::default() };
+        let mut accepted = 0;
+        for id in 0..3u64 {
+            if s.submit_to(0, request(&reg, id, "SynA", Method::SpecMer, cfg.clone(), tx.clone()))
+            {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 2);
+        assert_eq!(s.queue_depths(), vec![2]);
+        // the shed reply arrives immediately, while the worker still sleeps
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = r.result.unwrap_err();
+        assert!(
+            matches!(GenError::of(&err), Some(GenError::Overloaded { .. })),
+            "expected typed Overloaded, got {err:#}"
+        );
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 3);
+        drop(tx);
+        drop(s);
+        // the two queued requests are still answered at shutdown
+        assert_eq!(rx.iter().count(), 2);
+    }
+
+    #[test]
+    fn expired_deadline_is_refused_at_pop() {
+        use crate::coordinator::error::GenError;
+        let reg = registry();
+        let s = sched(1);
+        let (tx, rx) = channel();
+        let mut req = request(
+            &reg,
+            7,
+            "SynA",
+            Method::SpecMer,
+            GenConfig { max_len: 20, ..Default::default() },
+            tx,
+        );
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        assert!(s.submit_to(0, req), "an expired request still enqueues; the pop refuses it");
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let err = r.result.unwrap_err();
+        assert_eq!(GenError::of(&err), Some(GenError::DeadlineExceeded), "{err:#}");
+        assert_eq!(s.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.completed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn graceful_drain_sheds_queued_and_answers_everything() {
+        use crate::coordinator::error::GenError;
+        // huge max_wait: submissions stay queued until drain sheds them
+        let reg = registry();
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let opts = SchedulerOpts {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            queue_capacity: 8,
+            fault: None,
+        };
+        let s = Scheduler::start_with(1, opts, factory, Arc::new(Metrics::new()));
+        let (tx, rx) = channel();
+        let cfg = GenConfig { max_len: 16, ..Default::default() };
+        for id in 0..3u64 {
+            assert!(s.submit_to(
+                0,
+                request(&reg, id, "SynA", Method::SpecMer, cfg.clone(), tx.clone())
+            ));
+        }
+        s.begin_drain();
+        assert!(s.await_idle(Duration::from_secs(30)), "drain must reach idle");
+        // new submissions are refused while draining
+        assert!(!s.submit_to(0, request(&reg, 9, "SynA", Method::SpecMer, cfg, tx.clone())));
+        drop(tx);
+        let replies: Vec<GenResponse> = rx.iter().collect();
+        assert_eq!(replies.len(), 4, "every request must be answered");
+        for r in &replies {
+            let err = r.result.as_ref().unwrap_err();
+            assert!(
+                matches!(GenError::of(err), Some(GenError::Overloaded { .. })),
+                "drain must shed with typed Overloaded, got {err:#}"
+            );
+        }
+        assert_eq!(s.metrics.shed.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn dead_worker_requeues_queued_requests_to_survivor() {
+        use std::sync::atomic::AtomicUsize;
+        // one worker's engine build fails (first factory call — thread
+        // scheduling decides which worker that is), the other's succeeds:
+        // requests submitted to the dead worker must be requeued and then
+        // *served* by the survivor instead of error-drained
+        let builds = Arc::new(AtomicUsize::new(0));
+        let b2 = Arc::clone(&builds);
+        let factory: EngineFactory = Arc::new(move || {
+            if b2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(anyhow!("no artifacts"))
+            } else {
+                Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>)
+            }
+        });
+        let reg = registry();
+        let metrics = Arc::new(Metrics::new());
+        let s = Scheduler::start(2, 4, Duration::from_millis(1), factory, Arc::clone(&metrics));
+        // wait until exactly one worker is marked dead
+        let t0 = Instant::now();
+        let dead = loop {
+            let alive = s.alive();
+            if let Some(i) = alive.iter().position(|a| !a) {
+                break i;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "no worker died");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        let (tx, rx) = channel();
+        for id in 0..3u64 {
+            assert!(s.submit_to(
+                dead,
+                request(
+                    &reg,
+                    id,
+                    "SynA",
+                    Method::SpecMer,
+                    GenConfig { max_len: 16, seed: id, ..Default::default() },
+                    tx.clone(),
+                )
+            ));
+        }
+        for _ in 0..3 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(r.result.is_ok(), "requeued request must be served by the survivor");
+        }
+        assert_eq!(metrics.requeued.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn injected_round_faults_fail_group_then_recover() {
+        // seeded chaos: every round boundary fires an injected error, so
+        // lockstep requests fail with the injected message — but the worker
+        // stays alive and keeps answering (no hangs, no dead worker)
+        let reg = registry();
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        let metrics = Arc::new(Metrics::new());
+        let opts = SchedulerOpts {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 8,
+            fault: Some(FaultPlan {
+                seed: 11,
+                engine_build_fail: 0.0,
+                round_error: 1.0,
+                round_delay_ms: 0,
+            }),
+        };
+        let s = Scheduler::start_with(1, opts, factory, Arc::clone(&metrics));
+        let (tx, rx) = channel();
+        for id in 0..3u64 {
+            assert!(s.submit_to(
+                0,
+                request(
+                    &reg,
+                    id,
+                    "SynA",
+                    Method::SpecMer,
+                    GenConfig { max_len: 24, seed: id, ..Default::default() },
+                    tx.clone(),
+                )
+            ));
+        }
+        for _ in 0..3 {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let err = r.result.unwrap_err();
+            assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        }
+        assert_eq!(s.alive(), vec![true], "round faults must not kill the worker");
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 3);
     }
 
     #[test]

@@ -302,6 +302,16 @@ pub trait AdmissionHook {
     fn admit(&mut self, active: usize) -> Vec<AdmitItem>;
     /// Delivers one sequence's final result (exactly once per ticket).
     fn complete(&mut self, ticket: u64, result: Result<GenOutput>);
+    /// Called at each round boundary with the resident tickets; returns the
+    /// sequences to cancel mid-group and the error to answer each with
+    /// (deadline enforcement lives behind this: wall-clock policy stays in
+    /// the coordinator, the lockstep driver only retires what it is told).
+    /// Cancelled tickets are delivered through [`Self::complete`] like any
+    /// other retirement. Defaults to cancelling nothing.
+    fn cancel(&mut self, resident: &[u64]) -> Vec<(u64, anyhow::Error)> {
+        let _ = resident;
+        Vec::new()
+    }
 }
 
 /// Generate sequences with continuous batching: an in-flight lockstep
@@ -327,6 +337,15 @@ pub fn speculative_generate_continuous<D: ModelBackend, T: ModelBackend>(
         let none_admitted = items.is_empty();
         for item in items {
             group.admit(item);
+        }
+        // Round-boundary cancellation (e.g. expired deadlines). Retiring a
+        // sequence here is indistinguishable from it finishing this round:
+        // per-sequence RNG/caches and row-independent dispatches mean the
+        // survivors' token streams are untouched.
+        if group.active() > 0 {
+            for (ticket, err) in hook.cancel(&group.tickets()) {
+                group.cancel(ticket, err);
+            }
         }
         for (ticket, result) in group.drain_completed() {
             hook.complete(ticket, result);
@@ -485,6 +504,21 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
 
     fn drain_completed(&mut self) -> Vec<(u64, Result<GenOutput>)> {
         std::mem::take(&mut self.completed)
+    }
+
+    /// Tickets of the resident (still-decoding) sequences, slot order.
+    fn tickets(&self) -> Vec<u64> {
+        self.seqs.iter().map(|s| s.ticket).collect()
+    }
+
+    /// Retire one resident sequence mid-group with an error, through the
+    /// same completion queue as natural (EOS / length) retirement. Unknown
+    /// tickets are ignored — the sequence may have finished this round.
+    fn cancel(&mut self, ticket: u64, err: anyhow::Error) {
+        if let Some(i) = self.seqs.iter().position(|s| s.ticket == ticket) {
+            let seq = self.seqs.remove(i);
+            self.completed.push((seq.ticket, Err(err)));
+        }
     }
 
     /// Check the group's slot-liveness, ticket-uniqueness, feed-accounting

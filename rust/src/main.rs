@@ -23,6 +23,7 @@ const USAGE: &str = "usage: specmer <generate|serve|score|exp|families|info> [fl
   generate --protein GFP [--method specmer] [--n 5] [--c 3] [--gamma 5]
            [--temp 1.0] [--top-p 0.95] [--k 1,3] [--seed 0] [--out file.fa]
   serve    [--port 7878] [--workers 1] [--max-batch 8] [--max-wait-ms 5]
+           [--queue-cap 256] [--max-inflight 0] [--timeout-ms 0]
   score    --fasta file.fa
   exp      <table1..table10|fig1c|fig2a|fig2b|fig3|figs_sweep|bounds|msadepth|all>
            [--n 20] [--full] [--proteins GFP,GB1] [--results DIR]
@@ -117,14 +118,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let reg2 = Arc::clone(&registry);
     let factory: specmer::coordinator::EngineFactory =
         Arc::new(move || specmer::coordinator::build_engine_with(&cfg2, reg2.families().to_vec()));
-    let sched = Arc::new(Scheduler::start(
-        cfg.workers,
-        cfg.max_batch,
-        std::time::Duration::from_millis(cfg.max_wait_ms),
-        factory,
-        Arc::clone(&metrics),
-    ));
-    let router = Arc::new(Router::new(sched, registry));
+    let opts = specmer::coordinator::SchedulerOpts {
+        max_batch: cfg.max_batch,
+        max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
+        queue_capacity: cfg.queue_cap,
+        fault: specmer::coordinator::FaultPlan::from_env(),
+    };
+    let sched = Arc::new(Scheduler::start_with(cfg.workers, opts, factory, Arc::clone(&metrics)));
+    let router = Arc::new(Router::new(sched, registry).with_max_inflight(cfg.max_inflight));
     let handle = specmer::server::serve(cfg, router, metrics)?;
     println!(
         "specmer serving on http://{} ({} workers, artifacts={})",
@@ -132,7 +133,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         cfg.workers,
         cfg.artifacts.display()
     );
-    println!("endpoints: POST /generate, GET /metrics, GET /health — ctrl-c to stop");
+    println!(
+        "endpoints: POST /generate, GET /metrics, GET /health, GET /ready — ctrl-c to stop"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -1,68 +1,87 @@
-//! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`.
+//! Hand-rolled HTTP/1.1 endpoint over `std::net::TcpListener`, hardened
+//! for overload (docs/serving.md).
 //!
-//! Request path (DESIGN.md §5, extended by the continuously-batched,
-//! shape-keyed serving path): a client `POST /generate` with `n` sequences
-//! fans out into `n` single-sequence requests through the [`Router`],
-//! which resolves each into a per-sequence `SeqSpec` **once at
-//! submission** — family registry lookup, shared `Arc` k-mer table
-//! handle, normalized config; unknown proteins are answered immediately —
-//! and places it on a *live* worker by protein affinity (spilling to the
-//! least-loaded worker — judged on queued *plus* in-flight work — under
-//! imbalance; workers whose engine failed to build answer with errors and
-//! are skipped). Each worker's `Batcher` groups queued requests purely by
-//! **lockstep dispatch shape** `(c, gamma)` — *not* by
-//! `(protein, method)` — and shape batches run as an in-flight lockstep
-//! group with **continuous batching**: at every draft/verify round
-//! boundary the worker re-polls its queue and admits newly-arrived
-//! shape-compatible requests into the group, whatever their protein
-//! family or speculative method (each sequence scores candidates against
-//! its own table riding on its spec; admission soft-prefers the group's
-//! majority protein without starving others), while finished sequences
-//! are answered the moment they complete. Baselines and probe items stay
-//! on their separate non-drafting serial path. Each round issues one
-//! batched draft dispatch of `[B·c, D]` rows and one ragged verify over
-//! all active sequences; per-sequence RNG state keeps every response
-//! bitwise-identical to an unbatched run with the same seed, admissions
-//! included. Responses are collected per request and folded into one JSON
-//! reply; `GET /metrics` exposes batch occupancy, admission counts
-//! (including `cross_key_admitted_total` and the distinct-proteins-per-
-//! group gauge), the time-weighted occupancy gauge, queue-wait and decode
-//! seconds alongside the acceptance/throughput counters.
+//! Request path (DESIGN.md §5): a client `POST /generate` with `n`
+//! sequences fans out into `n` single-sequence requests through the
+//! [`Router`], which resolves each into a per-sequence `SeqSpec` once at
+//! submission and places it on a live worker by protein affinity with
+//! least-loaded spill. Workers batch by lockstep dispatch shape and run
+//! shape groups with continuous batching; per-sequence RNG state keeps
+//! every response bitwise-identical to an unbatched run with the same
+//! seed. Responses are collected per request and folded into one JSON
+//! reply; `GET /metrics` exposes the full counter/gauge dump.
+//!
+//! Overload semantics — every admission decision surfaces as a *typed*
+//! reply, never a hang or an unbounded queue:
+//!
+//!   * **bounded admission** — worker queues are capacity-bounded and the
+//!     router enforces an optional in-flight limit; shed requests answer
+//!     `429 Too Many Requests` with a `Retry-After` header.
+//!   * **deadlines** — a per-request `timeout_ms` (body field, defaulting
+//!     to `--timeout-ms`) becomes a deadline enforced at submission, at
+//!     batch pop, and at every lockstep round boundary; expired requests
+//!     answer `504 Gateway Timeout`.
+//!   * **bounded I/O** — read *and* write timeouts on every connection,
+//!     and bodies above [`MAX_BODY_BYTES`] answer `413 Content Too Large`
+//!     without being read.
+//!   * **liveness** — `GET /health` reports `ok`/`degraded` (degraded =
+//!     every worker dead, or every queue at capacity); `GET /ready`
+//!     answers `503` while degraded so load balancers stop routing here.
+//!   * **graceful shutdown** — [`ServerHandle::stop`] stops accepting,
+//!     drains in-flight groups to completion (or their deadlines), and
+//!     sheds queued requests with `429`s instead of dropping them.
 //!
 //! The protocol subset is deliberately small: one request per connection
 //! (`Connection: close`), Content-Length bodies only — enough for any HTTP
-//! client and for the screening example's load generator.
+//! client and for `bench_serve`'s open-loop load generator.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Config, Method};
-use crate::coordinator::{Metrics, Router};
+use crate::coordinator::{GenError, Metrics, Router};
 use crate::decode::GenConfig;
 use crate::kmer::KmerSet;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
+/// Bodies above this answer `413` without being read into memory.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Per-connection socket read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long [`ServerHandle::stop`] waits for in-flight groups to finish.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    router: Arc<Router>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// Graceful shutdown: stop accepting, shed everything still queued
+    /// (typed `429` replies), let in-flight groups run to completion or
+    /// their deadlines, then join the acceptor. Every request that was
+    /// ever admitted gets an answer.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the acceptor loose
+        self.router.scheduler.begin_drain();
+        // poke the acceptor loose; its pool joins in-flight connections,
+        // which unblock as the drain answers their requests
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+        self.router.scheduler.await_idle(DRAIN_TIMEOUT);
     }
 }
 
@@ -84,6 +103,8 @@ pub fn serve(cfg: &Config, router: Arc<Router>, metrics: Arc<Metrics>) -> Result
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
     let defaults = cfg.gen.clone();
+    let default_timeout_ms = cfg.timeout_ms;
+    let router2 = Arc::clone(&router);
     let thread = std::thread::Builder::new()
         .name("specmer-http".into())
         .spawn(move || {
@@ -93,15 +114,37 @@ pub fn serve(cfg: &Config, router: Arc<Router>, metrics: Arc<Metrics>) -> Result
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                let router = Arc::clone(&router);
+                let router = Arc::clone(&router2);
                 let metrics = Arc::clone(&metrics);
                 let defaults = defaults.clone();
                 pool.execute(move || {
-                    let _ = handle_conn(stream, &router, &metrics, &defaults);
+                    let _ = handle_conn(stream, &router, &metrics, &defaults, default_timeout_ms);
                 });
             }
         })?;
-    Ok(ServerHandle { addr, stop, thread: Some(thread) })
+    Ok(ServerHandle { addr, stop, router, thread: Some(thread) })
+}
+
+/// Degraded = the fleet can make no progress on a new request: every
+/// worker is dead, or every bounded queue is at capacity.
+fn degraded(router: &Router) -> bool {
+    let sched = &router.scheduler;
+    let all_dead = sched.alive().iter().all(|a| !a);
+    let cap = sched.queue_capacity();
+    let all_full = sched.queue_depths().iter().all(|&d| d >= cap);
+    all_dead || all_full
+}
+
+fn health_json(router: &Router) -> Json {
+    let sched = &router.scheduler;
+    let alive = sched.alive().iter().filter(|a| **a).count();
+    Json::obj(vec![
+        ("status", Json::str(if degraded(router) { "degraded" } else { "ok" })),
+        ("workers", Json::num(sched.n_workers() as f64)),
+        ("workers_alive", Json::num(alive as f64)),
+        ("queued", Json::num(sched.queue_depths().iter().sum::<usize>() as f64)),
+        ("draining", Json::Bool(sched.draining())),
+    ])
 }
 
 fn handle_conn(
@@ -109,8 +152,10 @@ fn handle_conn(
     router: &Router,
     metrics: &Metrics,
     defaults: &GenConfig,
+    default_timeout_ms: u64,
 ) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -130,29 +175,66 @@ fn handle_conn(
             content_len = v.trim().parse().unwrap_or(0);
         }
     }
+    // body cap before allocation: an oversized declared length is refused
+    // without reading a byte of it
+    if content_len > MAX_BODY_BYTES {
+        let response =
+            Json::obj(vec![("error", Json::str("body too large"))]).to_string();
+        return write_response(&mut stream, "413 Content Too Large", None, &path, &response);
+    }
     let mut body = vec![0u8; content_len];
     if content_len > 0 {
         reader.read_exact(&mut body)?;
     }
     let body = String::from_utf8_lossy(&body).to_string();
 
-    let (status, response) = match (method.as_str(), path.as_str()) {
-        ("GET", "/health") => ("200 OK", Json::obj(vec![("status", Json::str("ok"))]).to_string()),
-        ("GET", "/metrics") => ("200 OK", metrics.text_dump()),
-        ("POST", "/generate") => match handle_generate(&body, router, defaults) {
-            Ok(j) => ("200 OK", j.to_string()),
-            Err(e) => (
-                "400 Bad Request",
-                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
-            ),
-        },
-        _ => ("404 Not Found", Json::obj(vec![("error", Json::str("not found"))]).to_string()),
+    let (status, retry_after_ms, response) = match (method.as_str(), path.as_str()) {
+        ("GET", "/health") => ("200 OK", None, health_json(router).to_string()),
+        ("GET", "/ready") => {
+            let status = if degraded(router) { "503 Service Unavailable" } else { "200 OK" };
+            (status, None, health_json(router).to_string())
+        }
+        ("GET", "/metrics") => ("200 OK", None, metrics.text_dump()),
+        ("POST", "/generate") => {
+            match handle_generate(&body, router, defaults, default_timeout_ms) {
+                Ok(j) => ("200 OK", None, j.to_string()),
+                Err(e) => {
+                    let (status, retry) = match GenError::of(&e) {
+                        Some(GenError::Overloaded { retry_after_ms }) => {
+                            ("429 Too Many Requests", Some(retry_after_ms))
+                        }
+                        Some(GenError::DeadlineExceeded) => ("504 Gateway Timeout", None),
+                        None => ("400 Bad Request", None),
+                    };
+                    let j = Json::obj(vec![("error", Json::str(&format!("{e:#}")))]);
+                    (status, retry, j.to_string())
+                }
+            }
+        }
+        _ => {
+            let j = Json::obj(vec![("error", Json::str("not found"))]);
+            ("404 Not Found", None, j.to_string())
+        }
     };
+    write_response(&mut stream, status, retry_after_ms, &path, &response)
+}
 
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    retry_after_ms: Option<u64>,
+    path: &str,
+    response: &str,
+) -> Result<()> {
     let content_type = if path == "/metrics" { "text/plain" } else { "application/json" };
+    // Retry-After is whole seconds, rounded up so clients never retry early
+    let extra = match retry_after_ms {
+        Some(ms) => format!("Retry-After: {}\r\n", ((ms + 999) / 1000).max(1)),
+        None => String::new(),
+    };
     write!(
         stream,
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{response}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n{response}",
         response.len()
     )?;
     Ok(())
@@ -160,8 +242,11 @@ fn handle_conn(
 
 /// POST /generate body:
 /// {"protein":"GFP","method":"specmer","n":2,"c":3,"gamma":5,
-///  "temp":1.0,"top_p":0.95,"k":"1,3","seed":0,
+///  "temp":1.0,"top_p":0.95,"k":"1,3","seed":0,"timeout_ms":2000,
 ///  "tree_branch":2,"tree_splits":"3"}
+///
+/// `timeout_ms` (default `--timeout-ms`, 0 = none) sets a completion
+/// deadline on every fanned-out request; an expired request answers `504`.
 ///
 /// `tree_branch`/`tree_splits` opt a request into tree-shaped speculation
 /// (see `decode::TreePolicy`): `tree_splits` is a comma-separated list of
@@ -169,7 +254,12 @@ fn handle_conn(
 /// are given) is the children spawned per frontier node at each split.
 /// Omitting `tree_splits` keeps the flat-chain path; requests sharing a
 /// `(c, gamma, tree)` shape ride one lockstep group.
-fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<Json> {
+fn handle_generate(
+    body: &str,
+    router: &Router,
+    defaults: &GenConfig,
+    default_timeout_ms: u64,
+) -> Result<Json> {
     let req = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
     let protein = req
         .get("protein")
@@ -179,6 +269,12 @@ fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<
     let method = Method::parse(req.get("method").and_then(|m| m.as_str()).unwrap_or("specmer"))
         .ok_or_else(|| anyhow!("bad 'method'"))?;
     let n = req.get("n").and_then(|v| v.as_usize()).unwrap_or(1).clamp(1, 512);
+    let timeout_ms = req
+        .get("timeout_ms")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as u64)
+        .unwrap_or(default_timeout_ms);
+    let deadline = (timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(timeout_ms));
 
     let mut cfg = defaults.clone();
     if let Some(v) = req.get("c").and_then(|v| v.as_usize()) {
@@ -217,11 +313,12 @@ fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<
         cfg.tree.branch = u8::try_from(v).map_err(|_| anyhow!("bad 'tree_branch'"))?;
     }
 
+    // lint:allow(unbounded): fan-out reply channel holds at most n <= 512
     let (tx, rx) = channel();
     for i in 0..n {
         let mut c = cfg.clone();
         c.seed = cfg.seed.wrapping_add(i as u64);
-        router.submit(&protein, method, c, tx.clone());
+        router.submit_with_deadline(&protein, method, c, deadline, tx.clone());
     }
     drop(tx);
 
@@ -239,7 +336,9 @@ fn handle_generate(body: &str, router: &Router, defaults: &GenConfig) -> Result<
                 decode_s += resp.decode_seconds;
                 latencies.push(resp.latency);
             }
-            Err(e) => return Err(anyhow!("generation failed: {e:#}")),
+            // context (not anyhow!) so the typed GenError payload survives
+            // and the status mapping above can see it
+            Err(e) => return Err(e.context("generation failed")),
         }
     }
     Ok(Json::obj(vec![
@@ -262,23 +361,21 @@ mod tests {
     use crate::coordinator::engine::{
         synthetic_engine, synthetic_families, FamilyRegistry, GenEngine,
     };
+    use crate::coordinator::scheduler::{EngineFactory, SchedulerOpts};
     use crate::coordinator::Scheduler;
-    use crate::coordinator::scheduler::EngineFactory;
 
     fn start() -> (ServerHandle, Arc<Metrics>) {
+        start_cfg(Config { port: 0, ..Default::default() }, Duration::from_millis(1))
+    }
+
+    fn start_cfg(cfg: Config, max_wait: Duration) -> (ServerHandle, Arc<Metrics>) {
         let metrics = Arc::new(Metrics::new());
         let factory: EngineFactory =
             Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
-        let sched = Arc::new(Scheduler::start(
-            1,
-            4,
-            Duration::from_millis(1),
-            factory,
-            Arc::clone(&metrics),
-        ));
+        let opts = SchedulerOpts { max_batch: 4, max_wait, ..Default::default() };
+        let sched = Arc::new(Scheduler::start_with(1, opts, factory, Arc::clone(&metrics)));
         let registry = Arc::new(FamilyRegistry::new(synthetic_families(3)));
         let router = Arc::new(Router::new(sched, registry));
-        let cfg = Config { port: 0, ..Default::default() };
         let h = serve(&cfg, router, Arc::clone(&metrics)).unwrap();
         (h, metrics)
     }
@@ -306,8 +403,13 @@ mod tests {
         let (h, _m) = start();
         let r = request(h.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(r.contains("200 OK") && r.contains("\"ok\""));
+        let r = request(h.addr, "GET /ready HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK"), "{r}");
         let r = request(h.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(r.contains("specmer_requests_total"));
+        assert!(r.contains("specmer_shed_total"));
+        assert!(r.contains("specmer_deadline_exceeded_total"));
+        assert!(r.contains("specmer_queue_depth"));
         h.stop();
     }
 
@@ -372,5 +474,95 @@ mod tests {
         let r = post(h.addr, "/generate", r#"{"protein":"Zzz","n":1}"#);
         assert!(r.contains("400"), "{r}");
         h.stop();
+    }
+
+    #[test]
+    fn oversized_body_answers_413_without_reading() {
+        let (h, _m) = start();
+        // declared length over the cap; only a few bytes actually sent
+        let r = request(
+            h.addr,
+            &format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\nxx",
+                MAX_BODY_BYTES + 1
+            ),
+        );
+        assert!(r.contains("413"), "{r}");
+        assert!(r.contains("body too large"), "{r}");
+        h.stop();
+    }
+
+    #[test]
+    fn expired_timeout_answers_504() {
+        // max_wait far above the timeout: the deadline expires while the
+        // request sits queued, so the pop refuses it and the client gets 504
+        let (h, m) = start_cfg(
+            Config { port: 0, ..Default::default() },
+            Duration::from_millis(150),
+        );
+        let r = post(
+            h.addr,
+            "/generate",
+            r#"{"protein":"SynA","n":1,"seed":1,"timeout_ms":1}"#,
+        );
+        assert!(r.contains("504"), "{r}");
+        assert!(r.contains("deadline exceeded"), "{r}");
+        assert!(m.deadline_exceeded.load(Ordering::Relaxed) >= 1);
+        h.stop();
+    }
+
+    #[test]
+    fn ready_reports_degraded_when_all_workers_dead() {
+        // a fleet whose only worker never builds an engine is degraded:
+        // /health says so and /ready answers 503
+        let metrics = Arc::new(Metrics::new());
+        let factory: EngineFactory = Arc::new(|| Err(anyhow!("no artifacts")));
+        let sched = Arc::new(Scheduler::start(
+            1,
+            4,
+            Duration::from_millis(1),
+            factory,
+            Arc::clone(&metrics),
+        ));
+        // wait for the worker to come up dead
+        let t0 = Instant::now();
+        while sched.alive().iter().any(|a| *a) {
+            assert!(t0.elapsed() < Duration::from_secs(30), "worker never died");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let registry = Arc::new(FamilyRegistry::new(synthetic_families(3)));
+        let router = Arc::new(Router::new(sched, registry));
+        let cfg = Config { port: 0, ..Default::default() };
+        let h = serve(&cfg, router, metrics).unwrap();
+        let r = request(h.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK") && r.contains("degraded"), "{r}");
+        let r = request(h.addr, "GET /ready HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("503"), "{r}");
+        h.stop();
+    }
+
+    #[test]
+    fn graceful_stop_answers_queued_requests() {
+        // huge max_wait keeps the submitted request queued; stop() must
+        // shed it (typed 429 with Retry-After) instead of hanging the client
+        let (h, m) = start_cfg(
+            Config { port: 0, ..Default::default() },
+            Duration::from_secs(3600),
+        );
+        let addr = h.addr;
+        let client = std::thread::spawn(move || {
+            post(addr, "/generate", r#"{"protein":"SynA","n":1,"seed":1}"#)
+        });
+        // wait until the request is actually queued before stopping
+        let t0 = Instant::now();
+        while m.queue_depth.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "request never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        h.stop();
+        let r = client.join().unwrap();
+        assert!(r.contains("429"), "{r}");
+        assert!(r.contains("Retry-After:"), "{r}");
+        assert!(m.shed.load(Ordering::Relaxed) >= 1);
     }
 }

@@ -205,6 +205,112 @@ impl AdmissionHook for Scripted {
     }
 }
 
+/// [`Scripted`] plus a scripted mid-flight cancellation: once `boundary`
+/// reaches `cancel_after`, `cancel_ticket` is handed back to the driver at
+/// the round boundary — the same path the coordinator's deadline
+/// enforcement uses — recording how many sequences were resident.
+struct CancelScripted {
+    inner: Scripted,
+    cancel_ticket: u64,
+    cancel_after: usize,
+    active_at_cancel: Option<usize>,
+}
+
+impl AdmissionHook for CancelScripted {
+    fn admit(&mut self, active: usize) -> Vec<AdmitItem> {
+        self.inner.admit(active)
+    }
+    fn complete(&mut self, ticket: u64, result: anyhow::Result<GenOutput>) {
+        self.inner.complete(ticket, result);
+    }
+    fn cancel(&mut self, resident: &[u64]) -> Vec<(u64, anyhow::Error)> {
+        if self.active_at_cancel.is_none()
+            && self.inner.boundary >= self.cancel_after
+            && resident.contains(&self.cancel_ticket)
+        {
+            self.active_at_cancel = Some(resident.len());
+            return vec![(self.cancel_ticket, anyhow::anyhow!("cancelled by test"))];
+        }
+        Vec::new()
+    }
+}
+
+/// The mid-flight cancellation acceptance criterion (serving hardening):
+/// cancelling one resident sequence at a round boundary — exactly what the
+/// coordinator's deadline enforcement does — retires it through the
+/// group's normal completion path and leaves every surviving batchmate's
+/// token stream (and accept/reject/round stats) bitwise identical to its
+/// solo run. Per-sequence RNG and caches make removal indistinguishable
+/// from an early natural finish.
+#[test]
+fn mid_flight_cancellation_leaves_batchmates_bitwise_identical() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = Arc::new(KmerTable::build(&msa));
+    // distinct draft/target so rejections and corrections actually occur
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+
+    let ctxs: [&[u8]; 3] = [&[BOS, 5, 9], &[BOS, 7], &[BOS, 11, 3]];
+    // the doomed request (ticket 1) would run longest; it is cancelled at
+    // the third round boundary, well before its natural finish
+    let cfgs = [cfg(3, 5, 3, 40), cfg(3, 5, 11, 96), cfg(3, 5, 33, 44)];
+
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, cfg)| speculative_generate(&d, &t, Some(&table), ctx, cfg).unwrap())
+        .collect();
+
+    let mut hook = CancelScripted {
+        inner: Scripted {
+            pending: ctxs
+                .iter()
+                .zip(&cfgs)
+                .enumerate()
+                .map(|(i, (ctx, cfg))| {
+                    let item = AdmitItem {
+                        ticket: i as u64,
+                        context: ctx.to_vec(),
+                        cfg: cfg.clone(),
+                        table: Some(table.clone()),
+                    };
+                    (0usize, item)
+                })
+                .collect(),
+            boundary: 0,
+            active_at_admission: Vec::new(),
+            done: Vec::new(),
+        },
+        cancel_ticket: 1,
+        cancel_after: 3,
+        active_at_cancel: None,
+    };
+    speculative_generate_continuous(&d, &t, LockstepShape::of(&cfgs[0]), &mut hook);
+
+    // the cancellation must have happened with batchmates resident, or the
+    // mid-group removal path was never exercised
+    let resident = hook.active_at_cancel.expect("cancellation never fired");
+    assert!(resident >= 2, "cancel fired with no batchmates resident ({resident})");
+
+    assert_eq!(hook.inner.done.len(), 3, "every request answered, cancelled included");
+    hook.inner.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((ticket, got), want)) in hook.inner.done.iter().zip(&solo).enumerate() {
+        if *ticket == 1 {
+            let err = got.as_ref().expect_err("cancelled sequence must error");
+            assert!(format!("{err:#}").contains("cancelled by test"), "{err:#}");
+            continue;
+        }
+        let got = got.as_ref().expect("surviving batchmate failed");
+        assert_eq!(got.tokens, want.tokens, "survivor {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "survivor {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "survivor {b}: rejected");
+        assert_eq!(got.bonus, want.bonus, "survivor {b}: bonus");
+        assert_eq!(got.rounds, want.rounds, "survivor {b}: rounds");
+        assert_eq!(got.draft_calls, want.draft_calls, "survivor {b}: draft calls");
+        assert_eq!(got.target_calls, want.target_calls, "survivor {b}: target calls");
+    }
+}
+
 /// The continuous-batching acceptance criterion: requests admitted into an
 /// in-flight lockstep group at round boundaries emit token streams (and
 /// accept/reject/bonus/round stats) bitwise-identical to solo decodes with

@@ -9,13 +9,23 @@
 //!     conflict with the reflexive `From<Error> for Error`.
 //!   * `{e}` displays the outermost message; `{e:#}` appends the cause
 //!     chain (`outer: cause: root`), like anyhow's alternate formatting.
+//!   * `downcast_ref::<E>()` recovers the typed root error when the value
+//!     was built from a concrete `std::error::Error` (via `?` or `From`),
+//!     so callers can branch on error variants (e.g. the serving stack's
+//!     overload/deadline responses) instead of matching message strings.
+//!     Context layers keep the payload; `anyhow!`-style message errors
+//!     carry none.
 
+use std::any::Any;
 use std::fmt;
 
 /// Opaque error: an outermost message plus its cause chain.
 pub struct Error {
     /// `chain[0]` is the outermost context, the last entry the root cause.
     chain: Vec<String>,
+    /// The typed root error, when built from a concrete `std::error::Error`
+    /// — what `downcast_ref` recovers. Message errors carry `None`.
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 pub type Result<T, E = Error> = std::result::Result<T, E>;
@@ -23,13 +33,25 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from a printable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
     /// Wrap with an additional layer of context (used by [`Context`]).
+    /// The typed payload (if any) survives context layering, like anyhow.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// Recover the typed root error, if this value was built from a concrete
+    /// `std::error::Error` (via `?`/`From`). Message errors return `None`.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
+    }
+
+    /// Whether the root error is of type `T` (shorthand over `downcast_ref`).
+    pub fn is<T: Any>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 
     /// The cause chain, outermost first.
@@ -74,7 +96,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -155,6 +177,18 @@ mod tests {
             .with_context(|| -> String { panic!("must not run") })
             .unwrap();
         assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn downcast_recovers_typed_root_through_context() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.context("outer").unwrap_err();
+        assert!(e.is::<std::io::Error>());
+        let io = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.kind(), std::io::ErrorKind::Other);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // message errors carry no payload
+        assert!(!Error::msg("plain").is::<std::io::Error>());
     }
 
     #[test]
