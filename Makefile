@@ -19,6 +19,10 @@
 #                     on the draft/verify/serving hot paths show up there,
 #                     not just in prose.
 #   make test-tree    just the tree-structured speculation suites.
+#   make test-prefix  the shared-prefix KV cache gates: the prefix_*
+#                     bitwise pins (cache-hit admission, chunked prefill,
+#                     eviction mid-stream) plus the prefix-store and
+#                     prefill-cache unit tests. Part of `verify`.
 #   make test-fast    the SPECMER_FAST tier: the accuracy-bounded suites
 #                     (quantization pins, fast-tier ulp/tolerance bounds)
 #                     plus the self-comparing equivalence suites under
@@ -45,10 +49,10 @@
 CARGO ?= cargo
 
 .PHONY: verify fmt-check lint lint-specmer build test test-portable test-tree test-fast \
-	test-bf16 bench-smoke bench-micro bench-serve-smoke bench-serve
+	test-prefix test-bf16 bench-smoke bench-micro bench-serve-smoke bench-serve
 
-verify: fmt-check lint lint-specmer build test test-portable test-tree test-fast bench-smoke \
-	bench-serve-smoke
+verify: fmt-check lint lint-specmer build test test-portable test-tree test-fast test-prefix \
+	bench-smoke bench-serve-smoke
 
 fmt-check:
 	$(CARGO) fmt --check
@@ -92,6 +96,14 @@ test-tree:
 test-fast:
 	SPECMER_FAST=1 $(CARGO) test -q --test quantization --test fast_tier
 	SPECMER_FAST=1 $(CARGO) test -q --test batch_decode_equivalence --test tree_speculation
+
+# the shared-prefix KV cache gates, named so the copy-on-write hit,
+# chunked-prefill, and eviction-mid-stream bitwise pins stay visible (they
+# also run as part of `test`): the prefix_* equivalence pins plus the
+# prefix-store / prefill-cache / CoW unit tests in the library
+test-prefix:
+	$(CARGO) test -q --test batch_decode_equivalence prefix_
+	$(CARGO) test -q --lib prefix
 
 # narrow-dtype arm: the bitwise contract is per dtype (AVX2 == portable ==
 # dequant oracle), not vs the f32 tier, so the same env-robust suites run

@@ -22,10 +22,13 @@
 //! plus the weight-traffic question of the quantized panels: **per-dtype
 //! decode rounds** (f32 vs bf16 vs int8, default vs `SPECMER_FAST`) on a
 //! memory-bound shape, reporting tokens/s, weight bytes per token and
-//! effective GB/s. All numbers are emitted machine-readably to
-//! `results/bench_micro.json`, tagged with the resolved kernel dispatch,
-//! weight dtype and fast-tier flag so perf trajectories are attributable
-//! to the configuration that produced them.
+//! effective GB/s — plus the admission-path question of the shared-prefix
+//! KV cache: **cold one-shot prefill vs warm copy-on-write attach** (a
+//! prefix-store lookup + `prefill_into`, which must be strictly cheaper
+//! than the full-context forward). All numbers are emitted
+//! machine-readably to `results/bench_micro.json`, tagged with the
+//! resolved kernel dispatch, weight dtype and fast-tier flag so perf
+//! trajectories are attributable to the configuration that produced them.
 //! Set `SPECMER_BENCH_SMOKE=1` for a fast CI smoke run.
 
 use std::sync::Arc;
@@ -39,7 +42,7 @@ use specmer::kmer::{score_block, KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
 use specmer::params::{PackedWeights, WeightDtype};
 use specmer::runtime::cpu_ref::{reference, CpuModel};
-use specmer::runtime::{gemm, simd, ModelBackend};
+use specmer::runtime::{gemm, simd, ModelBackend, PrefixStore};
 use specmer::sampling;
 use specmer::util::json::Json;
 use specmer::util::rng::Pcg64;
@@ -672,6 +675,35 @@ fn main() {
          {npr_tree:.0} nodes) vs {alpha_flat:.3} (flat, {npr_flat:.0} nodes)"
     );
 
+    // ---- admission latency: cold one-shot prefill vs warm CoW attach -----
+    // The admission-path question of the prefix-cache work: what does a
+    // warm admission actually cost? Cold runs the full-context forward
+    // pass (`prefill`, 40 fed positions here); warm runs a prefix-store
+    // lookup (fnv1a hash + exact byte compare + LRU touch) plus the
+    // copy-on-write attach (`prefill_into`), which shares the cached host
+    // snapshot instead of recomputing — or even copying — the KV rows.
+    // The warm path must be strictly cheaper; the serving win scales with
+    // context length, so even this short context must show it.
+    println!("== admission latency: cold prefill vs warm CoW attach ==");
+    let adm_iters: u64 = if smoke { 10 } else { 200 };
+    let mut adm_store = PrefixStore::new(64 << 20);
+    let adm_snap = Arc::new(m.cache_to_host(&m.prefill(&ctx).unwrap()).unwrap());
+    adm_store.insert(&ctx, adm_snap);
+    let admission_cold_ns = bench("admission cold (one-shot prefill)", adm_iters, || {
+        std::hint::black_box(m.prefill(&ctx).unwrap());
+    });
+    let admission_warm_ns = bench("admission warm (lookup + CoW attach)", adm_iters, || {
+        let hit = adm_store.lookup(&ctx).expect("warm admission bench must hit the store");
+        std::hint::black_box(m.prefill_into(&hit).unwrap());
+    });
+    let admission_speedup = admission_cold_ns / admission_warm_ns;
+    println!("warm-vs-cold admission speedup: {admission_speedup:.1}x");
+    assert!(
+        admission_warm_ns < admission_cold_ns,
+        "warm CoW attach must be strictly cheaper than cold prefill: \
+         {admission_warm_ns:.1} vs {admission_cold_ns:.1} ns"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str("synthetic L4 d64 h4 S256")),
         ("c", Json::num(c as f64)),
@@ -719,6 +751,9 @@ fn main() {
         ("decode_round_weight_bytes_per_token_int8", Json::num(bpt_int8)),
         ("decode_round_tokens_per_sec_f32", Json::num(tps_f32)),
         ("decode_round_tokens_per_sec_bf16", Json::num(tps_bf16)),
+        ("admission_cold_prefill_ns", Json::num(admission_cold_ns)),
+        ("admission_warm_attach_ns", Json::num(admission_warm_ns)),
+        ("admission_warm_speedup_vs_cold", Json::num(admission_speedup)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();

@@ -24,6 +24,13 @@
 //! latency), per-token latency percentiles, shed rate, deadline-miss rate,
 //! tokens/s, and the queue-depth high-water mark.
 //!
+//! A third phase drives the **shared-prefix KV cache**: staggered
+//! same-family long-generation arrivals, where every admission after the
+//! first finds the family context warm in the worker's prefix store
+//! (copy-on-write attach) and cold contexts prefill in chunks across
+//! round boundaries. The phase must complete with **zero deadline
+//! misses** — warm admissions never stall the in-flight group.
+//!
 //! `SPECMER_BENCH_SMOKE=1` (CI: `make bench-serve-smoke`) runs a short
 //! fixed-seed pass at trivial load instead, asserts that *nothing* was
 //! shed and *no* deadline was missed, and re-parses the written JSON to
@@ -90,6 +97,52 @@ struct RunStats {
     queue_depth_peak: u64,
 }
 
+impl RunStats {
+    fn new(offered: usize) -> RunStats {
+        RunStats {
+            offered,
+            completed: 0,
+            shed: 0,
+            deadline_missed: 0,
+            other_errors: 0,
+            ttft_ms: Vec::new(),
+            per_token_ms: Vec::new(),
+            tokens: 0,
+            elapsed_s: 0.0,
+            queue_depth_peak: 0,
+        }
+    }
+}
+
+/// Collect `n` responses (the hardened stack answers every request) into
+/// the stat buckets.
+fn drain_responses(
+    rx: &std::sync::mpsc::Receiver<specmer::coordinator::GenResponse>,
+    n: usize,
+    s: &mut RunStats,
+) {
+    for _ in 0..n {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("hardened stack must answer every request");
+        match &resp.result {
+            Ok(out) => {
+                s.completed += 1;
+                s.tokens += out.new_tokens();
+                s.ttft_ms.push(resp.latency * 1e3);
+                if out.new_tokens() > 0 {
+                    s.per_token_ms.push(resp.latency * 1e3 / out.new_tokens() as f64);
+                }
+            }
+            Err(e) => match GenError::of(e) {
+                Some(GenError::Overloaded { .. }) => s.shed += 1,
+                Some(GenError::DeadlineExceeded) => s.deadline_missed += 1,
+                None => s.other_errors += 1,
+            },
+        }
+    }
+}
+
 /// Open-loop run: `n` mixed requests with exponential inter-arrival times
 /// at `rate_rps`, each carrying a `timeout` deadline. Returns once every
 /// request has been answered (shed and expired requests answer too — the
@@ -117,38 +170,44 @@ fn run_open_loop(
     }
     drop(tx);
 
-    let mut s = RunStats {
-        offered: n,
-        completed: 0,
-        shed: 0,
-        deadline_missed: 0,
-        other_errors: 0,
-        ttft_ms: Vec::new(),
-        per_token_ms: Vec::new(),
-        tokens: 0,
-        elapsed_s: 0.0,
-        queue_depth_peak,
-    };
-    for _ in 0..n {
-        let resp = rx
-            .recv_timeout(Duration::from_secs(120))
-            .expect("hardened stack must answer every request");
-        match &resp.result {
-            Ok(out) => {
-                s.completed += 1;
-                s.tokens += out.new_tokens();
-                s.ttft_ms.push(resp.latency * 1e3);
-                if out.new_tokens() > 0 {
-                    s.per_token_ms.push(resp.latency * 1e3 / out.new_tokens() as f64);
-                }
-            }
-            Err(e) => match GenError::of(e) {
-                Some(GenError::Overloaded { .. }) => s.shed += 1,
-                Some(GenError::DeadlineExceeded) => s.deadline_missed += 1,
-                None => s.other_errors += 1,
-            },
-        }
+    let mut s = RunStats::new(n);
+    s.queue_depth_peak = queue_depth_peak;
+    drain_responses(&rx, n, &mut s);
+    s.elapsed_s = t0.elapsed().as_secs_f64();
+    s
+}
+
+/// Staggered same-family arrivals (phase 3): `n` long-generation SynA
+/// requests submitted one every `gap`, each carrying a `timeout` deadline.
+/// The first admission prefills SynA's context cold (chunked when
+/// `prefill_chunk` is set) and publishes the snapshot; every later
+/// admission attaches it copy-on-write — so none of them may stall the
+/// in-flight group long enough to miss a deadline.
+fn run_staggered(
+    router: &Router,
+    n: usize,
+    gap: Duration,
+    max_len: usize,
+    timeout: Duration,
+) -> RunStats {
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    for i in 0..n {
+        let cfg = GenConfig {
+            c: 3,
+            gamma: 5,
+            max_len,
+            seed: 1000 + i as u64 * 7,
+            kset: KmerSet::new(true, true, true),
+            ..Default::default()
+        };
+        let deadline = Some(Instant::now() + timeout);
+        router.submit_with_deadline("SynA", Method::SpecMer, cfg, deadline, tx.clone());
+        std::thread::sleep(gap);
     }
+    drop(tx);
+    let mut s = RunStats::new(n);
+    drain_responses(&rx, n, &mut s);
     s.elapsed_s = t0.elapsed().as_secs_f64();
     s
 }
@@ -168,6 +227,10 @@ fn main() {
         // shed, not absorb the backlog in memory
         queue_capacity: if smoke { 256 } else { 32 },
         fault: None,
+        prefix_cache_mb: 32,
+        // SynA/SynB contexts feed 6 positions: chunk 4 makes every cold
+        // admission take the chunked-prefill path (2 round boundaries)
+        prefill_chunk: 4,
     };
     let metrics = Arc::new(Metrics::new());
     let sched = Arc::new(Scheduler::start_with(2, opts, factory, Arc::clone(&metrics)));
@@ -216,6 +279,31 @@ fn main() {
         s.queue_depth_peak
     );
 
+    // ---- phase 3: staggered same-family long-context arrivals ------------
+    // Every admission after the first finds SynA's context warm in the
+    // worker's prefix store; the acceptance bar is zero deadline misses.
+    let (st_n, st_gap, st_max_len) = if smoke {
+        (6usize, Duration::from_millis(30), 48usize)
+    } else {
+        (24usize, Duration::from_millis(20), 64usize)
+    };
+    let st = run_staggered(&router, st_n, st_gap, st_max_len, Duration::from_secs(30));
+    // per-worker prefix gauges refresh when a dispatch *returns*, which can
+    // trail the last response by a beat — poll briefly before reading
+    let mut px = metrics.prefix_totals();
+    for _ in 0..100 {
+        if px.hits >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        px = metrics.prefix_totals();
+    }
+    println!(
+        "[bench_serve] staggered: {} reqs (max_len {st_max_len}) completed {} missed {} \
+         — prefix cache {} hits / {} misses",
+        st.offered, st.completed, st.deadline_missed, px.hits, px.misses
+    );
+
     let json = Json::obj(vec![
         ("workers", Json::num(2.0)),
         ("sustainable_rps", Json::num(sustainable_rps)),
@@ -237,6 +325,13 @@ fn main() {
         ("tokens", Json::num(s.tokens as f64)),
         ("tokens_per_sec", Json::num(s.tokens as f64 / s.elapsed_s.max(1e-9))),
         ("queue_depth_peak", Json::num(s.queue_depth_peak as f64)),
+        ("staggered_offered", Json::num(st.offered as f64)),
+        ("staggered_completed", Json::num(st.completed as f64)),
+        ("staggered_deadline_missed", Json::num(st.deadline_missed as f64)),
+        ("staggered_ttft_ms_p50", Json::num(pct(&st.ttft_ms, 50.0))),
+        ("staggered_ttft_ms_p99", Json::num(pct(&st.ttft_ms, 99.0))),
+        ("prefix_cache_hits", Json::num(px.hits as f64)),
+        ("prefix_cache_misses", Json::num(px.misses as f64)),
         ("smoke", Json::Bool(smoke)),
     ]);
     std::fs::create_dir_all("results").ok();
@@ -264,6 +359,11 @@ fn main() {
             "per_token_ms_p50",
             "tokens_per_sec",
             "queue_depth_peak",
+            "staggered_offered",
+            "staggered_deadline_missed",
+            "staggered_ttft_ms_p50",
+            "prefix_cache_hits",
+            "prefix_cache_misses",
             "smoke",
         ] {
             assert!(parsed.get(key).is_some(), "bench_serve.json missing key '{key}'");
@@ -272,6 +372,16 @@ fn main() {
         assert_eq!(s.deadline_missed, 0, "trivial load must not miss deadlines");
         assert_eq!(s.other_errors, 0, "trivial load must not error");
         assert_eq!(s.completed, s.offered, "every request answered Ok at trivial load");
+        assert_eq!(
+            st.deadline_missed, 0,
+            "staggered long-context arrivals must not miss deadlines"
+        );
+        assert_eq!(st.completed, st.offered, "every staggered request answered Ok");
+        assert!(
+            px.hits >= 1,
+            "staggered same-family arrivals should warm the prefix cache (got {} hits)",
+            px.hits
+        );
         println!("[bench_serve] smoke assertions passed");
     }
 }

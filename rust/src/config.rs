@@ -58,6 +58,13 @@ pub struct Config {
     /// Default per-request deadline applied by the HTTP server when the
     /// client sends no `timeout_ms`; 0 = no deadline.
     pub timeout_ms: u64,
+    /// Per-worker shared-prefix KV cache budget in MiB, split between the
+    /// draft and target stores; 0 disables the prefix cache.
+    pub prefix_cache_mb: usize,
+    /// Chunked-admission prefill slice in context tokens: a cold context
+    /// longer than this is prefilled across lockstep round boundaries
+    /// instead of in one stalling forward; 0 = one-shot prefill.
+    pub prefill_chunk: usize,
     pub port: u16,
     pub gen: GenConfig,
 }
@@ -76,6 +83,8 @@ impl Default for Config {
             queue_cap: 256,
             max_inflight: 0,
             timeout_ms: 0,
+            prefix_cache_mb: 32,
+            prefill_chunk: 0,
             port: 7878,
             gen: GenConfig::default(),
         }
@@ -103,6 +112,8 @@ impl Config {
         c.queue_cap = args.usize_or("queue-cap", c.queue_cap)?;
         c.max_inflight = args.usize_or("max-inflight", c.max_inflight)?;
         c.timeout_ms = args.u64_or("timeout-ms", c.timeout_ms)?;
+        c.prefix_cache_mb = args.usize_or("prefix-cache-mb", c.prefix_cache_mb)?;
+        c.prefill_chunk = args.usize_or("prefill-chunk", c.prefill_chunk)?;
         c.port = args.usize_or("port", c.port as usize)? as u16;
         c.gen.gamma = args.usize_or("gamma", c.gen.gamma)?;
         c.gen.c = args.usize_or("c", c.gen.c)?;
@@ -154,6 +165,16 @@ mod tests {
         assert_eq!(d.queue_cap, 256);
         assert_eq!(d.max_inflight, 0, "unlimited by default");
         assert_eq!(d.timeout_ms, 0, "no default deadline");
+    }
+
+    #[test]
+    fn prefix_cache_knobs() {
+        let c = parse("--prefix-cache-mb 128 --prefill-chunk 64");
+        assert_eq!(c.prefix_cache_mb, 128);
+        assert_eq!(c.prefill_chunk, 64);
+        let d = Config::default();
+        assert_eq!(d.prefix_cache_mb, 32, "prefix cache on by default");
+        assert_eq!(d.prefill_chunk, 0, "one-shot prefill by default");
     }
 
     #[test]

@@ -9,19 +9,23 @@
 //! SpecMER/vanilla-speculative methods, and continuous admission splices
 //! any shape-compatible request into the in-flight group.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Config, Method};
-use crate::decode::{self, AdmitItem, GenConfig, GenOutput, LockstepShape};
+use crate::decode::{self, AdmitItem, GenConfig, GenOutput, LockstepShape, PrefixParams};
 use crate::eval::PlddtScorer;
 use crate::kmer::KmerTable;
 use crate::msa::{self, FamilyMeta, Msa};
 use crate::runtime::prefill_cache::PrefillCached;
-use crate::runtime::{CpuModel, HloModel, ModelBackend, Runtime};
+use crate::runtime::{
+    CpuModel, HloModel, ModelBackend, PrefixStats, PrefixStore, Residency, Runtime,
+};
 use crate::tokenizer::{self, BOS};
 
 use super::request::SeqSpec;
@@ -141,6 +145,22 @@ pub trait RequestSource {
     }
 }
 
+/// How a worker turns on its resident shared-prefix KV cache
+/// ([`GenEngine::enable_prefix_cache`]): a per-worker byte budget (split
+/// evenly between the draft and target stores), the chunked-prefill knob,
+/// and the coordinator's [`Residency`] map the *target* store publishes
+/// its resident context keys into (for the router's family affinity).
+pub struct PrefixCacheOpts {
+    /// Total snapshot budget in bytes across both stores (0 disables).
+    pub cap_bytes: usize,
+    /// Max context tokens prefilled per model per round boundary for a
+    /// cold admission (0 = one-shot prefill).
+    pub prefill_chunk: usize,
+    /// Coordinator-shared residency map; `worker` is this worker's id in it.
+    pub residency: Option<Arc<Residency>>,
+    pub worker: usize,
+}
+
 /// Object-safe engine interface used by the scheduler, server and benches.
 /// Decode entry points take resolved [`SeqSpec`]s; `spec` (and the router's
 /// registry) is where `(protein, method, cfg)` is resolved exactly once.
@@ -199,6 +219,17 @@ pub trait GenEngine {
             }
         }
     }
+    /// Turn on the worker-resident shared-prefix KV cache for the
+    /// continuous-batching path. Default: unsupported, silently off —
+    /// engines without prefix reuse keep their exact previous behavior.
+    fn enable_prefix_cache(&mut self, opts: PrefixCacheOpts) {
+        let _ = opts;
+    }
+    /// Combined stats of this engine's prefix stores (None when the cache
+    /// is off or unsupported). Feeds the `/metrics` prefix_cache_* family.
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        None
+    }
     /// Length-normalized NLL of a token sequence under the target model.
     fn score_nll(&self, tokens: &[u8]) -> Result<f64>;
     /// Target-model embedding of a token sequence.
@@ -219,6 +250,9 @@ pub struct Engine<D: ModelBackend, T: ModelBackend> {
     pub target: PrefillCached<T>,
     families: Vec<Arc<Family>>,
     overrides: HashMap<String, Arc<KmerTable>>,
+    /// Prefix-store / chunked-prefill params for the continuous path
+    /// (None = off). `Rc` inside: engines live on one worker thread.
+    prefix: Option<PrefixParams>,
 }
 
 /// Adapts a worker's [`RequestSource`] to the decode layer's
@@ -260,6 +294,7 @@ impl<D: ModelBackend, T: ModelBackend> Engine<D, T> {
             target: PrefillCached::new(target),
             families,
             overrides: HashMap::new(),
+            prefix: None,
         }
     }
 }
@@ -347,7 +382,45 @@ impl<D: ModelBackend, T: ModelBackend> GenEngine for Engine<D, T> {
 
     fn generate_continuous(&self, shape: &LockstepShape, source: &mut dyn RequestSource) {
         let mut hook = SourceAdapter { source };
-        decode::speculative_generate_continuous(&self.draft, &self.target, *shape, &mut hook);
+        let params = self.prefix.clone().unwrap_or_default();
+        decode::speculative_generate_continuous_with(
+            &self.draft,
+            &self.target,
+            *shape,
+            &mut hook,
+            params,
+        );
+    }
+
+    fn enable_prefix_cache(&mut self, opts: PrefixCacheOpts) {
+        if opts.cap_bytes == 0 {
+            self.prefix = None;
+            return;
+        }
+        // split the byte budget evenly; only the target store publishes
+        // residency (one key announcement per context is enough for routing)
+        let half = opts.cap_bytes / 2;
+        let target_store = match opts.residency {
+            Some(res) => PrefixStore::with_residency(half, res, opts.worker),
+            None => PrefixStore::new(half),
+        };
+        self.prefix = Some(PrefixParams {
+            draft_store: Some(Rc::new(RefCell::new(PrefixStore::new(opts.cap_bytes - half)))),
+            target_store: Some(Rc::new(RefCell::new(target_store))),
+            prefill_chunk: opts.prefill_chunk,
+        });
+    }
+
+    fn prefix_stats(&self) -> Option<PrefixStats> {
+        let params = self.prefix.as_ref()?;
+        let mut stats = PrefixStats::default();
+        if let Some(st) = &params.draft_store {
+            stats = stats.merge(st.borrow().stats());
+        }
+        if let Some(st) = &params.target_store {
+            stats = stats.merge(st.borrow().stats());
+        }
+        Some(stats)
     }
 
     fn score_nll(&self, tokens: &[u8]) -> Result<f64> {
@@ -599,5 +672,67 @@ mod tests {
         assert_eq!(outs.len(), 2, "every slot answered");
         assert!(outs[0].is_ok(), "valid request unaffected");
         assert!(outs[1].is_err(), "invalid request fails alone");
+    }
+
+    #[test]
+    fn prefix_cache_off_by_default_and_toggleable() {
+        let mut eng = synthetic_engine(3);
+        assert!(eng.prefix_stats().is_none(), "cache must be opt-in");
+        eng.enable_prefix_cache(PrefixCacheOpts {
+            cap_bytes: 1 << 20,
+            prefill_chunk: 4,
+            residency: Some(Arc::new(Residency::new())),
+            worker: 2,
+        });
+        assert_eq!(eng.prefix_stats(), Some(PrefixStats::default()));
+        eng.enable_prefix_cache(PrefixCacheOpts {
+            cap_bytes: 0,
+            prefill_chunk: 4,
+            residency: None,
+            worker: 2,
+        });
+        assert!(eng.prefix_stats().is_none(), "cap 0 turns the cache back off");
+    }
+
+    struct OneShotSource {
+        items: Vec<(u64, SeqSpec)>,
+        done: Vec<(u64, Result<GenOutput>)>,
+    }
+
+    impl RequestSource for OneShotSource {
+        fn admit(&mut self, _active: usize) -> Vec<(u64, SeqSpec)> {
+            std::mem::take(&mut self.items)
+        }
+        fn complete(&mut self, ticket: u64, result: Result<GenOutput>) {
+            self.done.push((ticket, result));
+        }
+    }
+
+    #[test]
+    fn continuous_with_prefix_cache_matches_plain_and_publishes_residency() {
+        let mut eng = synthetic_engine(3);
+        let cfg = GenConfig { max_len: 30, gamma: 5, c: 3, seed: 1, ..Default::default() };
+        let spec = eng.spec("SynA", Method::SpecMer, &cfg).unwrap();
+        let shape = eng.lockstep_shape(&spec).unwrap();
+        let want = eng.generate(&spec).unwrap();
+        let res = Arc::new(Residency::new());
+        eng.enable_prefix_cache(PrefixCacheOpts {
+            cap_bytes: 16 << 20,
+            prefill_chunk: 2,
+            residency: Some(Arc::clone(&res)),
+            worker: 1,
+        });
+        let mut src = OneShotSource { items: vec![(7, spec)], done: Vec::new() };
+        eng.generate_continuous(&shape, &mut src);
+        assert_eq!(src.done.len(), 1);
+        let got = src.done[0].1.as_ref().unwrap();
+        assert_eq!(got.tokens, want.tokens, "chunk-admitted run diverged from plain decode");
+        // the target store must have published the family context's key so
+        // the router can see this worker as warm for SynA
+        let key = crate::runtime::context_key(&eng.family("SynA").unwrap().context);
+        assert_eq!(res.holders(key), vec![1]);
+        let stats = eng.prefix_stats().unwrap();
+        assert!(stats.misses >= 1, "cold admission must count a miss");
+        assert_eq!(stats.entries, 2, "one snapshot per store after the publish");
     }
 }

@@ -2,9 +2,12 @@
 //! Thread-safe; `text_dump` renders a Prometheus-style exposition used by
 //! GET /metrics and the experiment harness.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::runtime::PrefixStats;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -51,6 +54,13 @@ pub struct Metrics {
     /// Gauge: requests currently queued across all workers (the scheduler
     /// keeps it in step with every enqueue/pop).
     pub queue_depth: AtomicU64,
+    /// Context-prefill positions actually computed at admission, summed
+    /// over completed requests (a prefix-store copy-on-write hit
+    /// contributes 0 for its side — the savings this gauge makes visible).
+    pub prefill_tokens: AtomicU64,
+    /// Per-worker prefix-store snapshots, refreshed by each worker after
+    /// every dispatch; `text_dump` sums them fleet-wide.
+    prefix: Mutex<BTreeMap<usize, PrefixStats>>,
     // lint:allow(unbounded): full-history latency reservoir for percentile
     // gauges; reset with the process, same lifecycle as the counters
     latencies: Mutex<Vec<f64>>,
@@ -81,6 +91,7 @@ impl Metrics {
         self.target_calls.fetch_add(out.target_calls, Ordering::Relaxed);
         self.rounds.fetch_add(out.rounds, Ordering::Relaxed);
         self.tree_nodes.fetch_add(out.tree_nodes, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(out.prefill_tokens, Ordering::Relaxed);
         // lint:allow(unbounded): full-history latency reservoir; growth is one
         // f64 per completed request and is read back for end-of-run percentiles
         self.latencies.lock().unwrap().push(latency);
@@ -259,6 +270,33 @@ impl Metrics {
         crate::util::stats::percentile(&self.latencies.lock().unwrap(), q)
     }
 
+    /// Publish one worker's prefix-store snapshot (replaces the previous
+    /// snapshot for that worker — stats are cumulative per store).
+    pub fn set_prefix(&self, worker: usize, stats: PrefixStats) {
+        self.prefix.lock().unwrap().insert(worker, stats);
+    }
+
+    /// Fleet-wide sum of the per-worker prefix-store snapshots.
+    pub fn prefix_totals(&self) -> PrefixStats {
+        let mut total = PrefixStats::default();
+        for st in self.prefix.lock().unwrap().values() {
+            total = total.merge(*st);
+        }
+        total
+    }
+
+    /// Mean context-prefill positions computed per completed request —
+    /// drops toward 0 as warm admissions attach cached prefixes instead
+    /// of recomputing them.
+    pub fn admission_prefill_tokens_avg(&self) -> f64 {
+        let done = self.completed.load(Ordering::Relaxed) as f64;
+        if done == 0.0 {
+            0.0
+        } else {
+            self.prefill_tokens.load(Ordering::Relaxed) as f64 / done
+        }
+    }
+
     pub fn text_dump(&self) -> String {
         let lat = self.latencies.lock().unwrap();
         let p50 = crate::util::stats::percentile(&lat, 50.0);
@@ -276,6 +314,7 @@ impl Metrics {
         let kernel = crate::runtime::simd::active().name();
         let dtype = crate::runtime::simd::weight_dtype().name();
         let fast = crate::runtime::simd::fast_tier() as u8;
+        let px = self.prefix_totals();
         format!(
             "specmer_kernel_info{{kernel=\"{kernel}\",weight_dtype=\"{dtype}\"}} 1\n\
              specmer_fast_tier {fast}\n\
@@ -295,6 +334,11 @@ impl Metrics {
              specmer_tree_nodes_per_round_avg {:.3}\n\
              specmer_accepted_len_avg {:.3}\n\
              specmer_prefill_cache_hits_total {}\n\
+             specmer_prefix_cache_hits_total {}\n\
+             specmer_prefix_cache_misses_total {}\n\
+             specmer_prefix_cache_evictions_total {}\n\
+             specmer_prefix_cache_bytes {}\n\
+             specmer_admission_prefill_tokens_avg {:.3}\n\
              specmer_batches_total {}\n\
              specmer_batch_occupancy_avg {:.3}\n\
              specmer_admitted_total {}\n\
@@ -325,6 +369,11 @@ impl Metrics {
             self.tree_nodes_per_round_avg(),
             self.accepted_len_avg(),
             self.prefill_hits.load(Ordering::Relaxed),
+            px.hits,
+            px.misses,
+            px.evictions,
+            px.bytes,
+            self.admission_prefill_tokens_avg(),
             self.batches.load(Ordering::Relaxed),
             self.batch_occupancy(),
             self.admitted.load(Ordering::Relaxed),
@@ -471,6 +520,43 @@ mod tests {
         assert!(dump.contains("specmer_deadline_exceeded_total 1"));
         assert!(dump.contains("specmer_requeued_total 1"));
         assert!(dump.contains("specmer_queue_depth 1"));
+    }
+
+    #[test]
+    fn prefix_cache_gauges_sum_across_workers() {
+        let m = Metrics::new();
+        // no snapshots yet: totals are zero and the dump is still well-formed
+        assert_eq!(m.prefix_totals(), PrefixStats::default());
+        assert!(m.text_dump().contains("specmer_prefix_cache_hits_total 0"));
+        let w0 = PrefixStats { hits: 3, misses: 2, evictions: 1, bytes: 256, entries: 2 };
+        let w1 = PrefixStats { hits: 1, misses: 4, evictions: 0, bytes: 128, entries: 1 };
+        m.set_prefix(0, w0);
+        m.set_prefix(1, w1);
+        // re-publishing a worker replaces its snapshot (cumulative stats),
+        // it must not double-count
+        m.set_prefix(0, w0);
+        let total = m.prefix_totals();
+        assert_eq!((total.hits, total.misses, total.evictions), (4, 6, 1));
+        assert_eq!(total.bytes, 384);
+        let dump = m.text_dump();
+        assert!(dump.contains("specmer_prefix_cache_hits_total 4"));
+        assert!(dump.contains("specmer_prefix_cache_misses_total 6"));
+        assert!(dump.contains("specmer_prefix_cache_evictions_total 1"));
+        assert!(dump.contains("specmer_prefix_cache_bytes 384"));
+    }
+
+    #[test]
+    fn admission_prefill_tokens_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.admission_prefill_tokens_avg(), 0.0);
+        let mut a = out(9, 1, 10);
+        a.prefill_tokens = 22; // cold: both models prefilled the context
+        let mut b = out(8, 2, 10);
+        b.prefill_tokens = 0; // warm: both sides attached cached prefixes
+        m.record(&a, 0.5, 0.4);
+        m.record(&b, 0.7, 0.6);
+        assert!((m.admission_prefill_tokens_avg() - 11.0).abs() < 1e-12);
+        assert!(m.text_dump().contains("specmer_admission_prefill_tokens_avg 11.000"));
     }
 
     #[test]

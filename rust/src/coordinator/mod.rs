@@ -26,7 +26,7 @@ pub mod scheduler;
 
 pub use engine::{
     build_engine, build_engine_with, engine_for_bench, load_families, synthetic_engine,
-    synthetic_families, Engine, Family, FamilyRegistry, GenEngine, RequestSource,
+    synthetic_families, Engine, Family, FamilyRegistry, GenEngine, PrefixCacheOpts, RequestSource,
 };
 pub use error::GenError;
 pub use fault::{FaultPlan, FaultState};

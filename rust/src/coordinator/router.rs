@@ -9,8 +9,14 @@
 //! routing, adapted to per-family state) — it is a *placement* preference
 //! only: once queued, batching and admission are shape-keyed, so a
 //! worker's in-flight group happily mixes whatever proteins land on it.
-//! When the affinity target is overloaded relative to the least-loaded
-//! worker, the router spills.
+//! Placement consults the prefix-store
+//! [`Residency`](crate::runtime::Residency) table first: a live
+//! worker already holding this family's prefilled context (a **warm**
+//! worker, where admission attaches the cached KV copy-on-write instead
+//! of recomputing prefill) is preferred, least-loaded among holders.
+//! Warmth never overrides overload protection — when the affinity target
+//! (warm or hashed) is loaded past `spill_threshold` relative to the
+//! least-loaded worker, the router spills.
 //!
 //! Overload hardening: submission enforces a router-level **in-flight
 //! concurrency limit** (`max_inflight`; on top of the per-worker queue
@@ -29,6 +35,7 @@ use crate::coordinator::error::GenError;
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::coordinator::scheduler::Scheduler;
 use crate::decode::GenConfig;
+use crate::runtime::context_key;
 
 pub struct Router {
     pub scheduler: Arc<Scheduler>,
@@ -72,6 +79,12 @@ impl Router {
     /// failed engine factory) are never selected while any live worker
     /// exists; if all are dead we fall back to affinity — the dead worker's
     /// drain loop still answers with errors rather than hanging clients.
+    ///
+    /// Soft family-affinity: a live worker whose prefix store already
+    /// holds this family's prefilled context wins over the hash target
+    /// (warm admission attaches the cached KV copy-on-write), least-loaded
+    /// among holders — but only while it sits within `spill_threshold` of
+    /// the least-loaded worker: warmth never overrides load shedding.
     pub fn place(&self, protein: &str) -> usize {
         let n = self.scheduler.n_workers();
         if n == 1 {
@@ -89,11 +102,31 @@ impl Router {
         let Some((min_w, min_load)) = live_min else {
             return affinity; // every worker is dead
         };
+        if let Some(w) = self.warm_worker(protein, &alive, &loads) {
+            if loads[w] <= min_load + self.spill_threshold {
+                return w;
+            }
+        }
         if !alive[affinity] || loads[affinity] > min_load + self.spill_threshold {
             min_w
         } else {
             affinity
         }
+    }
+
+    /// Least-loaded live worker whose prefix store holds `protein`'s
+    /// family context ([`crate::runtime::Residency`] lookup); ties break toward the lowest
+    /// worker index (holders are listed ascending). `None` when the
+    /// protein is unknown or no live worker is warm.
+    fn warm_worker(&self, protein: &str, alive: &[bool], loads: &[usize]) -> Option<usize> {
+        let fam = self.registry.get(protein).ok()?;
+        let key = context_key(&fam.context);
+        self.scheduler
+            .residency()
+            .holders(key)
+            .into_iter()
+            .filter(|&w| w < loads.len() && alive[w])
+            .min_by_key(|&w| loads[w])
     }
 
     /// Submit one request; returns its id. Resolution happens here —
@@ -333,6 +366,77 @@ mod tests {
         assert_eq!(GenError::of(&err), Some(GenError::DeadlineExceeded), "{err:#}");
         assert_eq!(r.scheduler.loads(), vec![0], "nothing was enqueued");
         assert_eq!(r.scheduler.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn warm_prefix_worker_preferred_over_hash_affinity() {
+        let r = router(4);
+        let fam = r.registry.get("SynA").unwrap();
+        let key = context_key(&fam.context);
+        let hashed = r.place("SynA");
+        // mark a *different* worker as holding SynA's prefilled context
+        let warm = (hashed + 1) % 4;
+        r.scheduler.residency().publish(key, warm);
+        assert_eq!(r.place("SynA"), warm, "idle warm worker must win placement");
+        // with two warm holders, the least-loaded (here: tied, lowest
+        // index) wins deterministically
+        let warm2 = (hashed + 2) % 4;
+        r.scheduler.residency().publish(key, warm2);
+        assert_eq!(r.place("SynA"), warm.min(warm2));
+        // unknown proteins never consult residency (and still place)
+        let w = r.place("NotAFamily");
+        assert!(w < 4);
+    }
+
+    #[test]
+    fn warm_affinity_does_not_override_load_shedding() {
+        use crate::coordinator::scheduler::SchedulerOpts;
+        // a warm worker loaded past the spill threshold must not attract
+        // placement: cache affinity is a preference, overload wins
+        let factory: EngineFactory =
+            Arc::new(|| Ok(Box::new(synthetic_engine(3)) as Box<dyn GenEngine>));
+        // huge max_wait + max_batch keep submissions queued (nothing
+        // dispatches before shutdown) so loads are deterministic
+        let opts = SchedulerOpts {
+            max_batch: 64,
+            max_wait: Duration::from_secs(3600),
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let sched = Arc::new(Scheduler::start_with(3, opts, factory, Arc::new(Metrics::new())));
+        let r = Router::new(sched, Arc::new(FamilyRegistry::new(synthetic_families(3))));
+        let fam = r.registry.get("SynA").unwrap();
+        let key = context_key(&fam.context);
+        let warm = 2;
+        r.scheduler.residency().publish(key, warm);
+        assert_eq!(r.place("SynA"), warm, "idle warm worker wins first");
+        let flood = r.spill_threshold as u64 + 2;
+        let (tx, rx) = channel();
+        for seed in 0..flood {
+            let spec = r
+                .registry
+                .spec(
+                    "SynA",
+                    Method::SpecMer,
+                    &GenConfig { max_len: 16, seed, ..Default::default() },
+                )
+                .unwrap();
+            r.scheduler.submit_to(
+                warm,
+                GenRequest {
+                    id: 900 + seed,
+                    spec,
+                    reply: tx.clone(),
+                    submitted: Instant::now(),
+                    deadline: None,
+                },
+            );
+        }
+        let placed = r.place("SynA");
+        assert_ne!(placed, warm, "overloaded warm worker must be spilled away from");
+        drop(tx);
+        drop(r); // scheduler shutdown flush answers the queued requests
+        assert_eq!(rx.iter().count() as u64, flood);
     }
 
     /// Property: placement spills away from a hot worker.

@@ -34,6 +34,18 @@
 //! new requests are shed; and a seeded [`FaultPlan`] injects engine-build
 //! failures, round errors, and round latency for deterministic chaos
 //! tests.
+//!
+//! Each worker also owns a pair of **shared-prefix KV stores**
+//! (`runtime::prefix_store`, sized by [`SchedulerOpts::prefix_cache_mb`]):
+//! admission of a request whose family context was prefilled before on
+//! this worker attaches the cached rows copy-on-write instead of
+//! recomputing prefill, and a cold long context is prefilled in
+//! [`SchedulerOpts::prefill_chunk`]-token slices across round boundaries
+//! so an in-flight group is never stalled behind one full-context
+//! forward. Workers publish which context keys they hold into a
+//! process-wide [`Residency`] table that the router reads for soft
+//! family-affinity placement, and refresh their per-worker
+//! `specmer_prefix_cache_*` gauges after every dispatch.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -44,13 +56,14 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, DEFAULT_QUEUE_CAPACITY};
-use super::engine::{GenEngine, RequestSource};
+use super::engine::{GenEngine, PrefixCacheOpts, RequestSource};
 use super::error::GenError;
 use super::fault::{FaultPlan, FaultState};
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SeqSpec};
 use crate::config::Method;
 use crate::decode::GenOutput;
+use crate::runtime::Residency;
 
 /// Send-able engine constructor run inside each worker thread.
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn GenEngine>> + Send + Sync>;
@@ -87,6 +100,12 @@ pub struct SchedulerOpts {
     pub queue_capacity: usize,
     /// Deterministic fault injection (chaos tests / `SPECMER_FAULT_*`).
     pub fault: Option<FaultPlan>,
+    /// Per-worker shared-prefix KV cache budget in MiB, split between the
+    /// draft and target stores (0 disables prefix reuse).
+    pub prefix_cache_mb: usize,
+    /// Context tokens prefilled per model per lockstep round boundary for
+    /// a cold admission (0 = one-shot prefill at admission).
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedulerOpts {
@@ -96,6 +115,8 @@ impl Default for SchedulerOpts {
             max_wait: Duration::from_millis(5),
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             fault: None,
+            prefix_cache_mb: 32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -103,6 +124,10 @@ impl Default for SchedulerOpts {
 pub struct Scheduler {
     workers: Vec<Worker>,
     queue_capacity: usize,
+    /// Which workers hold which family-context keys warm — published by
+    /// the workers' target prefix stores, read by the router's soft
+    /// family-affinity placement.
+    residency: Arc<Residency>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -151,6 +176,7 @@ impl Scheduler {
                 })
                 .collect(),
         );
+        let residency = Arc::new(Residency::new());
         let workers = shareds
             .iter()
             .enumerate()
@@ -159,9 +185,15 @@ impl Scheduler {
                 let f = Arc::clone(&factory);
                 let m = Arc::clone(&metrics);
                 let fault = opts.fault.map(|p| p.state_for(wid));
+                let prefix = PrefixCacheOpts {
+                    cap_bytes: opts.prefix_cache_mb.saturating_mul(1 << 20),
+                    prefill_chunk: opts.prefill_chunk,
+                    residency: Some(Arc::clone(&residency)),
+                    worker: wid,
+                };
                 let handle = std::thread::Builder::new()
                     .name(format!("specmer-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, all, f, m, fault))
+                    .spawn(move || worker_loop(wid, all, f, m, fault, prefix))
                     // PANIC-OK: worker-thread spawn happens once at scheduler
                     // construction, before any request is accepted; an OS
                     // refusing to create threads is a fatal startup error.
@@ -169,11 +201,17 @@ impl Scheduler {
                 Worker { shared: Arc::clone(shared), handle: Some(handle) }
             })
             .collect();
-        Scheduler { workers, queue_capacity, metrics }
+        Scheduler { workers, queue_capacity, residency, metrics }
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The fleet's prefix-residency map: which workers hold which family
+    /// context keys warm. The router reads it for soft family affinity.
+    pub fn residency(&self) -> &Arc<Residency> {
+        &self.residency
     }
 
     /// Outstanding work per worker — queued *plus* in-flight, so the
@@ -328,11 +366,12 @@ fn worker_loop(
     factory: EngineFactory,
     metrics: Arc<Metrics>,
     mut fault: Option<FaultState>,
+    prefix: PrefixCacheOpts,
 ) {
     let shared = Arc::clone(&shareds[wid]);
     let injected_fail = fault.as_mut().map_or(false, |f| f.engine_build_fails());
     let built = if injected_fail { Err(anyhow!("injected engine-build fault")) } else { factory() };
-    let engine = match built {
+    let mut engine = match built {
         Ok(e) => e,
         Err(e) => {
             eprintln!("[specmer] worker {wid} failed to build engine: {e:#}");
@@ -342,6 +381,10 @@ fn worker_loop(
             return;
         }
     };
+    // worker-resident prefix cache: enabled after the engine is built (the
+    // stores live on this thread with it); no-op for engines without one
+    engine.enable_prefix_cache(prefix);
+    let engine = engine;
     // batcher limits are construction-time constants; read them once
     let max_batch = shared.batcher.lock().unwrap().max_batch;
     loop {
@@ -401,6 +444,11 @@ fn worker_loop(
             continue;
         }
         dispatch(&shared, engine.as_ref(), &metrics, live, max_batch, &mut fault);
+        // refresh this worker's prefix-cache gauges after every dispatch
+        // (the stores are thread-local; metrics is the Send-side snapshot)
+        if let Some(st) = engine.prefix_stats() {
+            metrics.set_prefix(wid, st);
+        }
     }
 }
 
@@ -1017,7 +1065,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_secs(3600),
             queue_capacity: 2,
-            fault: None,
+            ..Default::default()
         };
         let s = Scheduler::start_with(1, opts, factory, Arc::clone(&metrics));
         let (tx, rx) = channel();
@@ -1080,7 +1128,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_secs(3600),
             queue_capacity: 8,
-            fault: None,
+            ..Default::default()
         };
         let s = Scheduler::start_with(1, opts, factory, Arc::new(Metrics::new()));
         let (tx, rx) = channel();
@@ -1178,6 +1226,7 @@ mod tests {
                 round_error: 1.0,
                 round_delay_ms: 0,
             }),
+            ..Default::default()
         };
         let s = Scheduler::start_with(1, opts, factory, Arc::clone(&metrics));
         let (tx, rx) = channel();

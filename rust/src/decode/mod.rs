@@ -6,7 +6,8 @@ pub mod target_only;
 
 pub use spec::{
     speculative_generate, speculative_generate_batch, speculative_generate_continuous,
-    AdmissionHook, AdmitItem, LockstepShape, SpecBatchItem, SpecOptions,
+    speculative_generate_continuous_with, AdmissionHook, AdmitItem, LockstepShape, PrefixParams,
+    SpecBatchItem, SpecOptions,
 };
 pub use target_only::target_only_generate;
 
@@ -231,6 +232,11 @@ pub struct GenOutput {
     /// round; the forest's node count per tree round). Feeds the
     /// `/metrics` tree_nodes_per_round gauge.
     pub tree_nodes: u64,
+    /// Context-prefill positions actually *computed* at admission, summed
+    /// over both models (cold one-shot = `2 * (context_len - 1)`; a
+    /// prefix-store copy-on-write hit contributes 0 for its side). Feeds
+    /// the `/metrics` admission_prefill_tokens_avg gauge.
+    pub prefill_tokens: u64,
 }
 
 impl GenOutput {

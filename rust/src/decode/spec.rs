@@ -32,13 +32,35 @@
 //! per-sequence draft/verify calls serially inside the round (cross-
 //! sequence tree batching is an open ROADMAP item), so a failing call
 //! retires only its own sequence instead of poisoning the group.
+//!
+//! # Admission lifecycle: cached → CoW-attached → chunk-prefilling → active
+//!
+//! Admission cost is governed by [`PrefixParams`]
+//! ([`speculative_generate_continuous_with`]): each model side first
+//! consults its worker-resident `runtime::prefix_store` — a **hit**
+//! attaches the cached context KV copy-on-write (`prefill_into`, no
+//! forward at all); a **miss** with `prefill_chunk > 0` and a long context
+//! enters a *prefilling* phase (`PrefillState` in the group's `pending`
+//! list) that advances at most `prefill_chunk` context tokens per model
+//! per lockstep round boundary — resident sequences never wait on a cold
+//! arrival — and publishes the finished snapshot back to the store; short
+//! contexts (or backends without `prefill_begin`) prefill one-shot at
+//! admission exactly as before. Determinism contract: a sequence admitted
+//! through *any* of these paths produces output **bit-identical** to its
+//! cold, solo, one-shot-prefill run — attach shares the exact bits a cold
+//! prefill would compute, chunked feeding is bitwise equal to one-shot on
+//! row-independent kernels, and the per-sequence RNG stream starts only at
+//! activation (`tests/batch_decode_equivalence.rs` pins all three).
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::{GenConfig, GenOutput, TreePolicy};
 use crate::kmer::{score, KmerTable};
+use crate::runtime::prefix_store::PrefixStore;
 use crate::runtime::{DraftSeq, ModelBackend, TokenTree, VerifySeq};
 use crate::sampling;
 use crate::tokenizer::EOS;
@@ -95,6 +117,8 @@ pub fn speculative_generate<D: ModelBackend, T: ModelBackend>(
 
     let mut dcache = draft.prefill(context)?;
     let mut tcache = target.prefill(context)?;
+    // cold solo run: both models prefill the first n-1 context tokens
+    out.prefill_tokens = 2 * (context.len() as u64 - 1);
     let mut draft_fed = context.len() - 1; // draft convention: all committed-but-unfed
     // target convention: exactly one unfed committed token before verify
 
@@ -314,6 +338,27 @@ pub trait AdmissionHook {
     }
 }
 
+/// Worker-resident prefix-reuse and admission-cost knobs for
+/// [`speculative_generate_continuous_with`]. Default = disabled: no
+/// stores, one-shot prefill at admission (the pre-prefix-store behavior).
+///
+/// The stores are `Rc<RefCell<_>>` because engines — and therefore
+/// lockstep groups — live on one worker thread (`GenEngine` is
+/// deliberately `!Send`); the coordinator-visible side of the store is the
+/// `Send + Sync` [`crate::runtime::Residency`] map the store publishes
+/// into.
+#[derive(Clone, Default)]
+pub struct PrefixParams {
+    /// Draft-model KV snapshot store (exact-context keys).
+    pub draft_store: Option<Rc<RefCell<PrefixStore>>>,
+    /// Target-model KV snapshot store.
+    pub target_store: Option<Rc<RefCell<PrefixStore>>>,
+    /// Max context tokens fed per model per lockstep round while a cold
+    /// admission prefills (0 = one-shot prefill at admission). Only
+    /// contexts longer than one chunk enter the chunked-prefill phase.
+    pub prefill_chunk: usize,
+}
+
 /// Generate sequences with continuous batching: an in-flight lockstep
 /// group that admits new compatible requests at every round boundary while
 /// finished sequences drop out (and are answered) mid-flight.
@@ -331,7 +376,22 @@ pub fn speculative_generate_continuous<D: ModelBackend, T: ModelBackend>(
     shape: LockstepShape,
     hook: &mut dyn AdmissionHook,
 ) {
-    let mut group = LockstepGroup::new(draft, target, shape);
+    speculative_generate_continuous_with(draft, target, shape, hook, PrefixParams::default())
+}
+
+/// [`speculative_generate_continuous`] with prefix-store reuse and chunked
+/// prefill admission ([`PrefixParams`]). Still-prefilling admissions count
+/// as active (the group keeps stepping to advance them) but join the
+/// shared dispatches only once fully fed, so the determinism contract
+/// above is unchanged.
+pub fn speculative_generate_continuous_with<D: ModelBackend, T: ModelBackend>(
+    draft: &D,
+    target: &T,
+    shape: LockstepShape,
+    hook: &mut dyn AdmissionHook,
+    params: PrefixParams,
+) {
+    let mut group = LockstepGroup::with_params(draft, target, shape, params);
     loop {
         let items = hook.admit(group.active());
         let none_admitted = items.is_empty();
@@ -407,36 +467,104 @@ impl<DC, TC> LockSeq<DC, TC> {
     }
 }
 
-/// Build one sequence's lockstep state (validation + both prefills); an
-/// error here fails only this item.
-#[allow(clippy::too_many_arguments)]
-fn init_seq<D: ModelBackend, T: ModelBackend>(
-    draft: &D,
-    target: &T,
+/// One model side's prefill progress for an admission in flight. `fed` is
+/// the context-prefill frontier (target: `context.len() - 1`); the
+/// sequence activates only when both sides reach it.
+struct PrefillProgress<C> {
+    cache: C,
+    /// Context positions prefilled so far.
+    fed: usize,
+    /// Prefill positions this admission actually *computed* (0 on a
+    /// snapshot hit) — summed into [`GenOutput::prefill_tokens`].
+    computed: u64,
+    /// Publish the finished KV back into the prefix store (set on a cold
+    /// chunked admission when a store is configured).
+    publish: bool,
+}
+
+/// A chunk-admitted request between admission and activation: it holds its
+/// half-prefilled caches and advances at most `prefill_chunk` tokens per
+/// model per round boundary (`LockstepGroup::advance_pending`) before
+/// becoming a resident `LockSeq`. Config validation already passed at
+/// admission; the RNG stream is not created until activation, so the
+/// eventual token stream is bitwise-identical to a cold solo run.
+struct PrefillState<DC, TC> {
     ticket: u64,
+    context: Vec<u8>,
+    cfg: GenConfig,
+    table: Option<Arc<KmerTable>>,
+    draft: PrefillProgress<DC>,
+    target: PrefillProgress<TC>,
+}
+
+/// Acquire one model side's prefilled cache for an admission, cheapest
+/// path first: (1) prefix-store **hit** — attach the snapshot
+/// copy-on-write (`prefill_into`, no forward); (2) cold + chunking
+/// enabled + context longer than one chunk + backend supports incremental
+/// prefill — start an empty cache to be fed across round boundaries;
+/// (3) one-shot prefill, publishing the snapshot to the store if present.
+fn acquire_prefill<B: ModelBackend>(
+    backend: &B,
+    store: &Option<Rc<RefCell<PrefixStore>>>,
     context: &[u8],
+    chunk: usize,
+) -> Result<PrefillProgress<B::Cache>> {
+    let n_feed = context.len() - 1;
+    if let Some(st) = store {
+        if let Some(snap) = st.borrow_mut().lookup(context) {
+            return Ok(PrefillProgress {
+                cache: backend.prefill_into(&snap)?,
+                fed: n_feed,
+                computed: 0,
+                publish: false,
+            });
+        }
+    }
+    if chunk > 0 && n_feed > chunk {
+        if let Some(cache) = backend.prefill_begin() {
+            return Ok(PrefillProgress { cache, fed: 0, computed: 0, publish: store.is_some() });
+        }
+    }
+    let cache = backend.prefill(context)?;
+    if let Some(st) = store {
+        let host = backend.cache_to_host(&cache)?;
+        st.borrow_mut().insert(context, Arc::new(host));
+    }
+    Ok(PrefillProgress { cache, fed: n_feed, computed: n_feed as u64, publish: false })
+}
+
+/// Build one sequence's lockstep state from already-prefilled caches.
+/// Validation happened at admission; this cannot fail.
+#[allow(clippy::too_many_arguments)]
+fn make_seq<DC, TC>(
+    ticket: u64,
+    context: Vec<u8>,
     cfg: &GenConfig,
     table: Option<Arc<KmerTable>>,
+    dcache: DC,
+    tcache: TC,
+    prefill_tokens: u64,
     c: usize,
     gamma: usize,
     model_cap: usize,
-) -> Result<LockSeq<D::Cache, T::Cache>> {
-    cfg.validate(context.len(), model_cap)?;
+) -> LockSeq<DC, TC> {
     let eff_max = cfg.max_len.min(model_cap);
     // same slack rule as the sequential loop: a full block must fit
     let hard_cap = model_cap - gamma;
-    Ok(LockSeq {
+    let context_len = context.len();
+    LockSeq {
         ticket,
-        dcache: draft.prefill(context)?,
-        tcache: target.prefill(context)?,
+        dcache,
+        tcache,
         rng: Pcg64::new(cfg.seed),
         out: GenOutput {
-            tokens: context.to_vec(),
-            context_len: context.len(),
+            tokens: context,
+            context_len,
+            prefill_tokens,
             ..Default::default()
         },
-        draft_fed: context.len() - 1,
-        target_fed: context.len() - 1,
+        draft_fed: context_len - 1,
+        target_fed: context_len - 1,
         temp: cfg.temp,
         top_p: cfg.top_p,
         eff_max,
@@ -449,7 +577,7 @@ fn init_seq<D: ModelBackend, T: ModelBackend>(
         feed: Vec::new(),
         u: Vec::with_capacity(c * gamma),
         vtoks: Vec::with_capacity(gamma + 1),
-    })
+    }
 }
 
 /// Explicit state machine of one in-flight lockstep group: resident
@@ -471,11 +599,24 @@ struct LockstepGroup<'m, D: ModelBackend, T: ModelBackend> {
     /// k-mer selection ranks and coupling walks.
     tree_paths: Vec<Vec<usize>>,
     seqs: Vec<LockSeq<D::Cache, T::Cache>>,
+    /// Chunk-admitted requests still prefilling: they count as active and
+    /// advance at each round boundary, but join dispatches only once fed.
+    pending: Vec<PrefillState<D::Cache, T::Cache>>,
+    params: PrefixParams,
     completed: Vec<(u64, Result<GenOutput>)>,
 }
 
 impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
     fn new(draft: &'m D, target: &'m T, shape: LockstepShape) -> Self {
+        LockstepGroup::with_params(draft, target, shape, PrefixParams::default())
+    }
+
+    fn with_params(
+        draft: &'m D,
+        target: &'m T,
+        shape: LockstepShape,
+        params: PrefixParams,
+    ) -> Self {
         let model_cap = target.maxlen().min(draft.maxlen());
         let (tree_parents, tree_paths) = if shape.tree.enabled() {
             let parents = shape.tree.build_parents(shape.c, shape.gamma);
@@ -494,30 +635,44 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
             tree_parents,
             tree_paths,
             seqs: Vec::new(),
+            pending: Vec::new(),
+            params,
             completed: Vec::new(),
         }
     }
 
+    /// Sequences the group still owes a completion for: resident decoders
+    /// plus chunk-admitted requests that are still prefilling (the driver
+    /// must keep stepping to advance those).
     fn active(&self) -> usize {
-        self.seqs.len()
+        self.seqs.len() + self.pending.len()
     }
 
     fn drain_completed(&mut self) -> Vec<(u64, Result<GenOutput>)> {
         std::mem::take(&mut self.completed)
     }
 
-    /// Tickets of the resident (still-decoding) sequences, slot order.
+    /// Tickets of the resident (still-decoding) sequences in slot order,
+    /// then the still-prefilling admissions in arrival order.
     fn tickets(&self) -> Vec<u64> {
-        self.seqs.iter().map(|s| s.ticket).collect()
+        self.seqs
+            .iter()
+            .map(|s| s.ticket)
+            .chain(self.pending.iter().map(|p| p.ticket))
+            .collect()
     }
 
-    /// Retire one resident sequence mid-group with an error, through the
-    /// same completion queue as natural (EOS / length) retirement. Unknown
-    /// tickets are ignored — the sequence may have finished this round.
+    /// Retire one resident or still-prefilling sequence mid-group with an
+    /// error, through the same completion queue as natural (EOS / length)
+    /// retirement. Unknown tickets are ignored — the sequence may have
+    /// finished this round.
     fn cancel(&mut self, ticket: u64, err: anyhow::Error) {
         if let Some(i) = self.seqs.iter().position(|s| s.ticket == ticket) {
             let seq = self.seqs.remove(i);
             self.completed.push((seq.ticket, Err(err)));
+        } else if let Some(i) = self.pending.iter().position(|p| p.ticket == ticket) {
+            let st = self.pending.remove(i);
+            self.completed.push((st.ticket, Err(err)));
         }
     }
 
@@ -552,6 +707,23 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
                 ));
             }
         }
+        for p in &self.pending {
+            if !seen.insert(p.ticket) {
+                return Err(format!(
+                    "LockstepGroup slot liveness invariant broken (double-freed slot): \
+                     ticket {} is both prefilling and resident",
+                    p.ticket
+                ));
+            }
+            let n_feed = p.context.len() - 1;
+            if p.draft.fed > n_feed || p.target.fed > n_feed {
+                return Err(format!(
+                    "LockstepGroup prefill frontier invariant broken: ticket {} has \
+                     draft fed {} / target fed {} beyond its {} context-prefill tokens",
+                    p.ticket, p.draft.fed, p.target.fed, n_feed
+                ));
+            }
+        }
         for (ticket, _) in &self.completed {
             if seen.contains(ticket) {
                 return Err(format!(
@@ -559,6 +731,12 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
                      ticket {ticket} is both resident and completed"
                 ));
             }
+        }
+        if let Some(st) = &self.params.draft_store {
+            st.borrow().debug_validate().map_err(|e| format!("draft prefix store: {e}"))?;
+        }
+        if let Some(st) = &self.params.target_store {
+            st.borrow().debug_validate().map_err(|e| format!("target prefix store: {e}"))?;
         }
         for (i, p) in self.tree_parents.iter().enumerate() {
             if let Some(p) = *p {
@@ -621,21 +799,136 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
             ));
             return;
         }
-        let init = init_seq(
-            self.draft,
-            self.target,
-            item.ticket,
-            &item.context,
-            &item.cfg,
-            item.table,
+        if let Err(e) = item.cfg.validate(item.context.len(), self.model_cap) {
+            self.completed.push((item.ticket, Err(e)));
+            return;
+        }
+        let chunk = self.params.prefill_chunk;
+        let draft =
+            match acquire_prefill(self.draft, &self.params.draft_store, &item.context, chunk) {
+                Ok(p) => p,
+                Err(e) => {
+                    self.completed.push((item.ticket, Err(e)));
+                    return;
+                }
+            };
+        let target =
+            match acquire_prefill(self.target, &self.params.target_store, &item.context, chunk) {
+                Ok(p) => p,
+                Err(e) => {
+                    self.completed.push((item.ticket, Err(e)));
+                    return;
+                }
+            };
+        let n_feed = item.context.len() - 1;
+        let st = PrefillState {
+            ticket: item.ticket,
+            context: item.context,
+            cfg: item.cfg,
+            table: item.table,
+            draft,
+            target,
+        };
+        if st.draft.fed == n_feed && st.target.fed == n_feed {
+            self.activate(st);
+        } else {
+            self.pending.push(st);
+        }
+    }
+
+    /// Promote a fully-prefilled admission to a resident sequence. The RNG
+    /// stream starts here — exactly where a cold solo run would start it.
+    fn activate(&mut self, st: PrefillState<D::Cache, T::Cache>) {
+        let prefill_tokens = st.draft.computed + st.target.computed;
+        let s = make_seq(
+            st.ticket,
+            st.context,
+            &st.cfg,
+            st.table,
+            st.draft.cache,
+            st.target.cache,
+            prefill_tokens,
             self.shape.c,
             self.shape.gamma,
             self.model_cap,
         );
-        match init {
-            Ok(s) if s.finished() => self.completed.push((s.ticket, Ok(s.out))),
-            Ok(s) => self.seqs.push(s),
-            Err(e) => self.completed.push((item.ticket, Err(e))),
+        if s.finished() {
+            self.completed.push((s.ticket, Ok(s.out)));
+        } else {
+            self.seqs.push(s);
+        }
+    }
+
+    /// Advance every still-prefilling admission by at most one chunk per
+    /// model, activating the ones that finish (publishing their KV snapshot
+    /// to the prefix store first, so the *next* same-context admission is a
+    /// copy-on-write hit). A failed chunk fails only its own ticket.
+    fn advance_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let chunk = self.params.prefill_chunk.max(1);
+        let mut i = 0;
+        while i < self.pending.len() {
+            let mut failed: Option<anyhow::Error> = None;
+            {
+                let st = &mut self.pending[i];
+                let n_feed = st.context.len() - 1;
+                if st.draft.fed < n_feed {
+                    let end = (st.draft.fed + chunk).min(n_feed);
+                    match self.draft.prefill_chunked(
+                        &mut st.draft.cache,
+                        &st.context[st.draft.fed..end],
+                        st.draft.fed,
+                    ) {
+                        Ok(()) => {
+                            st.draft.computed += (end - st.draft.fed) as u64;
+                            st.draft.fed = end;
+                        }
+                        Err(e) => failed = Some(e),
+                    }
+                }
+                if failed.is_none() && st.target.fed < n_feed {
+                    let end = (st.target.fed + chunk).min(n_feed);
+                    match self.target.prefill_chunked(
+                        &mut st.target.cache,
+                        &st.context[st.target.fed..end],
+                        st.target.fed,
+                    ) {
+                        Ok(()) => {
+                            st.target.computed += (end - st.target.fed) as u64;
+                            st.target.fed = end;
+                        }
+                        Err(e) => failed = Some(e),
+                    }
+                }
+            }
+            if let Some(e) = failed {
+                let st = self.pending.remove(i);
+                self.completed.push((st.ticket, Err(e)));
+                continue;
+            }
+            let n_feed = self.pending[i].context.len() - 1;
+            if self.pending[i].draft.fed == n_feed && self.pending[i].target.fed == n_feed {
+                let st = self.pending.remove(i);
+                if st.draft.publish {
+                    if let Some(store) = &self.params.draft_store {
+                        if let Ok(host) = self.draft.cache_to_host(&st.draft.cache) {
+                            store.borrow_mut().insert(&st.context, Arc::new(host));
+                        }
+                    }
+                }
+                if st.target.publish {
+                    if let Some(store) = &self.params.target_store {
+                        if let Ok(host) = self.target.cache_to_host(&st.target.cache) {
+                            store.borrow_mut().insert(&st.context, Arc::new(host));
+                        }
+                    }
+                }
+                self.activate(st);
+                continue;
+            }
+            i += 1;
         }
     }
 
@@ -649,6 +942,12 @@ impl<'m, D: ModelBackend, T: ModelBackend> LockstepGroup<'m, D, T> {
             if let Err(e) = self.debug_validate() {
                 panic!("SPECMER_VALIDATE: LockstepGroup invariant violated: {e}");
             }
+        }
+        // chunk-admitted requests advance their prefill at the boundary;
+        // fully-fed ones activate and join this very round's dispatches
+        self.advance_pending();
+        if self.seqs.is_empty() {
+            return; // nothing resident yet (pending may still be prefilling)
         }
         if self.shape.tree.enabled() {
             self.step_round_tree();
@@ -1593,5 +1892,133 @@ mod tests {
         group.tree_paths[0].reverse();
         let err = group.debug_validate().unwrap_err();
         assert!(err.contains("tree path table"), "got: {err}");
+    }
+
+    // ---- prefix-store reuse & chunked-prefill admission ------------------
+
+    fn prefix_params(cap_bytes: usize, chunk: usize) -> PrefixParams {
+        PrefixParams {
+            draft_store: Some(Rc::new(RefCell::new(PrefixStore::new(cap_bytes)))),
+            target_store: Some(Rc::new(RefCell::new(PrefixStore::new(cap_bytes)))),
+            prefill_chunk: chunk,
+        }
+    }
+
+    #[test]
+    fn warm_admission_attaches_snapshot_and_matches_cold_solo() {
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        let ctx: &[u8] = &[BOS, 5, 9, 13, 5];
+        let cfgs = [cfg(2, 5, 3), cfg(2, 5, 17)];
+        let params = prefix_params(8 << 20, 0);
+        let target_store = params.target_store.clone().unwrap();
+        let mut hook = Scripted {
+            pending: cfgs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let item = AdmitItem {
+                        ticket: i as u64,
+                        context: ctx.to_vec(),
+                        cfg: c.clone(),
+                        table: None,
+                    };
+                    (i, item)
+                })
+                .collect(),
+            boundary: 0,
+            done: Vec::new(),
+        };
+        let shape = LockstepShape::of(&cfgs[0]);
+        speculative_generate_continuous_with(&d, &t, shape, &mut hook, params);
+        assert_eq!(hook.done.len(), 2);
+        hook.done.sort_by_key(|(t, _)| *t);
+        let n_feed = (ctx.len() - 1) as u64;
+        for (i, (_, got)) in hook.done.iter().enumerate() {
+            let got = got.as_ref().unwrap();
+            let want = speculative_generate(&d, &t, None, ctx, &cfgs[i]).unwrap();
+            assert_eq!(got.tokens, want.tokens, "seq {i} diverged from its cold solo run");
+            // first admission prefilled both models cold; the second attached
+            // both snapshots copy-on-write and computed nothing
+            let expect = if i == 0 { 2 * n_feed } else { 0 };
+            assert_eq!(got.prefill_tokens, expect, "seq {i} prefill accounting");
+        }
+        let st = target_store.borrow().stats();
+        assert_eq!((st.hits, st.misses), (1, 1), "one cold insert, one warm attach");
+    }
+
+    #[test]
+    fn chunk_admitted_sequence_matches_cold_solo() {
+        let d = CpuModel::synthetic(2, 16, 2, 64, 7);
+        let t = CpuModel::synthetic(2, 16, 2, 64, 8);
+        // long context: 11 feed tokens at chunk 3 spans 4 round boundaries
+        let ctx: Vec<u8> = vec![BOS, 5, 9, 13, 4, 8, 15, 6, 10, 3, 12, 7];
+        let cfgs = [cfg(2, 5, 3), cfg(2, 5, 17)];
+        let params = prefix_params(8 << 20, 3);
+        let target_store = params.target_store.clone().unwrap();
+        let mk = |ticket: u64, c: &GenConfig| AdmitItem {
+            ticket,
+            context: ctx.clone(),
+            cfg: c.clone(),
+            table: None,
+        };
+        let mut hook = Scripted {
+            // ticket 0 at boundary 0: cold — chunk-prefills, then publishes
+            // its KV; ticket 1 at boundary 4 (after the publish): a
+            // copy-on-write hit
+            pending: vec![(0, mk(0, &cfgs[0])), (4, mk(1, &cfgs[1]))],
+            boundary: 0,
+            done: Vec::new(),
+        };
+        let shape = LockstepShape::of(&cfgs[0]);
+        speculative_generate_continuous_with(&d, &t, shape, &mut hook, params);
+        assert_eq!(hook.done.len(), 2);
+        hook.done.sort_by_key(|(t, _)| *t);
+        let n_feed = (ctx.len() - 1) as u64;
+        for (i, (_, got)) in hook.done.iter().enumerate() {
+            let got = got.as_ref().unwrap();
+            let want = speculative_generate(&d, &t, None, &ctx, &cfgs[i]).unwrap();
+            assert_eq!(got.tokens, want.tokens, "seq {i} diverged from its one-shot solo run");
+        }
+        assert_eq!(hook.done[0].1.as_ref().unwrap().prefill_tokens, 2 * n_feed);
+        assert_eq!(hook.done[1].1.as_ref().unwrap().prefill_tokens, 0);
+        let st = target_store.borrow().stats();
+        assert_eq!((st.hits, st.misses), (1, 1), "chunked publish must enable the warm hit");
+    }
+
+    #[test]
+    fn lockstep_validator_trips_on_prefill_corruption() {
+        let (d, t) = models();
+        let c = cfg(2, 3, 5);
+        let ctx: Vec<u8> = vec![BOS, 5, 9, 13, 4, 8, 15, 6, 10, 3, 12, 7];
+        let mut group =
+            LockstepGroup::with_params(&d, &t, LockstepShape::of(&c), prefix_params(1 << 20, 2));
+        group.admit(AdmitItem { ticket: 1, context: ctx.clone(), cfg: c.clone(), table: None });
+        // long context + chunking: the admission is pending, and counts active
+        assert_eq!(group.pending.len(), 1);
+        assert!(group.seqs.is_empty());
+        assert_eq!(group.active(), 1);
+        assert_eq!(group.tickets(), vec![1]);
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: prefill frontier beyond the context's feed span
+        let saved = group.pending[0].draft.fed;
+        group.pending[0].draft.fed = ctx.len();
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("prefill frontier"), "got: {err}");
+        group.pending[0].draft.fed = saved;
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // corrupt: one ticket admitted into the prefilling phase twice
+        group.admit(AdmitItem { ticket: 1, context: ctx.clone(), cfg: c.clone(), table: None });
+        let err = group.debug_validate().unwrap_err();
+        assert!(err.contains("double-freed"), "got: {err}");
+        group.pending.pop();
+        assert_eq!(group.debug_validate(), Ok(()));
+
+        // cancelling a still-prefilling ticket retires it through completion
+        group.cancel(1, anyhow::anyhow!("deadline"));
+        assert_eq!(group.active(), 0);
+        assert_eq!(group.drain_completed().len(), 1);
     }
 }

@@ -24,6 +24,7 @@ const USAGE: &str = "usage: specmer <generate|serve|score|exp|families|info> [fl
            [--temp 1.0] [--top-p 0.95] [--k 1,3] [--seed 0] [--out file.fa]
   serve    [--port 7878] [--workers 1] [--max-batch 8] [--max-wait-ms 5]
            [--queue-cap 256] [--max-inflight 0] [--timeout-ms 0]
+           [--prefix-cache-mb 32] [--prefill-chunk 0]
   score    --fasta file.fa
   exp      <table1..table10|fig1c|fig2a|fig2b|fig3|figs_sweep|bounds|msadepth|all>
            [--n 20] [--full] [--proteins GFP,GB1] [--results DIR]
@@ -123,6 +124,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
         queue_capacity: cfg.queue_cap,
         fault: specmer::coordinator::FaultPlan::from_env(),
+        prefix_cache_mb: cfg.prefix_cache_mb,
+        prefill_chunk: cfg.prefill_chunk,
     };
     let sched = Arc::new(Scheduler::start_with(cfg.workers, opts, factory, Arc::clone(&metrics)));
     let router = Arc::new(Router::new(sched, registry).with_max_inflight(cfg.max_inflight));

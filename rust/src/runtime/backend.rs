@@ -388,6 +388,33 @@ pub trait ModelBackend {
     /// prefill cache) and restore it. Round-trip must be exact.
     fn cache_to_host(&self, cache: &Self::Cache) -> Result<Vec<f32>>;
     fn cache_from_host(&self, data: &[f32]) -> Result<Self::Cache>;
+
+    /// An empty cache suitable for incremental (chunked) prefill via
+    /// [`Self::prefill_chunked`], or `None` if the backend only supports
+    /// one-shot [`Self::prefill`] (the default — HLO keeps working and the
+    /// admission machinery falls back to one-shot prefill).
+    fn prefill_begin(&self) -> Option<Self::Cache> {
+        None
+    }
+
+    /// Feed `toks` at absolute positions `pos..pos+toks.len()` into a cache
+    /// produced by [`Self::prefill_begin`]. Splitting a prefill into chunks
+    /// must be bit-identical to one-shot `prefill` over the concatenation
+    /// (the CPU kernels are row-count-independent, so this holds by
+    /// construction there). Callers feed the first n−1 context tokens in
+    /// total, matching the `prefill` convention.
+    fn prefill_chunked(&self, cache: &mut Self::Cache, toks: &[u8], pos: usize) -> Result<()> {
+        let _ = (cache, toks, pos);
+        Err(anyhow::anyhow!("chunked prefill not supported by this backend"))
+    }
+
+    /// Attach a shared host KV snapshot (a `runtime::prefix_store` hit) as
+    /// a new sequence's committed prefix. The default materializes a copy
+    /// via [`Self::cache_from_host`]; backends with copy-on-write caches
+    /// override this to share the snapshot until the first decode write.
+    fn prefill_into(&self, host: &std::sync::Arc<Vec<f32>>) -> Result<Self::Cache> {
+        self.cache_from_host(host)
+    }
 }
 
 #[cfg(test)]

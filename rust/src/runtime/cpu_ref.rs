@@ -160,9 +160,93 @@ pub struct CpuModel {
     pool: BufPool,
 }
 
+/// Copy-on-write float buffer backing [`CpuCache`].
+///
+/// A cache attached from a `runtime::prefix_store` snapshot *shares* the
+/// snapshot (`Arc`) until the first mutable access; reads go through
+/// `Deref` with zero copies, and the first `DerefMut` detaches by cloning
+/// the shared floats into owned storage. Owned buffers (the cold-path
+/// default) pay only an `Option` check. Deliberately **not** `Clone`:
+/// `buf.clone()` method-resolves through `Deref` to `Vec<f32>::clone`, so
+/// existing `cache.data.clone()` call sites keep yielding host floats.
+pub struct CowBuf {
+    shared: Option<std::sync::Arc<Vec<f32>>>,
+    owned: Vec<f32>,
+}
+
+impl CowBuf {
+    fn owned(v: Vec<f32>) -> CowBuf {
+        CowBuf { shared: None, owned: v }
+    }
+
+    fn attached(a: std::sync::Arc<Vec<f32>>) -> CowBuf {
+        CowBuf { shared: Some(a), owned: Vec::new() }
+    }
+
+    /// Still sharing the attached snapshot (no write has detached it)?
+    pub fn is_shared(&self) -> bool {
+        self.shared.is_some()
+    }
+}
+
+impl std::ops::Deref for CowBuf {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        match &self.shared {
+            Some(a) => a,
+            None => &self.owned,
+        }
+    }
+}
+
+impl std::ops::DerefMut for CowBuf {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        if let Some(a) = self.shared.take() {
+            // detach: first write after attach copies the snapshot
+            self.owned = a.as_ref().clone();
+        }
+        &mut self.owned
+    }
+}
+
+impl PartialEq for CowBuf {
+    fn eq(&self, o: &CowBuf) -> bool {
+        **self == **o
+    }
+}
+
+impl std::fmt::Debug for CowBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CowBuf")
+            .field("shared", &self.shared.is_some())
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+impl<'a> IntoIterator for &'a CowBuf {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        (**self).iter()
+    }
+}
+
 /// KV cache: flat [L, 2, H, S, Dh], identical layout to the HLO programs.
+/// The buffer is copy-on-write so a prefix-store hit can attach a shared
+/// committed prefix without copying it (see [`CowBuf`]).
 pub struct CpuCache {
-    pub data: Vec<f32>,
+    pub data: CowBuf,
+}
+
+impl CpuCache {
+    pub fn owned(data: Vec<f32>) -> CpuCache {
+        CpuCache { data: CowBuf::owned(data) }
+    }
+
+    pub fn attached(snapshot: std::sync::Arc<Vec<f32>>) -> CpuCache {
+        CpuCache { data: CowBuf::attached(snapshot) }
+    }
 }
 
 /// Branched KV state for one batched draft round: every candidate reads the
@@ -894,7 +978,7 @@ impl CpuModel {
     }
 
     pub fn empty_cache(&self) -> CpuCache {
-        CpuCache { data: vec![0.0; self.dims.cache_len()] }
+        CpuCache::owned(vec![0.0; self.dims.cache_len()])
     }
 
     #[inline]
@@ -1988,7 +2072,31 @@ impl ModelBackend for CpuModel {
     }
 
     fn cache_from_host(&self, data: &[f32]) -> Result<CpuCache> {
-        Ok(CpuCache { data: data.to_vec() })
+        Ok(CpuCache::owned(data.to_vec()))
+    }
+
+    fn prefill_begin(&self) -> Option<CpuCache> {
+        Some(self.empty_cache())
+    }
+
+    fn prefill_chunked(&self, cache: &mut CpuCache, toks: &[u8], pos: usize) -> Result<()> {
+        // the kernels are row-count-independent, so feeding a prefill in
+        // chunks is bit-identical to the one-shot forward (pinned below)
+        if !toks.is_empty() {
+            self.cached_forward(cache, toks, pos);
+        }
+        Ok(())
+    }
+
+    fn prefill_into(&self, host: &std::sync::Arc<Vec<f32>>) -> Result<CpuCache> {
+        if host.len() != self.dims.cache_len() {
+            anyhow::bail!(
+                "prefill_into: snapshot of {} floats does not fit cache of {}",
+                host.len(),
+                self.dims.cache_len()
+            );
+        }
+        Ok(CpuCache::attached(std::sync::Arc::clone(host)))
     }
 
     fn embed(&self, tokens: &[u8]) -> Result<Vec<f32>> {
@@ -2188,7 +2296,7 @@ pub mod reference {
         let mut dists: Vec<Vec<Vec<f32>>> = (0..c).map(|_| Vec::with_capacity(gamma)).collect();
         for ci in 0..c {
             // each candidate branches from the committed cache (full clone)
-            let mut cc = CpuCache { data: cache.data.clone() };
+            let mut cc = CpuCache::owned(cache.data.clone());
             let mut lg = last_logits.clone();
             for gi in 0..gamma {
                 let dist = sampling::adjust_dist(&lg, temp, top_p);
@@ -2608,7 +2716,7 @@ mod tests {
     // asserts debug_validate trips with a message naming that invariant ----
 
     fn fresh_cache(m: &CpuModel) -> CpuCache {
-        CpuCache { data: vec![0.0; m.dims.cache_len()] }
+        CpuCache::owned(vec![0.0; m.dims.cache_len()])
     }
 
     #[test]
@@ -2687,5 +2795,57 @@ mod tests {
         let ar = BranchedArena::new(&m, bases, 1, 3, m.pool.take());
         let err = ar.debug_validate(&m.dims).unwrap_err();
         assert!(err.contains("KV row accounting"), "got: {err}");
+    }
+
+    // ---- chunked prefill and copy-on-write snapshot attach ----
+
+    #[test]
+    fn chunked_prefill_bitwise_matches_one_shot() {
+        let m = tiny();
+        let ctx: Vec<u8> = vec![1, 5, 9, 13, 6, 7, 8, 9, 10, 11];
+        let one_shot = m.prefill(&ctx).unwrap();
+        // feed the first n-1 tokens in ragged chunks at round boundaries
+        for chunk in [1usize, 2, 3, 7] {
+            let mut cache = m.prefill_begin().expect("cpu backend chunks");
+            let feed = &ctx[..ctx.len() - 1];
+            let mut pos = 0;
+            while pos < feed.len() {
+                let end = (pos + chunk).min(feed.len());
+                m.prefill_chunked(&mut cache, &feed[pos..end], pos).unwrap();
+                pos = end;
+            }
+            assert_eq!(
+                cache.data, one_shot.data,
+                "chunk={chunk}: chunked prefill must be bit-identical to one-shot"
+            );
+        }
+    }
+
+    #[test]
+    fn attached_snapshot_shares_until_first_write() {
+        use std::sync::Arc;
+        let m = tiny();
+        let ctx: Vec<u8> = vec![1, 5, 9, 13];
+        let cold = m.prefill(&ctx).unwrap();
+        let snap = Arc::new(m.cache_to_host(&cold).unwrap());
+        let mut warm = m.prefill_into(&snap).unwrap();
+        assert!(warm.data.is_shared(), "attach must not copy");
+        assert_eq!(warm.data, cold.data, "attached bits equal the cold prefill");
+        // decode writes detach and never touch the snapshot
+        let u: Vec<f32> = (0..4).map(|i| (i as f32 * 0.17 + 0.03) % 1.0).collect();
+        let a = m.generate(&mut warm, &[13], 3, 2, 2, &u, 1.0, 0.95).unwrap();
+        assert!(!warm.data.is_shared(), "first write detaches");
+        let mut solo = m.prefill(&ctx).unwrap();
+        let b = m.generate(&mut solo, &[13], 3, 2, 2, &u, 1.0, 0.95).unwrap();
+        assert_eq!(a.tokens, b.tokens, "warm-attached draft diverged from cold");
+        assert_eq!(warm.data, solo.data, "post-write caches diverged");
+        assert_eq!(
+            *snap,
+            m.cache_to_host(&cold).unwrap(),
+            "snapshot must be untouched by the detached writer"
+        );
+        // oversized/undersized snapshots are refused
+        let bad = Arc::new(vec![0.0f32; 3]);
+        assert!(m.prefill_into(&bad).is_err());
     }
 }

@@ -116,6 +116,17 @@
 //! with the flat path, so results stay bitwise identical
 //! (`tests/tree_speculation.rs` pins this; backends without a native tree
 //! implementation inherit defaults that linearize to the flat calls).
+//!
+//! ## Shared-prefix KV reuse (`prefix_store`)
+//!
+//! Admissions whose context was already prefilled on this worker skip the
+//! prefill forward entirely: [`prefix_store::PrefixStore`] caches host KV
+//! snapshots per context (bounded, logical-clock LRU, exact-match keys),
+//! and `ModelBackend::prefill_into` attaches a snapshot copy-on-write as a
+//! new sequence's committed prefix. Cold long contexts instead chunk their
+//! residual prefill across lockstep round boundaries via
+//! `ModelBackend::prefill_chunked` (see `decode::spec`'s admission state
+//! machine), so neither path stalls resident batchmates.
 
 pub mod backend;
 pub mod client;
@@ -123,6 +134,7 @@ pub mod cpu_ref;
 pub mod gemm;
 pub mod hlo;
 pub mod prefill_cache;
+pub mod prefix_store;
 pub mod simd;
 
 pub use backend::{
@@ -132,3 +144,4 @@ pub use backend::{
 pub use client::Runtime;
 pub use cpu_ref::CpuModel;
 pub use hlo::{HloKmerScorer, HloModel};
+pub use prefix_store::{context_key, PrefixStats, PrefixStore, Residency};

@@ -6,6 +6,13 @@
 //! request. This adapter wraps any [`ModelBackend`] and memoizes prefill
 //! results by context, restoring snapshots via the cache host round-trip.
 //! Everything else delegates.
+//!
+//! The memo is **bounded** (default [`DEFAULT_MEMO_CAP`] contexts) with
+//! deterministic insertion-order (FIFO) eviction — the spirit of lint rule
+//! 6: a long-lived process serving unbounded distinct contexts must not
+//! grow without limit. The worker-resident `runtime::prefix_store` is the
+//! byte-budgeted, LRU, residency-publishing sibling on the admission path;
+//! this adapter stays the simple per-backend memo underneath it.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -17,20 +24,37 @@ use super::backend::{
     VerifyTreeBlock,
 };
 
+/// Default memo capacity in distinct contexts. Serving workloads see a
+/// handful of family contexts per worker; 32 covers them with room while
+/// bounding a pathological stream of distinct contexts.
+pub const DEFAULT_MEMO_CAP: usize = 32;
+
 pub struct PrefillCached<B: ModelBackend> {
     inner: B,
     memo: RefCell<BTreeMap<Vec<u8>, Vec<f32>>>,
+    /// Insertion order of live memo keys (oldest first) — FIFO eviction.
+    order: RefCell<Vec<Vec<u8>>>,
+    cap: usize,
     pub hits: RefCell<u64>,
     pub misses: RefCell<u64>,
+    pub evictions: RefCell<u64>,
 }
 
 impl<B: ModelBackend> PrefillCached<B> {
     pub fn new(inner: B) -> Self {
+        PrefillCached::with_capacity(inner, DEFAULT_MEMO_CAP)
+    }
+
+    /// A memo bounded to `cap` distinct contexts (0 disables memoization).
+    pub fn with_capacity(inner: B, cap: usize) -> Self {
         PrefillCached {
             inner,
             memo: RefCell::new(BTreeMap::new()),
+            order: RefCell::new(Vec::new()),
+            cap,
             hits: RefCell::new(0),
             misses: RefCell::new(0),
+            evictions: RefCell::new(0),
         }
     }
 
@@ -62,8 +86,20 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
         }
         *self.misses.borrow_mut() += 1;
         let cache = self.inner.prefill(tokens)?;
+        if self.cap == 0 {
+            return Ok(cache);
+        }
         let host = self.inner.cache_to_host(&cache)?;
-        self.memo.borrow_mut().insert(tokens.to_vec(), host);
+        let mut memo = self.memo.borrow_mut();
+        let mut order = self.order.borrow_mut();
+        while memo.len() >= self.cap {
+            // deterministic FIFO: the oldest-inserted context goes first
+            let oldest = order.remove(0);
+            memo.remove(&oldest);
+            *self.evictions.borrow_mut() += 1;
+        }
+        memo.insert(tokens.to_vec(), host);
+        order.push(tokens.to_vec());
         Ok(cache)
     }
 
@@ -149,6 +185,21 @@ impl<B: ModelBackend> ModelBackend for PrefillCached<B> {
     fn cache_from_host(&self, data: &[f32]) -> Result<Self::Cache> {
         self.inner.cache_from_host(data)
     }
+
+    // forward the prefix-store admission hooks so chunked prefill and
+    // copy-on-write snapshot attach reach the inner backend (the trait
+    // defaults would report "unsupported" / materialize a copy)
+    fn prefill_begin(&self) -> Option<Self::Cache> {
+        self.inner.prefill_begin()
+    }
+
+    fn prefill_chunked(&self, cache: &mut Self::Cache, toks: &[u8], pos: usize) -> Result<()> {
+        self.inner.prefill_chunked(cache, toks, pos)
+    }
+
+    fn prefill_into(&self, host: &std::sync::Arc<Vec<f32>>) -> Result<Self::Cache> {
+        self.inner.prefill_into(host)
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +219,38 @@ mod tests {
         // different context misses
         let _ = m.prefill(&[1u8, 5]).unwrap();
         assert_eq!(*m.misses.borrow(), 2);
+    }
+
+    #[test]
+    fn memo_is_bounded_with_fifo_eviction() {
+        let m = PrefillCached::with_capacity(CpuModel::synthetic(2, 16, 2, 32, 3), 2);
+        let a = vec![1u8, 5];
+        let b = vec![1u8, 9];
+        let c = vec![1u8, 13];
+        m.prefill(&a).unwrap();
+        m.prefill(&b).unwrap();
+        // re-prefill `a` — a hit, but FIFO order is insertion, not use
+        m.prefill(&a).unwrap();
+        assert_eq!(*m.evictions.borrow(), 0);
+        // third distinct context evicts the oldest-inserted (`a`)
+        m.prefill(&c).unwrap();
+        assert_eq!(*m.evictions.borrow(), 1);
+        assert_eq!(*m.hits.borrow(), 1);
+        m.prefill(&a).unwrap(); // miss again: was evicted
+        assert_eq!(*m.misses.borrow(), 4);
+        m.prefill(&c).unwrap(); // still resident
+        assert_eq!(*m.hits.borrow(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_memoization() {
+        let m = PrefillCached::with_capacity(CpuModel::synthetic(2, 16, 2, 32, 3), 0);
+        let ctx = vec![1u8, 5, 9];
+        let a = m.prefill(&ctx).unwrap();
+        let b = m.prefill(&ctx).unwrap();
+        assert_eq!(*m.hits.borrow(), 0);
+        assert_eq!(*m.misses.borrow(), 2);
+        assert_eq!(a.data, b.data, "uncached prefills still agree bitwise");
     }
 
     #[test]

@@ -1,0 +1,381 @@
+//! Worker-resident shared-prefix KV store with copy-on-write reuse.
+//!
+//! Protein-screening traffic is dominated by requests sharing an *identical
+//! per-family context* (one wild-type prefix per protein), yet a cold
+//! admission re-runs a full prefill — the most expensive single dispatch of
+//! a request. This module caches prefilled family-context KV **per worker,
+//! per model**, keyed on an exact hash of the context tokens:
+//!
+//! - [`PrefixStore`] — a bounded map from `context_key(tokens)` to a host
+//!   KV snapshot (`Arc<Vec<f32>>`). A hit hands the `Arc` straight to
+//!   `ModelBackend::prefill_into`, which attaches it copy-on-write as the
+//!   sequence's committed prefix (no clone until the first decode write).
+//!   Eviction is deterministic: least-recently-used by a *logical clock*
+//!   bumped per lookup/insert — never wall-clock — so replays are exact.
+//! - [`Residency`] — a thread-safe map of which workers currently hold
+//!   which context keys, published by the stores and read by the router's
+//!   soft family-affinity placement (`coordinator::router`).
+//! - [`PrefixStats`] — hit/miss/eviction/byte counters exported through
+//!   `/metrics` as `specmer_prefix_cache_*`.
+//!
+//! Determinism contract: the store's behaviour is a pure function of the
+//! sequence of `lookup`/`insert` calls. Keys are exact — a hash collision
+//! is resolved by comparing the stored context tokens, so a hit never
+//! attaches the wrong family's KV. `debug_validate` (the
+//! `SPECMER_VALIDATE=1` family) re-derives byte accounting, key integrity,
+//! and capacity from first principles.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+/// Exact-prefix cache key: FNV-1a over the raw context token bytes.
+///
+/// Stable across processes (no `RandomState`), cheap, and public so the
+/// router can compute the same key from a family's context when steering
+/// requests toward workers that already hold it.
+pub fn context_key(context: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in context {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Counters a [`PrefixStore`] exposes for `/metrics` and the benches.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes currently resident (gauge, not a counter).
+    pub bytes: u64,
+    /// Entries currently resident (gauge).
+    pub entries: u64,
+}
+
+impl PrefixStats {
+    /// Combine per-store stats (e.g. a worker's draft + target stores).
+    pub fn merge(self, o: PrefixStats) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits + o.hits,
+            misses: self.misses + o.misses,
+            evictions: self.evictions + o.evictions,
+            bytes: self.bytes + o.bytes,
+            entries: self.entries + o.entries,
+        }
+    }
+}
+
+/// Which workers hold which context keys — the router's affinity signal.
+///
+/// Shared across worker threads (the stores themselves are worker-local
+/// and single-threaded); publishes are best-effort hints, never load
+/// bearing for correctness: a stale holder just costs one cold prefill.
+#[derive(Default)]
+pub struct Residency {
+    map: Mutex<BTreeMap<u64, BTreeSet<usize>>>,
+}
+
+impl Residency {
+    pub fn new() -> Residency {
+        Residency::default()
+    }
+
+    /// Record that `worker` now holds `key` in its prefix store.
+    pub fn publish(&self, key: u64, worker: usize) {
+        // PANIC-OK: mutex poisoning only follows a panic elsewhere
+        self.map.lock().unwrap().entry(key).or_default().insert(worker);
+    }
+
+    /// Record that `worker` evicted `key`.
+    pub fn retract(&self, key: u64, worker: usize) {
+        // PANIC-OK: mutex poisoning only follows a panic elsewhere
+        let mut m = self.map.lock().unwrap();
+        if let Some(set) = m.get_mut(&key) {
+            set.remove(&worker);
+            if set.is_empty() {
+                m.remove(&key);
+            }
+        }
+    }
+
+    /// Workers currently holding `key`, in ascending id order.
+    pub fn holders(&self, key: u64) -> Vec<usize> {
+        // PANIC-OK: mutex poisoning only follows a panic elsewhere
+        self.map
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+}
+
+struct Entry {
+    /// Exact context tokens — hash collisions compare against this.
+    context: Vec<u8>,
+    /// Host KV snapshot, shared into sequences copy-on-write.
+    kv: Arc<Vec<f32>>,
+    bytes: u64,
+    /// Logical-clock stamp of the last hit/insert (LRU order).
+    last_used: u64,
+}
+
+/// Bounded, deterministic cache of prefilled context KV snapshots.
+pub struct PrefixStore {
+    entries: BTreeMap<u64, Entry>,
+    cap_bytes: u64,
+    used_bytes: u64,
+    /// Logical clock: bumped per lookup-hit/insert; drives LRU eviction.
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    /// Publish/retract target: (shared residency map, this worker's id).
+    residency: Option<(Arc<Residency>, usize)>,
+}
+
+impl PrefixStore {
+    pub fn new(cap_bytes: usize) -> PrefixStore {
+        PrefixStore {
+            entries: BTreeMap::new(),
+            cap_bytes: cap_bytes as u64,
+            used_bytes: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            residency: None,
+        }
+    }
+
+    /// A store that mirrors its key set into a shared [`Residency`] map.
+    pub fn with_residency(cap_bytes: usize, res: Arc<Residency>, worker: usize) -> PrefixStore {
+        let mut s = PrefixStore::new(cap_bytes);
+        s.residency = Some((res, worker));
+        s
+    }
+
+    /// Exact-match lookup. A hit refreshes the entry's LRU stamp and
+    /// returns the shared snapshot; a hash collision with different
+    /// context tokens is a miss (never attach the wrong family's KV).
+    pub fn lookup(&mut self, context: &[u8]) -> Option<Arc<Vec<f32>>> {
+        let key = context_key(context);
+        match self.entries.get_mut(&key) {
+            Some(e) if e.context == context => {
+                self.clock += 1;
+                e.last_used = self.clock;
+                self.hits += 1;
+                Some(Arc::clone(&e.kv))
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a snapshot, evicting least-recently-used entries (ties
+    /// broken by ascending key — fully deterministic) until it fits.
+    /// Snapshots larger than the whole store are skipped, not cached.
+    pub fn insert(&mut self, context: &[u8], kv: Arc<Vec<f32>>) {
+        let bytes = (kv.len() * std::mem::size_of::<f32>()) as u64;
+        if bytes > self.cap_bytes {
+            return;
+        }
+        let key = context_key(context);
+        if let Some(old) = self.entries.remove(&key) {
+            // replace (same family re-published, or a key collision —
+            // either way the newer snapshot wins)
+            self.used_bytes -= old.bytes;
+        }
+        while self.used_bytes + bytes > self.cap_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(k, e)| (e.last_used, **k))
+                .map(|(k, _)| *k);
+            let Some(vk) = victim else { break };
+            // PANIC-OK: victim key was just read from the map
+            let e = self.entries.remove(&vk).unwrap();
+            self.used_bytes -= e.bytes;
+            self.evictions += 1;
+            if let Some((res, w)) = &self.residency {
+                res.retract(vk, *w);
+            }
+        }
+        self.clock += 1;
+        self.entries.insert(
+            key,
+            Entry { context: context.to_vec(), kv, bytes, last_used: self.clock },
+        );
+        self.used_bytes += bytes;
+        if let Some((res, w)) = &self.residency {
+            res.publish(key, *w);
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            bytes: self.used_bytes,
+            entries: self.entries.len() as u64,
+        }
+    }
+
+    /// Re-derive the store's invariants from first principles; part of the
+    /// `SPECMER_VALIDATE=1` `debug_validate` family. Error messages name
+    /// the violated invariant so seeded-corruption tests can pin them.
+    pub fn debug_validate(&self) -> Result<(), String> {
+        let mut sum = 0u64;
+        for (k, e) in &self.entries {
+            if *k != context_key(&e.context) {
+                return Err(format!(
+                    "prefix store key integrity: entry {k:#x} does not hash its own context"
+                ));
+            }
+            let want = (e.kv.len() * std::mem::size_of::<f32>()) as u64;
+            if e.bytes != want {
+                return Err(format!(
+                    "prefix store byte accounting: entry {k:#x} records {} bytes, snapshot is {want}",
+                    e.bytes
+                ));
+            }
+            if e.last_used > self.clock {
+                return Err(format!(
+                    "prefix store clock monotonicity: entry {k:#x} stamped {} past clock {}",
+                    e.last_used, self.clock
+                ));
+            }
+            sum += e.bytes;
+        }
+        if sum != self.used_bytes {
+            return Err(format!(
+                "prefix store byte accounting: used_bytes {} != sum of entries {sum}",
+                self.used_bytes
+            ));
+        }
+        if self.used_bytes > self.cap_bytes {
+            return Err(format!(
+                "prefix store capacity: used_bytes {} exceeds cap_bytes {}",
+                self.used_bytes, self.cap_bytes
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(n: usize, fill: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn exact_hit_and_miss() {
+        let mut s = PrefixStore::new(1 << 20);
+        assert!(s.lookup(&[1, 2, 3]).is_none());
+        s.insert(&[1, 2, 3], snap(8, 0.5));
+        let got = s.lookup(&[1, 2, 3]).expect("hit");
+        assert_eq!(got.len(), 8);
+        assert!(s.lookup(&[1, 2, 4]).is_none(), "different context misses");
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 2, 1));
+        assert_eq!(st.bytes, 8 * 4);
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic() {
+        // capacity for exactly two 8-float snapshots
+        let mut s = PrefixStore::new(2 * 8 * 4);
+        s.insert(&[1], snap(8, 0.1));
+        s.insert(&[2], snap(8, 0.2));
+        // touch [1] so [2] becomes the LRU victim
+        assert!(s.lookup(&[1]).is_some());
+        s.insert(&[3], snap(8, 0.3));
+        assert!(s.lookup(&[2]).is_none(), "LRU entry evicted");
+        assert!(s.lookup(&[1]).is_some(), "recently-used entry survives");
+        assert!(s.lookup(&[3]).is_some());
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.debug_validate(), Ok(()));
+    }
+
+    #[test]
+    fn oversized_snapshot_is_skipped() {
+        let mut s = PrefixStore::new(16);
+        s.insert(&[1], snap(8, 0.0)); // 32 bytes > 16 cap
+        assert_eq!(s.stats().entries, 0);
+        assert!(s.lookup(&[1]).is_none());
+        assert_eq!(s.debug_validate(), Ok(()));
+    }
+
+    #[test]
+    fn replacement_updates_byte_accounting() {
+        let mut s = PrefixStore::new(1 << 20);
+        s.insert(&[1, 2], snap(8, 0.1));
+        s.insert(&[1, 2], snap(16, 0.2));
+        let st = s.stats();
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, 16 * 4);
+        assert_eq!(s.lookup(&[1, 2]).unwrap().len(), 16, "newer snapshot wins");
+        assert_eq!(s.debug_validate(), Ok(()));
+    }
+
+    #[test]
+    fn residency_tracks_inserts_and_evictions() {
+        let res = Arc::new(Residency::new());
+        let mut s = PrefixStore::with_residency(8 * 4, Arc::clone(&res), 3);
+        s.insert(&[1], snap(8, 0.1));
+        assert_eq!(res.holders(context_key(&[1])), vec![3]);
+        s.insert(&[2], snap(8, 0.2)); // evicts [1]
+        assert_eq!(res.holders(context_key(&[1])), Vec::<usize>::new());
+        assert_eq!(res.holders(context_key(&[2])), vec![3]);
+        res.publish(context_key(&[2]), 0);
+        assert_eq!(res.holders(context_key(&[2])), vec![0, 3]);
+        res.retract(context_key(&[2]), 3);
+        assert_eq!(res.holders(context_key(&[2])), vec![0]);
+    }
+
+    #[test]
+    fn seeded_corruption_trips_validator() {
+        let mut s = PrefixStore::new(1 << 20);
+        s.insert(&[1, 2, 3], snap(8, 0.5));
+        assert_eq!(s.debug_validate(), Ok(()));
+
+        // corrupt the aggregate byte accounting
+        let saved = s.used_bytes;
+        s.used_bytes += 4;
+        let err = s.debug_validate().unwrap_err();
+        assert!(err.contains("byte accounting"), "got: {err}");
+        s.used_bytes = saved;
+        assert_eq!(s.debug_validate(), Ok(()));
+
+        // corrupt a key (re-file the entry under a wrong hash)
+        let (k, e) = s.entries.pop_first().unwrap();
+        s.entries.insert(k ^ 1, e);
+        let err = s.debug_validate().unwrap_err();
+        assert!(err.contains("key integrity"), "got: {err}");
+        let (k, e) = s.entries.pop_first().unwrap();
+        s.entries.insert(k ^ 1, e);
+        assert_eq!(s.debug_validate(), Ok(()));
+
+        // corrupt capacity (shrink the cap under the resident bytes)
+        let saved = s.cap_bytes;
+        s.cap_bytes = 1;
+        let err = s.debug_validate().unwrap_err();
+        assert!(err.contains("capacity"), "got: {err}");
+        s.cap_bytes = saved;
+        assert_eq!(s.debug_validate(), Ok(()));
+
+        // corrupt an entry's clock stamp past the store clock
+        let stamp = s.clock + 10;
+        s.entries.values_mut().next().unwrap().last_used = stamp;
+        let err = s.debug_validate().unwrap_err();
+        assert!(err.contains("clock monotonicity"), "got: {err}");
+    }
+}

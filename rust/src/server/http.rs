@@ -410,6 +410,9 @@ mod tests {
         assert!(r.contains("specmer_shed_total"));
         assert!(r.contains("specmer_deadline_exceeded_total"));
         assert!(r.contains("specmer_queue_depth"));
+        assert!(r.contains("specmer_prefix_cache_hits_total"));
+        assert!(r.contains("specmer_prefix_cache_bytes"));
+        assert!(r.contains("specmer_admission_prefill_tokens_avg"));
         h.stop();
     }
 

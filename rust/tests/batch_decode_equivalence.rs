@@ -6,7 +6,15 @@
 //! verify dispatches, so this pins the whole stack: ragged forward, cache
 //! arena, per-sequence RNG streams, and mid-flight drop-out of finished
 //! sequences.
+//!
+//! The `prefix_*` tests extend the suite to the shared-prefix KV cache
+//! (worker-resident `runtime::prefix_store`): a cache-hit admission that
+//! attaches cached rows copy-on-write, a chunked cold prefill spread over
+//! round boundaries, and an eviction landing mid-stream must all leave
+//! every token stream bitwise identical to cold solo runs.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use specmer::coordinator::engine::synthetic_engine;
@@ -14,11 +22,13 @@ use specmer::coordinator::GenEngine;
 use specmer::config::Method;
 use specmer::decode::{
     speculative_generate, speculative_generate_batch, speculative_generate_continuous,
-    AdmissionHook, AdmitItem, GenConfig, GenOutput, LockstepShape, SpecBatchItem, TreePolicy,
+    speculative_generate_continuous_with, AdmissionHook, AdmitItem, GenConfig, GenOutput,
+    LockstepShape, PrefixParams, SpecBatchItem, TreePolicy,
 };
 use specmer::kmer::{KmerSet, KmerTable};
 use specmer::msa::simulate::generate_family;
 use specmer::runtime::cpu_ref::CpuModel;
+use specmer::runtime::PrefixStore;
 use specmer::tokenizer::BOS;
 
 fn cfg(c: usize, gamma: usize, seed: u64, max_len: usize) -> GenConfig {
@@ -387,6 +397,192 @@ fn round_boundary_admission_equals_sequential() {
         assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
         assert_eq!(got.draft_calls, want.draft_calls, "seq {b}: draft calls");
         assert_eq!(got.target_calls, want.target_calls, "seq {b}: target calls");
+    }
+}
+
+type Store = Rc<RefCell<PrefixStore>>;
+
+/// Prefix-store pair (draft, target) with `cap` bytes each, plus the
+/// [`PrefixParams`] handing them to the continuous driver.
+fn prefix_params(cap: usize, chunk: usize) -> (PrefixParams, Store, Store) {
+    let ds = Rc::new(RefCell::new(PrefixStore::new(cap)));
+    let ts = Rc::new(RefCell::new(PrefixStore::new(cap)));
+    let params = PrefixParams {
+        draft_store: Some(Rc::clone(&ds)),
+        target_store: Some(Rc::clone(&ts)),
+        prefill_chunk: chunk,
+    };
+    (params, ds, ts)
+}
+
+fn admit_at(
+    at: usize,
+    ticket: u64,
+    ctx: &[u8],
+    cfg: &GenConfig,
+    table: &Arc<KmerTable>,
+) -> (usize, AdmitItem) {
+    let item = AdmitItem {
+        ticket,
+        context: ctx.to_vec(),
+        cfg: cfg.clone(),
+        table: Some(table.clone()),
+    };
+    (at, item)
+}
+
+/// Prefix-cache pin 1: a warm admission — the second request with the same
+/// family context attaches the first one's cached KV copy-on-write instead
+/// of recomputing prefill — must be bitwise identical to a cold solo run,
+/// and the savings must show up in `prefill_tokens`.
+#[test]
+fn prefix_cache_hit_admission_matches_cold_solo() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = Arc::new(KmerTable::build(&msa));
+    // distinct draft/target so rejections and corrections actually occur
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx: &[u8] = &[BOS, 5, 9, 13, 7];
+    let cfgs = [cfg(3, 5, 3, 40), cfg(3, 5, 11, 36)];
+    let solo: Vec<_> = cfgs
+        .iter()
+        .map(|c| speculative_generate(&d, &t, Some(&table), ctx, c).unwrap())
+        .collect();
+
+    let (params, ds, ts) = prefix_params(1 << 20, 0);
+    let mut hook = Scripted {
+        pending: cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| admit_at(i, i as u64, ctx, c, &table))
+            .collect(),
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    let shape = LockstepShape::of(&cfgs[0]);
+    speculative_generate_continuous_with(&d, &t, shape, &mut hook, params);
+
+    for st in [&ds, &ts] {
+        let s = st.borrow().stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "cold miss then warm hit per store");
+    }
+    assert_eq!(hook.done.len(), 2);
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    let n_feed = ctx.len() as u64 - 1;
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("prefix-cache item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+        // cold admission prefilled both models; the warm one computed nothing
+        let want_prefill = if b == 0 { 2 * n_feed } else { 0 };
+        assert_eq!(got.prefill_tokens, want_prefill, "seq {b}: prefill_tokens");
+    }
+}
+
+/// Prefix-cache pin 2: a cold long context admitted with `prefill_chunk`
+/// set is prefilled in slices across round boundaries — and the resulting
+/// stream must be bitwise identical to a one-shot solo prefill (row-count
+/// independence of the kernels, RNG untouched until activation).
+#[test]
+fn prefix_chunked_prefill_matches_one_shot_solo() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = Arc::new(KmerTable::build(&msa));
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx: Vec<u8> = vec![BOS, 5, 9, 13, 4, 8, 15, 6, 10, 3, 12, 7];
+    let cfgs = [cfg(3, 5, 3, 44), cfg(3, 5, 11, 40)];
+    let solo: Vec<_> = cfgs
+        .iter()
+        .map(|c| speculative_generate(&d, &t, Some(&table), &ctx, c).unwrap())
+        .collect();
+
+    // chunk 3 over n_feed 11: the cold admission spans four round
+    // boundaries before activating; the second request (boundary 4) then
+    // hits the snapshot the chunked prefill published
+    let (params, ds, ts) = prefix_params(1 << 20, 3);
+    let mut hook = Scripted {
+        pending: vec![
+            admit_at(0, 0, &ctx, &cfgs[0], &table),
+            admit_at(4, 1, &ctx, &cfgs[1], &table),
+        ],
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    let shape = LockstepShape::of(&cfgs[0]);
+    speculative_generate_continuous_with(&d, &t, shape, &mut hook, params);
+
+    for st in [&ds, &ts] {
+        let s = st.borrow().stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "chunked prefill still publishes");
+    }
+    assert_eq!(hook.done.len(), 2);
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("chunk-admitted item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
+    }
+}
+
+/// Prefix-cache pin 3: evicting an entry while a sequence decodes from its
+/// copy-on-write attachment must not perturb that sequence — the snapshot
+/// `Arc` stays alive through the attachment, eviction only drops the
+/// store's reference.
+#[test]
+fn prefix_eviction_mid_stream_leaves_attached_sequences_intact() {
+    let (_prof, msa) = generate_family("T", 40, 30, 5);
+    let table = Arc::new(KmerTable::build(&msa));
+    let d = CpuModel::synthetic(2, 16, 2, 96, 7);
+    let t = CpuModel::synthetic(2, 16, 2, 96, 8);
+    let ctx_a: &[u8] = &[BOS, 5, 9, 13, 7];
+    let ctx_b: &[u8] = &[BOS, 11, 3, 6];
+    // ticket 1 (warm, attached) runs longest: the ctx_b admission at
+    // boundary 3 inserts a second entry and evicts ctx_a mid-stream
+    let cfgs = [cfg(3, 5, 3, 36), cfg(3, 5, 11, 48), cfg(3, 5, 33, 32)];
+    let ctxs: [&[u8]; 3] = [ctx_a, ctx_a, ctx_b];
+    let solo: Vec<_> = ctxs
+        .iter()
+        .zip(&cfgs)
+        .map(|(ctx, c)| speculative_generate(&d, &t, Some(&table), ctx, c).unwrap())
+        .collect();
+
+    // capacity fits exactly one snapshot per store (synthetic dims: 2
+    // layers x 2 x 2 heads x 96 positions x 8 dims x 4 bytes = 24576), so
+    // the second insert must evict the first
+    let (params, ds, ts) = prefix_params(25_000, 0);
+    let mut hook = Scripted {
+        pending: vec![
+            admit_at(0, 0, ctx_a, &cfgs[0], &table),
+            admit_at(1, 1, ctx_a, &cfgs[1], &table),
+            admit_at(3, 2, ctx_b, &cfgs[2], &table),
+        ],
+        boundary: 0,
+        active_at_admission: Vec::new(),
+        done: Vec::new(),
+    };
+    let shape = LockstepShape::of(&cfgs[0]);
+    speculative_generate_continuous_with(&d, &t, shape, &mut hook, params);
+
+    for st in [&ds, &ts] {
+        let s = st.borrow().stats();
+        assert_eq!(s.evictions, 1, "ctx_b's insert must evict ctx_a");
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert_eq!(s.entries, 1, "only ctx_b remains resident");
+    }
+    assert_eq!(hook.done.len(), 3);
+    hook.done.sort_by_key(|(ticket, _)| *ticket);
+    for (b, ((_, got), want)) in hook.done.iter().zip(&solo).enumerate() {
+        let got = got.as_ref().expect("eviction-scenario item failed");
+        assert_eq!(got.tokens, want.tokens, "seq {b}: token stream diverged");
+        assert_eq!(got.accepted, want.accepted, "seq {b}: accepted");
+        assert_eq!(got.rejected, want.rejected, "seq {b}: rejected");
+        assert_eq!(got.rounds, want.rounds, "seq {b}: rounds");
     }
 }
 
